@@ -1,0 +1,37 @@
+//! Client-server scheme (Fig 1 B): several hospital CT streams multiplexed
+//! into the reconstruction service under the naive schedule, with two GAN
+//! instances sharing the load (ByStream routing) and dynamic batching.
+
+use edgepipe::config::{GanVariant, PipelineConfig, Workload};
+use edgepipe::pipeline::run_pipeline;
+
+fn main() -> edgepipe::Result<()> {
+    println!("== Client-server scheme: 4 hospital streams, two GAN instances ==");
+    for variant in GanVariant::all() {
+        let cfg = PipelineConfig {
+            variant,
+            workload: Workload::TwoGans,
+            frames: 128,
+            streams: 4,
+            queue_depth: 16,
+            max_batch: 4,
+            batch_timeout_us: 2000,
+            ..PipelineConfig::default()
+        };
+        let rep = run_pipeline(&cfg)?;
+        println!(
+            "{:<14} total {:>6.1} fps over {} frames ({} dropped)",
+            variant.name(),
+            rep.total_fps(),
+            rep.total_frames,
+            rep.dropped
+        );
+        for inst in &rep.instances {
+            println!(
+                "    {:<10} {:>6.1} fps  p50 {:>7.1} ms  p99 {:>7.1} ms  psnr {:>5.2}",
+                inst.label, inst.fps, inst.latency_ms_p50, inst.latency_ms_p99, inst.psnr_mean
+            );
+        }
+    }
+    Ok(())
+}

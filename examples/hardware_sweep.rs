@@ -1,0 +1,46 @@
+//! Hardware sweep: every experiment on both Jetson devices (Xavier vs
+//! Orin), showing the Orin advantage the paper's §III.A quotes, plus the
+//! subgraph-limit failure mode from §II.C.
+
+use edgepipe::config::GanVariant;
+use edgepipe::dla::{planner, DlaVersion};
+use edgepipe::hw::{orin, xavier, EngineKind};
+use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
+use edgepipe::sched::haxconn;
+use edgepipe::sim::{simulate, SimConfig};
+
+fn main() -> edgepipe::Result<()> {
+    for (soc, version) in [(xavier(), DlaVersion::V1), (orin(), DlaVersion::V2)] {
+        println!("== {} ==", soc.name);
+        for v in GanVariant::all() {
+            let g = generator(&Pix2PixConfig::paper(), v)?;
+            let (sched, _) = haxconn::two_gans(&g, &soc, version)?;
+            let r = simulate(&[&g], &sched, &SimConfig::new(soc.clone(), 128))?;
+            println!(
+                "  {:<14} two-GAN: GPU-home {:>7.1} fps  DLA-home {:>7.1} fps",
+                v.name(),
+                r.fps_of_home(EngineKind::Gpu).unwrap_or(0.0),
+                r.fps_of_home(EngineKind::Dla).unwrap_or(0.0)
+            );
+        }
+    }
+
+    // Subgraph-limit failure mode (§II.C): the original model's fragmented
+    // engine plan exceeds a tightened loadable budget.
+    println!("== DLA subgraph limit (paper §II.C) ==");
+    let g = generator(&Pix2PixConfig::paper(), GanVariant::Original)?;
+    for limit in [16usize, 8, 4] {
+        match planner::plan(&g, DlaVersion::V2, limit) {
+            Ok(p) => println!("  limit {:>2}: plan OK ({} DLA subgraphs)", limit, p.dla_subgraphs),
+            Err(e) => println!("  limit {:>2}: {}", limit, e),
+        }
+    }
+    let fixed = generator(&Pix2PixConfig::paper(), GanVariant::Cropping)?;
+    let p = planner::plan(&fixed, DlaVersion::V2, 4)?;
+    println!(
+        "  cropping variant under limit 4: OK ({} subgraph, fully resident: {})",
+        p.dla_subgraphs,
+        p.fully_dla_resident()
+    );
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Quickstart: load the AOT artifacts, reconstruct an MRI from one CT
+//! phantom, diagnose it with the detector, and save the images (Fig 7).
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use edgepipe::imaging::metrics::fidelity;
+use edgepipe::imaging::phantom::{paired_sample, PhantomConfig};
+use edgepipe::imaging::Image;
+use edgepipe::postproc;
+use edgepipe::runtime::{Artifact, RuntimeClient};
+use edgepipe::util::rng::Rng;
+use std::path::Path;
+
+fn main() -> edgepipe::Result<()> {
+    let dir = Path::new("artifacts");
+    let client = RuntimeClient::cpu()?;
+    println!("PJRT platform: {} ({} devices)", client.platform(), client.device_count());
+
+    let gan = Artifact::load(&client, dir, "gen_cropping")?;
+    let yolo = Artifact::load(&client, dir, "yolo_lite")?;
+    println!(
+        "loaded gen_cropping ({} weight tensors) and yolo_lite ({})",
+        gan.weight_count(),
+        yolo.weight_count()
+    );
+
+    // One synthetic CT slice with ground truth.
+    let sample = paired_sample(&PhantomConfig::default(), &mut Rng::new(7));
+    let ct_pm1: Vec<f32> = sample.ct.data.iter().map(|&v| v * 2.0 - 1.0).collect();
+
+    // --- MRI reconstruction (the paper's GAN path) ---
+    let t0 = std::time::Instant::now();
+    let mri_out = gan.run_image(&ct_pm1)?;
+    let gan_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let mri01: Vec<f32> = mri_out[0].data.iter().map(|&v| (v + 1.0) / 2.0).collect();
+    let mri_img = Image::from_data(64, 64, mri01)?;
+    let fid = fidelity(&sample.mri, &mri_img)?;
+    println!(
+        "GAN reconstruction: {:.1} ms — PSNR {:.2} dB, SSIM {:.2}, MSE {:.2}",
+        gan_ms, fid.psnr, fid.ssim_pct, fid.mse
+    );
+
+    // --- Stroke diagnosis (the paper's YOLO path) ---
+    let t0 = std::time::Instant::now();
+    let head = yolo.run_image(&ct_pm1)?;
+    let yolo_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let scales: Vec<(Vec<f32>, usize, f32)> = head
+        .iter()
+        .map(|o| (o.data.clone(), o.dims[1], 64.0 / o.dims[1] as f32))
+        .collect();
+    let dets = postproc::postprocess(&scales, 4, 1, 0.55, 0.5);
+    println!(
+        "YOLO diagnosis: {:.1} ms — {} candidate regions (ground truth has {} lesions)",
+        yolo_ms,
+        dets.len(),
+        sample.lesions.len()
+    );
+    for d in dets.iter().take(4) {
+        println!(
+            "  box ({:5.1},{:5.1})-({:5.1},{:5.1}) score {:.2}",
+            d.x0, d.y0, d.x1, d.y1, d.score
+        );
+    }
+
+    // --- Save the Fig 7 style images ---
+    std::fs::create_dir_all("target/quickstart")?;
+    sample.ct.save_pgm(Path::new("target/quickstart/ct_input.pgm"))?;
+    sample.mri.save_pgm(Path::new("target/quickstart/mri_ground_truth.pgm"))?;
+    mri_img.save_pgm(Path::new("target/quickstart/mri_reconstructed.pgm"))?;
+    println!("wrote target/quickstart/{{ct_input,mri_ground_truth,mri_reconstructed}}.pgm");
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! END-TO-END DRIVER (the standalone scheme, Fig 1 A).
+//!
+//! Exercises every layer of the stack on a real small workload:
+//!
+//! 1. builds the paper-scale model graphs and derives the HaX-CoNN
+//!    schedule (L3 scheduling contribution);
+//! 2. simulates the schedule on the calibrated Orin SoC model (the timing
+//!    claim — Tables V/VI);
+//! 3. streams 256 synthetic CT frames through the *real* coordinator:
+//!    router → batcher → workers executing the AOT-compiled JAX/Pallas
+//!    artifacts via PJRT (L1/L2 numerics), reporting measured
+//!    latency/throughput and online reconstruction PSNR/SSIM.
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use edgepipe::config::{GanVariant, PipelineConfig, Workload};
+use edgepipe::dla::DlaVersion;
+use edgepipe::hw::{orin, EngineKind};
+use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
+use edgepipe::models::yolov8::{yolov8, YoloConfig};
+use edgepipe::pipeline::run_pipeline;
+use edgepipe::sched::haxconn;
+use edgepipe::sim::{simulate, SimConfig};
+
+fn main() -> edgepipe::Result<()> {
+    let variant = GanVariant::Cropping;
+    let soc = orin();
+
+    // ---- 1. Schedule synthesis ----
+    let gan = generator(&Pix2PixConfig::paper(), variant)?;
+    let yolo = yolov8(&YoloConfig::nano())?;
+    let (sched, ss) = haxconn::gan_plus_yolo(&gan, &yolo, &soc, DlaVersion::V2)?;
+    println!("== HaX-CoNN schedule (GAN {} + YOLOv8) ==", variant.name());
+    for inst in &sched.instances {
+        let (d2g, g2d) = inst.partition_points();
+        println!(
+            "  {:<6} DLA->GPU at {:?}, GPU->DLA at {:?}",
+            inst.label, d2g, g2d
+        );
+    }
+    println!(
+        "  steady state: period {:.2} ms ({:.1} fps/instance), busy gpu {:.2} ms dla {:.2} ms",
+        ss.period * 1e3,
+        1.0 / ss.period,
+        ss.busy_gpu * 1e3,
+        ss.busy_dla * 1e3
+    );
+
+    // ---- 2. Simulated deployment on the Jetson model ----
+    let r = simulate(&[&gan, &yolo], &sched, &SimConfig::new(soc.clone(), 192))?;
+    println!("== Simulated Orin deployment (Table VI row) ==");
+    for inst in &r.instances {
+        println!("  {:<6} home {:<4} {:>7.1} fps", inst.label, inst.home_engine, inst.fps);
+    }
+    let gs = r.timeline.engine_stats(EngineKind::Gpu);
+    let ds = r.timeline.engine_stats(EngineKind::Dla);
+    println!(
+        "  utilization gpu {:.0}% dla {:.0}%",
+        gs.utilization * 100.0,
+        ds.utilization * 100.0
+    );
+
+    // ---- 3. Real serving through PJRT ----
+    println!("== Real PJRT serving (256 frames) ==");
+    let cfg = PipelineConfig {
+        variant,
+        workload: Workload::GanPlusYolo,
+        frames: 256,
+        ..PipelineConfig::default()
+    };
+    let rep = run_pipeline(&cfg)?;
+    println!(
+        "  processed {} frames in {:.2} s (total pipeline {:.1} fps)",
+        rep.total_frames,
+        rep.wall_seconds,
+        rep.total_fps()
+    );
+    for inst in &rep.instances {
+        println!(
+            "  {:<6} {:>7.1} fps  latency p50 {:>6.1} ms p99 {:>6.1} ms  psnr {:>5.2}  ssim {:>5.2}",
+            inst.label,
+            inst.fps,
+            inst.latency_ms_p50,
+            inst.latency_ms_p99,
+            inst.psnr_mean,
+            inst.ssim_pct_mean
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,157 @@
+"""AOT export: JAX/Pallas models -> HLO text + weights.bin artifacts.
+
+The interchange format is HLO *text* (not serialized HloModuleProto): jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example.
+
+Weights are *runtime parameters*, not baked constants: each artifact is
+lowered as `fn(ct, w0, w1, ...)` and a side-car `<name>.weights.bin`
+carries the trained values in parameter order. Format (little-endian):
+
+    magic   b"EPW1"
+    count   u32
+    per tensor: rank u32, dims u32*rank, data f32*prod(dims)
+
+`<name>.meta.json` records input shape and parameter names for
+provenance. Python runs ONCE at build time; the rust binary is
+self-contained afterwards.
+
+Usage: python -m compile.aot --out ../artifacts [--skip-yolo]
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    GanConfig,
+    VARIANTS,
+    YoloConfig,
+    generator_apply,
+    init_generator,
+    init_yolo,
+    yolo_apply,
+)
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_weights_bin(path, arrays):
+    with open(path, "wb") as f:
+        f.write(b"EPW1")
+        f.write(struct.pack("<I", len(arrays)))
+        for a in arrays:
+            a = np.asarray(a, np.float32)
+            f.write(struct.pack("<I", a.ndim))
+            for d in a.shape:
+                f.write(struct.pack("<I", d))
+            f.write(a.tobytes())
+
+
+def export_generator(out_dir, variant, cfg, params_list, use_pallas=True):
+    """Lower generator(ct, *weights) -> mri to HLO text + weights."""
+    names = [n for n, _ in params_list]
+    arrays = [a for _, a in params_list]
+
+    def fn(ct, *weights):
+        params = dict(zip(names, weights))
+        return (generator_apply(params, ct, cfg, variant, use_pallas=use_pallas),)
+
+    ct_spec = jax.ShapeDtypeStruct((1, cfg.image_size, cfg.image_size, cfg.channels), jnp.float32)
+    w_specs = [jax.ShapeDtypeStruct(a.shape, jnp.float32) for a in arrays]
+    lowered = jax.jit(fn).lower(ct_spec, *w_specs)
+    hlo = to_hlo_text(lowered)
+
+    base = os.path.join(out_dir, f"gen_{variant}")
+    with open(base + ".hlo.txt", "w") as f:
+        f.write(hlo)
+    write_weights_bin(base + ".weights.bin", arrays)
+    with open(base + ".meta.json", "w") as f:
+        json.dump(
+            {
+                "model": f"pix2pix_{variant}",
+                "input": list(ct_spec.shape),
+                "params": names,
+                "pallas": use_pallas,
+            },
+            f,
+            indent=2,
+        )
+    return base
+
+
+def export_yolo(out_dir, cfg, params_list, use_pallas=True):
+    names = [n for n, _ in params_list]
+    arrays = [a for _, a in params_list]
+
+    def fn(img, *weights):
+        params = dict(zip(names, weights))
+        return yolo_apply(params, img, cfg, use_pallas=use_pallas)
+
+    spec = jax.ShapeDtypeStruct((1, cfg.image_size, cfg.image_size, cfg.channels), jnp.float32)
+    w_specs = [jax.ShapeDtypeStruct(a.shape, jnp.float32) for a in arrays]
+    lowered = jax.jit(fn).lower(spec, *w_specs)
+    hlo = to_hlo_text(lowered)
+
+    base = os.path.join(out_dir, "yolo_lite")
+    with open(base + ".hlo.txt", "w") as f:
+        f.write(hlo)
+    write_weights_bin(base + ".weights.bin", arrays)
+    with open(base + ".meta.json", "w") as f:
+        json.dump(
+            {"model": "yolo_lite", "input": list(spec.shape), "params": names,
+             "pallas": use_pallas},
+            f,
+            indent=2,
+        )
+    return base
+
+
+def load_trained_or_init(out_dir, variant, cfg):
+    """Prefer trained checkpoints (train.py); fall back to seeded init."""
+    ckpt = os.path.join(out_dir, f"gen_{variant}.npz")
+    order = [n for n, _ in init_generator(jax.random.PRNGKey(0), cfg, variant)]
+    if os.path.exists(ckpt):
+        z = np.load(ckpt)
+        return [(n, jnp.asarray(z[n])) for n in order]
+    print(f"warning: no checkpoint for {variant}; exporting seeded init")
+    return init_generator(jax.random.PRNGKey(0), cfg, variant)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-yolo", action="store_true")
+    ap.add_argument("--no-pallas", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    use_pallas = not args.no_pallas
+
+    cfg = GanConfig()
+    for variant in VARIANTS:
+        params = load_trained_or_init(args.out, variant, cfg)
+        base = export_generator(args.out, variant, cfg, params, use_pallas)
+        print(f"wrote {base}.hlo.txt ({os.path.getsize(base + '.hlo.txt')} bytes)")
+
+    if not args.skip_yolo:
+        ycfg = YoloConfig()
+        yparams = init_yolo(jax.random.PRNGKey(7), ycfg)
+        base = export_yolo(args.out, ycfg, yparams, use_pallas)
+        print(f"wrote {base}.hlo.txt ({os.path.getsize(base + '.hlo.txt')} bytes)")
+
+
+if __name__ == "__main__":
+    main()

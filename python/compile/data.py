@@ -1,0 +1,88 @@
+"""Paired CT/MRI brain-phantom generator (training data).
+
+Mirrors `rust/src/imaging/phantom.rs`: skull ring, tissue ellipse,
+ventricles, optional stroke lesions; the MRI is a deterministic tissue
+contrast remap of the noise-free label map with a 3x3 box blur. The rust
+pipeline generates phantoms with the same construction, so a model trained
+here transfers to the rust-side evaluation.
+"""
+
+import numpy as np
+
+CT_AIR, CT_TISSUE, CT_VENT, CT_BONE, CT_LESION = 0.05, 0.45, 0.30, 0.95, 0.38
+MRI = {0: 0.02, 1: 0.62, 2: 0.88, 3: 0.10, 4: 0.82}
+
+
+def box_blur3(img):
+    p = np.pad(img, 1, mode="edge")
+    out = np.zeros_like(img)
+    for dy in range(3):
+        for dx in range(3):
+            out += p[dy : dy + img.shape[0], dx : dx + img.shape[1]]
+    return out / 9.0
+
+
+def paired_sample(rng, size=64, lesion_prob=0.7, noise_sigma=0.01):
+    """One (ct, mri, lesions) sample; images (size, size) float32 in [0,1]."""
+    labels = np.zeros((size, size), np.uint8)
+    c = size / 2.0
+    rx = rng.uniform(0.36, 0.44) * size
+    ry = rng.uniform(0.40, 0.47) * size
+    skull_t = rng.uniform(0.04, 0.07) * size
+    tilt = rng.uniform(-0.2, 0.2)
+    st, ct_ = np.sin(tilt), np.cos(tilt)
+
+    yy, xx = np.mgrid[0:size, 0:size].astype(np.float32)
+    dx, dy = xx - c, yy - c
+    u = ct_ * dx + st * dy
+    v = -st * dx + ct_ * dy
+
+    def inside(rx_, ry_):
+        return (u / rx_) ** 2 + (v / ry_) ** 2 <= 1.0
+
+    labels[inside(rx, ry)] = 3
+    labels[inside(rx - skull_t, ry - skull_t)] = 1
+
+    for side in (-1.0, 1.0):
+        vx = c + side * rng.uniform(0.08, 0.14) * size
+        vy = c + rng.uniform(-0.05, 0.05) * size
+        vrx = rng.uniform(0.04, 0.07) * size
+        vry = rng.uniform(0.08, 0.13) * size
+        mask = ((xx - vx) / vrx) ** 2 + ((yy - vy) / vry) ** 2 <= 1.0
+        labels[mask & (labels == 1)] = 2
+
+    lesions = []
+    if rng.uniform() < lesion_prob:
+        for _ in range(1 + rng.integers(0, 2)):
+            lrx = rng.uniform(0.05, 0.12) * size
+            lry = rng.uniform(0.05, 0.12) * size
+            lx = c + rng.uniform(-0.22, 0.22) * size
+            ly = c + rng.uniform(-0.25, 0.25) * size
+            mask = ((xx - lx) / lrx) ** 2 + ((yy - ly) / lry) ** 2 <= 1.0
+            hit = mask & (labels == 1)
+            if hit.any():
+                labels[hit] = 4
+                lesions.append((lx, ly, 2 * lrx, 2 * lry))
+
+    ct_img = np.select(
+        [labels == 1, labels == 2, labels == 3, labels == 4],
+        [CT_TISSUE, CT_VENT, CT_BONE, CT_LESION],
+        CT_AIR,
+    ).astype(np.float32)
+    ct_img = np.clip(ct_img + noise_sigma * rng.standard_normal(ct_img.shape), 0, 1)
+
+    mri_img = np.vectorize(MRI.get)(labels).astype(np.float32)
+    mri_img = box_blur3(mri_img)
+    return ct_img.astype(np.float32), mri_img, lesions
+
+
+def batch(rng, n, size=64, **kw):
+    """(ct, mri) batches scaled to [-1, 1], NHWC single channel."""
+    cts, mris = [], []
+    for _ in range(n):
+        ct_img, mri_img, _ = paired_sample(rng, size=size, **kw)
+        cts.append(ct_img)
+        mris.append(mri_img)
+    ct_b = np.stack(cts)[..., None] * 2.0 - 1.0
+    mri_b = np.stack(mris)[..., None] * 2.0 - 1.0
+    return ct_b.astype(np.float32), mri_b.astype(np.float32)

@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+The paper's compute hot-spot is 4x4 / stride-2 (de)convolution on an edge
+GPU. On the TPU-shaped target modelled here (see DESIGN.md
+"Hardware-Adaptation"), the same work is expressed as im2col + MXU matmul
+tiles: `conv.py` carries the GEMM kernel with VMEM-tiled BlockSpecs,
+`deconv.py` expresses transposed convolution as zero-insertion + conv (the
+identity behind the paper's Eqs. 4-7) plus the crop/VALID-conv padding
+surgeries, and `norm_act.py` holds the fused pointwise kernels.
+
+All kernels run with ``interpret=True`` -- the CPU PJRT plugin cannot
+execute Mosaic custom-calls; real-TPU performance is estimated analytically
+in DESIGN.md SPerf.
+"""
+
+from . import conv, deconv, norm_act, ref  # noqa: F401

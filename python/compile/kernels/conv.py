@@ -1,0 +1,108 @@
+"""Pallas conv2d as im2col + tiled MXU matmul.
+
+The convolution is reshaped into a GEMM:
+
+    patches : (N*OH*OW, KH*KW*Cin)   (im2col, computed in JAX)
+    weights : (KH*KW*Cin, Cout)
+    out     : (N*OH*OW, Cout)
+
+and the GEMM itself is the Pallas kernel, tiled with BlockSpec so each
+(BM, BK) x (BK, BN) product is VMEM-resident and lands on the MXU. This is
+the HBM<->VMEM schedule a CUDA kernel would express with threadblocks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned tile sizes (multiples of the 128x128 systolic array; smaller
+# inputs fall back to the full-array tile).
+BM = 128
+BN = 128
+BK = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, k_steps):
+    """One (BM, BN) output tile; accumulate over the K grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul(x, w, interpret=True):
+    """Tiled Pallas matmul `x @ w` with fp32 accumulation."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    xp = _pad_to(_pad_to(x, BM, 0), BK, 1)
+    wp = _pad_to(_pad_to(w, BK, 0), BN, 1)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    k_steps = kp // BK  # accumulation depth over the K axis
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(mp // BM, np_ // BN, k_steps),
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BK, BN), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def im2col(x, kh, kw, stride, padding):
+    """Extract convolution patches.
+
+    x: (N, H, W, C) -> (N, OH, OW, KH*KW*C)
+    """
+    n, h, w, c = x.shape
+    if padding > 0:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    # Gather patches via slicing (static unroll over the small kernel).
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            sl = x[:, dy : dy + stride * oh : stride, dx : dx + stride * ow : stride, :]
+            cols.append(sl)
+    patches = jnp.concatenate(cols, axis=-1)  # (N, OH, OW, KH*KW*C)
+    return patches, oh, ow
+
+
+def conv2d(x, w, b=None, stride=2, padding=1, interpret=True):
+    """NHWC conv2d with an HWIO kernel via im2col + Pallas GEMM.
+
+    x: (N, H, W, Cin); w: (KH, KW, Cin, Cout).
+    """
+    kh, kw, cin, cout = w.shape
+    patches, oh, ow = im2col(x, kh, kw, stride, padding)
+    n = x.shape[0]
+    a = patches.reshape(n * oh * ow, kh * kw * cin)
+    wm = w.reshape(kh * kw * cin, cout)
+    y = matmul(a, wm, interpret=interpret)
+    y = y.reshape(n, oh, ow, cout)
+    if b is not None:
+        y = y + b
+    return y

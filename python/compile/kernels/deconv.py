@@ -1,0 +1,65 @@
+"""Transposed convolution and the paper's padding surgeries.
+
+Deconvolution is expressed as zero-insertion (stride-1 dilation of the
+input) followed by a VALID convolution with the spatially-flipped kernel --
+the identity behind the paper's Eqs. 4-7. The padded variant (`padding=1`,
+DLA-incompatible in the paper) trims the border of the unpadded result;
+the two surgeries reproduce that trim with DLA-friendly ops:
+
+  * ``crop``       -- remove `border` rows/cols per side (Eq. 7);
+  * a stride-1 VALID 3x3 conv (built in the model from `conv.conv2d`)
+    shrinks by the same amount (Eq. 9).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import conv
+
+
+def zero_insert(x, stride):
+    """Dilate (N, H, W, C) spatially by `stride` (zero-insertion)."""
+    if stride == 1:
+        return x
+    n, h, w, c = x.shape
+    out = jnp.zeros((n, h * stride - (stride - 1), w * stride - (stride - 1), c), x.dtype)
+    return out.at[:, ::stride, ::stride, :].set(x)
+
+
+def conv_transpose2d(x, w, b=None, stride=2, padding=0, interpret=True):
+    """NHWC transposed conv, kernel (KH, KW, Cin, Cout).
+
+    out_size = stride*(in-1) + k - 2*padding   (paper Eq. 4)
+    """
+    kh, kw, _, _ = w.shape
+    # zero-insert, then full conv with flipped kernel
+    xd = zero_insert(x, stride)
+    wf = w[::-1, ::-1, :, :]
+    y = conv.conv2d(xd, wf, b=None, stride=1, padding=kh - 1, interpret=interpret)
+    if padding > 0:
+        y = y[:, padding:-padding, padding:-padding, :]
+    if b is not None:
+        y = y + b
+    return y
+
+
+def _crop_kernel(x_ref, o_ref, *, border):
+    o_ref[...] = x_ref[border:-border, border:-border, :]
+
+
+def crop(x, border=1, interpret=True):
+    """Crop `border` rows/cols from each side (paper Eq. 7) as a Pallas
+    kernel (the DLA-compatible padding substitute)."""
+    n, h, w, c = x.shape
+    assert h > 2 * border and w > 2 * border, "crop larger than image"
+    out_shape = jax.ShapeDtypeStruct((h - 2 * border, w - 2 * border, c), x.dtype)
+
+    def one(img):
+        return pl.pallas_call(
+            lambda x_ref, o_ref: _crop_kernel(x_ref, o_ref, border=border),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(img)
+
+    return jax.vmap(one)(x)

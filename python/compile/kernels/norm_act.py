@@ -1,0 +1,49 @@
+"""Fused pointwise Pallas kernels: batch-norm + activation.
+
+At inference batch-norm is an affine transform; fusing it with the
+following activation keeps the tensor in VMEM for a single pass -- the
+pointwise-fusion trick every edge runtime (TensorRT included) applies.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bn_act_kernel(x_ref, scale_ref, shift_ref, o_ref, *, act, slope):
+    y = x_ref[...] * scale_ref[...] + shift_ref[...]
+    if act == "leaky_relu":
+        y = jnp.where(y >= 0, y, slope * y)
+    elif act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "tanh":
+        y = jnp.tanh(y)
+    elif act == "silu":
+        y = y * jax.nn.sigmoid(y)
+    o_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("act", "slope", "interpret"))
+def bn_act(x, scale, shift, act="leaky_relu", slope=0.2, interpret=True):
+    """Fused `x * scale + shift` + activation over NHWC, per-channel affine."""
+    n, h, w, c = x.shape
+    scale_b = jnp.broadcast_to(scale, (h, w, c))
+    shift_b = jnp.broadcast_to(shift, (h, w, c))
+
+    def one(img):
+        return pl.pallas_call(
+            functools.partial(_bn_act_kernel, act=act, slope=slope),
+            out_shape=jax.ShapeDtypeStruct((h, w, c), x.dtype),
+            interpret=interpret,
+        )(img, scale_b, shift_b)
+
+    return jax.vmap(one)(x)
+
+
+def batchnorm_params(mean, var, gamma, beta, eps=1e-3):
+    """Fold BN statistics into the (scale, shift) affine pair."""
+    scale = gamma / jnp.sqrt(var + eps)
+    shift = beta - mean * scale
+    return scale, shift

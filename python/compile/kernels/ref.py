@@ -1,0 +1,61 @@
+"""Pure-JAX correctness oracles for the Pallas kernels.
+
+These use `lax.conv_general_dilated` / plain jnp -- an entirely different
+code path from the im2col + Pallas GEMM kernels -- so agreement is a real
+correctness signal (the CORE build-time check, run by pytest).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def conv2d_ref(x, w, b=None, stride=2, padding=1):
+    """NHWC conv, HWIO kernel, via lax.conv_general_dilated."""
+    y = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        y = y + b
+    return y
+
+
+def conv_transpose2d_ref(x, w, b=None, stride=2, padding=0):
+    """Transposed conv via input-dilated lax conv (gradient trick)."""
+    kh, kw, _, _ = w.shape
+    y = lax.conv_general_dilated(
+        x,
+        w[::-1, ::-1, :, :],
+        window_strides=(1, 1),
+        padding=((kh - 1 - padding, kh - 1 - padding), (kw - 1 - padding, kw - 1 - padding)),
+        lhs_dilation=(stride, stride),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        y = y + b
+    return y
+
+
+def crop_ref(x, border=1):
+    return x[:, border:-border, border:-border, :]
+
+
+def bn_act_ref(x, scale, shift, act="leaky_relu", slope=0.2):
+    y = x * scale + shift
+    if act == "leaky_relu":
+        return jnp.where(y >= 0, y, slope * y)
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "tanh":
+        return jnp.tanh(y)
+    if act == "silu":
+        return y * jax.nn.sigmoid(y)
+    return y

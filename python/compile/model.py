@@ -1,0 +1,241 @@
+"""Layer-2 JAX models: Pix2Pix (three variants) + YOLO-lite.
+
+Functional-style: `init_*` builds a parameter pytree (a flat list of
+(name, array) pairs so the AOT export and the rust weights loader agree on
+ordering), `generator_apply` / `discriminator_apply` / `yolo_apply` run the
+forward pass. `use_pallas=True` routes the compute through the Layer-1
+kernels (the path that is AOT-lowered); `use_pallas=False` uses the ref
+ops (identical math, used for training speed). pytest asserts the two
+paths agree.
+
+Scaled configuration (CPU-trainable): 64x64 single-channel phantoms,
+ngf=16, 6 down / 5 up blocks -- the full-size 8/7 graph at 256x256 lives in
+the rust IR (`models/pix2pix.rs`) for the timing experiments.
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv as kconv
+from .kernels import deconv as kdeconv
+from .kernels import norm_act as knorm
+from .kernels import ref as kref
+
+VARIANTS = ("original", "cropping", "convolution")
+
+
+@dataclasses.dataclass(frozen=True)
+class GanConfig:
+    image_size: int = 64
+    channels: int = 1
+    ngf: int = 16
+    depth: int = 6  # number of down-sampling blocks
+
+    def enc_filters(self, i):
+        return self.ngf * [1, 2, 4, 8, 8, 8, 8, 8][min(i, 7)]
+
+
+def _conv_init(key, kh, kw, cin, cout, scale=0.02):
+    return scale * jax.random.normal(key, (kh, kw, cin, cout), jnp.float32)
+
+
+def init_generator(key, cfg: GanConfig, variant: str):
+    """Parameter list for one generator variant.
+
+    Returns a list of (name, array); ordering is the artifact ABI.
+    """
+    assert variant in VARIANTS, variant
+    params = []
+    keys = iter(jax.random.split(key, 64))
+
+    c_in = cfg.channels
+    for i in range(cfg.depth):
+        c_out = cfg.enc_filters(i)
+        params.append((f"enc{i}_w", _conv_init(next(keys), 4, 4, c_in, c_out)))
+        if i > 0:
+            params.append((f"enc{i}_scale", jnp.ones((c_out,), jnp.float32)))
+            params.append((f"enc{i}_shift", jnp.zeros((c_out,), jnp.float32)))
+        c_in = c_out
+
+    for i in range(cfg.depth - 1):
+        c_out = cfg.enc_filters(cfg.depth - 2 - i)
+        params.append((f"dec{i}_w", _conv_init(next(keys), 4, 4, c_in, c_out)))
+        params.append((f"dec{i}_scale", jnp.ones((c_out,), jnp.float32)))
+        params.append((f"dec{i}_shift", jnp.zeros((c_out,), jnp.float32)))
+        if variant == "convolution":
+            params.append((f"dec{i}_fix_w", _conv_init(next(keys), 3, 3, c_out, c_out)))
+        # after concat with the skip the channel count doubles
+        c_in = c_out * 2
+
+    params.append(("final_w", _conv_init(next(keys), 4, 4, c_in, cfg.channels)))
+    params.append(("final_b", jnp.zeros((cfg.channels,), jnp.float32)))
+    if variant == "convolution":
+        params.append(
+            ("final_fix_w", _conv_init(next(keys), 3, 3, cfg.channels, cfg.channels))
+        )
+    return params
+
+
+def _ops(use_pallas):
+    if use_pallas:
+        return (
+            lambda x, w, s, p: kconv.conv2d(x, w, stride=s, padding=p),
+            lambda x, w, s, p: kdeconv.conv_transpose2d(x, w, stride=s, padding=p),
+            lambda x: kdeconv.crop(x, 1),
+            lambda x, sc, sh, act: knorm.bn_act(x, sc, sh, act=act),
+        )
+    return (
+        lambda x, w, s, p: kref.conv2d_ref(x, w, stride=s, padding=p),
+        lambda x, w, s, p: kref.conv_transpose2d_ref(x, w, stride=s, padding=p),
+        lambda x: kref.crop_ref(x, 1),
+        lambda x, sc, sh, act: kref.bn_act_ref(x, sc, sh, act=act),
+    )
+
+
+def generator_apply(params, x, cfg: GanConfig, variant: str, use_pallas=False):
+    """Forward pass. x: (N, H, W, C) in [-1, 1]; returns same shape."""
+    p = dict(params)
+    conv, deconv, crop, bn_act = _ops(use_pallas)
+
+    def up(x, w, fix_w):
+        """One up-sampling step under the given variant (paper §V.A.2)."""
+        if variant == "original":
+            return deconv(x, w, 2, 1)  # Eq. 6: out = 2*in
+        y = deconv(x, w, 2, 0)  # Eq. 5: out = 2*in + 2
+        if variant == "cropping":
+            return crop(y)  # Eq. 7: trim 1/side
+        # convolution variant: stride-1 VALID 3x3, Eq. 9 (bias-free)
+        return conv(y, fix_w, 1, 0)
+
+    skips = []
+    h = x
+    for i in range(cfg.depth):
+        h = conv(h, p[f"enc{i}_w"], 2, 1)
+        if i > 0:
+            h = bn_act(h, p[f"enc{i}_scale"], p[f"enc{i}_shift"], "leaky_relu")
+        else:
+            h = jnp.where(h >= 0, h, 0.2 * h)
+        skips.append(h)
+
+    for i in range(cfg.depth - 1):
+        h = up(h, p[f"dec{i}_w"], p.get(f"dec{i}_fix_w"))
+        h = bn_act(h, p[f"dec{i}_scale"], p[f"dec{i}_shift"], "relu")
+        h = jnp.concatenate([h, skips[cfg.depth - 2 - i]], axis=-1)
+
+    h = up(h, p["final_w"], p.get("final_fix_w"))
+    h = h + p["final_b"]
+    return jnp.tanh(h)
+
+
+def init_discriminator(key, cfg: GanConfig):
+    """70x70-style PatchGAN on (ct, mri) pairs (scaled widths)."""
+    params = []
+    keys = iter(jax.random.split(key, 16))
+    c_in = cfg.channels * 2
+    for i, mult in enumerate([1, 2, 4]):
+        c_out = cfg.ngf * mult
+        params.append((f"d{i}_w", _conv_init(next(keys), 4, 4, c_in, c_out)))
+        if i > 0:
+            params.append((f"d{i}_scale", jnp.ones((c_out,), jnp.float32)))
+            params.append((f"d{i}_shift", jnp.zeros((c_out,), jnp.float32)))
+        c_in = c_out
+    params.append(("d3_w", _conv_init(next(keys), 4, 4, c_in, cfg.ngf * 8)))
+    params.append(("d3_scale", jnp.ones((cfg.ngf * 8,), jnp.float32)))
+    params.append(("d3_shift", jnp.zeros((cfg.ngf * 8,), jnp.float32)))
+    params.append(("patch_w", _conv_init(next(keys), 4, 4, cfg.ngf * 8, 1)))
+    params.append(("patch_b", jnp.zeros((1,), jnp.float32)))
+    return params
+
+
+def discriminator_apply(params, ct, mri, cfg: GanConfig):
+    p = dict(params)
+    h = jnp.concatenate([ct, mri], axis=-1)
+    for i in range(3):
+        h = kref.conv2d_ref(h, p[f"d{i}_w"], stride=2, padding=1)
+        if i > 0:
+            h = kref.bn_act_ref(h, p[f"d{i}_scale"], p[f"d{i}_shift"], "leaky_relu")
+        else:
+            h = jnp.where(h >= 0, h, 0.2 * h)
+    h = jnp.pad(h, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    h = kref.conv2d_ref(h, p["d3_w"], stride=1, padding=0)
+    h = kref.bn_act_ref(h, p["d3_scale"], p["d3_shift"], "leaky_relu")
+    h = jnp.pad(h, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    h = kref.conv2d_ref(h, p["patch_w"], stride=1, padding=0) + p["patch_b"]
+    return h  # logits patch map
+
+
+# ---------------------------------------------------------------------------
+# YOLO-lite detector (compiled to an artifact; weights are untrained — the
+# stroke dataset [35] is private; see DESIGN.md substitution table).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class YoloConfig:
+    image_size: int = 64
+    channels: int = 1
+    width: int = 8
+    num_classes: int = 1
+    reg_max: int = 4
+
+
+def init_yolo(key, cfg: YoloConfig):
+    params = []
+    keys = iter(jax.random.split(key, 64))
+    w = cfg.width
+
+    def add_cbs(name, cin, cout, k):
+        params.append((f"{name}_w", _conv_init(next(keys), k, k, cin, cout)))
+        params.append((f"{name}_scale", jnp.ones((cout,), jnp.float32)))
+        params.append((f"{name}_shift", jnp.zeros((cout,), jnp.float32)))
+
+    add_cbs("stem", cfg.channels, w, 3)        # /2
+    add_cbs("down1", w, w * 2, 3)              # /4
+    add_cbs("b1", w * 2, w * 2, 3)
+    add_cbs("down2", w * 2, w * 4, 3)          # /8
+    add_cbs("b2", w * 4, w * 4, 3)
+    add_cbs("down3", w * 4, w * 8, 3)          # /16
+    add_cbs("b3", w * 8, w * 8, 3)
+    add_cbs("down4", w * 8, w * 16, 3)         # /32
+    nout = 4 * cfg.reg_max + cfg.num_classes
+    for scale, cin in (("p3", w * 4), ("p4", w * 8), ("p5", w * 16)):
+        add_cbs(f"head_{scale}_1", cin, w * 4, 3)
+        params.append((f"head_{scale}_pred_w", _conv_init(next(keys), 1, 1, w * 4, nout)))
+        params.append((f"head_{scale}_pred_b", jnp.zeros((nout,), jnp.float32)))
+    return params
+
+
+def yolo_apply(params, x, cfg: YoloConfig, use_pallas=False):
+    """Returns three feature maps (N, s, s, 4*reg_max + classes) at /8 /16 /32."""
+    p = dict(params)
+    conv, _, _, bn_act = _ops(use_pallas)
+
+    def cbs(name, h, stride):
+        h = conv(h, p[f"{name}_w"], stride, 1)
+        return bn_act(h, p[f"{name}_scale"], p[f"{name}_shift"], "silu")
+
+    h = cbs("stem", x, 2)
+    h = cbs("down1", h, 2)
+    h = cbs("b1", h, 1)
+    h = cbs("down2", h, 2)
+    p3 = cbs("b2", h, 1)
+    h = cbs("down3", p3, 2)
+    p4 = cbs("b3", h, 1)
+    p5 = cbs("down4", p4, 2)
+
+    outs = []
+    for scale, feat in (("p3", p3), ("p4", p4), ("p5", p5)):
+        f = cbs(f"head_{scale}_1", feat, 1)
+        pred = conv(f, p[f"head_{scale}_pred_w"], 1, 0) + p[f"head_{scale}_pred_b"]
+        outs.append(pred)
+    return tuple(outs)
+
+
+def param_vector_names(params):
+    return [name for name, _ in params]
+
+
+def param_count(params):
+    return sum(int(math.prod(a.shape)) for _, a in params)

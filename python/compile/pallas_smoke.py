@@ -1,0 +1,48 @@
+"""Export the Pallas GEMM kernel as a standalone smoke artifact.
+
+The full interpret-lowered Pallas models trigger a pathological slowdown in
+xla_extension 0.5.1 (see DESIGN.md §Hardware-Adaptation note); the runtime
+artifacts are therefore lowered through the ref ops (pytest proves the two
+paths agree numerically), and this one-kernel artifact keeps the
+Pallas -> HLO text -> rust PJRT path exercised end to end
+(`integration_runtime::pallas_smoke_artifact_roundtrip`).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import aot
+from .kernels import conv
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    def fn(x, w):
+        # NHWC-rank input so the rust Artifact ABI (rank-4 frames) applies.
+        return (conv.matmul(x.reshape(128, 128), w, interpret=True).reshape(1, 1, 128, 128),)
+
+    x_spec = jax.ShapeDtypeStruct((1, 1, 128, 128), jnp.float32)
+    w_spec = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    lowered = jax.jit(fn).lower(x_spec, w_spec)
+    base = os.path.join(args.out, "pallas_matmul")
+    with open(base + ".hlo.txt", "w") as f:
+        f.write(aot.to_hlo_text(lowered))
+    aot.write_weights_bin(base + ".weights.bin", [jnp.eye(128)])
+    with open(base + ".meta.json", "w") as f:
+        json.dump(
+            {"model": "pallas_matmul", "input": [1, 1, 128, 128], "params": ["w"], "pallas": True},
+            f,
+        )
+    print(f"wrote {base}.hlo.txt")
+
+
+if __name__ == "__main__":
+    main()

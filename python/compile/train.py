@@ -1,0 +1,209 @@
+"""Pix2Pix GAN training + Table II accuracy comparison.
+
+Trains the three generator variants (original / cropping / convolution)
+with the paper's objective (generator: BCE adversarial + 100 * L1; see
+[27]) on paired synthetic phantoms, evaluates SSIM / PSNR / MSE on a
+held-out set, and writes checkpoints + a table2.json summary.
+
+Usage:  python -m compile.train --steps 300 --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .model import (
+    GanConfig,
+    VARIANTS,
+    discriminator_apply,
+    generator_apply,
+    init_discriminator,
+    init_generator,
+)
+
+L1_WEIGHT = 100.0
+
+
+def bce_logits(logits, target):
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * target + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def adam_init(params):
+    return {
+        "m": jax.tree.map(jnp.zeros_like, params),
+        "v": jax.tree.map(jnp.zeros_like, params),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def adam_step(params, grads, state, lr=2e-4, b1=0.5, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    tf = t.astype(jnp.float32)
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    new_p = jax.tree.map(
+        lambda p_, m_, v_: p_
+        - lr * (m_ / (1 - b1**tf)) / (jnp.sqrt(v_ / (1 - b2**tf)) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_p, {"m": m, "v": v, "t": t}
+
+
+def make_train_step(cfg, variant):
+    def g_loss_fn(g_params, d_params, ct, mri):
+        fake = generator_apply(g_params, ct, cfg, variant)
+        d_fake = discriminator_apply(d_params, ct, fake, cfg)
+        adv = bce_logits(d_fake, jnp.ones_like(d_fake))
+        l1 = jnp.mean(jnp.abs(fake - mri))
+        return adv + L1_WEIGHT * l1, (adv, l1)
+
+    def d_loss_fn(d_params, g_params, ct, mri):
+        fake = generator_apply(g_params, ct, cfg, variant)
+        d_real = discriminator_apply(d_params, ct, mri, cfg)
+        d_fake = discriminator_apply(d_params, ct, fake, cfg)
+        return bce_logits(d_real, jnp.ones_like(d_real)) + bce_logits(
+            d_fake, jnp.zeros_like(d_fake)
+        )
+
+    @jax.jit
+    def step(g_params, d_params, g_opt, d_opt, ct, mri):
+        (gl, (_adv, l1)), g_grads = jax.value_and_grad(g_loss_fn, has_aux=True)(
+            g_params, d_params, ct, mri
+        )
+        g_params, g_opt = adam_step(g_params, g_grads, g_opt)
+
+        dl, d_grads = jax.value_and_grad(d_loss_fn)(d_params, g_params, ct, mri)
+        d_params, d_opt = adam_step(d_params, d_grads, d_opt)
+        return g_params, d_params, g_opt, d_opt, gl, dl, l1
+
+    return step
+
+
+# --- evaluation metrics (match rust imaging/metrics.rs conventions) -------
+
+def mse_8bit(a, b):
+    return float(np.mean(((a - b) * 255.0) ** 2))
+
+
+def psnr(a, b):
+    m = mse_8bit(a, b)
+    return float("inf") if m == 0 else 10.0 * np.log10(255.0 * 255.0 / m)
+
+
+def ssim(a, b, win=8, stride=4):
+    l = 255.0
+    c1, c2 = (0.01 * l) ** 2, (0.03 * l) ** 2
+    a = a * 255.0
+    b = b * 255.0
+    vals = []
+    for y in range(0, a.shape[0] - win + 1, stride):
+        for x in range(0, a.shape[1] - win + 1, stride):
+            pa = a[y : y + win, x : x + win]
+            pb = b[y : y + win, x : x + win]
+            ma, mb = pa.mean(), pb.mean()
+            va, vb = pa.var(), pb.var()
+            cov = ((pa - ma) * (pb - mb)).mean()
+            vals.append(
+                ((2 * ma * mb + c1) * (2 * cov + c2))
+                / ((ma * ma + mb * mb + c1) * (va + vb + c2))
+            )
+    return float(np.mean(vals))
+
+
+def evaluate(g_params, cfg, variant, n=32, seed=999):
+    rng = np.random.default_rng(seed)
+    ct, mri = data.batch(rng, n, size=cfg.image_size)
+    fake = np.array(generator_apply(g_params, jnp.asarray(ct), cfg, variant))
+    # back to [0, 1]
+    fake01 = (fake[..., 0] + 1.0) / 2.0
+    mri01 = (mri[..., 0] + 1.0) / 2.0
+    return {
+        "ssim_pct": 100.0 * float(np.mean([ssim(mri01[i], fake01[i]) for i in range(n)])),
+        "psnr": float(np.mean([psnr(mri01[i], fake01[i]) for i in range(n)])),
+        "mse": float(np.mean([mse_8bit(mri01[i], fake01[i]) for i in range(n)])),
+    }
+
+
+def save_params(params, path):
+    if isinstance(params, dict):
+        np.savez(path, **{k: np.array(v) for k, v in params.items()})
+    else:
+        np.savez(path, **{name: np.array(a) for name, a in params})
+
+
+def load_params(path):
+    z = np.load(path)
+    return [(name, jnp.asarray(z[name])) for name in z.files]
+
+
+def train_variant(variant, steps, batch_size, cfg, seed=0, log_every=50):
+    key = jax.random.PRNGKey(seed)
+    gk, dk = jax.random.split(key)
+    g_params = dict(init_generator(gk, cfg, variant))
+    d_params = dict(init_discriminator(dk, cfg))
+    g_opt, d_opt = adam_init(g_params), adam_init(d_params)
+    step = make_train_step(cfg, variant)
+    rng = np.random.default_rng(seed + 1)
+    t0 = time.time()
+    losses = []
+    for i in range(steps):
+        ct, mri = data.batch(rng, batch_size, size=cfg.image_size)
+        g_params, d_params, g_opt, d_opt, gl, dl, l1 = step(
+            g_params, d_params, g_opt, d_opt, jnp.asarray(ct), jnp.asarray(mri)
+        )
+        losses.append(float(l1))
+        if (i + 1) % log_every == 0 or i == 0:
+            print(
+                f"[{variant}] step {i + 1:4d}/{steps} g={float(gl):7.3f} "
+                f"d={float(dl):6.3f} L1={float(l1):6.4f} ({time.time() - t0:5.1f}s)",
+                flush=True,
+            )
+    return g_params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--variants", nargs="*", default=list(VARIANTS))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = GanConfig()
+    os.makedirs(args.out, exist_ok=True)
+    table2 = {}
+    for variant in args.variants:
+        g_params, losses = train_variant(variant, args.steps, args.batch, cfg, args.seed)
+        metrics = evaluate(g_params, cfg, variant)
+        metrics["params"] = int(sum(int(np.prod(a.shape)) for a in g_params.values()))
+        metrics["final_l1"] = losses[-1]
+        table2[variant] = metrics
+        save_params(g_params, os.path.join(args.out, f"gen_{variant}.npz"))
+        print(f"[{variant}] {metrics}")
+
+    # Merge with prior runs so per-variant retraining keeps the table whole.
+    path = os.path.join(args.out, "table2.json")
+    merged = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            merged = json.load(f)
+    merged.update(table2)
+    table2 = merged
+    with open(path, "w") as f:
+        json.dump(table2, f, indent=2)
+    print(json.dumps(table2, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Phantom data generator tests (mirrors rust imaging/phantom.rs)."""
+
+import numpy as np
+
+from compile import data
+
+
+def test_sample_shapes_and_range():
+    rng = np.random.default_rng(1)
+    ct, mri, lesions = data.paired_sample(rng, size=64)
+    assert ct.shape == (64, 64)
+    assert mri.shape == (64, 64)
+    assert 0.0 <= ct.min() and ct.max() <= 1.0
+    assert ct.max() > 0.8  # bright skull present
+
+
+def test_mri_contrast_inverted_for_bone():
+    """Bone is bright on CT, dark on the MRI remap."""
+    rng = np.random.default_rng(2)
+    ct, mri, _ = data.paired_sample(rng, size=64, noise_sigma=0.0)
+    bone = ct > 0.9
+    assert bone.any()
+    assert mri[bone].mean() < 0.3
+
+
+def test_lesion_probability_extremes():
+    rng = np.random.default_rng(3)
+    none = [data.paired_sample(rng, lesion_prob=0.0)[2] for _ in range(5)]
+    assert all(len(l) == 0 for l in none)
+    some = [data.paired_sample(rng, lesion_prob=1.0)[2] for _ in range(10)]
+    assert sum(1 for l in some if l) >= 8
+
+
+def test_batch_scaling():
+    rng = np.random.default_rng(4)
+    ct, mri = data.batch(rng, 3, size=32)
+    assert ct.shape == (3, 32, 32, 1)
+    assert mri.shape == (3, 32, 32, 1)
+    assert -1.0 <= ct.min() and ct.max() <= 1.0
+
+
+def test_deterministic_given_rng_state():
+    a = data.paired_sample(np.random.default_rng(42))[0]
+    b = data.paired_sample(np.random.default_rng(42))[0]
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,151 @@
+"""Pallas kernels vs pure-JAX oracles — the core build-time correctness
+signal. Hypothesis sweeps shapes/strides/paddings; assert_allclose against
+ref.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv, deconv, norm_act, ref
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- matmul --
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+)
+def test_matmul_matches_ref(m, k, n):
+    x = rand(m * 7 + k, (m, k))
+    w = rand(n * 13 + k, (k, n), 0.1)
+    np.testing.assert_allclose(
+        np.array(conv.matmul(x, w)), np.array(ref.matmul_ref(x, w)), **TOL
+    )
+
+
+def test_matmul_tile_boundaries():
+    # Exactly one tile, one tile + 1, and multi-tile shapes.
+    for m, k, n in [(128, 128, 128), (129, 127, 130), (256, 384, 128), (1, 1, 1)]:
+        x = rand(m + k, (m, k))
+        w = rand(n + k, (k, n), 0.1)
+        np.testing.assert_allclose(
+            np.array(conv.matmul(x, w)), np.array(ref.matmul_ref(x, w)), **TOL
+        )
+
+
+# ------------------------------------------------------------------ conv --
+
+@settings(max_examples=16, deadline=None)
+@given(
+    hw=st.integers(4, 24),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    stride=st.integers(1, 2),
+    padding=st.integers(0, 2),
+    kernel=st.sampled_from([1, 3, 4]),
+)
+def test_conv2d_matches_ref(hw, cin, cout, stride, padding, kernel):
+    if hw + 2 * padding < kernel:
+        return
+    x = rand(hw * cin + cout, (2, hw, hw, cin))
+    w = rand(hw + cin * cout, (kernel, kernel, cin, cout), 0.1)
+    got = conv.conv2d(x, w, stride=stride, padding=padding)
+    want = ref.conv2d_ref(x, w, stride=stride, padding=padding)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.array(got), np.array(want), **TOL)
+
+
+def test_conv2d_with_bias():
+    x = rand(1, (1, 8, 8, 4))
+    w = rand(2, (3, 3, 4, 6), 0.1)
+    b = rand(3, (6,))
+    got = conv.conv2d(x, w, b=b, stride=1, padding=1)
+    want = ref.conv2d_ref(x, w, b=b, stride=1, padding=1)
+    np.testing.assert_allclose(np.array(got), np.array(want), **TOL)
+
+
+# ---------------------------------------------------------------- deconv --
+
+@settings(max_examples=12, deadline=None)
+@given(
+    hw=st.integers(2, 12),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 6),
+    padding=st.integers(0, 1),
+)
+def test_deconv_matches_ref(hw, cin, cout, padding):
+    x = rand(hw + cin, (1, hw, hw, cin))
+    w = rand(cout + hw, (4, 4, cin, cout), 0.1)
+    got = deconv.conv_transpose2d(x, w, stride=2, padding=padding)
+    want = ref.conv_transpose2d_ref(x, w, stride=2, padding=padding)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.array(got), np.array(want), **TOL)
+
+
+def test_deconv_output_sizes_paper_eqs():
+    """Paper Eq. 5 (p=0: out = 2*in + 2) and Eq. 6 (p=1: out = 2*in)."""
+    x = rand(1, (1, 8, 8, 4))
+    w = rand(2, (4, 4, 4, 4), 0.1)
+    assert deconv.conv_transpose2d(x, w, stride=2, padding=0).shape[1] == 18
+    assert deconv.conv_transpose2d(x, w, stride=2, padding=1).shape[1] == 16
+
+
+def test_padding_surgery_equivalence():
+    """The paper's claim behind Table II: deconv(p=1) produces the same
+    *interior* values as deconv(p=0) + crop(1)."""
+    x = rand(1, (1, 8, 8, 4))
+    w = rand(2, (4, 4, 4, 4), 0.1)
+    padded = deconv.conv_transpose2d(x, w, stride=2, padding=1)
+    cropped = deconv.crop(deconv.conv_transpose2d(x, w, stride=2, padding=0), 1)
+    np.testing.assert_allclose(np.array(padded), np.array(cropped), **TOL)
+
+
+def test_zero_insert():
+    x = jnp.arange(4.0).reshape(1, 2, 2, 1)
+    y = deconv.zero_insert(x, 2)
+    assert y.shape == (1, 3, 3, 1)
+    assert y[0, 0, 0, 0] == 0.0
+    assert y[0, 2, 2, 0] == 3.0
+    assert y[0, 1, 1, 0] == 0.0
+
+
+def test_crop_matches_ref():
+    x = rand(5, (2, 10, 10, 3))
+    np.testing.assert_allclose(
+        np.array(deconv.crop(x, 2)), np.array(ref.crop_ref(x, 2)), **TOL
+    )
+
+
+# --------------------------------------------------------------- norm_act --
+
+@pytest.mark.parametrize("act", ["leaky_relu", "relu", "tanh", "silu"])
+def test_bn_act_matches_ref(act):
+    x = rand(11, (2, 8, 8, 6))
+    scale = rand(12, (6,))
+    shift = rand(13, (6,))
+    got = norm_act.bn_act(x, scale, shift, act=act)
+    want = ref.bn_act_ref(x, scale, shift, act=act)
+    np.testing.assert_allclose(np.array(got), np.array(want), **TOL)
+
+
+def test_batchnorm_fold():
+    mean = rand(1, (4,))
+    var = jnp.abs(rand(2, (4,))) + 0.5
+    gamma = rand(3, (4,))
+    beta = rand(4, (4,))
+    scale, shift = norm_act.batchnorm_params(mean, var, gamma, beta)
+    x = rand(5, (1, 4, 4, 4))
+    direct = gamma * (x - mean) / jnp.sqrt(var + 1e-3) + beta
+    np.testing.assert_allclose(
+        np.array(x * scale + shift), np.array(direct), rtol=1e-4, atol=1e-4
+    )

@@ -1,0 +1,91 @@
+"""Model-level tests: shapes, variant structure, pallas/ref agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    GanConfig,
+    VARIANTS,
+    YoloConfig,
+    discriminator_apply,
+    generator_apply,
+    init_discriminator,
+    init_generator,
+    init_yolo,
+    param_count,
+    yolo_apply,
+)
+
+CFG = GanConfig()
+
+
+@pytest.fixture(scope="module")
+def ct_batch():
+    return jax.random.uniform(jax.random.PRNGKey(0), (2, 64, 64, 1), jnp.float32) * 2 - 1
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_generator_shape(variant, ct_batch):
+    params = init_generator(jax.random.PRNGKey(1), CFG, variant)
+    out = generator_apply(dict(params), ct_batch, CFG, variant)
+    assert out.shape == ct_batch.shape
+    assert np.all(np.abs(np.array(out)) <= 1.0)
+
+
+def test_cropping_same_params_as_original_table2():
+    o = init_generator(jax.random.PRNGKey(1), CFG, "original")
+    c = init_generator(jax.random.PRNGKey(1), CFG, "cropping")
+    assert param_count(o) == param_count(c)
+
+
+def test_convolution_more_params_table2():
+    o = init_generator(jax.random.PRNGKey(1), CFG, "original")
+    v = init_generator(jax.random.PRNGKey(1), CFG, "convolution")
+    assert param_count(v) > param_count(o)
+    # the extra params are exactly the bias-free 3x3 fix convs
+    extra = sum(
+        int(np.prod(a.shape)) for n, a in v if n.endswith("fix_w")
+    )
+    assert param_count(v) - param_count(o) == extra
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_pallas_path_matches_ref_path(variant, ct_batch):
+    """L1/L2 integration: the Pallas-kernel forward equals the ref forward."""
+    params = dict(init_generator(jax.random.PRNGKey(2), CFG, variant))
+    ref_out = generator_apply(params, ct_batch, CFG, variant, use_pallas=False)
+    pallas_out = generator_apply(params, ct_batch, CFG, variant, use_pallas=True)
+    np.testing.assert_allclose(
+        np.array(ref_out), np.array(pallas_out), rtol=5e-5, atol=5e-5
+    )
+
+
+def test_discriminator_patch_output(ct_batch):
+    params = dict(init_discriminator(jax.random.PRNGKey(3), CFG))
+    patch = discriminator_apply(params, ct_batch, ct_batch, CFG)
+    assert patch.shape[0] == ct_batch.shape[0]
+    assert patch.shape[-1] == 1
+    assert patch.shape[1] > 1  # a patch map, not a scalar
+
+
+def test_yolo_three_scales():
+    cfg = YoloConfig()
+    params = dict(init_yolo(jax.random.PRNGKey(4), cfg))
+    x = jnp.zeros((1, 64, 64, 1), jnp.float32)
+    p3, p4, p5 = yolo_apply(params, x, cfg)
+    assert p3.shape[1] == 8  # /8
+    assert p4.shape[1] == 4  # /16
+    assert p5.shape[1] == 2  # /32
+    assert p3.shape[-1] == 4 * cfg.reg_max + cfg.num_classes
+
+
+def test_yolo_pallas_matches_ref():
+    cfg = YoloConfig()
+    params = dict(init_yolo(jax.random.PRNGKey(5), cfg))
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 64, 64, 1), jnp.float32)
+    a = yolo_apply(params, x, cfg, use_pallas=False)
+    b = yolo_apply(params, x, cfg, use_pallas=True)
+    for ra, rb in zip(a, b):
+        np.testing.assert_allclose(np.array(ra), np.array(rb), rtol=5e-5, atol=5e-5)

@@ -1,0 +1,49 @@
+"""Training smoke tests (kept tiny: a handful of steps on 32x32)."""
+
+import jax
+import numpy as np
+
+from compile import data, train
+from compile.model import GanConfig
+
+
+def test_losses_decrease_over_few_steps():
+    cfg = GanConfig(image_size=32, ngf=4, depth=4)
+    g_params, losses = train.train_variant(
+        "cropping", steps=8, batch_size=4, cfg=cfg, seed=3, log_every=100
+    )
+    assert len(losses) == 8
+    # L1 should drop from the random-init level within a few steps
+    assert losses[-1] < losses[0]
+
+
+def test_metrics_functions():
+    a = np.zeros((32, 32), np.float32)
+    b = np.ones((32, 32), np.float32)
+    assert train.mse_8bit(a, a) == 0.0
+    assert train.psnr(a, a) == float("inf")
+    assert abs(train.mse_8bit(a, b) - 255.0**2) < 1e-3
+    assert train.ssim(a, a) > 0.99
+
+
+def test_evaluate_returns_all_metrics():
+    cfg = GanConfig(image_size=32, ngf=4, depth=4)
+    g_params = dict(
+        __import__("compile.model", fromlist=["init_generator"]).init_generator(
+            jax.random.PRNGKey(0), cfg, "original"
+        )
+    )
+    m = train.evaluate(g_params, cfg, "original", n=2, seed=1)
+    assert set(m) == {"ssim_pct", "psnr", "mse"}
+    assert 0 <= m["ssim_pct"] <= 100
+
+
+def test_adam_moves_params():
+    import jax.numpy as jnp
+
+    params = {"w": jnp.ones((3,))}
+    grads = {"w": jnp.ones((3,))}
+    st = train.adam_init(params)
+    new, st2 = train.adam_step(params, grads, st)
+    assert not np.allclose(np.array(new["w"]), np.array(params["w"]))
+    assert int(st2["t"]) == 1

@@ -1,0 +1,36 @@
+//! Tiny shared bench harness (criterion is not in the offline vendor
+//! set). Measures wall-clock over enough iterations for stability and
+//! prints mean / throughput lines that `cargo bench` surfaces.
+
+use std::time::Instant;
+
+pub struct Bench {
+    pub name: &'static str,
+}
+
+impl Bench {
+    pub fn new(name: &'static str) -> Self {
+        println!("== bench: {name} ==");
+        Bench { name }
+    }
+
+    /// Time `f` for at least `min_ms` of wall clock; report mean ms/iter.
+    pub fn measure<F: FnMut()>(&self, label: &str, min_ms: u64, mut f: F) -> f64 {
+        // warmup
+        f();
+        let t0 = Instant::now();
+        let mut iters = 0u64;
+        while t0.elapsed().as_millis() < min_ms as u128 {
+            f();
+            iters += 1;
+        }
+        let mean_ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+        println!(
+            "{:<40} {:>10.3} ms/iter  ({} iters)",
+            format!("{}/{label}", self.name),
+            mean_ms,
+            iters
+        );
+        mean_ms
+    }
+}

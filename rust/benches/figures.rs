@@ -1,0 +1,69 @@
+//! Benches regenerating the paper's figures (9-12: standalone + naive
+//! concurrent throughput) and the Table I classical algorithms.
+
+mod bench_util;
+
+use bench_util::Bench;
+use edgepipe::config::GanVariant;
+use edgepipe::hw::{orin, EngineKind};
+use edgepipe::imaging::{self, Image};
+use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
+use edgepipe::models::yolov8::{yolov8, YoloConfig};
+use edgepipe::sched::naive;
+use edgepipe::sim::{simulate, SimConfig};
+use edgepipe::util::rng::Rng;
+
+fn main() {
+    let soc = orin();
+
+    let b = Bench::new("fig9_standalone");
+    for v in GanVariant::all() {
+        let g = generator(&Pix2PixConfig::paper(), v).unwrap();
+        let sched = naive::standalone(&g, EngineKind::Dla);
+        b.measure(v.name(), 200, || {
+            let mut cfg = SimConfig::new(soc.clone(), 64);
+            cfg.max_inflight = 1;
+            cfg.record_timeline = false;
+            simulate(&[&g], &sched, &cfg).unwrap();
+        });
+    }
+
+    let b = Bench::new("fig11_naive_concurrent");
+    let y = yolov8(&YoloConfig::nano()).unwrap();
+    for v in GanVariant::all() {
+        let g = generator(&Pix2PixConfig::paper(), v).unwrap();
+        let sched = naive::gan_dla_yolo_gpu(&g, &y);
+        b.measure(v.name(), 200, || {
+            let mut cfg = SimConfig::new(soc.clone(), 64);
+            cfg.record_timeline = false;
+            simulate(&[&g, &y], &sched, &cfg).unwrap();
+        });
+    }
+
+    // Table I classical algorithm kernels on real pixels.
+    let b = Bench::new("table1_algorithms");
+    let mut rng = Rng::new(7);
+    let mut img = Image::zeros(512, 512);
+    for v in &mut img.data {
+        *v = rng.next_f32();
+    }
+    b.measure("median3_512", 200, || {
+        imaging::median::median3(&img);
+    });
+    b.measure("histeq_512", 200, || {
+        imaging::histeq::equalize(&img);
+    });
+    b.measure("sobel_512", 200, || {
+        imaging::sobel::sobel_edges(&img, 0.5);
+    });
+    b.measure("canny_512", 200, || {
+        imaging::canny::canny(&img, 0.1, 0.3);
+    });
+    let bytes = img.to_u8();
+    b.measure("lzw_512", 200, || {
+        imaging::lzw::compress(&bytes);
+    });
+    b.measure("dct_512", 200, || {
+        imaging::dct::dct_image(&img);
+    });
+}

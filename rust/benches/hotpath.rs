@@ -1,0 +1,97 @@
+//! Hot-path micro-benches for the performance pass (EXPERIMENTS.md §Perf):
+//! simulator event throughput, scheduler search, NMS, JSON, PJRT execute.
+
+mod bench_util;
+
+use bench_util::Bench;
+use edgepipe::config::json::Json;
+use edgepipe::config::GanVariant;
+use edgepipe::hw::orin;
+use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
+use edgepipe::models::yolov8::{yolov8, YoloConfig};
+use edgepipe::postproc::{nms, Detection};
+use edgepipe::sched::haxconn;
+use edgepipe::sim::{simulate, SimConfig};
+use edgepipe::util::rng::Rng;
+use std::path::Path;
+
+fn main() {
+    let soc = orin();
+    let b = Bench::new("hotpath");
+
+    // Simulator job throughput: jobs/s over a long two-model run.
+    let g = generator(&Pix2PixConfig::paper(), GanVariant::Cropping).unwrap();
+    let y = yolov8(&YoloConfig::nano()).unwrap();
+    let (sched, _) = haxconn::gan_plus_yolo(&g, &y, &soc, edgepipe::dla::DlaVersion::V2).unwrap();
+    let frames = 2048;
+    let ms = b.measure("sim_2048_frames_no_trace", 500, || {
+        let mut cfg = SimConfig::new(soc.clone(), frames);
+        cfg.record_timeline = false;
+        simulate(&[&g, &y], &sched, &cfg).unwrap();
+    });
+    // each frame ~6 steps across 2 instances
+    println!(
+        "{:<40} {:>10.0} jobs/s",
+        "hotpath/sim_job_rate",
+        (frames as f64 * 6.0) / (ms / 1e3)
+    );
+    let ms_tl = b.measure("sim_2048_frames_with_trace", 500, || {
+        let cfg = SimConfig::new(soc.clone(), frames);
+        simulate(&[&g, &y], &sched, &cfg).unwrap();
+    });
+    println!(
+        "{:<40} {:>10.2}x",
+        "hotpath/trace_overhead",
+        ms_tl / ms
+    );
+
+    // NMS over 1k random boxes.
+    let mut rng = Rng::new(3);
+    let dets: Vec<Detection> = (0..1000)
+        .map(|_| {
+            let x0 = rng.range_f64(0.0, 500.0) as f32;
+            let y0 = rng.range_f64(0.0, 500.0) as f32;
+            Detection {
+                x0,
+                y0,
+                x1: x0 + rng.range_f64(5.0, 60.0) as f32,
+                y1: y0 + rng.range_f64(5.0, 60.0) as f32,
+                score: rng.next_f32(),
+                class: rng.below(2) as usize,
+            }
+        })
+        .collect();
+    b.measure("nms_1000_boxes", 200, || {
+        nms(dets.clone(), 0.5);
+    });
+
+    // JSON parse/serialize of a trace-sized document.
+    let doc = {
+        let mut cfg = SimConfig::new(soc.clone(), 32);
+        cfg.record_timeline = true;
+        let r = simulate(&[&g, &y], &sched, &cfg).unwrap();
+        r.timeline.to_json().to_compact()
+    };
+    println!("trace json bytes: {}", doc.len());
+    b.measure("json_parse_trace", 200, || {
+        Json::parse(&doc).unwrap();
+    });
+
+    // PJRT execute on the real artifact if available.
+    if Path::new("artifacts/gen_cropping.hlo.txt").exists() {
+        let client = edgepipe::runtime::RuntimeClient::cpu().unwrap();
+        let a = edgepipe::runtime::Artifact::load(&client, Path::new("artifacts"), "gen_cropping")
+            .unwrap();
+        let frame = vec![0.2f32; 64 * 64];
+        b.measure("pjrt_gen_cropping_execute", 1000, || {
+            a.run_image(&frame).unwrap();
+        });
+        let ay = edgepipe::runtime::Artifact::load(&client, Path::new("artifacts"), "yolo_lite")
+            .unwrap();
+        b.measure("pjrt_yolo_lite_execute", 1000, || {
+            ay.run_image(&frame).unwrap();
+        });
+    } else {
+        println!("artifacts missing; skipping PJRT benches");
+    }
+}

@@ -1,0 +1,51 @@
+//! End-to-end benches regenerating the paper's throughput tables
+//! (IV and VI) — run with `cargo bench --bench tables`.
+
+mod bench_util;
+
+use bench_util::Bench;
+use edgepipe::config::GanVariant;
+use edgepipe::dla::DlaVersion;
+use edgepipe::hw::orin;
+use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
+use edgepipe::models::yolov8::{yolov8, YoloConfig};
+use edgepipe::sched::haxconn;
+use edgepipe::sim::{simulate, SimConfig};
+
+fn main() {
+    let soc = orin();
+
+    let b = Bench::new("table4_two_gans");
+    for v in GanVariant::all() {
+        let g = generator(&Pix2PixConfig::paper(), v).unwrap();
+        let (sched, _) = haxconn::two_gans(&g, &soc, DlaVersion::V2).unwrap();
+        b.measure(v.name(), 300, || {
+            let mut cfg = SimConfig::new(soc.clone(), 128);
+            cfg.record_timeline = false;
+            let r = simulate(&[&g], &sched, &cfg).unwrap();
+            assert!(r.instances[0].fps > 0.0);
+        });
+    }
+
+    let b = Bench::new("table6_gan_yolo");
+    let y = yolov8(&YoloConfig::nano()).unwrap();
+    for v in GanVariant::all() {
+        let g = generator(&Pix2PixConfig::paper(), v).unwrap();
+        let (sched, _) = haxconn::gan_plus_yolo(&g, &y, &soc, DlaVersion::V2).unwrap();
+        b.measure(v.name(), 300, || {
+            let mut cfg = SimConfig::new(soc.clone(), 128);
+            cfg.record_timeline = false;
+            let r = simulate(&[&g, &y], &sched, &cfg).unwrap();
+            assert!(r.instances[0].fps > 0.0);
+        });
+    }
+
+    let b = Bench::new("schedule_synthesis");
+    let g = generator(&Pix2PixConfig::paper(), GanVariant::Cropping).unwrap();
+    b.measure("two_gans_search", 300, || {
+        haxconn::two_gans(&g, &soc, DlaVersion::V2).unwrap();
+    });
+    b.measure("gan_plus_yolo_search", 500, || {
+        haxconn::gan_plus_yolo(&g, &y, &soc, DlaVersion::V2).unwrap();
+    });
+}

@@ -1,0 +1,316 @@
+//! Configuration system.
+//!
+//! Experiments and the pipeline launcher are driven by a typed
+//! [`PipelineConfig`] that can be loaded from a JSON file (see
+//! `examples/configs/`) or assembled programmatically. JSON handling is the
+//! in-tree [`json`] module (the offline vendor set has no serde).
+
+pub mod json;
+
+use crate::error::{Error, Result};
+use json::Json;
+use std::path::Path;
+
+/// Which Jetson device the simulator models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    /// NVIDIA Jetson AGX Xavier (Volta GPU, DLA v1).
+    Xavier,
+    /// NVIDIA Jetson AGX Orin (Ampere GPU, DLA v2).
+    Orin,
+}
+
+impl DeviceKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "xavier" => Ok(DeviceKind::Xavier),
+            "orin" => Ok(DeviceKind::Orin),
+            other => Err(Error::Config(format!("unknown device `{other}`"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceKind::Xavier => "xavier",
+            DeviceKind::Orin => "orin",
+        }
+    }
+}
+
+/// Pix2Pix generator variant (the paper's model-surgery axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GanVariant {
+    /// Stock Pix2Pix: deconv layers with `padding=1` (DLA-incompatible).
+    Original,
+    /// Padding replaced by a Cropping layer (DLA-compatible).
+    Cropping,
+    /// Padding replaced by a stride-1 3x3 VALID convolution (DLA-compatible).
+    Convolution,
+}
+
+impl GanVariant {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "original" | "orig" => Ok(GanVariant::Original),
+            "cropping" | "crop" => Ok(GanVariant::Cropping),
+            "convolution" | "conv" => Ok(GanVariant::Convolution),
+            other => Err(Error::Config(format!("unknown GAN variant `{other}`"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GanVariant::Original => "original",
+            GanVariant::Cropping => "cropping",
+            GanVariant::Convolution => "convolution",
+        }
+    }
+
+    pub fn all() -> [GanVariant; 3] {
+        [
+            GanVariant::Original,
+            GanVariant::Cropping,
+            GanVariant::Convolution,
+        ]
+    }
+}
+
+/// Scheduling policy for concurrent execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Each model statically pinned to one engine (client-server scheme).
+    Naive,
+    /// HaX-CoNN-style partitioned streaming schedule (standalone scheme).
+    HaxConn,
+    /// Jedi-style pipelined layer-group distribution.
+    Jedi,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "naive" => Ok(SchedulerKind::Naive),
+            "haxconn" | "hax-conn" | "hax" => Ok(SchedulerKind::HaxConn),
+            "jedi" => Ok(SchedulerKind::Jedi),
+            other => Err(Error::Config(format!("unknown scheduler `{other}`"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Naive => "naive",
+            SchedulerKind::HaxConn => "haxconn",
+            SchedulerKind::Jedi => "jedi",
+        }
+    }
+}
+
+/// The workload the pipeline runs (which models run concurrently).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    /// One GAN instance alone (standalone profiling, Figs 8-10).
+    GanStandalone,
+    /// GAN on DLA + YOLOv8 on GPU (naive / client-server, Figs 11-12).
+    GanPlusYoloNaive,
+    /// Two GAN instances, HaX-CoNN partitioned (Tables III/IV, Fig 13).
+    TwoGans,
+    /// GAN + YOLOv8, HaX-CoNN partitioned (Tables V/VI, Fig 14).
+    GanPlusYolo,
+}
+
+impl Workload {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "gan-standalone" | "standalone" => Ok(Workload::GanStandalone),
+            "gan+yolo-naive" | "naive" => Ok(Workload::GanPlusYoloNaive),
+            "two-gans" | "2gan" => Ok(Workload::TwoGans),
+            "gan+yolo" => Ok(Workload::GanPlusYolo),
+            other => Err(Error::Config(format!("unknown workload `{other}`"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::GanStandalone => "gan-standalone",
+            Workload::GanPlusYoloNaive => "gan+yolo-naive",
+            Workload::TwoGans => "two-gans",
+            Workload::GanPlusYolo => "gan+yolo",
+        }
+    }
+}
+
+/// Top-level pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub device: DeviceKind,
+    pub variant: GanVariant,
+    pub scheduler: SchedulerKind,
+    pub workload: Workload,
+    /// Number of CT frames to stream through the pipeline.
+    pub frames: usize,
+    /// Number of concurrent input streams (client-server scheme > 1).
+    pub streams: usize,
+    /// Maximum in-flight frames per stream before backpressure blocks.
+    pub queue_depth: usize,
+    /// Dynamic batcher: max batch size (1 = no batching, paper's setting).
+    pub max_batch: usize,
+    /// Dynamic batcher: max wait for a batch to fill, in microseconds.
+    pub batch_timeout_us: u64,
+    /// RNG seed for workload generation.
+    pub seed: u64,
+    /// Directory containing AOT artifacts (HLO text + weights).
+    pub artifact_dir: String,
+    /// Run real PJRT inference for every frame (vs timing-only simulation).
+    pub execute_numerics: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            device: DeviceKind::Orin,
+            variant: GanVariant::Cropping,
+            scheduler: SchedulerKind::HaxConn,
+            workload: Workload::GanPlusYolo,
+            frames: 256,
+            streams: 1,
+            // Perf pass iteration 1: depth 8 only buys queueing delay on
+            // this testbed (p50 104 ms -> 40 ms at depth 2, +4% fps).
+            queue_depth: 4,
+            max_batch: 1,
+            batch_timeout_us: 500,
+            seed: 0xED6E,
+            artifact_dir: "artifacts".to_string(),
+            execute_numerics: false,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Load from a JSON file; unknown keys are rejected to catch typos.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("read {}: {e}", path.display())))?;
+        Self::from_json_str(&text)
+    }
+
+    /// Parse from a JSON string.
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let doc = Json::parse(text).map_err(|e| Error::Config(e.to_string()))?;
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| Error::Config("config root must be an object".into()))?;
+        let mut cfg = PipelineConfig::default();
+        for (key, val) in obj {
+            match key.as_str() {
+                "device" => cfg.device = DeviceKind::parse(req_str(val, key)?)?,
+                "variant" => cfg.variant = GanVariant::parse(req_str(val, key)?)?,
+                "scheduler" => cfg.scheduler = SchedulerKind::parse(req_str(val, key)?)?,
+                "workload" => cfg.workload = Workload::parse(req_str(val, key)?)?,
+                "frames" => cfg.frames = req_u64(val, key)? as usize,
+                "streams" => cfg.streams = req_u64(val, key)? as usize,
+                "queue_depth" => cfg.queue_depth = req_u64(val, key)? as usize,
+                "max_batch" => cfg.max_batch = req_u64(val, key)? as usize,
+                "batch_timeout_us" => cfg.batch_timeout_us = req_u64(val, key)?,
+                "seed" => cfg.seed = req_u64(val, key)?,
+                "artifact_dir" => cfg.artifact_dir = req_str(val, key)?.to_string(),
+                "execute_numerics" => {
+                    cfg.execute_numerics = val
+                        .as_bool()
+                        .ok_or_else(|| Error::Config(format!("`{key}` must be a bool")))?
+                }
+                other => return Err(Error::Config(format!("unknown config key `{other}`"))),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.frames == 0 {
+            return Err(Error::Config("frames must be > 0".into()));
+        }
+        if self.streams == 0 {
+            return Err(Error::Config("streams must be > 0".into()));
+        }
+        if self.queue_depth == 0 {
+            return Err(Error::Config("queue_depth must be > 0".into()));
+        }
+        if self.max_batch == 0 {
+            return Err(Error::Config("max_batch must be > 0".into()));
+        }
+        Ok(())
+    }
+
+    /// Serialize back to JSON (for experiment provenance records).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("device", json::s(self.device.name())),
+            ("variant", json::s(self.variant.name())),
+            ("scheduler", json::s(self.scheduler.name())),
+            ("workload", json::s(self.workload.name())),
+            ("frames", json::num(self.frames as f64)),
+            ("streams", json::num(self.streams as f64)),
+            ("queue_depth", json::num(self.queue_depth as f64)),
+            ("max_batch", json::num(self.max_batch as f64)),
+            ("batch_timeout_us", json::num(self.batch_timeout_us as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("artifact_dir", json::s(&self.artifact_dir)),
+            ("execute_numerics", Json::Bool(self.execute_numerics)),
+        ])
+    }
+}
+
+fn req_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.as_str()
+        .ok_or_else(|| Error::Config(format!("`{key}` must be a string")))
+}
+
+fn req_u64(v: &Json, key: &str) -> Result<u64> {
+    v.as_u64()
+        .ok_or_else(|| Error::Config(format!("`{key}` must be a non-negative integer")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        PipelineConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn roundtrip_json() {
+        let cfg = PipelineConfig::default();
+        let text = cfg.to_json().to_pretty();
+        let back = PipelineConfig::from_json_str(&text).unwrap();
+        assert_eq!(back.device, cfg.device);
+        assert_eq!(back.variant, cfg.variant);
+        assert_eq!(back.frames, cfg.frames);
+        assert_eq!(back.seed, cfg.seed);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let err = PipelineConfig::from_json_str(r#"{"framez": 10}"#).unwrap_err();
+        assert!(err.to_string().contains("unknown config key"));
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(PipelineConfig::from_json_str(r#"{"frames": 0}"#).is_err());
+        assert!(PipelineConfig::from_json_str(r#"{"device": "tx2"}"#).is_err());
+        assert!(PipelineConfig::from_json_str(r#"{"device": 5}"#).is_err());
+    }
+
+    #[test]
+    fn enum_parsing_aliases() {
+        assert_eq!(GanVariant::parse("crop").unwrap(), GanVariant::Cropping);
+        assert_eq!(
+            SchedulerKind::parse("hax-conn").unwrap(),
+            SchedulerKind::HaxConn
+        );
+        assert_eq!(Workload::parse("2gan").unwrap(), Workload::TwoGans);
+    }
+}

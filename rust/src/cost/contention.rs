@@ -1,0 +1,123 @@
+//! PCCS-style memory-contention model.
+//!
+//! HaX-CoNN's processor-centric contention-aware slowdown (PCCS) models the
+//! slowdown each engine experiences when another engine is concurrently
+//! pulling bandwidth from the shared DRAM. We implement the same idea:
+//! an engine's slowdown grows with (a) its own memory-boundedness and
+//! (b) the bandwidth demand of the co-runner, saturating when combined
+//! demand exceeds the DRAM capability.
+
+use super::flops::LayerCost;
+use crate::hw::{EngineSpec, SocSpec};
+
+/// Bandwidth demand (bytes/s) of a layer running alone on an engine:
+/// bytes moved divided by its isolated latency.
+pub fn bandwidth_demand(cost: &LayerCost, engine: &EngineSpec) -> f64 {
+    let t = super::latency::layer_latency(cost, engine);
+    if t <= 0.0 {
+        0.0
+    } else {
+        cost.bytes / t
+    }
+}
+
+/// Slowdown factor (≥ 1) for an engine whose co-runner demands
+/// `corunner_bw` bytes/s of the shared DRAM.
+///
+/// `self_intensity` is the fraction of the engine's time that is
+/// memory-bound (0 = pure compute, 1 = pure streaming): compute-bound
+/// phases hide contention, memory-bound phases feel it fully.
+pub fn slowdown(soc: &SocSpec, self_intensity: f64, corunner_bw: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&self_intensity));
+    let pressure = (corunner_bw / soc.dram_bw).min(1.0);
+    1.0 + soc.contention_gamma * self_intensity.clamp(0.0, 1.0) * pressure
+}
+
+/// Memory intensity of a layer on an engine: ratio of memory time to
+/// roofline time.
+pub fn memory_intensity(cost: &LayerCost, engine: &EngineSpec) -> f64 {
+    if cost.flops == 0.0 && cost.bytes == 0.0 {
+        return 0.0;
+    }
+    let compute = if cost.is_mac {
+        let eff = engine.effective_flops()
+            * if cost.is_deconv { engine.deconv_boost } else { 1.0 };
+        cost.flops / eff
+    } else {
+        cost.flops / engine.elementwise_rate
+    };
+    let memory = cost.bytes / engine.mem_bw;
+    if compute <= 0.0 && memory <= 0.0 {
+        0.0
+    } else {
+        memory / compute.max(memory)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::orin;
+
+    fn mac_cost() -> LayerCost {
+        LayerCost {
+            flops: 1e9,
+            bytes: 1e6,
+            is_mac: true,
+            is_deconv: false,
+        }
+    }
+
+    fn streaming_cost() -> LayerCost {
+        LayerCost {
+            flops: 1e6,
+            bytes: 1e8,
+            is_mac: false,
+            is_deconv: false,
+        }
+    }
+
+    #[test]
+    fn no_corunner_no_slowdown() {
+        let soc = orin();
+        assert_eq!(slowdown(&soc, 1.0, 0.0), 1.0);
+        assert_eq!(slowdown(&soc, 0.0, 1e11), 1.0);
+    }
+
+    #[test]
+    fn slowdown_monotone_in_pressure() {
+        let soc = orin();
+        let s1 = slowdown(&soc, 0.8, 20e9);
+        let s2 = slowdown(&soc, 0.8, 80e9);
+        let s3 = slowdown(&soc, 0.8, 400e9); // saturates at dram_bw
+        assert!(s1 < s2);
+        assert!(s2 < s3);
+        assert!(s3 <= 1.0 + soc.contention_gamma);
+    }
+
+    #[test]
+    fn compute_bound_layers_feel_less() {
+        let soc = orin();
+        let mac_int = memory_intensity(&mac_cost(), &soc.gpu);
+        let str_int = memory_intensity(&streaming_cost(), &soc.gpu);
+        assert!(mac_int < str_int);
+        assert!(slowdown(&soc, mac_int, 100e9) < slowdown(&soc, str_int, 100e9));
+    }
+
+    #[test]
+    fn bandwidth_demand_bounded_by_membw() {
+        let soc = orin();
+        let d = bandwidth_demand(&streaming_cost(), &soc.gpu);
+        assert!(d > 0.0);
+        assert!(d <= soc.gpu.mem_bw * 1.01);
+    }
+
+    #[test]
+    fn intensity_in_unit_range() {
+        let soc = orin();
+        for c in [mac_cost(), streaming_cost(), LayerCost::ZERO] {
+            let i = memory_intensity(&c, &soc.dla);
+            assert!((0.0..=1.0).contains(&i), "intensity {i}");
+        }
+    }
+}

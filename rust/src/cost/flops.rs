@@ -1,0 +1,187 @@
+//! Arithmetic and memory-traffic cost of each layer.
+
+use crate::graph::layer::LayerKind;
+use crate::graph::shape::Shape;
+use crate::graph::{Graph, NodeId};
+
+/// Static cost of one layer instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerCost {
+    /// Multiply-accumulate-style floating point operations (1 MAC = 2 FLOP).
+    pub flops: f64,
+    /// Bytes moved to/from DRAM: inputs + outputs + parameters.
+    pub bytes: f64,
+    /// True when the op is MAC-array work (conv/deconv/dense), false for
+    /// element-wise / data-movement ops that bypass the MXU/MAC core.
+    pub is_mac: bool,
+    /// Transposed convolution (engines differ in how efficiently they map
+    /// it — see [`crate::hw::EngineSpec::deconv_boost`]).
+    pub is_deconv: bool,
+}
+
+impl LayerCost {
+    pub const ZERO: LayerCost = LayerCost {
+        flops: 0.0,
+        bytes: 0.0,
+        is_mac: false,
+        is_deconv: false,
+    };
+}
+
+/// Compute cost of a layer from its attributes and I/O shapes.
+pub fn layer_cost(kind: &LayerKind, inputs: &[Shape], output: Shape) -> LayerCost {
+    use LayerKind::*;
+    let in_bytes: f64 = inputs.iter().map(|s| s.bytes() as f64).sum();
+    let out_bytes = output.bytes() as f64;
+    let param_bytes = kind.param_count(inputs) as f64 * 2.0; // FP16 weights
+    let io = in_bytes + out_bytes + param_bytes;
+
+    match kind {
+        Input { .. } | Output | Identity | Dropout { .. } => LayerCost::ZERO,
+        Conv2d {
+            kernel, groups, ..
+        } => {
+            let in_c = inputs.first().map(|s| s.c).unwrap_or(0) as f64;
+            let macs =
+                output.numel() as f64 * (in_c / *groups as f64) * (*kernel * *kernel) as f64;
+            LayerCost {
+                flops: 2.0 * macs,
+                bytes: io,
+                is_mac: true,
+                is_deconv: false,
+            }
+        }
+        ConvTranspose2d { kernel, .. } => {
+            // Deconv as zero-insertion conv: each *input* element
+            // contributes k*k*out_c MACs.
+            let in_numel = inputs.first().map(|s| s.numel()).unwrap_or(0) as f64;
+            let macs = in_numel * (*kernel * *kernel) as f64 * output.c as f64;
+            LayerCost {
+                flops: 2.0 * macs,
+                bytes: io,
+                is_mac: true,
+                is_deconv: true,
+            }
+        }
+        Dense { out_features } => {
+            let in_f = inputs.first().map(|s| s.numel()).unwrap_or(0) as f64;
+            LayerCost {
+                flops: 2.0 * in_f * *out_features as f64,
+                bytes: io,
+                is_mac: true,
+                is_deconv: false,
+            }
+        }
+        BatchNorm | InstanceNorm => LayerCost {
+            flops: 2.0 * output.numel() as f64,
+            bytes: io,
+            is_mac: false,
+            is_deconv: false,
+        },
+        ReLU | LeakyReLU { .. } | Sigmoid | Tanh | SiLU | Softmax => LayerCost {
+            flops: output.numel() as f64 * 4.0,
+            bytes: io,
+            is_mac: false,
+            is_deconv: false,
+        },
+        MaxPool { kernel, .. } | AvgPool { kernel, .. } => LayerCost {
+            flops: output.numel() as f64 * (*kernel * *kernel) as f64,
+            bytes: io,
+            is_mac: false,
+            is_deconv: false,
+        },
+        GlobalAvgPool => LayerCost {
+            flops: inputs.first().map(|s| s.numel()).unwrap_or(0) as f64,
+            bytes: io,
+            is_mac: false,
+            is_deconv: false,
+        },
+        Concat | Add | Crop { .. } | ZeroPad { .. } | Upsample { .. } | SliceChannels { .. }
+        | Cast { .. } => LayerCost {
+            flops: output.numel() as f64,
+            bytes: io,
+            is_mac: false,
+            is_deconv: false,
+        },
+    }
+}
+
+/// Cost of one node of a graph.
+pub fn node_cost(graph: &Graph, id: NodeId) -> LayerCost {
+    let node = graph.node(id);
+    layer_cost(&node.kind, &graph.input_shapes(id), node.shape)
+}
+
+/// Total FLOPs of a graph (one inference).
+pub fn graph_flops(graph: &Graph) -> f64 {
+    (0..graph.len()).map(|id| node_cost(graph, id).flops).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GanVariant;
+    use crate::graph::shape::DType;
+    use crate::models::pix2pix::{generator, Pix2PixConfig};
+
+    fn f16(c: usize, hw: usize) -> Shape {
+        Shape::new(c, hw, hw, DType::F16)
+    }
+
+    #[test]
+    fn conv_flops_formula() {
+        let conv = LayerKind::conv(64, 3, 1, 1);
+        let out = conv.infer_shape(&[f16(32, 16)]).unwrap();
+        let c = layer_cost(&conv, &[f16(32, 16)], out);
+        // 2 * out_numel * in_c * k^2 = 2 * 64*16*16 * 32 * 9
+        assert_eq!(c.flops, 2.0 * (64.0 * 256.0) * 32.0 * 9.0);
+        assert!(c.is_mac);
+    }
+
+    #[test]
+    fn deconv_flops_symmetry() {
+        // A stride-2 deconv has the same MAC count as the stride-2 conv of
+        // the reverse direction.
+        let deconv = LayerKind::deconv(32, 4, 2, 1);
+        let out = deconv.infer_shape(&[f16(64, 8)]).unwrap();
+        let c = layer_cost(&deconv, &[f16(64, 8)], out);
+        assert_eq!(c.flops, 2.0 * (64.0 * 64.0) * 16.0 * 32.0);
+    }
+
+    #[test]
+    fn elementwise_is_not_mac() {
+        let relu = LayerKind::ReLU;
+        let c = layer_cost(&relu, &[f16(8, 8)], f16(8, 8));
+        assert!(!c.is_mac);
+        assert!(c.flops > 0.0);
+    }
+
+    #[test]
+    fn markers_are_free() {
+        let c = layer_cost(
+            &LayerKind::Input { shape: f16(3, 256) },
+            &[],
+            f16(3, 256),
+        );
+        assert_eq!(c, LayerCost::ZERO);
+    }
+
+    #[test]
+    fn pix2pix_total_flops_plausible() {
+        // Full 256x256 pix2pix generator ≈ 18 GFLOP (2x the ~9 GMAC
+        // figure commonly reported).
+        let g = generator(&Pix2PixConfig::paper(), GanVariant::Original).unwrap();
+        let f = graph_flops(&g);
+        assert!(
+            (10e9..40e9).contains(&f),
+            "pix2pix flops {f:.3e} outside plausible band"
+        );
+    }
+
+    #[test]
+    fn conv_variant_costs_more_than_crop() {
+        let crop = generator(&Pix2PixConfig::paper(), GanVariant::Cropping).unwrap();
+        let conv = generator(&Pix2PixConfig::paper(), GanVariant::Convolution).unwrap();
+        assert!(graph_flops(&conv) > graph_flops(&crop));
+    }
+}

@@ -1,0 +1,176 @@
+//! Roofline latency model.
+//!
+//! Per-layer latency on an engine is the roofline maximum of compute time
+//! and memory time plus a fixed launch overhead:
+//!
+//! ```text
+//! t = max(flops / effective_flops, bytes / mem_bw) + launch
+//! ```
+//!
+//! MAC ops (conv/deconv/dense) use the MAC-array rate; element-wise ops use
+//! the engine's (much lower) element-wise rate — this is what makes the
+//! modified Pix2Pix variants *slower standalone* (their extra crop/conv
+//! layers add launches and element work) even though they win concurrent
+//! execution, reproducing the paper's Fig 9 vs Table IV crossover.
+
+use super::flops::{node_cost, LayerCost};
+use crate::graph::{Graph, NodeId};
+use crate::hw::{EngineKind, EngineSpec, SocSpec};
+
+/// Latency model over a SoC.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    pub soc: SocSpec,
+}
+
+/// Latency of one layer cost on one engine, seconds.
+pub fn layer_latency(cost: &LayerCost, engine: &EngineSpec) -> f64 {
+    if cost.flops == 0.0 && cost.bytes == 0.0 {
+        return 0.0; // structural markers
+    }
+    let compute = if cost.is_mac {
+        let eff = engine.effective_flops()
+            * if cost.is_deconv { engine.deconv_boost } else { 1.0 };
+        cost.flops / eff
+    } else {
+        // element ops: flops here counts elements processed
+        cost.flops / engine.elementwise_rate
+    };
+    let memory = cost.bytes / engine.mem_bw;
+    compute.max(memory) + engine.launch_overhead
+}
+
+impl LatencyModel {
+    pub fn new(soc: SocSpec) -> Self {
+        LatencyModel { soc }
+    }
+
+    /// Latency of node `id` of `graph` on `engine`.
+    pub fn node_latency(&self, graph: &Graph, id: NodeId, engine: EngineKind) -> f64 {
+        layer_latency(&node_cost(graph, id), self.soc.engine(engine))
+    }
+
+    /// Sum of node latencies for a contiguous node set on one engine.
+    pub fn nodes_latency(&self, graph: &Graph, nodes: &[NodeId], engine: EngineKind) -> f64 {
+        nodes
+            .iter()
+            .map(|&id| self.node_latency(graph, id, engine))
+            .sum()
+    }
+
+    /// Whole-graph latency on a single engine (no transitions).
+    pub fn graph_latency(&self, graph: &Graph, engine: EngineKind) -> f64 {
+        self.nodes_latency(graph, &graph.compute_layers(), engine)
+    }
+
+    /// Transition (reformat) latency for handing `bytes` between engines.
+    pub fn transition_latency(&self, bytes: usize) -> f64 {
+        self.soc.transition.latency(bytes)
+    }
+
+    /// Latency of an [`crate::dla::EnginePlan`]-style segmented execution:
+    /// sum of segment latencies plus a transition for every boundary, using
+    /// the producing node's output bytes as transfer size.
+    pub fn plan_latency(&self, graph: &Graph, plan: &crate::dla::EnginePlan) -> f64 {
+        let mut total = 0.0;
+        for (i, seg) in plan.segments.iter().enumerate() {
+            total += self.nodes_latency(graph, &seg.nodes, seg.engine);
+            if i + 1 < plan.segments.len() {
+                let last = *seg.nodes.last().expect("non-empty segment");
+                total += self.transition_latency(graph.node(last).shape.bytes());
+            }
+        }
+        total
+    }
+}
+
+/// Convenience: single-engine graph latency.
+pub fn graph_latency(graph: &Graph, soc: &SocSpec, engine: EngineKind) -> f64 {
+    LatencyModel::new(soc.clone()).graph_latency(graph, engine)
+}
+
+/// Convenience: latency of a node slice on an engine.
+pub fn segment_latency(graph: &Graph, nodes: &[NodeId], soc: &SocSpec, engine: EngineKind) -> f64 {
+    LatencyModel::new(soc.clone()).nodes_latency(graph, nodes, engine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GanVariant;
+    use crate::dla::planner::plan_with_island;
+    use crate::dla::{plan, DlaVersion};
+    use crate::hw::orin;
+    use crate::models::pix2pix::{generator, Pix2PixConfig};
+
+    fn model(v: GanVariant) -> crate::graph::Graph {
+        generator(&Pix2PixConfig::paper(), v).unwrap()
+    }
+
+    #[test]
+    fn gpu_calibration_near_paper_fps() {
+        // Calibration target: original Pix2Pix on the Orin GPU ≈ 172.59 FPS
+        // (Table IV). Accept ±10%.
+        let m = LatencyModel::new(orin());
+        let t = m.graph_latency(&model(GanVariant::Original), EngineKind::Gpu);
+        let fps = 1.0 / t;
+        assert!(
+            (155.0..190.0).contains(&fps),
+            "orin gpu pix2pix fps = {fps:.1}"
+        );
+    }
+
+    #[test]
+    fn dla_slower_than_gpu_for_same_graph() {
+        let m = LatencyModel::new(orin());
+        let g = model(GanVariant::Cropping);
+        let t_gpu = m.graph_latency(&g, EngineKind::Gpu);
+        let t_dla = m.graph_latency(&g, EngineKind::Dla);
+        assert!(t_dla > t_gpu);
+        assert!(t_dla < 3.0 * t_gpu, "DLA within 3x of GPU");
+    }
+
+    #[test]
+    fn modified_variants_slower_standalone_fig9() {
+        // Fig 9: original (with fallback) beats the pure-DLA modified
+        // models standalone.
+        let m = LatencyModel::new(orin());
+        let orig_plan =
+            plan_with_island(&model(GanVariant::Original), DlaVersion::V2, 16, 3).unwrap();
+        let t_orig = m.plan_latency(&model(GanVariant::Original), &orig_plan);
+
+        for v in [GanVariant::Cropping, GanVariant::Convolution] {
+            let g = model(v);
+            let p = plan_with_island(&g, DlaVersion::V2, 16, 3).unwrap();
+            assert!(p.fully_dla_resident());
+            let t = m.plan_latency(&g, &p);
+            assert!(
+                t > t_orig,
+                "{v:?} standalone ({:.2} ms) must be slower than original ({:.2} ms)",
+                t * 1e3,
+                t_orig * 1e3
+            );
+        }
+    }
+
+    #[test]
+    fn transitions_add_cost() {
+        let m = LatencyModel::new(orin());
+        let g = model(GanVariant::Original);
+        let p = plan(&g, DlaVersion::V2, 16).unwrap();
+        let seg_only: f64 = p
+            .segments
+            .iter()
+            .map(|s| m.nodes_latency(&g, &s.nodes, s.engine))
+            .sum();
+        assert!(m.plan_latency(&g, &p) > seg_only);
+    }
+
+    #[test]
+    fn xavier_slower_than_orin() {
+        let g = model(GanVariant::Original);
+        let t_orin = graph_latency(&g, &orin(), EngineKind::Gpu);
+        let t_xavier = graph_latency(&g, &crate::hw::xavier(), EngineKind::Gpu);
+        assert!(t_xavier > 2.0 * t_orin);
+    }
+}

@@ -1,0 +1,10 @@
+//! Cost modelling: per-layer FLOPs/bytes, per-engine latency, PCCS-style
+//! memory-contention slowdown, and a tegrastats-like power model.
+
+pub mod contention;
+pub mod flops;
+pub mod latency;
+pub mod power;
+
+pub use flops::{layer_cost, LayerCost};
+pub use latency::{graph_latency, layer_latency, segment_latency, LatencyModel};

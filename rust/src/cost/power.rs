@@ -1,0 +1,127 @@
+//! Tegrastats-like power model.
+//!
+//! The paper's own power measurements were inconclusive (execution order
+//! affected readings; values converged with trials — §VI.A). We still model
+//! power for completeness: each engine has an idle floor and a dynamic
+//! component proportional to utilization, matching the structure of
+//! tegrastats' per-rail readouts.
+
+use crate::hw::EngineKind;
+
+/// Power characteristics of one engine, watts.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerRail {
+    pub idle_w: f64,
+    pub peak_w: f64,
+}
+
+/// Per-engine rails of a Jetson-class SoC.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    pub gpu: PowerRail,
+    pub dla: PowerRail,
+    pub cpu: PowerRail,
+    pub soc_static_w: f64,
+}
+
+impl PowerModel {
+    /// Orin-class rails (30 W mode).
+    pub fn orin() -> Self {
+        PowerModel {
+            gpu: PowerRail {
+                idle_w: 1.2,
+                peak_w: 16.0,
+            },
+            dla: PowerRail {
+                idle_w: 0.3,
+                // The DLA's selling point: an order of magnitude less
+                // power than the GPU at meaningful throughput.
+                peak_w: 3.2,
+            },
+            cpu: PowerRail {
+                idle_w: 0.8,
+                peak_w: 9.0,
+            },
+            soc_static_w: 2.5,
+        }
+    }
+
+    fn rail(&self, e: EngineKind) -> PowerRail {
+        match e {
+            EngineKind::Gpu => self.gpu,
+            EngineKind::Dla => self.dla,
+            EngineKind::Cpu => self.cpu,
+            _ => PowerRail {
+                idle_w: 0.0,
+                peak_w: 0.0,
+            },
+        }
+    }
+
+    /// Average power of one engine at the given utilization (0–1).
+    pub fn engine_power(&self, e: EngineKind, utilization: f64) -> f64 {
+        let r = self.rail(e);
+        r.idle_w + (r.peak_w - r.idle_w) * utilization.clamp(0.0, 1.0)
+    }
+
+    /// Total SoC power for a set of engine utilizations.
+    pub fn total_power(&self, utils: &[(EngineKind, f64)]) -> f64 {
+        self.soc_static_w
+            + utils
+                .iter()
+                .map(|&(e, u)| self.engine_power(e, u))
+                .sum::<f64>()
+    }
+
+    /// Energy per frame in joules given power (W) and throughput (FPS).
+    pub fn energy_per_frame(power_w: f64, fps: f64) -> f64 {
+        if fps <= 0.0 {
+            f64::INFINITY
+        } else {
+            power_w / fps
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_scales_power() {
+        let m = PowerModel::orin();
+        let idle = m.engine_power(EngineKind::Gpu, 0.0);
+        let half = m.engine_power(EngineKind::Gpu, 0.5);
+        let full = m.engine_power(EngineKind::Gpu, 1.0);
+        assert!(idle < half && half < full);
+        assert_eq!(full, 16.0);
+    }
+
+    #[test]
+    fn dla_more_efficient_than_gpu() {
+        let m = PowerModel::orin();
+        assert!(m.engine_power(EngineKind::Dla, 1.0) < m.engine_power(EngineKind::Gpu, 0.3));
+    }
+
+    #[test]
+    fn total_includes_static() {
+        let m = PowerModel::orin();
+        let p = m.total_power(&[(EngineKind::Gpu, 0.0), (EngineKind::Dla, 0.0)]);
+        assert!(p > m.soc_static_w);
+    }
+
+    #[test]
+    fn energy_per_frame_math() {
+        assert!((PowerModel::energy_per_frame(15.0, 150.0) - 0.1).abs() < 1e-12);
+        assert!(PowerModel::energy_per_frame(15.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn utilization_clamped() {
+        let m = PowerModel::orin();
+        assert_eq!(
+            m.engine_power(EngineKind::Gpu, 1.5),
+            m.engine_power(EngineKind::Gpu, 1.0)
+        );
+    }
+}

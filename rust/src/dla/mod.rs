@@ -1,0 +1,14 @@
+//! DLA compatibility checking and engine planning.
+//!
+//! [`rules`] encodes the TensorRT DLA layer restrictions; [`planner`]
+//! reproduces the engine-build behaviour those restrictions cause: a model
+//! assigned to the DLA is split into alternating DLA / GPU-fallback
+//! subgraphs, each transition paying a reformat cost, with execution
+//! rejected when the subgraph count exceeds the device limit (16 — the
+//! failure mode the paper's §II.C warns about for concurrent models).
+
+pub mod planner;
+pub mod rules;
+
+pub use planner::{plan, EnginePlan, Segment};
+pub use rules::{check_layer, DlaVersion, Verdict};

@@ -1,0 +1,234 @@
+//! TensorRT-like engine planning with GPU fallback.
+//!
+//! Given a graph whose execution is requested on the DLA, walk the layers
+//! in topological order, group maximal runs of DLA-supported layers into
+//! DLA subgraphs and unsupported runs into GPU fallback subgraphs, and
+//! account for every DLA↔GPU transition. This is the mechanism behind all
+//! of the paper's fallback observations (Figs 9–12) and the subgraph-limit
+//! failure mode (§II.C).
+
+use super::rules::{check_layer, DlaVersion, Verdict};
+use crate::error::{Error, Result};
+use crate::graph::{Graph, NodeId};
+use crate::hw::EngineKind;
+
+/// A maximal run of consecutive compute layers on one engine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Segment {
+    pub engine: EngineKind,
+    /// Node ids (graph topological order).
+    pub nodes: Vec<NodeId>,
+}
+
+/// The result of planning a graph for DLA-primary execution.
+#[derive(Debug, Clone)]
+pub struct EnginePlan {
+    pub segments: Vec<Segment>,
+    /// Number of DLA subgraphs (TensorRT loadable count).
+    pub dla_subgraphs: usize,
+    /// Number of DLA↔GPU transitions (each pays a reformat).
+    pub transitions: usize,
+    /// Per-fallback-layer reasons, for diagnostics.
+    pub fallback_reasons: Vec<(NodeId, String)>,
+}
+
+impl EnginePlan {
+    /// True when the whole model lives on the DLA (the goal of the
+    /// paper's surgery).
+    pub fn fully_dla_resident(&self) -> bool {
+        self.segments.iter().all(|s| s.engine == EngineKind::Dla)
+    }
+
+    /// Fraction of compute layers on the GPU.
+    pub fn gpu_layer_fraction(&self) -> f64 {
+        let total: usize = self.segments.iter().map(|s| s.nodes.len()).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let gpu: usize = self
+            .segments
+            .iter()
+            .filter(|s| s.engine == EngineKind::Gpu)
+            .map(|s| s.nodes.len())
+            .sum();
+        gpu as f64 / total as f64
+    }
+}
+
+/// Merge small DLA-compatible islands into adjacent GPU fallback runs —
+/// the TensorRT `min subgraph size` behaviour: a couple of cheap pointwise
+/// layers between two fallback layers are not worth two extra engine
+/// transitions. `flags[i]` is true when layer `i` is DLA-supported;
+/// returns the effective engine per layer.
+pub fn assign_engines(flags: &[bool], min_island: usize) -> Vec<EngineKind> {
+    let n = flags.len();
+    let mut engines: Vec<EngineKind> = flags
+        .iter()
+        .map(|&ok| if ok { EngineKind::Dla } else { EngineKind::Gpu })
+        .collect();
+    if min_island <= 1 || !flags.iter().any(|&f| !f) {
+        return engines;
+    }
+    // Find DLA runs and demote short ones adjacent to GPU runs.
+    let mut i = 0;
+    while i < n {
+        if engines[i] == EngineKind::Dla {
+            let start = i;
+            while i < n && engines[i] == EngineKind::Dla {
+                i += 1;
+            }
+            let len = i - start;
+            let gpu_left = start > 0; // predecessor run is GPU
+            let gpu_right = i < n;
+            if len < min_island && (gpu_left || gpu_right) {
+                for e in engines[start..i].iter_mut() {
+                    *e = EngineKind::Gpu;
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    engines
+}
+
+/// Plan DLA-primary execution of `graph`.
+///
+/// `max_subgraphs` mirrors the TensorRT per-core loadable limit; planning
+/// fails (as the real engine build does) when exceeded. `min_island` is
+/// the minimum DLA subgraph size (1 = pure per-layer verdicts).
+pub fn plan_with_island(
+    graph: &Graph,
+    version: DlaVersion,
+    max_subgraphs: usize,
+    min_island: usize,
+) -> Result<EnginePlan> {
+    let layers = graph.compute_layers();
+    let mut reasons = Vec::new();
+    let flags: Vec<bool> = layers
+        .iter()
+        .map(|&id| {
+            let node = graph.node(id);
+            match check_layer(&node.kind, &graph.input_shapes(id), version) {
+                Verdict::Supported => true,
+                Verdict::Fallback(reason) => {
+                    reasons.push((id, reason));
+                    false
+                }
+            }
+        })
+        .collect();
+    let engines = assign_engines(&flags, min_island);
+    let mut segments: Vec<Segment> = Vec::new();
+    for (&id, &engine) in layers.iter().zip(engines.iter()) {
+        match segments.last_mut() {
+            Some(seg) if seg.engine == engine => seg.nodes.push(id),
+            _ => segments.push(Segment {
+                engine,
+                nodes: vec![id],
+            }),
+        }
+    }
+
+    let dla_subgraphs = segments
+        .iter()
+        .filter(|s| s.engine == EngineKind::Dla)
+        .count();
+    let transitions = segments.len().saturating_sub(1);
+
+    if dla_subgraphs > max_subgraphs {
+        return Err(Error::Dla(format!(
+            "engine build failed: {} DLA subgraphs exceed the loadable limit {} \
+             (graph `{}`)",
+            dla_subgraphs, max_subgraphs, graph.name
+        )));
+    }
+
+    Ok(EnginePlan {
+        segments,
+        dla_subgraphs,
+        transitions,
+        fallback_reasons: reasons,
+    })
+}
+
+/// [`plan_with_island`] with per-layer verdicts only (`min_island = 1`).
+pub fn plan(graph: &Graph, version: DlaVersion, max_subgraphs: usize) -> Result<EnginePlan> {
+    plan_with_island(graph, version, max_subgraphs, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GanVariant;
+    use crate::models::pix2pix::{generator, Pix2PixConfig};
+
+    fn paper_plan(variant: GanVariant) -> EnginePlan {
+        let g = generator(&Pix2PixConfig::paper(), variant).unwrap();
+        plan(&g, DlaVersion::V2, 16).unwrap()
+    }
+
+    #[test]
+    fn original_pix2pix_falls_back() {
+        let p = paper_plan(GanVariant::Original);
+        assert!(!p.fully_dla_resident(), "padded deconvs must fall back");
+        // All 8 deconvs have padding=1 -> 8 GPU fallback segments expected.
+        let gpu_segments = p
+            .segments
+            .iter()
+            .filter(|s| s.engine == EngineKind::Gpu)
+            .count();
+        assert_eq!(gpu_segments, 8);
+        assert!(p.transitions >= 15, "transitions = {}", p.transitions);
+        assert!(p
+            .fallback_reasons
+            .iter()
+            .all(|(_, r)| r.contains("padding must be zero")));
+    }
+
+    #[test]
+    fn modified_variants_fully_resident() {
+        for v in [GanVariant::Cropping, GanVariant::Convolution] {
+            let p = paper_plan(v);
+            assert!(
+                p.fully_dla_resident(),
+                "{v:?} must be fully DLA-resident (the paper's result)"
+            );
+            assert_eq!(p.dla_subgraphs, 1);
+            assert_eq!(p.transitions, 0);
+        }
+    }
+
+    #[test]
+    fn original_gpu_fraction_nonzero() {
+        let p = paper_plan(GanVariant::Original);
+        let f = p.gpu_layer_fraction();
+        assert!(f > 0.05 && f < 0.5, "gpu fraction {f}");
+    }
+
+    #[test]
+    fn subgraph_limit_enforced() {
+        let g = generator(&Pix2PixConfig::paper(), GanVariant::Original).unwrap();
+        // Original model produces 9 DLA subgraphs; a limit of 4 must fail.
+        let err = plan(&g, DlaVersion::V2, 4).unwrap_err();
+        assert!(err.to_string().contains("exceed the loadable limit"));
+    }
+
+    #[test]
+    fn segments_cover_all_compute_layers_in_order() {
+        let g = generator(&Pix2PixConfig::paper(), GanVariant::Original).unwrap();
+        let p = plan(&g, DlaVersion::V2, 16).unwrap();
+        let flattened: Vec<_> = p.segments.iter().flat_map(|s| s.nodes.clone()).collect();
+        assert_eq!(flattened, g.compute_layers());
+    }
+
+    #[test]
+    fn yolov8_plans_with_fallback() {
+        let g = crate::models::yolov8::yolov8(&crate::models::yolov8::YoloConfig::nano()).unwrap();
+        let p = plan(&g, DlaVersion::V2, 64).unwrap();
+        // YOLO has more heterogeneous ops than the GAN; it should still
+        // plan (with generous limit) but not be fully resident on v1.
+        let p1 = plan(&g, DlaVersion::V1, usize::MAX).unwrap();
+        assert!(p1.dla_subgraphs >= p.dla_subgraphs);
+    }
+}

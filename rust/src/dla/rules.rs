@@ -1,0 +1,255 @@
+//! DLA layer-support rules.
+//!
+//! Encodes the TensorRT "Working with DLA — supported layers and
+//! restrictions" constraints the paper quotes (§III.A.2 and §II.B/C):
+//!
+//! * only FP16 and INT8 tensors;
+//! * deconvolution: **padding must be zero**, no dilated/grouped
+//!   deconvolution (the rule that breaks stock Pix2Pix);
+//! * kernel sizes must be within 1–32 for (de)convolution;
+//! * stride bounds, channel bounds;
+//! * pooling window limited (≤ 8 per side for DLA), dilation unsupported;
+//! * several ops unsupported outright (Softmax only in FP16, dense layers
+//!   unsupported, dynamic shapes rejected).
+//!
+//! Each rule yields a [`Verdict`] with the reason so reports can explain
+//! *why* a model falls back (the diagnostics `trtexec --verbose` prints).
+
+use crate::graph::layer::LayerKind;
+use crate::graph::shape::{DType, Shape};
+
+/// Compatibility verdict for one layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Verdict {
+    /// Runs natively on the DLA.
+    Supported,
+    /// Must fall back to the GPU; the string explains which restriction
+    /// fired.
+    Fallback(String),
+}
+
+impl Verdict {
+    pub fn is_supported(&self) -> bool {
+        matches!(self, Verdict::Supported)
+    }
+}
+
+/// Version of the DLA rule set (Xavier = v1 is slightly stricter; the
+/// restrictions exercised by the paper's models are identical).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DlaVersion {
+    V1,
+    V2,
+}
+
+/// Check one layer against the DLA rule set.
+pub fn check_layer(kind: &LayerKind, inputs: &[Shape], version: DlaVersion) -> Verdict {
+    use LayerKind::*;
+
+    // Global dtype rule: FP16/INT8 only.
+    for s in inputs {
+        if !matches!(s.dtype, DType::F16 | DType::I8) {
+            return Verdict::Fallback(format!(
+                "dtype {} unsupported on DLA (FP16/INT8 only)",
+                s.dtype.name()
+            ));
+        }
+    }
+
+    match kind {
+        Input { .. } | Output => Verdict::Supported, // markers, no compute
+        Conv2d {
+            kernel,
+            stride,
+            dilation,
+            groups,
+            out_c,
+            ..
+        } => {
+            if !(1..=32).contains(kernel) {
+                return Verdict::Fallback(format!("conv kernel {kernel} outside 1..=32"));
+            }
+            if !(1..=8).contains(stride) {
+                return Verdict::Fallback(format!("conv stride {stride} outside 1..=8"));
+            }
+            if *dilation > 1 && *kernel > 1 && version == DlaVersion::V1 && *dilation > 2 {
+                return Verdict::Fallback(format!("conv dilation {dilation} unsupported"));
+            }
+            if *dilation > 32 {
+                return Verdict::Fallback(format!("conv dilation {dilation} outside 1..=32"));
+            }
+            if *groups > 1 && inputs.first().map(|s| s.c != *groups).unwrap_or(false) {
+                // depthwise OK on v2, arbitrary groups not
+                if version == DlaVersion::V1 {
+                    return Verdict::Fallback(format!("grouped conv ({groups}) unsupported"));
+                }
+            }
+            if *out_c > 8192 {
+                return Verdict::Fallback(format!("conv output channels {out_c} > 8192"));
+            }
+            Verdict::Supported
+        }
+        ConvTranspose2d {
+            kernel,
+            stride,
+            padding,
+            ..
+        } => {
+            // THE rule of the paper: deconv padding must be zero.
+            if *padding != 0 {
+                return Verdict::Fallback(format!(
+                    "deconvolution padding must be zero (got {padding})"
+                ));
+            }
+            if !(1..=32).contains(kernel) {
+                return Verdict::Fallback(format!("deconv kernel {kernel} outside 1..=32"));
+            }
+            if !(1..=32).contains(stride) {
+                return Verdict::Fallback(format!("deconv stride {stride} outside 1..=32"));
+            }
+            Verdict::Supported
+        }
+        BatchNorm => Verdict::Supported, // fused scale ops supported
+        InstanceNorm => Verdict::Fallback("instance normalization unsupported on DLA".into()),
+        ReLU | LeakyReLU { .. } | Sigmoid | Tanh => Verdict::Supported,
+        SiLU => {
+            // SiLU = x*sigmoid(x): DLA v2 supports it as a fused pointwise
+            // op; v1 must fall back.
+            if version == DlaVersion::V1 {
+                Verdict::Fallback("SiLU unsupported on DLA v1".into())
+            } else {
+                Verdict::Supported
+            }
+        }
+        Softmax => {
+            // FP16-only op per the paper's quoted restriction list.
+            if inputs.first().map(|s| s.dtype) == Some(DType::F16) {
+                // Supported only on v2 (ORIN); v1 falls back.
+                if version == DlaVersion::V1 {
+                    Verdict::Fallback("Softmax unsupported on DLA v1".into())
+                } else {
+                    Verdict::Supported
+                }
+            } else {
+                Verdict::Fallback("Softmax requires FP16 on DLA".into())
+            }
+        }
+        Concat => Verdict::Supported, // channel concat supported (not batch axis)
+        Add => Verdict::Supported,
+        Crop { .. } => Verdict::Supported, // expressible as DLA slice
+        ZeroPad { .. } => Verdict::Supported, // folded into conv padding
+        MaxPool { kernel, stride } | AvgPool { kernel, stride } => {
+            if !(1..=8).contains(kernel) {
+                return Verdict::Fallback(format!("pool window {kernel} outside 1..=8"));
+            }
+            if !(1..=16).contains(stride) {
+                return Verdict::Fallback(format!("pool stride {stride} outside 1..=16"));
+            }
+            Verdict::Supported
+        }
+        GlobalAvgPool => {
+            // Adaptive pooling is the classic DLA incompatibility ([20]);
+            // a fixed-window average pool is the known workaround.
+            Verdict::Fallback("adaptive/global pooling unsupported on DLA".into())
+        }
+        Upsample { factor } => {
+            if *factor <= 32 {
+                Verdict::Supported // nearest-neighbour resize supported
+            } else {
+                Verdict::Fallback(format!("upsample factor {factor} too large"))
+            }
+        }
+        SliceChannels { .. } => Verdict::Supported, // FP16 slice supported
+        Dense { .. } => Verdict::Fallback("fully-connected layers unsupported on DLA".into()),
+        Dropout { .. } | Identity => Verdict::Supported, // no-ops
+        Cast { to } => match to {
+            DType::F16 | DType::I8 => Verdict::Supported,
+            other => Verdict::Fallback(format!("cast to {} unsupported", other.name())),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::shape::Shape;
+
+    fn f16(c: usize, hw: usize) -> Shape {
+        Shape::new(c, hw, hw, DType::F16)
+    }
+
+    #[test]
+    fn padded_deconv_falls_back() {
+        let v = check_layer(&LayerKind::deconv(64, 4, 2, 1), &[f16(64, 8)], DlaVersion::V2);
+        match v {
+            Verdict::Fallback(reason) => assert!(reason.contains("padding must be zero")),
+            _ => panic!("padded deconv must fall back"),
+        }
+    }
+
+    #[test]
+    fn unpadded_deconv_supported() {
+        let v = check_layer(&LayerKind::deconv(64, 4, 2, 0), &[f16(64, 8)], DlaVersion::V2);
+        assert!(v.is_supported());
+    }
+
+    #[test]
+    fn kernel_size_limits() {
+        assert!(!check_layer(&LayerKind::conv(8, 33, 1, 0), &[f16(8, 64)], DlaVersion::V2)
+            .is_supported());
+        assert!(check_layer(&LayerKind::conv(8, 32, 1, 0), &[f16(8, 64)], DlaVersion::V2)
+            .is_supported());
+    }
+
+    #[test]
+    fn fp32_falls_back() {
+        let s = Shape::new(8, 8, 8, DType::F32);
+        let v = check_layer(&LayerKind::ReLU, &[s], DlaVersion::V2);
+        assert!(!v.is_supported());
+    }
+
+    #[test]
+    fn dense_and_global_pool_fall_back() {
+        assert!(!check_layer(
+            &LayerKind::Dense { out_features: 10 },
+            &[f16(512, 1)],
+            DlaVersion::V2
+        )
+        .is_supported());
+        assert!(!check_layer(&LayerKind::GlobalAvgPool, &[f16(512, 7)], DlaVersion::V2)
+            .is_supported());
+    }
+
+    #[test]
+    fn silu_version_dependent() {
+        assert!(check_layer(&LayerKind::SiLU, &[f16(8, 8)], DlaVersion::V2).is_supported());
+        assert!(!check_layer(&LayerKind::SiLU, &[f16(8, 8)], DlaVersion::V1).is_supported());
+    }
+
+    #[test]
+    fn crop_is_supported() {
+        // The entire point of the paper's substitution.
+        assert!(check_layer(
+            &LayerKind::Crop { border: 1 },
+            &[f16(64, 18)],
+            DlaVersion::V2
+        )
+        .is_supported());
+        assert!(check_layer(
+            &LayerKind::conv_nobias(64, 3, 1, 0),
+            &[f16(64, 18)],
+            DlaVersion::V2
+        )
+        .is_supported());
+    }
+
+    #[test]
+    fn pool_window_limit() {
+        assert!(!check_layer(
+            &LayerKind::MaxPool { kernel: 9, stride: 1 },
+            &[f16(8, 32)],
+            DlaVersion::V2
+        )
+        .is_supported());
+    }
+}

@@ -1,0 +1,41 @@
+//! Library-wide error type.
+
+/// Unified error for all edgepipe subsystems.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("graph error: {0}")]
+    Graph(String),
+
+    #[error("shape inference error: {0}")]
+    Shape(String),
+
+    #[error("DLA planning error: {0}")]
+    Dla(String),
+
+    #[error("scheduling error: {0}")]
+    Sched(String),
+
+    #[error("simulation error: {0}")]
+    Sim(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("pipeline error: {0}")]
+    Pipeline(String),
+
+    #[error("imaging error: {0}")]
+    Imaging(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,431 @@
+//! Layer (operator) definitions for the model IR.
+//!
+//! The vocabulary covers everything in the paper's models: Pix2Pix
+//! (conv / deconv / batchnorm / LeakyReLU / tanh / concat / dropout /
+//! zero-pad), the DLA-safe substitutions (cropping, VALID conv), YOLOv8
+//! (C2f = conv + split + add + concat, SPPF = maxpool chain, SiLU,
+//! upsample, detection head), and the classification backbones used by the
+//! scheduling references (ResNet, VGG: pooling, FC, softmax, residual add).
+
+use super::shape::{conv_out, deconv_out, DType, Shape};
+use crate::error::{Error, Result};
+
+/// Operator kind plus its static attributes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// Graph input placeholder.
+    Input { shape: Shape },
+    /// 2-D convolution.
+    Conv2d {
+        out_c: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+        dilation: usize,
+        groups: usize,
+        /// Whether the layer has a bias term (the paper's VALID-conv
+        /// substitution is bias-free — see Table II parameter accounting).
+        bias: bool,
+    },
+    /// 2-D transposed convolution (deconvolution).
+    ConvTranspose2d {
+        out_c: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+        /// Bias term (the TF pix2pix reference uses bias-free deconvs
+        /// except the final output layer).
+        bias: bool,
+    },
+    /// Batch normalization (inference: fused scale+shift).
+    BatchNorm,
+    /// Instance normalization.
+    InstanceNorm,
+    ReLU,
+    LeakyReLU { slope: f32 },
+    SiLU,
+    Tanh,
+    Sigmoid,
+    Softmax,
+    /// Channel-wise concat of all inputs.
+    Concat,
+    /// Elementwise addition of two inputs (residual connection).
+    Add,
+    /// Crop `border` rows/cols from each side (the paper's DLA-safe
+    /// substitute for deconv padding, Eq. 7).
+    Crop { border: usize },
+    /// Zero-pad `border` rows/cols on each side (PatchGAN discriminator).
+    ZeroPad { border: usize },
+    MaxPool { kernel: usize, stride: usize },
+    AvgPool { kernel: usize, stride: usize },
+    /// Global average pool to 1×1.
+    GlobalAvgPool,
+    /// Nearest-neighbour upsample by integer factor.
+    Upsample { factor: usize },
+    /// Take a channel sub-range `[begin, end)` (YOLO C2f split).
+    SliceChannels { begin: usize, end: usize },
+    /// Fully connected layer.
+    Dense { out_features: usize },
+    /// Dropout — inference no-op, kept in the graph because exported ONNX
+    /// graphs contain it and the surgeon must remove it.
+    Dropout { p: f32 },
+    /// Identity / "unnamed" layer produced by export tooling; removed by
+    /// the GraphSurgeon-equivalent pass.
+    Identity,
+    /// Dtype cast.
+    Cast { to: DType },
+    /// Graph output marker.
+    Output,
+}
+
+impl LayerKind {
+    /// Short operator name (used in reports and DLA diagnostics).
+    pub fn op_name(&self) -> &'static str {
+        use LayerKind::*;
+        match self {
+            Input { .. } => "Input",
+            Conv2d { .. } => "Conv2d",
+            ConvTranspose2d { .. } => "ConvTranspose2d",
+            BatchNorm => "BatchNorm",
+            InstanceNorm => "InstanceNorm",
+            ReLU => "ReLU",
+            LeakyReLU { .. } => "LeakyReLU",
+            SiLU => "SiLU",
+            Tanh => "Tanh",
+            Sigmoid => "Sigmoid",
+            Softmax => "Softmax",
+            Concat => "Concat",
+            Add => "Add",
+            Crop { .. } => "Crop",
+            ZeroPad { .. } => "ZeroPad",
+            MaxPool { .. } => "MaxPool",
+            AvgPool { .. } => "AvgPool",
+            GlobalAvgPool => "GlobalAvgPool",
+            Upsample { .. } => "Upsample",
+            SliceChannels { .. } => "SliceChannels",
+            Dense { .. } => "Dense",
+            Dropout { .. } => "Dropout",
+            Identity => "Identity",
+            Cast { .. } => "Cast",
+            Output => "Output",
+        }
+    }
+
+    /// Is this a structural no-op at inference time?
+    pub fn is_identity_like(&self) -> bool {
+        matches!(self, LayerKind::Identity | LayerKind::Dropout { .. })
+    }
+
+    /// Infer the output shape given input shapes.
+    pub fn infer_shape(&self, inputs: &[Shape]) -> Result<Shape> {
+        use LayerKind::*;
+        let one = |inputs: &[Shape]| -> Result<Shape> {
+            if inputs.len() != 1 {
+                return Err(Error::Shape(format!(
+                    "{} expects 1 input, got {}",
+                    self.op_name(),
+                    inputs.len()
+                )));
+            }
+            Ok(inputs[0])
+        };
+        match self {
+            Input { shape } => Ok(*shape),
+            Conv2d {
+                out_c,
+                kernel,
+                stride,
+                padding,
+                dilation,
+                groups,
+                ..
+            } => {
+                let x = one(inputs)?;
+                if x.c % groups != 0 || out_c % groups != 0 {
+                    return Err(Error::Shape(format!(
+                        "conv groups {groups} must divide channels {} and {out_c}",
+                        x.c
+                    )));
+                }
+                let eff_k = dilation * (kernel - 1) + 1;
+                if x.h + 2 * padding < eff_k || x.w + 2 * padding < eff_k {
+                    return Err(Error::Shape(format!(
+                        "conv kernel {eff_k} larger than padded input {}x{}",
+                        x.h + 2 * padding,
+                        x.w + 2 * padding
+                    )));
+                }
+                Ok(Shape::new(
+                    *out_c,
+                    conv_out(x.h, eff_k, *stride, *padding),
+                    conv_out(x.w, eff_k, *stride, *padding),
+                    x.dtype,
+                ))
+            }
+            ConvTranspose2d {
+                out_c,
+                kernel,
+                stride,
+                padding,
+                ..
+            } => {
+                let x = one(inputs)?;
+                if *kernel + stride * (x.h - 1) < 2 * padding + 1 {
+                    return Err(Error::Shape("deconv output would be empty".into()));
+                }
+                Ok(Shape::new(
+                    *out_c,
+                    deconv_out(x.h, *kernel, *stride, *padding),
+                    deconv_out(x.w, *kernel, *stride, *padding),
+                    x.dtype,
+                ))
+            }
+            BatchNorm | InstanceNorm | ReLU | LeakyReLU { .. } | SiLU | Tanh | Sigmoid
+            | Softmax | Dropout { .. } | Identity => one(inputs),
+            Cast { to } => {
+                let x = one(inputs)?;
+                Ok(Shape::new(x.c, x.h, x.w, *to))
+            }
+            Concat => {
+                if inputs.is_empty() {
+                    return Err(Error::Shape("concat needs >= 1 input".into()));
+                }
+                let first = inputs[0];
+                let mut c = 0;
+                for s in inputs {
+                    if s.h != first.h || s.w != first.w {
+                        return Err(Error::Shape(format!(
+                            "concat spatial mismatch: {s} vs {first}"
+                        )));
+                    }
+                    c += s.c;
+                }
+                Ok(Shape::new(c, first.h, first.w, first.dtype))
+            }
+            Add => {
+                if inputs.len() != 2 || inputs[0] != inputs[1] {
+                    return Err(Error::Shape(format!(
+                        "add expects two identical shapes, got {:?}",
+                        inputs
+                    )));
+                }
+                Ok(inputs[0])
+            }
+            Crop { border } => {
+                let x = one(inputs)?;
+                if x.h <= 2 * border || x.w <= 2 * border {
+                    return Err(Error::Shape(format!(
+                        "crop border {border} too large for {}x{}",
+                        x.h, x.w
+                    )));
+                }
+                Ok(Shape::new(x.c, x.h - 2 * border, x.w - 2 * border, x.dtype))
+            }
+            ZeroPad { border } => {
+                let x = one(inputs)?;
+                Ok(Shape::new(x.c, x.h + 2 * border, x.w + 2 * border, x.dtype))
+            }
+            MaxPool { kernel, stride } | AvgPool { kernel, stride } => {
+                let x = one(inputs)?;
+                if x.h < *kernel || x.w < *kernel {
+                    return Err(Error::Shape("pool kernel larger than input".into()));
+                }
+                Ok(Shape::new(
+                    x.c,
+                    conv_out(x.h, *kernel, *stride, 0),
+                    conv_out(x.w, *kernel, *stride, 0),
+                    x.dtype,
+                ))
+            }
+            GlobalAvgPool => {
+                let x = one(inputs)?;
+                Ok(Shape::new(x.c, 1, 1, x.dtype))
+            }
+            Upsample { factor } => {
+                let x = one(inputs)?;
+                Ok(Shape::new(x.c, x.h * factor, x.w * factor, x.dtype))
+            }
+            SliceChannels { begin, end } => {
+                let x = one(inputs)?;
+                if *begin >= *end || *end > x.c {
+                    return Err(Error::Shape(format!(
+                        "slice [{begin},{end}) out of range for {} channels",
+                        x.c
+                    )));
+                }
+                Ok(Shape::new(end - begin, x.h, x.w, x.dtype))
+            }
+            Dense { out_features } => {
+                let x = one(inputs)?;
+                Ok(Shape::new(*out_features, 1, 1, x.dtype))
+            }
+            Output => one(inputs),
+        }
+    }
+
+    /// Learnable parameter count given the input shapes (weights + biases;
+    /// batchnorm has scale+shift per channel).
+    pub fn param_count(&self, inputs: &[Shape]) -> usize {
+        use LayerKind::*;
+        match self {
+            Conv2d {
+                out_c,
+                kernel,
+                groups,
+                bias,
+                ..
+            } => {
+                let in_c = inputs.first().map(|s| s.c).unwrap_or(0);
+                (in_c / groups) * out_c * kernel * kernel + if *bias { *out_c } else { 0 }
+            }
+            ConvTranspose2d {
+                out_c, kernel, bias, ..
+            } => {
+                let in_c = inputs.first().map(|s| s.c).unwrap_or(0);
+                in_c * out_c * kernel * kernel + if *bias { *out_c } else { 0 }
+            }
+            // TF model.summary() convention (Table II): gamma, beta,
+            // moving_mean, moving_variance all counted.
+            BatchNorm => 4 * inputs.first().map(|s| s.c).unwrap_or(0),
+            InstanceNorm => 2 * inputs.first().map(|s| s.c).unwrap_or(0),
+            Dense { out_features } => {
+                let in_f = inputs.first().map(|s| s.numel()).unwrap_or(0);
+                in_f * out_features + out_features
+            }
+            _ => 0,
+        }
+    }
+}
+
+
+impl LayerKind {
+    /// Standard biased convolution (dilation 1, groups 1).
+    pub fn conv(out_c: usize, kernel: usize, stride: usize, padding: usize) -> LayerKind {
+        LayerKind::Conv2d {
+            out_c,
+            kernel,
+            stride,
+            padding,
+            dilation: 1,
+            groups: 1,
+            bias: true,
+        }
+    }
+
+    /// Bias-free convolution (the paper's padding-fix substitution and
+    /// batchnorm-fused backbones).
+    pub fn conv_nobias(out_c: usize, kernel: usize, stride: usize, padding: usize) -> LayerKind {
+        LayerKind::Conv2d {
+            out_c,
+            kernel,
+            stride,
+            padding,
+            dilation: 1,
+            groups: 1,
+            bias: false,
+        }
+    }
+
+    /// Bias-free transposed convolution (TF pix2pix convention).
+    pub fn deconv(out_c: usize, kernel: usize, stride: usize, padding: usize) -> LayerKind {
+        LayerKind::ConvTranspose2d {
+            out_c,
+            kernel,
+            stride,
+            padding,
+            bias: false,
+        }
+    }
+
+    /// Transposed convolution with bias (pix2pix final output layer).
+    pub fn deconv_bias(out_c: usize, kernel: usize, stride: usize, padding: usize) -> LayerKind {
+        LayerKind::ConvTranspose2d {
+            out_c,
+            kernel,
+            stride,
+            padding,
+            bias: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(c: usize, hw: usize) -> Shape {
+        Shape::chw(c, hw, hw)
+    }
+
+    #[test]
+    fn conv_shape_and_params() {
+        let conv = LayerKind::conv(64, 4, 2, 1);
+        let out = conv.infer_shape(&[s(3, 256)]).unwrap();
+        assert_eq!((out.c, out.h, out.w), (64, 128, 128));
+        assert_eq!(conv.param_count(&[s(3, 256)]), 3 * 64 * 16 + 64);
+    }
+
+    #[test]
+    fn deconv_padding_variants_match_paper() {
+        let with_pad = LayerKind::deconv(64, 4, 2, 1);
+        let no_pad = LayerKind::deconv(64, 4, 2, 0);
+        assert_eq!(with_pad.infer_shape(&[s(128, 8)]).unwrap().h, 16); // Eq. 6
+        assert_eq!(no_pad.infer_shape(&[s(128, 8)]).unwrap().h, 18); // Eq. 5
+        // Crop(1) brings 18 back to 16 (Eq. 7)
+        let crop = LayerKind::Crop { border: 1 };
+        assert_eq!(crop.infer_shape(&[s(64, 18)]).unwrap().h, 16);
+        // VALID 3x3 conv also brings 18 to 16 (Eq. 9)
+        let conv3 = LayerKind::conv(64, 3, 1, 0);
+        assert_eq!(conv3.infer_shape(&[s(64, 18)]).unwrap().h, 16);
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let cat = LayerKind::Concat;
+        let out = cat.infer_shape(&[s(64, 32), s(64, 32)]).unwrap();
+        assert_eq!(out.c, 128);
+        assert!(cat.infer_shape(&[s(64, 32), s(64, 16)]).is_err());
+    }
+
+    #[test]
+    fn add_requires_matching_shapes() {
+        let add = LayerKind::Add;
+        assert!(add.infer_shape(&[s(64, 32), s(64, 32)]).is_ok());
+        assert!(add.infer_shape(&[s(64, 32), s(32, 32)]).is_err());
+        assert!(add.infer_shape(&[s(64, 32)]).is_err());
+    }
+
+    #[test]
+    fn pooling_and_upsample() {
+        let mp = LayerKind::MaxPool {
+            kernel: 2,
+            stride: 2,
+        };
+        assert_eq!(mp.infer_shape(&[s(32, 64)]).unwrap().h, 32);
+        let up = LayerKind::Upsample { factor: 2 };
+        assert_eq!(up.infer_shape(&[s(32, 8)]).unwrap().h, 16);
+        let gap = LayerKind::GlobalAvgPool;
+        assert_eq!(gap.infer_shape(&[s(512, 7)]).unwrap().numel(), 512);
+    }
+
+    #[test]
+    fn slice_channels_bounds() {
+        let sl = LayerKind::SliceChannels { begin: 0, end: 32 };
+        assert_eq!(sl.infer_shape(&[s(64, 8)]).unwrap().c, 32);
+        let bad = LayerKind::SliceChannels { begin: 32, end: 80 };
+        assert!(bad.infer_shape(&[s(64, 8)]).is_err());
+    }
+
+    #[test]
+    fn degenerate_conv_rejected() {
+        let conv = LayerKind::conv(8, 7, 1, 0);
+        assert!(conv.infer_shape(&[s(3, 4)]).is_err());
+    }
+
+    #[test]
+    fn dense_param_count() {
+        let d = LayerKind::Dense { out_features: 10 };
+        assert_eq!(d.param_count(&[s(512, 1)]), 512 * 10 + 10);
+        assert_eq!(d.infer_shape(&[s(512, 1)]).unwrap().c, 10);
+    }
+}

@@ -1,0 +1,272 @@
+//! Model graph IR.
+//!
+//! A [`Graph`] is a DAG of layers in topological order (nodes may only
+//! reference earlier nodes — enforced at construction). This is the
+//! representation everything else consumes: the DLA compatibility checker,
+//! the TensorRT-like subgraph planner, the cost model, the schedulers and
+//! the surgeon passes.
+
+pub mod layer;
+pub mod shape;
+pub mod surgeon;
+
+use crate::error::{Error, Result};
+use layer::LayerKind;
+use shape::Shape;
+
+/// Node index within a graph.
+pub type NodeId = usize;
+
+/// A single layer instance.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub kind: LayerKind,
+    pub inputs: Vec<NodeId>,
+    /// Inferred output shape.
+    pub shape: Shape,
+}
+
+/// A model graph in topological order.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Self {
+        Graph {
+            name: name.to_string(),
+            nodes: Vec::new(),
+        }
+    }
+
+    /// Append a layer; inputs must reference existing nodes. Returns the
+    /// new node's id. Output shape is inferred immediately.
+    pub fn add(&mut self, name: &str, kind: LayerKind, inputs: &[NodeId]) -> Result<NodeId> {
+        for &i in inputs {
+            if i >= self.nodes.len() {
+                return Err(Error::Graph(format!(
+                    "node `{name}` references unknown input {i}"
+                )));
+            }
+        }
+        let in_shapes: Vec<Shape> = inputs.iter().map(|&i| self.nodes[i].shape).collect();
+        let shape = kind.infer_shape(&in_shapes)?;
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            id,
+            name: name.to_string(),
+            kind,
+            inputs: inputs.to_vec(),
+            shape,
+        });
+        Ok(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    /// Input shapes of a node.
+    pub fn input_shapes(&self, id: NodeId) -> Vec<Shape> {
+        self.nodes[id]
+            .inputs
+            .iter()
+            .map(|&i| self.nodes[i].shape)
+            .collect()
+    }
+
+    /// Total learnable parameter count (Table II first row).
+    pub fn param_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| n.kind.param_count(&self.input_shapes(n.id)))
+            .sum()
+    }
+
+    /// Ids of `Input` nodes.
+    pub fn inputs(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.kind, LayerKind::Input { .. }))
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Ids of `Output` nodes (or terminal nodes if none marked).
+    pub fn outputs(&self) -> Vec<NodeId> {
+        let marked: Vec<NodeId> = self
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, LayerKind::Output))
+            .map(|n| n.id)
+            .collect();
+        if !marked.is_empty() {
+            return marked;
+        }
+        // Fallback: nodes nobody consumes.
+        let mut consumed = vec![false; self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                consumed[i] = true;
+            }
+        }
+        self.nodes
+            .iter()
+            .filter(|n| !consumed[n.id])
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Consumers of each node.
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                out[i].push(n.id);
+            }
+        }
+        out
+    }
+
+    /// "Compute layers" — nodes that perform real work on an engine (excludes
+    /// Input/Output markers and identity-likes). Partition points in the
+    /// paper (Tables III/V) index into this sequence.
+    pub fn compute_layers(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| {
+                !matches!(n.kind, LayerKind::Input { .. } | LayerKind::Output)
+                    && !n.kind.is_identity_like()
+            })
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Validate structural invariants: topological input references, single
+    /// shape consistency, at least one input and output.
+    pub fn validate(&self) -> Result<()> {
+        if self.inputs().is_empty() {
+            return Err(Error::Graph(format!("graph `{}` has no inputs", self.name)));
+        }
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                if i >= n.id {
+                    return Err(Error::Graph(format!(
+                        "node {} `{}` references non-topological input {}",
+                        n.id, n.name, i
+                    )));
+                }
+            }
+            let expect = n.kind.infer_shape(&self.input_shapes(n.id))?;
+            if expect != n.shape {
+                return Err(Error::Graph(format!(
+                    "node {} `{}` shape {} inconsistent with inferred {}",
+                    n.id, n.name, n.shape, expect
+                )));
+            }
+        }
+        if self.outputs().is_empty() {
+            return Err(Error::Graph(format!(
+                "graph `{}` has no outputs",
+                self.name
+            )));
+        }
+        Ok(())
+    }
+
+    /// One-line-per-layer textual dump (debugging / reports).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        for n in &self.nodes {
+            out.push_str(&format!(
+                "{:4}  {:<18} {:<28} {:>16}  <- {:?}\n",
+                n.id,
+                n.kind.op_name(),
+                n.name,
+                format!("{}", n.shape),
+                n.inputs
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::layer::LayerKind;
+    use super::shape::{DType, Shape};
+    use super::*;
+
+    fn tiny_graph() -> Graph {
+        let mut g = Graph::new("tiny");
+        let x = g
+            .add(
+                "x",
+                LayerKind::Input {
+                    shape: Shape::new(1, 16, 16, DType::F16),
+                },
+                &[],
+            )
+            .unwrap();
+        let c = g
+            .add(
+                "conv",
+                LayerKind::conv(8, 3, 1, 1),
+                &[x],
+            )
+            .unwrap();
+        let r = g.add("relu", LayerKind::ReLU, &[c]).unwrap();
+        g.add("out", LayerKind::Output, &[r]).unwrap();
+        g
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let g = tiny_graph();
+        g.validate().unwrap();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.inputs(), vec![0]);
+        assert_eq!(g.outputs(), vec![3]);
+        assert_eq!(g.compute_layers(), vec![1, 2]);
+    }
+
+    #[test]
+    fn param_count() {
+        let g = tiny_graph();
+        assert_eq!(g.param_count(), 1 * 8 * 9 + 8);
+    }
+
+    #[test]
+    fn bad_input_reference_rejected() {
+        let mut g = Graph::new("bad");
+        assert!(g.add("r", LayerKind::ReLU, &[5]).is_err());
+    }
+
+    #[test]
+    fn consumers_map() {
+        let g = tiny_graph();
+        let cons = g.consumers();
+        assert_eq!(cons[0], vec![1]);
+        assert_eq!(cons[1], vec![2]);
+        assert_eq!(cons[3], Vec::<NodeId>::new());
+    }
+
+    #[test]
+    fn dump_contains_layers() {
+        let d = tiny_graph().dump();
+        assert!(d.contains("Conv2d"));
+        assert!(d.contains("ReLU"));
+    }
+}

@@ -1,0 +1,129 @@
+//! Tensor shapes and data types.
+//!
+//! Shapes are `C×H×W` feature maps with an implicit batch of 1 (the paper's
+//! pipelines are latency-oriented, batch-1 streaming). Dtypes matter for
+//! DLA compatibility: the DLA executes FP16/INT8 only.
+
+use std::fmt;
+
+/// Element type of a tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    I8,
+    I64,
+}
+
+impl DType {
+    pub fn bytes(&self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F16 => 2,
+            DType::I8 => 1,
+            DType::I64 => 8,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::I8 => "i8",
+            DType::I64 => "i64",
+        }
+    }
+}
+
+/// A `C×H×W` feature-map shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub dtype: DType,
+}
+
+impl Shape {
+    pub fn new(c: usize, h: usize, w: usize, dtype: DType) -> Self {
+        Shape { c, h, w, dtype }
+    }
+
+    pub fn chw(c: usize, h: usize, w: usize) -> Self {
+        Shape::new(c, h, w, DType::F16)
+    }
+
+    /// Number of elements.
+    pub fn numel(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Size in bytes.
+    pub fn bytes(&self) -> usize {
+        self.numel() * self.dtype.bytes()
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}x{}:{}", self.c, self.h, self.w, self.dtype.name())
+    }
+}
+
+/// Conv output spatial size (paper Eq. 8):
+/// `floor((in - k + 2p) / s) + 1`.
+pub fn conv_out(input: usize, kernel: usize, stride: usize, padding: usize) -> usize {
+    debug_assert!(stride > 0);
+    (input + 2 * padding - kernel) / stride + 1
+}
+
+/// Deconv output spatial size (paper Eq. 4):
+/// `s * (in - 1) + k - 2p`.
+pub fn deconv_out(input: usize, kernel: usize, stride: usize, padding: usize) -> usize {
+    debug_assert!(stride > 0);
+    stride * (input - 1) + kernel - 2 * padding
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_bytes() {
+        let s = Shape::new(3, 256, 256, DType::F16);
+        assert_eq!(s.numel(), 3 * 256 * 256);
+        assert_eq!(s.bytes(), 3 * 256 * 256 * 2);
+        assert_eq!(format!("{s}"), "3x256x256:f16");
+    }
+
+    #[test]
+    fn paper_eq4_eq5_deconv_without_padding() {
+        // Paper Eq. 5: k=4, s=2, p=0 -> out = 2*in + 2
+        for input in [4usize, 8, 16, 128] {
+            assert_eq!(deconv_out(input, 4, 2, 0), 2 * input + 2);
+        }
+    }
+
+    #[test]
+    fn paper_eq6_deconv_with_padding() {
+        // Paper Eq. 6: k=4, s=2, p=1 -> out = 2*in
+        for input in [1usize, 2, 32, 128] {
+            assert_eq!(deconv_out(input, 4, 2, 1), 2 * input);
+        }
+    }
+
+    #[test]
+    fn paper_eq9_valid_conv3() {
+        // Paper Eq. 9: k=3, s=1, p=0 -> out = in - 2
+        for input in [3usize, 10, 258] {
+            assert_eq!(conv_out(input, 3, 1, 0), input - 2);
+        }
+    }
+
+    #[test]
+    fn conv_standard_cases() {
+        // stride-2 4x4 same-ish conv used by pix2pix encoder: 256 -> 128
+        assert_eq!(conv_out(256, 4, 2, 1), 128);
+        assert_eq!(conv_out(2, 4, 2, 1), 1);
+    }
+}

@@ -1,0 +1,340 @@
+//! Graph surgery passes.
+//!
+//! This module implements the paper's §V.A.2 contribution at the IR level:
+//! replacing DLA-incompatible deconvolution padding with DLA-compatible
+//! equivalents, plus the ONNX-GraphSurgeon-style cleanup pass the paper
+//! uses to remove the "ten unnamed layers" that export tooling inserts.
+//!
+//! Passes rebuild the graph (ids are reassigned) and preserve shape
+//! validity — every pass ends with `validate()`.
+
+use super::layer::LayerKind;
+use super::{Graph, NodeId};
+use crate::config::GanVariant;
+use crate::error::{Error, Result};
+
+/// Strategy for making a padded deconvolution DLA-compatible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PaddingFix {
+    /// `deconv(p=1)` → `deconv(p=0)` + `Crop(1)` (paper Eq. 5 + Eq. 7).
+    Crop,
+    /// `deconv(p=1)` → `deconv(p=0)` + `Conv2d(k=3, s=1, VALID)`
+    /// (paper Eq. 5 + Eq. 9) — adds parameters, may improve accuracy.
+    Conv,
+}
+
+impl PaddingFix {
+    pub fn for_variant(v: GanVariant) -> Option<PaddingFix> {
+        match v {
+            GanVariant::Original => None,
+            GanVariant::Cropping => Some(PaddingFix::Crop),
+            GanVariant::Convolution => Some(PaddingFix::Conv),
+        }
+    }
+}
+
+/// Result of a surgery pass.
+#[derive(Debug, Clone)]
+pub struct SurgeryReport {
+    pub graph: Graph,
+    /// How many deconv layers were rewritten.
+    pub deconvs_fixed: usize,
+    /// How many identity-like layers were inserted (export artifacts).
+    pub unnamed_inserted: usize,
+}
+
+/// Replace the padding of every padded `ConvTranspose2d` with the chosen
+/// DLA-compatible construction.
+///
+/// Mirroring the paper's observation that the substitution "came with an
+/// additional ten unnamed layers as a result of the dynamic inputs", this
+/// pass also inserts an `Identity` node after each rewritten deconv when
+/// `emulate_export_artifacts` is set; [`eliminate_identities`] (the
+/// GraphSurgeon-equivalent) removes them again.
+pub fn replace_deconv_padding(
+    graph: &Graph,
+    fix: PaddingFix,
+    emulate_export_artifacts: bool,
+) -> Result<SurgeryReport> {
+    let mut out = Graph::new(&graph.name);
+    // old id -> new id of the node producing the equivalent tensor
+    let mut remap: Vec<NodeId> = Vec::with_capacity(graph.len());
+    let mut fixed = 0usize;
+    let mut unnamed = 0usize;
+
+    for node in &graph.nodes {
+        let new_inputs: Vec<NodeId> = node.inputs.iter().map(|&i| remap[i]).collect();
+        match &node.kind {
+            LayerKind::ConvTranspose2d {
+                out_c,
+                kernel,
+                stride,
+                padding,
+                bias,
+            } if *padding > 0 => {
+                // Step 1: same deconv without padding (Eq. 5).
+                let deconv = out.add(
+                    &node.name,
+                    LayerKind::ConvTranspose2d {
+                        out_c: *out_c,
+                        kernel: *kernel,
+                        stride: *stride,
+                        padding: 0,
+                        bias: *bias,
+                    },
+                    &new_inputs,
+                )?;
+                // Step 2: trim `padding` rows/cols per side back off.
+                let trimmed = match fix {
+                    PaddingFix::Crop => out.add(
+                        &format!("{}_crop", node.name),
+                        LayerKind::Crop { border: *padding },
+                        &[deconv],
+                    )?,
+                    PaddingFix::Conv => {
+                        // A VALID k×k conv removes (k-1)/2 per side; for
+                        // padding=1 that is the 3×3 of Eq. 9. General p
+                        // uses k = 2p+1.
+                        let k = 2 * padding + 1;
+                        out.add(
+                            &format!("{}_fixconv", node.name),
+                            LayerKind::conv_nobias(*out_c, k, 1, 0),
+                            &[deconv],
+                        )?
+                    }
+                };
+                let tail = if emulate_export_artifacts {
+                    unnamed += 1;
+                    out.add(
+                        &format!("unnamed_{}", unnamed),
+                        LayerKind::Identity,
+                        &[trimmed],
+                    )?
+                } else {
+                    trimmed
+                };
+                fixed += 1;
+                remap.push(tail);
+            }
+            kind => {
+                let id = out.add(&node.name, kind.clone(), &new_inputs)?;
+                remap.push(id);
+            }
+        }
+    }
+    out.validate()?;
+    Ok(SurgeryReport {
+        graph: out,
+        deconvs_fixed: fixed,
+        unnamed_inserted: unnamed,
+    })
+}
+
+/// Remove identity-like nodes (Identity, Dropout) by rewiring consumers —
+/// the ONNX GraphSurgeon cleanup the paper applies. Returns the cleaned
+/// graph and the number of nodes removed.
+pub fn eliminate_identities(graph: &Graph) -> Result<(Graph, usize)> {
+    let outputs = graph.outputs();
+    let mut out = Graph::new(&graph.name);
+    let mut remap: Vec<NodeId> = Vec::with_capacity(graph.len());
+    let mut removed = 0usize;
+    for node in &graph.nodes {
+        if node.kind.is_identity_like() && node.inputs.len() == 1 && !outputs.contains(&node.id) {
+            removed += 1;
+            remap.push(remap[node.inputs[0]]);
+            continue;
+        }
+        let new_inputs: Vec<NodeId> = node.inputs.iter().map(|&i| remap[i]).collect();
+        let id = out.add(&node.name, node.kind.clone(), &new_inputs)?;
+        remap.push(id);
+    }
+    out.validate()?;
+    Ok((out, removed))
+}
+
+/// Dead-node elimination: drop nodes not reachable from any output.
+pub fn eliminate_dead(graph: &Graph) -> Result<(Graph, usize)> {
+    let mut live = vec![false; graph.len()];
+    let mut stack = graph.outputs();
+    while let Some(id) = stack.pop() {
+        if live[id] {
+            continue;
+        }
+        live[id] = true;
+        stack.extend(graph.nodes[id].inputs.iter().copied());
+    }
+    // Inputs are always considered live (they are interface contracts).
+    for id in graph.inputs() {
+        live[id] = true;
+    }
+    let mut out = Graph::new(&graph.name);
+    let mut remap: Vec<Option<NodeId>> = vec![None; graph.len()];
+    let mut removed = 0usize;
+    for node in &graph.nodes {
+        if !live[node.id] {
+            removed += 1;
+            continue;
+        }
+        let new_inputs: Vec<NodeId> = node
+            .inputs
+            .iter()
+            .map(|&i| remap[i].expect("live node depends on dead node"))
+            .collect();
+        let id = out.add(&node.name, node.kind.clone(), &new_inputs)?;
+        remap[node.id] = Some(id);
+    }
+    out.validate()?;
+    Ok((out, removed))
+}
+
+/// Apply the full variant pipeline the paper describes: padding surgery
+/// (if the variant requires it) followed by GraphSurgeon cleanup.
+pub fn apply_variant(graph: &Graph, variant: GanVariant) -> Result<Graph> {
+    match PaddingFix::for_variant(variant) {
+        None => Ok(graph.clone()),
+        Some(fix) => {
+            let report = replace_deconv_padding(graph, fix, true)?;
+            if report.deconvs_fixed == 0 {
+                return Err(Error::Graph(format!(
+                    "variant {} requested but `{}` has no padded deconvs",
+                    variant.name(),
+                    graph.name
+                )));
+            }
+            let (clean, removed) = eliminate_identities(&report.graph)?;
+            // The cleanup removes at least the inserted export artifacts
+            // (plus any inference-time no-ops like Dropout).
+            debug_assert!(removed >= report.unnamed_inserted);
+            Ok(clean)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::shape::{DType, Shape};
+
+    /// input -> deconv(p=1) -> tanh -> output
+    fn deconv_graph() -> Graph {
+        let mut g = Graph::new("dg");
+        let x = g
+            .add(
+                "x",
+                LayerKind::Input {
+                    shape: Shape::new(8, 8, 8, DType::F16),
+                },
+                &[],
+            )
+            .unwrap();
+        let d = g
+            .add("deconv", LayerKind::deconv(4, 4, 2, 1), &[x])
+            .unwrap();
+        let t = g.add("tanh", LayerKind::Tanh, &[d]).unwrap();
+        g.add("out", LayerKind::Output, &[t]).unwrap();
+        g
+    }
+
+    #[test]
+    fn crop_fix_preserves_output_shape() {
+        let g = deconv_graph();
+        let before = g.node(g.outputs()[0]).shape;
+        let rep = replace_deconv_padding(&g, PaddingFix::Crop, false).unwrap();
+        assert_eq!(rep.deconvs_fixed, 1);
+        let after = rep.graph.node(rep.graph.outputs()[0]).shape;
+        assert_eq!(before, after, "surgery must preserve the model interface");
+        // No padded deconv remains.
+        assert!(!rep.graph.nodes.iter().any(|n| matches!(
+            n.kind,
+            LayerKind::ConvTranspose2d { padding, .. } if padding > 0
+        )));
+    }
+
+    #[test]
+    fn conv_fix_preserves_shape_and_adds_params() {
+        let g = deconv_graph();
+        let p0 = g.param_count();
+        let rep = replace_deconv_padding(&g, PaddingFix::Conv, false).unwrap();
+        let after = rep.graph.node(rep.graph.outputs()[0]).shape;
+        assert_eq!(after, g.node(g.outputs()[0]).shape);
+        assert!(
+            rep.graph.param_count() > p0,
+            "conv substitution adds parameters (paper Table II)"
+        );
+    }
+
+    #[test]
+    fn crop_fix_preserves_param_count() {
+        // Paper Table II: cropping variant has *identical* parameter count.
+        let g = deconv_graph();
+        let rep = replace_deconv_padding(&g, PaddingFix::Crop, false).unwrap();
+        assert_eq!(rep.graph.param_count(), g.param_count());
+    }
+
+    #[test]
+    fn export_artifacts_inserted_then_removed() {
+        let g = deconv_graph();
+        let rep = replace_deconv_padding(&g, PaddingFix::Crop, true).unwrap();
+        assert_eq!(rep.unnamed_inserted, 1);
+        let ids_before = rep.graph.len();
+        let (clean, removed) = eliminate_identities(&rep.graph).unwrap();
+        assert_eq!(removed, 1);
+        assert_eq!(clean.len(), ids_before - 1);
+        clean.validate().unwrap();
+    }
+
+    #[test]
+    fn apply_variant_original_is_clone() {
+        let g = deconv_graph();
+        let v = apply_variant(&g, GanVariant::Original).unwrap();
+        assert_eq!(v.len(), g.len());
+    }
+
+    #[test]
+    fn apply_variant_errors_without_deconvs() {
+        let mut g = Graph::new("plain");
+        let x = g
+            .add(
+                "x",
+                LayerKind::Input {
+                    shape: Shape::new(1, 8, 8, DType::F16),
+                },
+                &[],
+            )
+            .unwrap();
+        g.add("relu", LayerKind::ReLU, &[x]).unwrap();
+        assert!(apply_variant(&g, GanVariant::Cropping).is_err());
+    }
+
+    #[test]
+    fn dead_elimination() {
+        let mut g = deconv_graph();
+        // Unconsumed branch; the graph has an explicit Output marker, so
+        // this node is genuinely dead.
+        g.add("dead_relu", LayerKind::ReLU, &[0]).unwrap();
+        let (clean, removed) = eliminate_dead(&g).unwrap();
+        assert_eq!(removed, 1);
+        assert_eq!(clean.len(), g.len() - 1);
+    }
+
+    #[test]
+    fn dead_elimination_with_explicit_outputs() {
+        let mut g = Graph::new("dg2");
+        let x = g
+            .add(
+                "x",
+                LayerKind::Input {
+                    shape: Shape::new(4, 8, 8, DType::F16),
+                },
+                &[],
+            )
+            .unwrap();
+        let a = g.add("a", LayerKind::ReLU, &[x]).unwrap();
+        let _dead = g.add("b_dead", LayerKind::Tanh, &[x]).unwrap();
+        let _dead2 = g.add("c_dead", LayerKind::Sigmoid, &[2]).unwrap();
+        g.add("out", LayerKind::Output, &[a]).unwrap();
+        let (clean, removed) = eliminate_dead(&g).unwrap();
+        assert_eq!(removed, 2);
+        clean.validate().unwrap();
+    }
+}

@@ -1,0 +1,190 @@
+//! 2-D Discrete Cosine Transform (Table I workload).
+//!
+//! 8×8 block DCT-II with orthonormal scaling plus its inverse — the
+//! JPEG-style transform used in medical image compression pipelines.
+
+use super::image::Image;
+
+const N: usize = 8;
+
+/// Precomputed cosine basis: `BASIS[k][n] = cos(pi/N * (n + 0.5) * k)`.
+fn basis() -> [[f32; N]; N] {
+    let mut b = [[0f32; N]; N];
+    for (k, row) in b.iter_mut().enumerate() {
+        for (n, v) in row.iter_mut().enumerate() {
+            *v = (std::f32::consts::PI / N as f32 * (n as f32 + 0.5) * k as f32).cos();
+        }
+    }
+    b
+}
+
+#[inline]
+fn alpha(k: usize) -> f32 {
+    if k == 0 {
+        (1.0 / N as f32).sqrt()
+    } else {
+        (2.0 / N as f32).sqrt()
+    }
+}
+
+/// Forward 8×8 DCT-II of one block (row-major 64 elements).
+pub fn dct8_block(block: &[f32; 64]) -> [f32; 64] {
+    let b = basis();
+    let mut out = [0f32; 64];
+    // rows
+    let mut tmp = [0f32; 64];
+    for y in 0..N {
+        for k in 0..N {
+            let mut s = 0.0;
+            for n in 0..N {
+                s += block[y * N + n] * b[k][n];
+            }
+            tmp[y * N + k] = alpha(k) * s;
+        }
+    }
+    // columns
+    for x in 0..N {
+        for k in 0..N {
+            let mut s = 0.0;
+            for n in 0..N {
+                s += tmp[n * N + x] * b[k][n];
+            }
+            out[k * N + x] = alpha(k) * s;
+        }
+    }
+    out
+}
+
+/// Inverse 8×8 DCT (DCT-III with orthonormal scaling).
+pub fn idct8_block(coeffs: &[f32; 64]) -> [f32; 64] {
+    let b = basis();
+    let mut tmp = [0f32; 64];
+    // columns
+    for x in 0..N {
+        for n in 0..N {
+            let mut s = 0.0;
+            for k in 0..N {
+                s += alpha(k) * coeffs[k * N + x] * b[k][n];
+            }
+            tmp[n * N + x] = s;
+        }
+    }
+    let mut out = [0f32; 64];
+    // rows
+    for y in 0..N {
+        for n in 0..N {
+            let mut s = 0.0;
+            for k in 0..N {
+                s += alpha(k) * tmp[y * N + k] * b[k][n];
+            }
+            out[y * N + n] = s;
+        }
+    }
+    out
+}
+
+/// Whole-image blockwise 8×8 DCT. Image dimensions must be multiples of 8.
+pub fn dct_image(img: &Image) -> Image {
+    assert!(img.width % N == 0 && img.height % N == 0, "dims must be 8-aligned");
+    let mut out = Image::zeros(img.width, img.height);
+    for by in (0..img.height).step_by(N) {
+        for bx in (0..img.width).step_by(N) {
+            let mut block = [0f32; 64];
+            for y in 0..N {
+                for x in 0..N {
+                    block[y * N + x] = img.get(bx + x, by + y);
+                }
+            }
+            let coeffs = dct8_block(&block);
+            for y in 0..N {
+                for x in 0..N {
+                    out.set(bx + x, by + y, coeffs[y * N + x]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Whole-image blockwise inverse DCT.
+pub fn idct_image(img: &Image) -> Image {
+    assert!(img.width % N == 0 && img.height % N == 0, "dims must be 8-aligned");
+    let mut out = Image::zeros(img.width, img.height);
+    for by in (0..img.height).step_by(N) {
+        for bx in (0..img.width).step_by(N) {
+            let mut block = [0f32; 64];
+            for y in 0..N {
+                for x in 0..N {
+                    block[y * N + x] = img.get(bx + x, by + y);
+                }
+            }
+            let px = idct8_block(&block);
+            for y in 0..N {
+                for x in 0..N {
+                    out.set(bx + x, by + y, px[y * N + x]);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn constant_block_has_only_dc() {
+        let block = [0.5f32; 64];
+        let coeffs = dct8_block(&block);
+        // DC = 8 * 0.5 * alpha0^2-ish: orthonormal => DC = 0.5 * 8 = 4.0
+        assert!((coeffs[0] - 4.0).abs() < 1e-5, "dc={}", coeffs[0]);
+        for (i, &c) in coeffs.iter().enumerate().skip(1) {
+            assert!(c.abs() < 1e-5, "coef {i} = {c}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_block() {
+        let mut rng = Rng::new(8);
+        let mut block = [0f32; 64];
+        for v in &mut block {
+            *v = rng.next_f32();
+        }
+        let back = idct8_block(&dct8_block(&block));
+        for (a, b) in block.iter().zip(back.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let mut rng = Rng::new(9);
+        let mut block = [0f32; 64];
+        for v in &mut block {
+            *v = rng.next_f32() - 0.5;
+        }
+        let coeffs = dct8_block(&block);
+        let e1: f32 = block.iter().map(|v| v * v).sum();
+        let e2: f32 = coeffs.iter().map(|v| v * v).sum();
+        assert!((e1 - e2).abs() / e1 < 1e-4, "{e1} vs {e2}");
+    }
+
+    #[test]
+    fn image_roundtrip() {
+        use crate::imaging::phantom::{paired_sample, PhantomConfig};
+        let s = paired_sample(&PhantomConfig::default(), &mut Rng::new(10));
+        let coeffs = dct_image(&s.ct);
+        let back = idct_image(&coeffs);
+        for (a, b) in s.ct.data.iter().zip(back.data.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "8-aligned")]
+    fn unaligned_rejected() {
+        dct_image(&Image::zeros(10, 8));
+    }
+}

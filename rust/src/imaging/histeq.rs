@@ -1,0 +1,104 @@
+//! Histogram equalization (Table I workload).
+//!
+//! Classic 256-bin global equalization over the `[0,1]` float image, using
+//! the standard CDF remap `v' = (cdf(v) - cdf_min) / (N - cdf_min)`.
+
+use super::image::Image;
+
+/// Number of histogram bins (8-bit intensity resolution).
+pub const BINS: usize = 256;
+
+/// Compute the 256-bin histogram of an image.
+pub fn histogram(img: &Image) -> [u32; BINS] {
+    let mut h = [0u32; BINS];
+    for &v in &img.data {
+        let b = ((v.clamp(0.0, 1.0) * 255.0).round() as usize).min(BINS - 1);
+        h[b] += 1;
+    }
+    h
+}
+
+/// Globally equalize the histogram.
+pub fn equalize(img: &Image) -> Image {
+    let hist = histogram(img);
+    let n = img.data.len() as u64;
+    // CDF and its first non-zero value.
+    let mut cdf = [0u64; BINS];
+    let mut acc = 0u64;
+    for (i, &c) in hist.iter().enumerate() {
+        acc += c as u64;
+        cdf[i] = acc;
+    }
+    let cdf_min = cdf.iter().copied().find(|&c| c > 0).unwrap_or(0);
+    let denom = (n - cdf_min).max(1) as f32;
+
+    let mut lut = [0f32; BINS];
+    for i in 0..BINS {
+        lut[i] = ((cdf[i].saturating_sub(cdf_min)) as f32 / denom).clamp(0.0, 1.0);
+    }
+    let mut out = img.clone();
+    for v in &mut out.data {
+        let b = ((v.clamp(0.0, 1.0) * 255.0).round() as usize).min(BINS - 1);
+        *v = lut[b];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn histogram_counts_all_pixels() {
+        let img = Image::from_data(2, 2, vec![0.0, 0.5, 0.5, 1.0]).unwrap();
+        let h = histogram(&img);
+        assert_eq!(h.iter().map(|&c| c as usize).sum::<usize>(), 4);
+        assert_eq!(h[0], 1);
+        assert_eq!(h[128], 2);
+        assert_eq!(h[255], 1);
+    }
+
+    #[test]
+    fn equalization_stretches_low_contrast() {
+        // Narrow band [0.4, 0.6] should spread towards [0, 1].
+        let mut rng = Rng::new(5);
+        let mut img = Image::zeros(64, 64);
+        for v in &mut img.data {
+            *v = 0.4 + 0.2 * rng.next_f32();
+        }
+        let eq = equalize(&img);
+        let (mn0, mx0) = img.min_max();
+        let (mn1, mx1) = eq.min_max();
+        assert!(mx1 - mn1 > (mx0 - mn0) * 2.0, "contrast should stretch");
+        assert!(mx1 > 0.95);
+    }
+
+    #[test]
+    fn equalization_is_monotone() {
+        let mut rng = Rng::new(6);
+        let mut img = Image::zeros(32, 32);
+        for v in &mut img.data {
+            *v = rng.next_f32();
+        }
+        let eq = equalize(&img);
+        // pixel order (by intensity) must be preserved
+        let mut pairs: Vec<(f32, f32)> = img.data.iter().copied().zip(eq.data.iter().copied()).collect();
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in pairs.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-6, "equalization must be monotone");
+        }
+    }
+
+    #[test]
+    fn constant_image_maps_to_zero() {
+        let mut img = Image::zeros(8, 8);
+        for v in &mut img.data {
+            *v = 0.7;
+        }
+        let eq = equalize(&img);
+        for &v in &eq.data {
+            assert_eq!(v, 0.0);
+        }
+    }
+}

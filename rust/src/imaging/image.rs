@@ -1,0 +1,218 @@
+//! Grayscale image container and PGM I/O.
+//!
+//! All medical images in the pipeline are single-channel `f32` in `[0, 1]`,
+//! stored row-major. PGM (P5, 8-bit) is the interchange format for sample
+//! outputs (Fig 7) because it needs no external codec.
+
+use crate::error::{Error, Result};
+use std::io::Write as _;
+use std::path::Path;
+
+/// A row-major single-channel `f32` image.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Image {
+    pub width: usize,
+    pub height: usize,
+    pub data: Vec<f32>,
+}
+
+impl Image {
+    /// Create a zero-filled image.
+    pub fn zeros(width: usize, height: usize) -> Self {
+        Image {
+            width,
+            height,
+            data: vec![0.0; width * height],
+        }
+    }
+
+    /// Create from raw data (must have `width * height` elements).
+    pub fn from_data(width: usize, height: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != width * height {
+            return Err(Error::Imaging(format!(
+                "data length {} != {}x{}",
+                data.len(),
+                width,
+                height
+            )));
+        }
+        Ok(Image {
+            width,
+            height,
+            data,
+        })
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> f32 {
+        self.data[y * self.width + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: f32) {
+        self.data[y * self.width + x] = v;
+    }
+
+    /// Clamped accessor: out-of-range coordinates are clamped to the border
+    /// (replicate padding), the convention used by all the filters here.
+    #[inline]
+    pub fn get_clamped(&self, x: isize, y: isize) -> f32 {
+        let xc = x.clamp(0, self.width as isize - 1) as usize;
+        let yc = y.clamp(0, self.height as isize - 1) as usize;
+        self.get(xc, yc)
+    }
+
+    /// Clamp all pixels into `[0, 1]`.
+    pub fn clamp01(&mut self) {
+        for v in &mut self.data {
+            *v = v.clamp(0.0, 1.0);
+        }
+    }
+
+    /// Min and max pixel values.
+    pub fn min_max(&self) -> (f32, f32) {
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        for &v in &self.data {
+            mn = mn.min(v);
+            mx = mx.max(v);
+        }
+        (mn, mx)
+    }
+
+    /// Mean pixel value.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Quantize to 8-bit, clamping to `[0,1]` first.
+    pub fn to_u8(&self) -> Vec<u8> {
+        self.data
+            .iter()
+            .map(|&v| (v.clamp(0.0, 1.0) * 255.0).round() as u8)
+            .collect()
+    }
+
+    /// Build from 8-bit pixels.
+    pub fn from_u8(width: usize, height: usize, bytes: &[u8]) -> Result<Self> {
+        if bytes.len() != width * height {
+            return Err(Error::Imaging("byte length mismatch".into()));
+        }
+        Ok(Image {
+            width,
+            height,
+            data: bytes.iter().map(|&b| b as f32 / 255.0).collect(),
+        })
+    }
+
+    /// Write as binary PGM (P5).
+    pub fn save_pgm(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        write!(f, "P5\n{} {}\n255\n", self.width, self.height)?;
+        f.write_all(&self.to_u8())?;
+        Ok(())
+    }
+
+    /// Read a binary PGM (P5).
+    pub fn load_pgm(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)?;
+        let mut fields: Vec<usize> = Vec::new();
+        // Header: magic, width, height, maxval — whitespace separated with
+        // optional `#` comments.
+        let magic_end = bytes
+            .iter()
+            .position(|&b| b.is_ascii_whitespace())
+            .ok_or_else(|| Error::Imaging("truncated pgm".into()))?;
+        if &bytes[..magic_end] != b"P5" {
+            return Err(Error::Imaging("not a P5 pgm".into()));
+        }
+        let mut pos = magic_end;
+        while fields.len() < 3 {
+            while pos < bytes.len() && bytes[pos].is_ascii_whitespace() {
+                pos += 1;
+            }
+            if pos < bytes.len() && bytes[pos] == b'#' {
+                while pos < bytes.len() && bytes[pos] != b'\n' {
+                    pos += 1;
+                }
+                continue;
+            }
+            let start = pos;
+            while pos < bytes.len() && !bytes[pos].is_ascii_whitespace() {
+                pos += 1;
+            }
+            let text = std::str::from_utf8(&bytes[start..pos])
+                .map_err(|_| Error::Imaging("bad pgm header".into()))?;
+            fields.push(
+                text.parse()
+                    .map_err(|_| Error::Imaging("bad pgm header number".into()))?,
+            );
+        }
+        pos += 1; // single whitespace after maxval
+        let (w, h, maxval) = (fields[0], fields[1], fields[2]);
+        if maxval != 255 {
+            return Err(Error::Imaging("only 8-bit pgm supported".into()));
+        }
+        if bytes.len() < pos + w * h {
+            return Err(Error::Imaging("truncated pgm data".into()));
+        }
+        Image::from_u8(w, h, &bytes[pos..pos + w * h])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_accessors() {
+        let mut img = Image::zeros(4, 3);
+        assert_eq!(img.data.len(), 12);
+        img.set(2, 1, 0.5);
+        assert_eq!(img.get(2, 1), 0.5);
+        assert_eq!(img.get_clamped(-5, 100), 0.0);
+        assert_eq!(img.get_clamped(2, 1), 0.5);
+    }
+
+    #[test]
+    fn from_data_validates_length() {
+        assert!(Image::from_data(2, 2, vec![0.0; 3]).is_err());
+        assert!(Image::from_data(2, 2, vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn u8_roundtrip() {
+        let img = Image::from_data(2, 2, vec![0.0, 0.25, 0.5, 1.0]).unwrap();
+        let b = img.to_u8();
+        assert_eq!(b, vec![0, 64, 128, 255]);
+        let back = Image::from_u8(2, 2, &b).unwrap();
+        for (a, b) in img.data.iter().zip(back.data.iter()) {
+            assert!((a - b).abs() < 1.0 / 255.0);
+        }
+    }
+
+    #[test]
+    fn pgm_roundtrip() {
+        let dir = std::env::temp_dir().join("edgepipe_pgm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.pgm");
+        let img = Image::from_data(3, 2, vec![0.0, 0.2, 0.4, 0.6, 0.8, 1.0]).unwrap();
+        img.save_pgm(&path).unwrap();
+        let back = Image::load_pgm(&path).unwrap();
+        assert_eq!(back.width, 3);
+        assert_eq!(back.height, 2);
+        for (a, b) in img.data.iter().zip(back.data.iter()) {
+            assert!((a - b).abs() < 1.0 / 255.0);
+        }
+    }
+
+    #[test]
+    fn min_max_mean() {
+        let img = Image::from_data(2, 2, vec![0.1, 0.2, 0.3, 0.4]).unwrap();
+        assert_eq!(img.min_max(), (0.1, 0.4));
+        assert!((img.mean() - 0.25).abs() < 1e-6);
+    }
+}

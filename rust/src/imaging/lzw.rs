@@ -1,0 +1,240 @@
+//! Lempel–Ziv–Welch compression (Table I workload).
+//!
+//! Byte-oriented LZW with a growing dictionary (up to 16-bit codes) and a
+//! variable-width bit packer — the codec used for lossless medical-image
+//! archival in the Table I latency comparison.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+const MAX_CODE_BITS: u32 = 16;
+const DICT_LIMIT: usize = 1 << MAX_CODE_BITS;
+
+/// Pack variable-width codes into bytes (LSB-first).
+struct BitWriter {
+    out: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    fn new() -> Self {
+        BitWriter {
+            out: Vec::new(),
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    fn push(&mut self, code: u32, width: u32) {
+        self.acc |= (code as u64) << self.nbits;
+        self.nbits += width;
+        while self.nbits >= 8 {
+            self.out.push((self.acc & 0xFF) as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.out.push((self.acc & 0xFF) as u8);
+        }
+        self.out
+    }
+}
+
+/// Unpack variable-width codes.
+struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(data: &'a [u8]) -> Self {
+        BitReader {
+            data,
+            pos: 0,
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    fn pull(&mut self, width: u32) -> Option<u32> {
+        while self.nbits < width {
+            if self.pos >= self.data.len() {
+                return None;
+            }
+            self.acc |= (self.data[self.pos] as u64) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+        let code = (self.acc & ((1u64 << width) - 1)) as u32;
+        self.acc >>= width;
+        self.nbits -= width;
+        Some(code)
+    }
+}
+
+fn width_for(next_code: usize) -> u32 {
+    let mut w = 9;
+    while (1usize << w) < next_code + 1 && w < MAX_CODE_BITS {
+        w += 1;
+    }
+    w
+}
+
+/// LZW-compress a byte stream.
+pub fn compress(input: &[u8]) -> Vec<u8> {
+    if input.is_empty() {
+        return Vec::new();
+    }
+    let mut dict: HashMap<Vec<u8>, u32> = (0..256u32).map(|b| (vec![b as u8], b)).collect();
+    let mut next_code = 256u32;
+    let mut writer = BitWriter::new();
+    let mut current = vec![input[0]];
+    for &b in &input[1..] {
+        let mut candidate = current.clone();
+        candidate.push(b);
+        if dict.contains_key(&candidate) {
+            current = candidate;
+        } else {
+            let code = dict[&current];
+            writer.push(code, width_for(next_code as usize));
+            if (next_code as usize) < DICT_LIMIT {
+                dict.insert(candidate, next_code);
+                next_code += 1;
+            }
+            current = vec![b];
+        }
+    }
+    let code = dict[&current];
+    writer.push(code, width_for(next_code as usize));
+    writer.finish()
+}
+
+/// Decompress an LZW stream produced by [`compress`]. `expected_len` bounds
+/// the output (guards against corrupt input).
+pub fn decompress(input: &[u8], expected_len: usize) -> Result<Vec<u8>> {
+    if input.is_empty() {
+        return Ok(Vec::new());
+    }
+    let mut dict: Vec<Vec<u8>> = (0..256u32).map(|b| vec![b as u8]).collect();
+    let mut reader = BitReader::new(input);
+    let mut out = Vec::with_capacity(expected_len);
+
+    let first = reader
+        .pull(width_for(dict.len()))
+        .ok_or_else(|| Error::Imaging("lzw: truncated stream".into()))? as usize;
+    if first >= dict.len() {
+        return Err(Error::Imaging("lzw: bad first code".into()));
+    }
+    let mut prev = dict[first].clone();
+    out.extend_from_slice(&prev);
+
+    while out.len() < expected_len {
+        // Width accounts for the entry we are *about* to add.
+        let width = width_for(dict.len() + 1);
+        let code = match reader.pull(width) {
+            Some(c) => c as usize,
+            None => break,
+        };
+        let entry = if code < dict.len() {
+            dict[code].clone()
+        } else if code == dict.len() {
+            // KwKwK special case.
+            let mut e = prev.clone();
+            e.push(prev[0]);
+            e
+        } else {
+            return Err(Error::Imaging(format!("lzw: code {code} out of range")));
+        };
+        out.extend_from_slice(&entry);
+        if dict.len() < DICT_LIMIT {
+            let mut new_entry = prev.clone();
+            new_entry.push(entry[0]);
+            dict.push(new_entry);
+        }
+        prev = entry;
+    }
+    out.truncate(expected_len);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(data: &[u8]) {
+        let compressed = compress(data);
+        let back = decompress(&compressed, data.len()).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        roundtrip(&[]);
+        roundtrip(&[42]);
+    }
+
+    #[test]
+    fn repetitive_data_compresses() {
+        let data: Vec<u8> = std::iter::repeat(b"abcabcabc".as_slice())
+            .take(200)
+            .flatten()
+            .copied()
+            .collect();
+        let compressed = compress(&data);
+        assert!(
+            compressed.len() < data.len() / 3,
+            "{} vs {}",
+            compressed.len(),
+            data.len()
+        );
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn kwkwk_case() {
+        // Classic pattern triggering the code==dict.len() branch.
+        roundtrip(b"abababababababab");
+        roundtrip(b"aaaaaaaaaaaaaaaaaaaaaaa");
+    }
+
+    #[test]
+    fn random_data_roundtrips() {
+        let mut rng = Rng::new(33);
+        for len in [1usize, 100, 1000, 5000] {
+            let data: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            roundtrip(&data);
+        }
+    }
+
+    #[test]
+    fn image_roundtrips() {
+        use crate::imaging::phantom::{paired_sample, PhantomConfig};
+        let cfg = PhantomConfig::default();
+        let s = paired_sample(&cfg, &mut Rng::new(4));
+        let bytes = s.ct.to_u8();
+        let compressed = compress(&bytes);
+        let back = decompress(&compressed, bytes.len()).unwrap();
+        assert_eq!(back, bytes);
+        // Phantoms have large flat regions -> should compress well.
+        assert!(compressed.len() < bytes.len());
+    }
+
+    #[test]
+    fn corrupt_stream_is_error_not_panic() {
+        let data = b"hello world hello world";
+        let mut compressed = compress(data);
+        if let Some(last) = compressed.last_mut() {
+            *last = 0xFF;
+        }
+        compressed.extend_from_slice(&[0xFF; 8]);
+        // Either an error or output not matching — must not panic.
+        let _ = decompress(&compressed, data.len());
+    }
+}

@@ -1,0 +1,124 @@
+//! Median filter (Table I workload).
+//!
+//! 3×3 and general k×k median with replicate borders. The 3×3 path uses a
+//! branchless sorting network (19 compare-exchange ops — the classic
+//! Smith 1996 network) because this filter is also used on the pipeline's
+//! preprocessing hot path.
+
+use super::image::Image;
+
+#[inline(always)]
+fn cswap(a: &mut f32, b: &mut f32) {
+    if *a > *b {
+        std::mem::swap(a, b);
+    }
+}
+
+/// 3×3 median via sorting network.
+pub fn median3(img: &Image) -> Image {
+    let mut out = Image::zeros(img.width, img.height);
+    for y in 0..img.height {
+        for x in 0..img.width {
+            let mut v = [0f32; 9];
+            let mut k = 0;
+            for dy in -1isize..=1 {
+                for dx in -1isize..=1 {
+                    v[k] = img.get_clamped(x as isize + dx, y as isize + dy);
+                    k += 1;
+                }
+            }
+            // 19-exchange median-of-9 network.
+            let [mut v0, mut v1, mut v2, mut v3, mut v4, mut v5, mut v6, mut v7, mut v8] = v;
+            cswap(&mut v1, &mut v2);
+            cswap(&mut v4, &mut v5);
+            cswap(&mut v7, &mut v8);
+            cswap(&mut v0, &mut v1);
+            cswap(&mut v3, &mut v4);
+            cswap(&mut v6, &mut v7);
+            cswap(&mut v1, &mut v2);
+            cswap(&mut v4, &mut v5);
+            cswap(&mut v7, &mut v8);
+            cswap(&mut v0, &mut v3);
+            cswap(&mut v5, &mut v8);
+            cswap(&mut v4, &mut v7);
+            cswap(&mut v3, &mut v6);
+            cswap(&mut v1, &mut v4);
+            cswap(&mut v2, &mut v5);
+            cswap(&mut v4, &mut v7);
+            cswap(&mut v4, &mut v2);
+            cswap(&mut v6, &mut v4);
+            cswap(&mut v4, &mut v2);
+            out.set(x, y, v4);
+        }
+    }
+    out
+}
+
+/// General k×k median (k odd) — selection by partial sort.
+pub fn median_k(img: &Image, k: usize) -> Image {
+    assert!(k % 2 == 1 && k >= 1, "kernel must be odd");
+    let r = (k / 2) as isize;
+    let mut out = Image::zeros(img.width, img.height);
+    let mut buf = Vec::with_capacity(k * k);
+    for y in 0..img.height {
+        for x in 0..img.width {
+            buf.clear();
+            for dy in -r..=r {
+                for dx in -r..=r {
+                    buf.push(img.get_clamped(x as isize + dx, y as isize + dy));
+                }
+            }
+            let mid = buf.len() / 2;
+            buf.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+            out.set(x, y, buf[mid]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn removes_salt_noise() {
+        let mut img = Image::zeros(16, 16);
+        for v in &mut img.data {
+            *v = 0.5;
+        }
+        img.set(8, 8, 1.0); // single outlier
+        let filtered = median3(&img);
+        assert_eq!(filtered.get(8, 8), 0.5);
+    }
+
+    #[test]
+    fn constant_image_unchanged() {
+        let mut img = Image::zeros(8, 8);
+        for v in &mut img.data {
+            *v = 0.3;
+        }
+        assert_eq!(median3(&img).data, img.data);
+        assert_eq!(median_k(&img, 5).data, img.data);
+    }
+
+    #[test]
+    fn network_matches_general_path() {
+        let mut rng = Rng::new(42);
+        let mut img = Image::zeros(20, 13);
+        for v in &mut img.data {
+            *v = rng.next_f32();
+        }
+        let a = median3(&img);
+        let b = median_k(&img, 3);
+        for (x, y) in a.data.iter().zip(b.data.iter()) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "kernel must be odd")]
+    fn even_kernel_rejected() {
+        median_k(&Image::zeros(4, 4), 2);
+    }
+}

@@ -1,0 +1,188 @@
+//! Reconstruction accuracy metrics: MSE, PSNR, SSIM (paper Eqs. 1–3).
+//!
+//! Conventions match the paper's evaluation: images are compared in 8-bit
+//! intensity space (`L = 256`), SSIM uses the standard `C1=(0.01 L)^2`,
+//! `C2=(0.03 L)^2` constants computed over an 8×8 sliding window, and is
+//! reported ×100 like Table II.
+
+use super::image::Image;
+use crate::error::{Error, Result};
+
+/// Mean squared error in 8-bit intensity units (Eq. 1).
+pub fn mse(original: &Image, generated: &Image) -> Result<f64> {
+    check_dims(original, generated)?;
+    let n = original.data.len() as f64;
+    let sum: f64 = original
+        .data
+        .iter()
+        .zip(generated.data.iter())
+        .map(|(&o, &g)| {
+            let d = (o as f64 - g as f64) * 255.0;
+            d * d
+        })
+        .sum();
+    Ok(sum / n)
+}
+
+/// Peak signal-to-noise ratio in dB (Eq. 2), `L = 256` intensity levels.
+pub fn psnr(original: &Image, generated: &Image) -> Result<f64> {
+    let m = mse(original, generated)?;
+    if m == 0.0 {
+        return Ok(f64::INFINITY);
+    }
+    Ok(10.0 * ((255.0f64 * 255.0) / m).log10())
+}
+
+/// Mean structural similarity (Eq. 3) over 8×8 windows with stride 4,
+/// reported in `[0, 1]` (multiply by 100 for the paper's Table II scale).
+pub fn ssim(original: &Image, generated: &Image) -> Result<f64> {
+    check_dims(original, generated)?;
+    const WIN: usize = 8;
+    const STRIDE: usize = 4;
+    let l = 255.0f64;
+    let c1 = (0.01 * l) * (0.01 * l);
+    let c2 = (0.03 * l) * (0.03 * l);
+    let (w, h) = (original.width, original.height);
+    if w < WIN || h < WIN {
+        return Err(Error::Imaging(format!(
+            "image {w}x{h} smaller than ssim window {WIN}"
+        )));
+    }
+    let mut total = 0.0;
+    let mut count = 0usize;
+    let mut y = 0;
+    while y + WIN <= h {
+        let mut x = 0;
+        while x + WIN <= w {
+            let (mut so, mut sg, mut soo, mut sgg, mut sog) = (0.0, 0.0, 0.0, 0.0, 0.0);
+            for dy in 0..WIN {
+                for dx in 0..WIN {
+                    let o = original.get(x + dx, y + dy) as f64 * 255.0;
+                    let g = generated.get(x + dx, y + dy) as f64 * 255.0;
+                    so += o;
+                    sg += g;
+                    soo += o * o;
+                    sgg += g * g;
+                    sog += o * g;
+                }
+            }
+            let n = (WIN * WIN) as f64;
+            let mo = so / n;
+            let mg = sg / n;
+            let vo = (soo / n - mo * mo).max(0.0);
+            let vg = (sgg / n - mg * mg).max(0.0);
+            let cov = sog / n - mo * mg;
+            let s = ((2.0 * mo * mg + c1) * (2.0 * cov + c2))
+                / ((mo * mo + mg * mg + c1) * (vo + vg + c2));
+            total += s;
+            count += 1;
+            x += STRIDE;
+        }
+        y += STRIDE;
+    }
+    Ok(total / count as f64)
+}
+
+/// All three metrics at once (the Table II row for one model).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fidelity {
+    pub mse: f64,
+    pub psnr: f64,
+    /// SSIM ×100 as reported in the paper.
+    pub ssim_pct: f64,
+}
+
+pub fn fidelity(original: &Image, generated: &Image) -> Result<Fidelity> {
+    Ok(Fidelity {
+        mse: mse(original, generated)?,
+        psnr: psnr(original, generated)?,
+        ssim_pct: ssim(original, generated)? * 100.0,
+    })
+}
+
+fn check_dims(a: &Image, b: &Image) -> Result<()> {
+    if a.width != b.width || a.height != b.height {
+        return Err(Error::Imaging(format!(
+            "dimension mismatch: {}x{} vs {}x{}",
+            a.width, a.height, b.width, b.height
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn noisy_copy(img: &Image, sigma: f32, seed: u64) -> Image {
+        let mut rng = Rng::new(seed);
+        let mut out = img.clone();
+        for v in &mut out.data {
+            *v = (*v + sigma * rng.normal() as f32).clamp(0.0, 1.0);
+        }
+        out
+    }
+
+    fn test_image() -> Image {
+        let mut img = Image::zeros(32, 32);
+        for y in 0..32 {
+            for x in 0..32 {
+                img.set(x, y, ((x + y) as f32 / 62.0).clamp(0.0, 1.0));
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn identical_images_are_perfect() {
+        let img = test_image();
+        assert_eq!(mse(&img, &img).unwrap(), 0.0);
+        assert_eq!(psnr(&img, &img).unwrap(), f64::INFINITY);
+        assert!((ssim(&img, &img).unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_degrade_with_noise() {
+        let img = test_image();
+        let slightly = noisy_copy(&img, 0.02, 1);
+        let very = noisy_copy(&img, 0.2, 2);
+        assert!(mse(&img, &slightly).unwrap() < mse(&img, &very).unwrap());
+        assert!(psnr(&img, &slightly).unwrap() > psnr(&img, &very).unwrap());
+        assert!(ssim(&img, &slightly).unwrap() > ssim(&img, &very).unwrap());
+    }
+
+    #[test]
+    fn mse_known_value() {
+        let a = Image::from_data(8, 8, vec![0.0; 64]).unwrap();
+        let b = Image::from_data(8, 8, vec![1.0; 64]).unwrap();
+        // every pixel differs by 255 -> mse = 255^2
+        assert!((mse(&a, &b).unwrap() - 255.0 * 255.0).abs() < 1e-9);
+        // psnr of max error = 0 dB
+        assert!((psnr(&a, &b).unwrap() - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let a = Image::zeros(8, 8);
+        let b = Image::zeros(8, 9);
+        assert!(mse(&a, &b).is_err());
+        assert!(ssim(&a, &b).is_err());
+    }
+
+    #[test]
+    fn ssim_window_guard() {
+        let a = Image::zeros(4, 4);
+        assert!(ssim(&a, &a).is_err());
+    }
+
+    #[test]
+    fn fidelity_bundles_all() {
+        let img = test_image();
+        let noisy = noisy_copy(&img, 0.05, 3);
+        let f = fidelity(&img, &noisy).unwrap();
+        assert!(f.mse > 0.0);
+        assert!(f.psnr > 10.0 && f.psnr < 60.0);
+        assert!(f.ssim_pct > 10.0 && f.ssim_pct < 100.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Imaging substrate.
+//!
+//! Everything the pipeline needs around pixels: an image container with PGM
+//! I/O ([`image`]), the paper's accuracy metrics MSE/PSNR/SSIM
+//! ([`metrics`]), the procedural paired CT/MRI phantom generator
+//! ([`phantom`]) that substitutes for the paper's private paired dataset,
+//! and the classical medical-imaging algorithms of Table I
+//! ([`median`], [`histeq`], [`sobel`], [`canny`], [`lzw`], [`dct`]).
+
+pub mod canny;
+pub mod dct;
+pub mod histeq;
+pub mod image;
+pub mod lzw;
+pub mod median;
+pub mod metrics;
+pub mod phantom;
+pub mod sobel;
+
+pub use image::Image;

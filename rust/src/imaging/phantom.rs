@@ -1,0 +1,303 @@
+//! Procedural paired CT/MRI brain phantoms.
+//!
+//! Substitutes for the paper's private paired CT↔MRI dataset [28] and the
+//! Roboflow stroke dataset [35]. A phantom is built from a skull ring, a
+//! brain-tissue ellipse, ventricles and optional stroke lesions; the "MRI"
+//! counterpart is a *deterministic tissue-contrast remap* of the CT (bone
+//! dark, soft-tissue contrast stretched, mild smoothing) so the CT→MRI
+//! translation is learnable and the reconstruction accuracy comparison
+//! (Table II) is well-posed and reproducible. The Python training data
+//! generator (`python/compile/data.py`) mirrors this construction; the two
+//! implementations are kept numerically close so rust-side PSNR/SSIM of a
+//! python-trained model is meaningful.
+
+use super::image::Image;
+use crate::util::rng::Rng;
+
+/// An axis-aligned ground-truth lesion box (for the YOLO detection task).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LesionBox {
+    pub cx: f32,
+    pub cy: f32,
+    pub w: f32,
+    pub h: f32,
+}
+
+/// A paired sample: CT slice, ground-truth MRI slice, lesion boxes.
+#[derive(Debug, Clone)]
+pub struct PairedSample {
+    pub ct: Image,
+    pub mri: Image,
+    pub lesions: Vec<LesionBox>,
+}
+
+/// Phantom generator parameters.
+#[derive(Debug, Clone)]
+pub struct PhantomConfig {
+    pub size: usize,
+    /// Probability that a slice contains 1–2 stroke lesions.
+    pub lesion_prob: f64,
+    /// CT detector noise sigma (additive Gaussian, before clamping).
+    pub noise_sigma: f32,
+}
+
+impl Default for PhantomConfig {
+    fn default() -> Self {
+        PhantomConfig {
+            size: 64,
+            lesion_prob: 0.7,
+            noise_sigma: 0.01,
+        }
+    }
+}
+
+/// Intensity conventions (normalized 0–1, loosely following CT Hounsfield
+/// ordering: air < tissue < bone).
+const CT_AIR: f32 = 0.05;
+const CT_TISSUE: f32 = 0.45;
+const CT_VENTRICLE: f32 = 0.30;
+const CT_BONE: f32 = 0.95;
+const CT_LESION: f32 = 0.38;
+
+/// Generate one paired CT/MRI sample.
+pub fn paired_sample(cfg: &PhantomConfig, rng: &mut Rng) -> PairedSample {
+    let n = cfg.size;
+    let mut labels = vec![0u8; n * n]; // 0 air, 1 tissue, 2 ventricle, 3 bone, 4 lesion
+    let c = n as f32 / 2.0;
+    // Randomized head geometry.
+    let rx = rng.range_f64(0.36, 0.44) as f32 * n as f32;
+    let ry = rng.range_f64(0.40, 0.47) as f32 * n as f32;
+    let skull_t = rng.range_f64(0.04, 0.07) as f32 * n as f32;
+    let tilt = rng.range_f64(-0.2, 0.2) as f32;
+
+    let (sin_t, cos_t) = (tilt.sin(), tilt.cos());
+    let inside = |x: f32, y: f32, rx: f32, ry: f32| -> bool {
+        let dx = x - c;
+        let dy = y - c;
+        let u = cos_t * dx + sin_t * dy;
+        let v = -sin_t * dx + cos_t * dy;
+        (u / rx) * (u / rx) + (v / ry) * (v / ry) <= 1.0
+    };
+
+    for y in 0..n {
+        for x in 0..n {
+            let (xf, yf) = (x as f32, y as f32);
+            let idx = y * n + x;
+            if inside(xf, yf, rx - skull_t, ry - skull_t) {
+                labels[idx] = 1;
+            } else if inside(xf, yf, rx, ry) {
+                labels[idx] = 3;
+            }
+        }
+    }
+
+    // Ventricles: two small ellipses near centre.
+    for side in [-1.0f32, 1.0f32] {
+        let vx = c + side * rng.range_f64(0.08, 0.14) as f32 * n as f32;
+        let vy = c + rng.range_f64(-0.05, 0.05) as f32 * n as f32;
+        let vrx = rng.range_f64(0.04, 0.07) as f32 * n as f32;
+        let vry = rng.range_f64(0.08, 0.13) as f32 * n as f32;
+        for y in 0..n {
+            for x in 0..n {
+                let dx = (x as f32 - vx) / vrx;
+                let dy = (y as f32 - vy) / vry;
+                if dx * dx + dy * dy <= 1.0 && labels[y * n + x] == 1 {
+                    labels[y * n + x] = 2;
+                }
+            }
+        }
+    }
+
+    // Stroke lesions.
+    let mut lesions = Vec::new();
+    if rng.chance(cfg.lesion_prob) {
+        let count = 1 + rng.below(2) as usize;
+        for _ in 0..count {
+            let lrx = rng.range_f64(0.05, 0.12) as f32 * n as f32;
+            let lry = rng.range_f64(0.05, 0.12) as f32 * n as f32;
+            let lx = c + rng.range_f64(-0.22, 0.22) as f32 * n as f32;
+            let ly = c + rng.range_f64(-0.25, 0.25) as f32 * n as f32;
+            let mut touched = false;
+            for y in 0..n {
+                for x in 0..n {
+                    let dx = (x as f32 - lx) / lrx;
+                    let dy = (y as f32 - ly) / lry;
+                    if dx * dx + dy * dy <= 1.0 && labels[y * n + x] == 1 {
+                        labels[y * n + x] = 4;
+                        touched = true;
+                    }
+                }
+            }
+            if touched {
+                lesions.push(LesionBox {
+                    cx: lx,
+                    cy: ly,
+                    w: 2.0 * lrx,
+                    h: 2.0 * lry,
+                });
+            }
+        }
+    }
+
+    // CT image: label intensities + detector noise.
+    let mut ct = Image::zeros(n, n);
+    for y in 0..n {
+        for x in 0..n {
+            let v = match labels[y * n + x] {
+                1 => CT_TISSUE,
+                2 => CT_VENTRICLE,
+                3 => CT_BONE,
+                4 => CT_LESION,
+                _ => CT_AIR,
+            };
+            ct.set(x, y, v + cfg.noise_sigma * rng.normal() as f32);
+        }
+    }
+    ct.clamp01();
+
+    // MRI: deterministic contrast remap of the *noise-free* labels plus a
+    // small blur — this is the mapping the GAN has to learn.
+    let mut mri = Image::zeros(n, n);
+    for y in 0..n {
+        for x in 0..n {
+            let v = match labels[y * n + x] {
+                1 => 0.62, // soft tissue bright on T2-like contrast
+                2 => 0.88, // CSF very bright
+                3 => 0.10, // bone dark
+                4 => 0.82, // lesion hyperintense
+                _ => 0.02,
+            };
+            mri.set(x, y, v);
+        }
+    }
+    mri = box_blur3(&mri);
+
+    PairedSample { ct, mri, lesions }
+}
+
+/// The deterministic CT→MRI remap applied pixel-wise (used by tests and by
+/// the quickstart example to compute an "oracle" MRI from a CT without the
+/// label map). Approximates the label-based construction by intensity
+/// thresholds.
+pub fn ct_to_mri_oracle(ct: &Image) -> Image {
+    let mut out = Image::zeros(ct.width, ct.height);
+    for (i, &v) in ct.data.iter().enumerate() {
+        let m = if v > 0.7 {
+            0.10 // bone
+        } else if v > 0.41 {
+            0.62 // tissue
+        } else if v > 0.34 {
+            0.82 // lesion band
+        } else if v > 0.2 {
+            0.88 // ventricle
+        } else {
+            0.02 // air
+        };
+        out.data[i] = m;
+    }
+    box_blur3(&out)
+}
+
+/// 3×3 box blur with replicate borders.
+pub fn box_blur3(img: &Image) -> Image {
+    let mut out = Image::zeros(img.width, img.height);
+    for y in 0..img.height {
+        for x in 0..img.width {
+            let mut s = 0.0;
+            for dy in -1isize..=1 {
+                for dx in -1isize..=1 {
+                    s += img.get_clamped(x as isize + dx, y as isize + dy);
+                }
+            }
+            out.set(x, y, s / 9.0);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_shapes_and_ranges() {
+        let cfg = PhantomConfig::default();
+        let mut rng = Rng::new(1);
+        let s = paired_sample(&cfg, &mut rng);
+        assert_eq!(s.ct.width, 64);
+        assert_eq!(s.mri.height, 64);
+        let (mn, mx) = s.ct.min_max();
+        assert!(mn >= 0.0 && mx <= 1.0);
+        // skull ring must contain bone-bright pixels
+        assert!(mx > 0.8, "expected bright skull, max={mx}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = PhantomConfig::default();
+        let a = paired_sample(&cfg, &mut Rng::new(7));
+        let b = paired_sample(&cfg, &mut Rng::new(7));
+        assert_eq!(a.ct, b.ct);
+        assert_eq!(a.mri, b.mri);
+        assert_eq!(a.lesions.len(), b.lesions.len());
+    }
+
+    #[test]
+    fn different_seeds_give_different_phantoms() {
+        let cfg = PhantomConfig::default();
+        let a = paired_sample(&cfg, &mut Rng::new(1));
+        let b = paired_sample(&cfg, &mut Rng::new(2));
+        assert_ne!(a.ct, b.ct);
+    }
+
+    #[test]
+    fn lesions_appear_with_probability_one() {
+        let cfg = PhantomConfig {
+            lesion_prob: 1.0,
+            ..PhantomConfig::default()
+        };
+        let mut rng = Rng::new(3);
+        let mut saw = 0;
+        for _ in 0..20 {
+            if !paired_sample(&cfg, &mut rng).lesions.is_empty() {
+                saw += 1;
+            }
+        }
+        assert!(saw >= 18, "lesions should almost always materialize: {saw}");
+    }
+
+    #[test]
+    fn no_lesions_when_prob_zero() {
+        let cfg = PhantomConfig {
+            lesion_prob: 0.0,
+            ..PhantomConfig::default()
+        };
+        let mut rng = Rng::new(4);
+        for _ in 0..10 {
+            assert!(paired_sample(&cfg, &mut rng).lesions.is_empty());
+        }
+    }
+
+    #[test]
+    fn oracle_maps_bone_dark_csf_bright() {
+        let cfg = PhantomConfig {
+            noise_sigma: 0.0,
+            ..PhantomConfig::default()
+        };
+        let mut rng = Rng::new(5);
+        let s = paired_sample(&cfg, &mut rng);
+        let oracle = ct_to_mri_oracle(&s.ct);
+        // Oracle should be close to the ground-truth MRI when CT is noise-free.
+        let err = crate::imaging::metrics::mse(&s.mri, &oracle).unwrap();
+        assert!(err < 400.0, "oracle should approximate gt mri, mse={err}");
+    }
+
+    #[test]
+    fn blur_preserves_mean_roughly() {
+        let mut img = Image::zeros(16, 16);
+        img.set(8, 8, 1.0);
+        let blurred = box_blur3(&img);
+        assert!((blurred.get(8, 8) - 1.0 / 9.0).abs() < 1e-6);
+        assert!((img.mean() - blurred.mean()).abs() < 1e-3);
+    }
+}

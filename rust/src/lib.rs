@@ -1,0 +1,50 @@
+//! # edgepipe
+//!
+//! Reproduction of *"Edge GPU Aware Multiple AI Model Pipeline for
+//! Accelerated MRI Reconstruction and Analysis"* (Abdul Majeed, Meribout,
+//! Mohammed Sali — CS.AR 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper runs a Pix2Pix CT→MRI GAN and a YOLOv8 stroke detector
+//! concurrently on an NVIDIA Jetson's GPU + DLA, makes the GAN fully
+//! DLA-compatible by replacing deconvolution padding (Cropping / VALID-conv
+//! surgery), and schedules the two models HaX-CoNN-style so both engines
+//! stay busy (~150 FPS each).
+//!
+//! This crate provides:
+//!
+//! * [`graph`] — layer-graph IR with shape inference and the paper's
+//!   model-surgery passes;
+//! * [`models`] — Pix2Pix (all three variants), a YOLOv8-style detector and
+//!   the reference backbones, built layer-for-layer at paper scale;
+//! * [`dla`] — the DLA compatibility rule engine and a TensorRT-like
+//!   subgraph planner with GPU fallback;
+//! * [`cost`] + [`hw`] — calibrated per-layer latency, memory-contention
+//!   and power models for Jetson AGX Xavier / Orin;
+//! * [`sched`] — naive, Jedi-like and HaX-CoNN schedulers;
+//! * [`sim`] — a discrete-event SoC simulator producing Nsight-like
+//!   timelines (the hardware substitute — see DESIGN.md);
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
+//!   (HLO text + weights), Python never on the request path;
+//! * [`pipeline`] — the streaming coordinator (sources → batcher → router →
+//!   engine workers → sinks) used by both deployment schemes;
+//! * [`imaging`], [`postproc`] — phantoms, PSNR/SSIM/MSE, the Table I
+//!   classical algorithms, YOLO decode + NMS;
+//! * [`report`] — regenerates every table and figure of the paper.
+
+pub mod config;
+pub mod cost;
+pub mod dla;
+pub mod error;
+pub mod graph;
+pub mod hw;
+pub mod imaging;
+pub mod models;
+pub mod pipeline;
+pub mod postproc;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,246 @@
+//! `edgepipe` — CLI entry point (the launcher).
+//!
+//! ```text
+//! edgepipe report <table1|table2|fig9|fig11|table4|table6|all> [--artifacts DIR]
+//! edgepipe timeline [--variant V] [--with-yolo]
+//! edgepipe run [--config FILE] [--variant V] [--workload W] [--frames N] ...
+//! edgepipe check-dla [--variant V]
+//! edgepipe schedule [--variant V] [--with-yolo]
+//! ```
+//!
+//! (The vendored offline crate set has no `clap`; argument parsing is the
+//! small hand-rolled `Args` below.)
+
+use edgepipe::config::{GanVariant, PipelineConfig, SchedulerKind, Workload};
+use edgepipe::dla::{planner, DlaVersion};
+use edgepipe::error::Result;
+use edgepipe::hw;
+use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
+use edgepipe::models::yolov8::{yolov8, YoloConfig};
+use edgepipe::pipeline::run_pipeline;
+use edgepipe::sched::haxconn;
+use edgepipe::{report, Error};
+use std::collections::HashMap;
+
+/// Minimal `--key value` / `--flag` parser.
+struct Args {
+    positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut options = HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    options.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args {
+            positional,
+            options,
+            flags,
+        }
+    }
+
+    fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "edgepipe — edge GPU aware multi-model MRI pipeline (paper reproduction)
+
+USAGE:
+  edgepipe report <table1|table2|fig9|fig11|table4|table6|all> [--artifacts DIR] [--json FILE]
+  edgepipe timeline [--variant original|cropping|convolution] [--with-yolo]
+  edgepipe run [--config FILE] [--variant V] [--workload W] [--frames N]
+               [--streams N] [--artifacts DIR] [--seed N]
+  edgepipe check-dla [--variant V]
+  edgepipe schedule [--variant V] [--with-yolo]
+"
+    );
+    std::process::exit(2)
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    let code = match run(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn variant_of(args: &Args) -> Result<GanVariant> {
+    args.opt("variant")
+        .map(GanVariant::parse)
+        .unwrap_or(Ok(GanVariant::Cropping))
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "report" => {
+            let what = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            let dir = args.opt("artifacts").unwrap_or("artifacts");
+            let soc = hw::orin();
+            let json = match what {
+                "table1" => report::table1(&soc),
+                "table2" => report::table2(dir),
+                "fig9" | "fig10" => report::fig9_fig10(&soc),
+                "fig11" | "fig12" => report::fig11_fig12(&soc),
+                "table3" | "table4" | "fig13" => report::table3_table4_fig13(&soc),
+                "table5" | "table6" | "fig14" => report::table5_table6_fig14(&soc),
+                "all" => report::all_reports(dir),
+                other => {
+                    return Err(Error::Config(format!("unknown report `{other}`")));
+                }
+            };
+            if let Some(path) = args.opt("json") {
+                std::fs::write(path, json.to_pretty())?;
+                eprintln!("wrote {path}");
+            }
+            Ok(())
+        }
+        "timeline" => {
+            let v = variant_of(args)?;
+            let soc = hw::orin();
+            let a = report::timeline_ascii(&soc, v, args.flag("with-yolo"))?;
+            println!("{a}");
+            Ok(())
+        }
+        "run" => {
+            let mut cfg = match args.opt("config") {
+                Some(path) => PipelineConfig::from_file(std::path::Path::new(path))?,
+                None => PipelineConfig::default(),
+            };
+            if let Some(v) = args.opt("variant") {
+                cfg.variant = GanVariant::parse(v)?;
+            }
+            if let Some(w) = args.opt("workload") {
+                cfg.workload = Workload::parse(w)?;
+            }
+            if let Some(s) = args.opt("scheduler") {
+                cfg.scheduler = SchedulerKind::parse(s)?;
+            }
+            if let Some(n) = args.opt("frames") {
+                cfg.frames = n
+                    .parse()
+                    .map_err(|_| Error::Config("bad --frames".into()))?;
+            }
+            if let Some(n) = args.opt("streams") {
+                cfg.streams = n
+                    .parse()
+                    .map_err(|_| Error::Config("bad --streams".into()))?;
+            }
+            if let Some(d) = args.opt("artifacts") {
+                cfg.artifact_dir = d.to_string();
+            }
+            if let Some(seed) = args.opt("seed") {
+                cfg.seed = seed.parse().map_err(|_| Error::Config("bad --seed".into()))?;
+            }
+            cfg.validate()?;
+            eprintln!("config: {}", cfg.to_json().to_compact());
+            let rep = run_pipeline(&cfg)?;
+            println!(
+                "processed {} frames in {:.2}s ({} dropped)",
+                rep.total_frames, rep.wall_seconds, rep.dropped
+            );
+            for inst in &rep.instances {
+                println!(
+                    "  {:<12} {:>6} frames  {:>8.2} fps  lat p50 {:>7.2} ms  p99 {:>7.2} ms  \
+                     psnr {:>6.2}  ssim {:>6.2}",
+                    inst.label,
+                    inst.frames,
+                    inst.fps,
+                    inst.latency_ms_p50,
+                    inst.latency_ms_p99,
+                    inst.psnr_mean,
+                    inst.ssim_pct_mean
+                );
+            }
+            Ok(())
+        }
+        "check-dla" => {
+            let v = variant_of(args)?;
+            let g = generator(&Pix2PixConfig::paper(), v)?;
+            let plan = planner::plan(&g, DlaVersion::V2, 16)?;
+            println!(
+                "model `{}`: {} compute layers, {} DLA subgraphs, {} transitions, fully resident: {}",
+                g.name,
+                g.compute_layers().len(),
+                plan.dla_subgraphs,
+                plan.transitions,
+                plan.fully_dla_resident()
+            );
+            for (id, reason) in &plan.fallback_reasons {
+                println!("  fallback {:>4} {:<24} {}", id, g.node(*id).name, reason);
+            }
+            Ok(())
+        }
+        "schedule" => {
+            let v = variant_of(args)?;
+            let soc = hw::orin();
+            let g = generator(&Pix2PixConfig::paper(), v)?;
+            let (sched, ss) = if args.flag("with-yolo") {
+                let y = yolov8(&YoloConfig::nano())?;
+                haxconn::gan_plus_yolo(&g, &y, &soc, DlaVersion::V2)?
+            } else {
+                haxconn::two_gans(&g, &soc, DlaVersion::V2)?
+            };
+            println!(
+                "steady state: period {:.3} ms, busy gpu {:.3} ms, busy dla {:.3} ms, transitions {}",
+                ss.period * 1e3,
+                ss.busy_gpu * 1e3,
+                ss.busy_dla * 1e3,
+                ss.transitions
+            );
+            for inst in &sched.instances {
+                let (d2g, g2d) = inst.partition_points();
+                println!(
+                    "  {:<12} segments {:?}  DLA->GPU {:?}  GPU->DLA {:?}",
+                    inst.label,
+                    inst.segments
+                        .iter()
+                        .map(|sp| format!("{}[{},{})", sp.engine, sp.start, sp.end))
+                        .collect::<Vec<_>>(),
+                    d2g,
+                    g2d
+                );
+            }
+            Ok(())
+        }
+        _ => usage(),
+    }
+}

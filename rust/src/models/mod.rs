@@ -1,0 +1,17 @@
+//! Model zoo.
+//!
+//! Layer-for-layer graph definitions of every network the paper uses:
+//!
+//! * [`pix2pix`] — the CT→MRI GAN (generator + PatchGAN discriminator) in
+//!   all three variants. At 256×256/`ngf=64` the original generator has
+//!   exactly the 54,425,859 parameters of Table II, the cropping variant
+//!   the same, and the convolution variant 64,637,268.
+//! * [`yolov8`] — a YOLOv8-style anchor-free detector (C2f backbone, SPPF,
+//!   PAN neck, decoupled head) for the stroke-diagnosis stream.
+//! * [`resnet`] / [`vgg`] — ResNet-50/101 and VGG-19, the workloads of
+//!   Table I and of the HaX-CoNN scheduling illustration (Fig 4).
+
+pub mod pix2pix;
+pub mod resnet;
+pub mod vgg;
+pub mod yolov8;

@@ -1,0 +1,296 @@
+//! Pix2Pix (Isola et al., CVPR 2017) — the paper's MRI-reconstruction GAN.
+//!
+//! Generator: U-Net with 8 down-sampling blocks and 7 up-sampling blocks
+//! plus the final deconvolution (paper §V.A.1, Fig 5). Every up-sampling
+//! layer is a `ConvTranspose2d(k=4, s=2, p=1)` — the padding that makes
+//! the whole model DLA-incompatible and that the paper's surgery replaces.
+//!
+//! Discriminator: 70×70 PatchGAN — three down-sampling blocks followed by
+//! zero-pad / conv / batch-norm / leaky-relu / zero-pad / conv (paper
+//! §V.A.1).
+//!
+//! Parameter counts at 256×256, `ngf = 64`, 3-channel I/O reproduce
+//! Table II exactly (54,425,859 / 54,425,859 / 64,637,268).
+
+use crate::config::GanVariant;
+use crate::error::Result;
+use crate::graph::layer::LayerKind;
+use crate::graph::shape::{DType, Shape};
+use crate::graph::surgeon;
+use crate::graph::Graph;
+
+/// Structural hyper-parameters of the Pix2Pix pair.
+#[derive(Debug, Clone, Copy)]
+pub struct Pix2PixConfig {
+    /// Input/output spatial resolution (must be a power of two ≥ 2^depth).
+    pub image_size: usize,
+    /// Input/output channels (3 in the paper; 1 for the 64×64 phantoms).
+    pub channels: usize,
+    /// Base generator width (`ngf`, 64 in the paper).
+    pub ngf: usize,
+    /// Encoder depth (8 in the paper: 256 → 1).
+    pub depth: usize,
+}
+
+impl Pix2PixConfig {
+    /// The paper's configuration (Table II parameter counts).
+    pub fn paper() -> Self {
+        Pix2PixConfig {
+            image_size: 256,
+            channels: 3,
+            ngf: 64,
+            depth: 8,
+        }
+    }
+
+    /// The scaled-down configuration actually trained on this testbed
+    /// (matches `python/compile/model.py`).
+    pub fn tiny() -> Self {
+        Pix2PixConfig {
+            image_size: 64,
+            channels: 1,
+            ngf: 16,
+            depth: 6,
+        }
+    }
+
+    /// Encoder filter count at down-sampling block `i` (0-based):
+    /// ngf, 2ngf, 4ngf, then 8ngf for the remainder (Isola's C64-C128-
+    /// C256-C512-C512-C512-C512-C512).
+    pub fn enc_filters(&self, i: usize) -> usize {
+        self.ngf * [1, 2, 4, 8, 8, 8, 8, 8][i.min(7)]
+    }
+}
+
+/// Build the generator for `variant`.
+///
+/// The original variant is built directly; the cropping / convolution
+/// variants are produced by [`surgeon::apply_variant`] — i.e. the library
+/// really performs the paper's model surgery rather than hand-writing the
+/// modified networks.
+pub fn generator(cfg: &Pix2PixConfig, variant: GanVariant) -> Result<Graph> {
+    let original = generator_original(cfg)?;
+    surgeon::apply_variant(&original, variant)
+}
+
+/// Stock Pix2Pix generator (padded deconvolutions).
+fn generator_original(cfg: &Pix2PixConfig) -> Result<Graph> {
+    assert!(cfg.image_size >= (1 << cfg.depth), "image too small for depth");
+    let mut g = Graph::new(&format!("pix2pix_gen_{}", cfg.image_size));
+    let x = g.add(
+        "ct_in",
+        LayerKind::Input {
+            shape: Shape::new(cfg.channels, cfg.image_size, cfg.image_size, DType::F16),
+        },
+        &[],
+    )?;
+
+    // ---- Encoder: depth × [conv k4 s2 p1 (+BN) + LeakyReLU] ----
+    let mut skips = Vec::new();
+    let mut cur = x;
+    for i in 0..cfg.depth {
+        let out_c = cfg.enc_filters(i);
+        cur = g.add(
+            &format!("enc{}_conv", i),
+            LayerKind::conv_nobias(out_c, 4, 2, 1),
+            &[cur],
+        )?;
+        if i > 0 {
+            // Every encoder block except the first has batch-norm
+            // (TF pix2pix reference implementation [27]).
+            cur = g.add(&format!("enc{}_bn", i), LayerKind::BatchNorm, &[cur])?;
+        }
+        cur = g.add(
+            &format!("enc{}_lrelu", i),
+            LayerKind::LeakyReLU { slope: 0.2 },
+            &[cur],
+        )?;
+        skips.push(cur);
+    }
+
+    // ---- Decoder: (depth-1) up blocks with skip concats + final deconv ----
+    // Up block i (i = 0 .. depth-2): deconv k4 s2 p1 + BN (+Dropout for the
+    // first three) + ReLU, then concat with encoder skip.
+    for i in 0..cfg.depth - 1 {
+        // Mirror of encoder filters: at up step i the target resolution
+        // matches encoder block (depth-2-i).
+        let out_c = cfg.enc_filters(cfg.depth - 2 - i);
+        cur = g.add(
+            &format!("dec{}_deconv", i),
+            LayerKind::deconv(out_c, 4, 2, 1),
+            &[cur],
+        )?;
+        cur = g.add(&format!("dec{}_bn", i), LayerKind::BatchNorm, &[cur])?;
+        if i < 3 {
+            cur = g.add(
+                &format!("dec{}_dropout", i),
+                LayerKind::Dropout { p: 0.5 },
+                &[cur],
+            )?;
+        }
+        cur = g.add(&format!("dec{}_relu", i), LayerKind::ReLU, &[cur])?;
+        // Skip connection from the mirrored encoder block.
+        let skip = skips[cfg.depth - 2 - i];
+        cur = g.add(&format!("dec{}_concat", i), LayerKind::Concat, &[cur, skip])?;
+    }
+    // Final up-sampling deconvolution to the output image + tanh.
+    cur = g.add(
+        "final_deconv",
+        LayerKind::deconv_bias(cfg.channels, 4, 2, 1),
+        &[cur],
+    )?;
+    cur = g.add("tanh", LayerKind::Tanh, &[cur])?;
+    g.add("mri_out", LayerKind::Output, &[cur])?;
+    g.validate()?;
+    Ok(g)
+}
+
+/// 70×70 PatchGAN discriminator (paper §V.A.1): three down-sampling blocks
+/// followed by zero-pad, conv, batch-norm, leaky-relu, zero-pad, conv.
+pub fn discriminator(cfg: &Pix2PixConfig) -> Result<Graph> {
+    let mut g = Graph::new(&format!("pix2pix_disc_{}", cfg.image_size));
+    // Conditional GAN: discriminator sees CT and (real|generated) MRI.
+    let ct = g.add(
+        "ct_in",
+        LayerKind::Input {
+            shape: Shape::new(cfg.channels, cfg.image_size, cfg.image_size, DType::F16),
+        },
+        &[],
+    )?;
+    let mri = g.add(
+        "mri_in",
+        LayerKind::Input {
+            shape: Shape::new(cfg.channels, cfg.image_size, cfg.image_size, DType::F16),
+        },
+        &[],
+    )?;
+    let mut cur = g.add("concat_in", LayerKind::Concat, &[ct, mri])?;
+
+    // Three down-sampling blocks C64-C128-C256 (first without BN).
+    for (i, mult) in [1usize, 2, 4].iter().enumerate() {
+        cur = g.add(
+            &format!("d{}_conv", i),
+            LayerKind::conv_nobias(cfg.ngf * mult, 4, 2, 1),
+            &[cur],
+        )?;
+        if i > 0 {
+            cur = g.add(&format!("d{}_bn", i), LayerKind::BatchNorm, &[cur])?;
+        }
+        cur = g.add(
+            &format!("d{}_lrelu", i),
+            LayerKind::LeakyReLU { slope: 0.2 },
+            &[cur],
+        )?;
+    }
+    // zero-pad + conv(512, s1) + BN + LeakyReLU + zero-pad + conv(1, s1)
+    cur = g.add("pad0", LayerKind::ZeroPad { border: 1 }, &[cur])?;
+    cur = g.add("d3_conv", LayerKind::conv_nobias(cfg.ngf * 8, 4, 1, 0), &[cur])?;
+    cur = g.add("d3_bn", LayerKind::BatchNorm, &[cur])?;
+    cur = g.add("d3_lrelu", LayerKind::LeakyReLU { slope: 0.2 }, &[cur])?;
+    cur = g.add("pad1", LayerKind::ZeroPad { border: 1 }, &[cur])?;
+    cur = g.add("patch_conv", LayerKind::conv(1, 4, 1, 0), &[cur])?;
+    g.add("patch_out", LayerKind::Output, &[cur])?;
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_generator_parameter_count_table2() {
+        let g = generator(&Pix2PixConfig::paper(), GanVariant::Original).unwrap();
+        assert_eq!(g.param_count(), 54_425_859, "Table II original Pix2Pix");
+    }
+
+    #[test]
+    fn cropping_variant_same_params_table2() {
+        let g = generator(&Pix2PixConfig::paper(), GanVariant::Cropping).unwrap();
+        assert_eq!(g.param_count(), 54_425_859, "Table II cropping variant");
+    }
+
+    #[test]
+    fn convolution_variant_params_table2() {
+        let g = generator(&Pix2PixConfig::paper(), GanVariant::Convolution).unwrap();
+        assert_eq!(g.param_count(), 64_637_268, "Table II convolution variant");
+    }
+
+    #[test]
+    fn generator_output_shape_matches_input() {
+        for variant in GanVariant::all() {
+            let g = generator(&Pix2PixConfig::paper(), variant).unwrap();
+            let out = g.node(g.outputs()[0]).shape;
+            assert_eq!((out.c, out.h, out.w), (3, 256, 256), "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn encoder_reaches_1x1_bottleneck() {
+        let g = generator(&Pix2PixConfig::paper(), GanVariant::Original).unwrap();
+        let bottleneck = g
+            .nodes
+            .iter()
+            .find(|n| n.name == "enc7_conv")
+            .expect("8 encoder blocks");
+        assert_eq!((bottleneck.shape.h, bottleneck.shape.w), (1, 1));
+    }
+
+    #[test]
+    fn eight_downs_seven_ups_plus_final() {
+        let g = generator(&Pix2PixConfig::paper(), GanVariant::Original).unwrap();
+        let downs = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, LayerKind::Conv2d { stride: 2, .. }))
+            .count();
+        let ups = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, LayerKind::ConvTranspose2d { .. }))
+            .count();
+        assert_eq!(downs, 8, "paper: eight down-sampling blocks");
+        assert_eq!(ups, 8, "seven up-sampling blocks + final deconv");
+    }
+
+    #[test]
+    fn modified_variants_have_no_padded_deconv() {
+        for variant in [GanVariant::Cropping, GanVariant::Convolution] {
+            let g = generator(&Pix2PixConfig::paper(), variant).unwrap();
+            assert!(
+                !g.nodes.iter().any(|n| matches!(
+                    n.kind,
+                    LayerKind::ConvTranspose2d { padding, .. } if padding > 0
+                )),
+                "{variant:?} must be padding-free"
+            );
+        }
+    }
+
+    #[test]
+    fn modified_variants_are_longer() {
+        // The paper attributes the standalone slowdown of the modified
+        // models to their extra layers.
+        let o = generator(&Pix2PixConfig::paper(), GanVariant::Original).unwrap();
+        let c = generator(&Pix2PixConfig::paper(), GanVariant::Cropping).unwrap();
+        assert!(c.len() > o.len());
+    }
+
+    #[test]
+    fn tiny_config_builds_all_variants() {
+        for variant in GanVariant::all() {
+            let g = generator(&Pix2PixConfig::tiny(), variant).unwrap();
+            let out = g.node(g.outputs()[0]).shape;
+            assert_eq!((out.c, out.h, out.w), (1, 64, 64));
+        }
+    }
+
+    #[test]
+    fn discriminator_patch_output() {
+        let d = discriminator(&Pix2PixConfig::paper()).unwrap();
+        let out = d.node(d.outputs()[0]).shape;
+        // 70x70 PatchGAN on 256 input -> 30x30 patch map
+        assert_eq!((out.c, out.h, out.w), (1, 30, 30));
+        assert_eq!(d.inputs().len(), 2);
+    }
+}

@@ -1,0 +1,77 @@
+//! VGG-19 (Simonyan & Zisserman) — the HaX-CoNN illustration workload
+//! (paper Fig 4 partitions VGG-19 at layers 28 / 43) and a Table I-style
+//! classification reference.
+
+use crate::error::Result;
+use crate::graph::layer::LayerKind;
+use crate::graph::shape::{DType, Shape};
+use crate::graph::Graph;
+
+/// Build VGG-19 for `size`×`size` RGB input (224 in the reference).
+pub fn vgg19(size: usize) -> Result<Graph> {
+    let mut g = Graph::new("vgg19");
+    let mut cur = g.add(
+        "input",
+        LayerKind::Input {
+            shape: Shape::new(3, size, size, DType::F16),
+        },
+        &[],
+    )?;
+    // (convs per stage, out channels)
+    let stages: [(usize, usize); 5] = [(2, 64), (2, 128), (4, 256), (4, 512), (4, 512)];
+    for (s, (convs, ch)) in stages.iter().enumerate() {
+        for c in 0..*convs {
+            cur = g.add(
+                &format!("conv{}_{}", s + 1, c + 1),
+                LayerKind::conv(*ch, 3, 1, 1),
+                &[cur],
+            )?;
+            cur = g.add(&format!("relu{}_{}", s + 1, c + 1), LayerKind::ReLU, &[cur])?;
+        }
+        cur = g.add(
+            &format!("pool{}", s + 1),
+            LayerKind::MaxPool { kernel: 2, stride: 2 },
+            &[cur],
+        )?;
+    }
+    cur = g.add("fc6", LayerKind::Dense { out_features: 4096 }, &[cur])?;
+    cur = g.add("relu6", LayerKind::ReLU, &[cur])?;
+    cur = g.add("fc7", LayerKind::Dense { out_features: 4096 }, &[cur])?;
+    cur = g.add("relu7", LayerKind::ReLU, &[cur])?;
+    cur = g.add("fc8", LayerKind::Dense { out_features: 1000 }, &[cur])?;
+    cur = g.add("softmax", LayerKind::Softmax, &[cur])?;
+    g.add("out", LayerKind::Output, &[cur])?;
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg19_parameter_count() {
+        // Reference VGG-19: 143,667,240 parameters at 224x224.
+        let g = vgg19(224).unwrap();
+        assert_eq!(g.param_count(), 143_667_240);
+    }
+
+    #[test]
+    fn vgg19_structure() {
+        let g = vgg19(224).unwrap();
+        let convs = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, LayerKind::Conv2d { .. }))
+            .count();
+        let denses = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, LayerKind::Dense { .. }))
+            .count();
+        assert_eq!(convs, 16);
+        assert_eq!(denses, 3);
+        let out = g.node(g.outputs()[0]).shape;
+        assert_eq!(out.c, 1000);
+    }
+}

@@ -1,0 +1,114 @@
+//! Dynamic batcher.
+//!
+//! Collects frames up to `max_batch` or until `timeout` elapses after the
+//! first frame (the vLLM/DeepStream policy). The paper's pipelines are
+//! latency-oriented batch-1, but the client-server scheme benefits from
+//! small batches under multi-stream load.
+
+use super::frame::Frame;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub timeout: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 1,
+            timeout: Duration::from_micros(500),
+        }
+    }
+}
+
+/// Pull the next batch from `rx`. Returns `None` when the channel is
+/// closed and drained.
+pub fn next_batch(rx: &Receiver<Frame>, policy: BatchPolicy) -> Option<Vec<Frame>> {
+    // Block for the first frame.
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    if policy.max_batch <= 1 {
+        return Some(batch);
+    }
+    let deadline = Instant::now() + policy.timeout;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(f) => batch.push(f),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+    use std::time::Instant as StdInstant;
+
+    fn frame(id: u64) -> Frame {
+        Frame {
+            id,
+            stream: 0,
+            data: vec![],
+            width: 0,
+            height: 0,
+            gt_mri: None,
+            admitted: StdInstant::now(),
+        }
+    }
+
+    #[test]
+    fn batch_of_one_returns_immediately() {
+        let (tx, rx) = sync_channel(4);
+        tx.send(frame(0)).unwrap();
+        let b = next_batch(&rx, BatchPolicy::default()).unwrap();
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn collects_up_to_max_batch() {
+        let (tx, rx) = sync_channel(8);
+        for i in 0..5 {
+            tx.send(frame(i)).unwrap();
+        }
+        let policy = BatchPolicy {
+            max_batch: 4,
+            timeout: Duration::from_millis(50),
+        };
+        let b = next_batch(&rx, policy).unwrap();
+        assert_eq!(b.len(), 4);
+        assert_eq!(b[3].id, 3);
+    }
+
+    #[test]
+    fn timeout_flushes_partial_batch() {
+        let (tx, rx) = sync_channel(8);
+        tx.send(frame(0)).unwrap();
+        tx.send(frame(1)).unwrap();
+        let policy = BatchPolicy {
+            max_batch: 16,
+            timeout: Duration::from_millis(10),
+        };
+        let t0 = StdInstant::now();
+        let b = next_batch(&rx, policy).unwrap();
+        assert_eq!(b.len(), 2);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn closed_channel_returns_none() {
+        let (tx, rx) = sync_channel::<Frame>(1);
+        drop(tx);
+        assert!(next_batch(&rx, BatchPolicy::default()).is_none());
+    }
+}

@@ -1,0 +1,244 @@
+//! End-to-end pipeline driver.
+//!
+//! Wires sources → router → bounded per-instance queues (backpressure) →
+//! engine worker threads executing PJRT artifacts → metrics. This is the
+//! real serving path: every frame is reconstructed/diagnosed by the
+//! AOT-compiled JAX/Pallas models, Python nowhere in sight.
+//!
+//! Note on engines: the testbed has no physical DLA, so both "engines"
+//! execute on the CPU PJRT client; the *scheduling structure* (which
+//! instance runs where, queue topology, backpressure) is identical to the
+//! paper's deployment and the timing claims are made by [`crate::sim`].
+
+use super::batcher::{next_batch, BatchPolicy};
+use super::frame::Frame;
+use super::metrics::{InstanceSnapshot, Metrics};
+use super::router::{RoutePolicy, Router};
+use super::source::PhantomSource;
+use crate::config::{PipelineConfig, Workload};
+use crate::error::{Error, Result};
+use crate::imaging::metrics::fidelity;
+use crate::imaging::Image;
+use crate::runtime::{Artifact, RuntimeClient};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Online fidelity (PSNR/SSIM) is sampled rather than computed per frame:
+/// SSIM costs ~1 ms/frame on this core (~8% of GAN inference) and the mean
+/// converges with a fraction of the frames (perf pass, EXPERIMENTS.md
+/// §Perf iteration 2).
+const SCORE_EVERY: u64 = 4;
+
+/// A model instance bound to an artifact.
+struct InstanceSpec {
+    label: String,
+    artifact: String,
+    /// Score reconstruction fidelity against the frame's ground truth.
+    score_fidelity: bool,
+}
+
+/// Final pipeline report.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    pub instances: Vec<InstanceSnapshot>,
+    pub wall_seconds: f64,
+    pub total_frames: usize,
+    pub dropped: usize,
+}
+
+impl PipelineReport {
+    pub fn total_fps(&self) -> f64 {
+        self.instances.iter().map(|i| i.fps).sum()
+    }
+}
+
+fn instance_specs(workload: Workload, variant: &str) -> Vec<InstanceSpec> {
+    let gan = format!("gen_{variant}");
+    match workload {
+        Workload::GanStandalone => vec![InstanceSpec {
+            label: "gan".into(),
+            artifact: gan,
+            score_fidelity: true,
+        }],
+        Workload::GanPlusYoloNaive | Workload::GanPlusYolo => vec![
+            InstanceSpec {
+                label: "gan".into(),
+                artifact: gan,
+                score_fidelity: true,
+            },
+            InstanceSpec {
+                label: "yolo".into(),
+                artifact: "yolo_lite".into(),
+                score_fidelity: false,
+            },
+        ],
+        Workload::TwoGans => vec![
+            InstanceSpec {
+                label: "gan-inst1".into(),
+                artifact: gan.clone(),
+                score_fidelity: true,
+            },
+            InstanceSpec {
+                label: "gan-inst2".into(),
+                artifact: gan,
+                score_fidelity: true,
+            },
+        ],
+    }
+}
+
+fn route_policy(workload: Workload, streams: usize) -> RoutePolicy {
+    match workload {
+        Workload::TwoGans => {
+            if streams > 1 {
+                RoutePolicy::ByStream
+            } else {
+                RoutePolicy::RoundRobin
+            }
+        }
+        _ => RoutePolicy::Fanout,
+    }
+}
+
+/// Run the configured pipeline to completion and report.
+pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
+    let specs = instance_specs(cfg.workload, cfg.variant.name());
+    // Fail fast on missing artifacts before spawning anything.
+    for spec in &specs {
+        let hlo = std::path::Path::new(&cfg.artifact_dir)
+            .join(format!("{}.hlo.txt", spec.artifact));
+        if !hlo.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact `{}` missing: {} (run `make artifacts`)",
+                spec.artifact,
+                hlo.display()
+            )));
+        }
+    }
+
+    let labels: Vec<String> = specs.iter().map(|s| s.label.clone()).collect();
+    let metrics = Arc::new(Metrics::new(&labels));
+    let dropped_total = Arc::new(AtomicUsize::new(0));
+
+    // Per-instance bounded queues: the backpressure boundary.
+    let mut senders: Vec<SyncSender<Frame>> = Vec::new();
+    let mut receivers: Vec<Receiver<Frame>> = Vec::new();
+    for _ in &specs {
+        let (tx, rx) = sync_channel::<Frame>(cfg.queue_depth);
+        senders.push(tx);
+        receivers.push(rx);
+    }
+
+    // Workers: one thread per instance (the two-engine analogue). PJRT
+    // handles are not Send (Rc internals), so each worker owns a private
+    // client + compiled artifact — the same isolation a per-engine
+    // TensorRT context gives on the Jetson.
+    let mut handles = Vec::new();
+    for (idx, (spec, rx)) in specs.iter().zip(receivers.into_iter()).enumerate() {
+        let metrics = Arc::clone(&metrics);
+        let artifact_name = spec.artifact.clone();
+        let artifact_dir = cfg.artifact_dir.clone();
+        let score = spec.score_fidelity;
+        let policy = BatchPolicy {
+            max_batch: cfg.max_batch,
+            timeout: Duration::from_micros(cfg.batch_timeout_us),
+        };
+        let handle = std::thread::Builder::new()
+            .name(format!("worker-{}", spec.label))
+            .spawn(move || -> Result<()> {
+                let client = RuntimeClient::cpu()?;
+                let artifact = Artifact::load(
+                    &client,
+                    std::path::Path::new(&artifact_dir),
+                    &artifact_name,
+                )?;
+                while let Some(batch) = next_batch(&rx, policy) {
+                    for frame in batch {
+                        let outputs = artifact.run_image(&frame.data)?;
+                        let latency = frame.admitted.elapsed().as_secs_f64();
+                        metrics.record_frame(idx, latency);
+                        if score && frame.id % SCORE_EVERY == 0 {
+                            if let (Some(gt), Some(out)) = (&frame.gt_mri, outputs.first()) {
+                                record_fidelity(&metrics, idx, &frame, gt, &out.data);
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            })
+            .map_err(|e| Error::Pipeline(format!("spawn worker: {e}")))?;
+        handles.push(handle);
+    }
+
+    // Source + router on the main thread (frames are cheap to make).
+    let mut router = Router::new(route_policy(cfg.workload, cfg.streams), specs.len());
+    let per_stream = cfg.frames / cfg.streams.max(1);
+    let mut sources: Vec<PhantomSource> = (0..cfg.streams)
+        .map(|s| {
+            PhantomSource::new(
+                crate::imaging::phantom::PhantomConfig::default(),
+                cfg.seed,
+                s,
+                per_stream,
+            )
+        })
+        .collect();
+    let mut total_frames = 0usize;
+    'outer: loop {
+        let mut all_done = true;
+        for src in sources.iter_mut() {
+            if let Some(frame) = src.next() {
+                all_done = false;
+                total_frames += 1;
+                for target in router.route(&frame) {
+                    // Blocking send with drop-on-overload for non-primary
+                    // copies keeps the pipeline moving (backpressure).
+                    match senders[target].try_send(frame.clone()) {
+                        Ok(()) => {}
+                        Err(TrySendError::Full(f)) => {
+                            // Block: the paper's pipeline is lossless.
+                            if senders[target].send(f).is_err() {
+                                break 'outer;
+                            }
+                        }
+                        Err(TrySendError::Disconnected(_)) => {
+                            dropped_total.fetch_add(1, Ordering::Relaxed);
+                            metrics.record_drop(target);
+                        }
+                    }
+                }
+            }
+        }
+        if all_done {
+            break;
+        }
+    }
+    drop(senders);
+    for h in handles {
+        h.join()
+            .map_err(|_| Error::Pipeline("worker panicked".into()))??;
+    }
+
+    Ok(PipelineReport {
+        instances: metrics.snapshot(),
+        wall_seconds: metrics.elapsed(),
+        total_frames,
+        dropped: dropped_total.load(Ordering::Relaxed),
+    })
+}
+
+fn record_fidelity(metrics: &Metrics, idx: usize, frame: &Frame, gt: &[f32], out: &[f32]) {
+    let to01 = |v: &[f32]| -> Vec<f32> { v.iter().map(|&x| (x + 1.0) / 2.0).collect() };
+    if gt.len() != frame.numel() || out.len() != frame.numel() {
+        return;
+    }
+    let a = Image::from_data(frame.width, frame.height, to01(gt));
+    let b = Image::from_data(frame.width, frame.height, to01(out));
+    if let (Ok(a), Ok(b)) = (a, b) {
+        if let Ok(f) = fidelity(&a, &b) {
+            metrics.record_fidelity(idx, f.psnr, f.ssim_pct);
+        }
+    }
+}

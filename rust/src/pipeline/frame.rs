@@ -1,0 +1,46 @@
+//! Frame and frame metadata.
+
+use std::time::Instant;
+
+/// One CT slice travelling through the pipeline.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    /// Monotonic id within its stream.
+    pub id: u64,
+    /// Source stream (client-server scheme has several).
+    pub stream: usize,
+    /// Flattened NHWC pixels in [-1, 1] (model input scaling).
+    pub data: Vec<f32>,
+    pub width: usize,
+    pub height: usize,
+    /// Ground-truth MRI in [-1, 1] when the source is synthetic (enables
+    /// online PSNR/SSIM without stopping the pipeline).
+    pub gt_mri: Option<Vec<f32>>,
+    /// Admission timestamp for end-to-end latency.
+    pub admitted: Instant,
+}
+
+impl Frame {
+    pub fn numel(&self) -> usize {
+        self.width * self.height
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel() {
+        let f = Frame {
+            id: 0,
+            stream: 0,
+            data: vec![0.0; 64 * 64],
+            width: 64,
+            height: 64,
+            gt_mri: None,
+            admitted: Instant::now(),
+        };
+        assert_eq!(f.numel(), 4096);
+    }
+}

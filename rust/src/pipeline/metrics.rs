@@ -1,0 +1,121 @@
+//! Pipeline metrics aggregation (thread-safe).
+
+use crate::util::stats::Summary;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Per-instance counters.
+#[derive(Debug, Default)]
+struct InstanceCounters {
+    frames: usize,
+    latency: Summary,
+    /// Online reconstruction fidelity vs ground truth (GAN instances).
+    psnr: Summary,
+    ssim_pct: Summary,
+    dropped: usize,
+}
+
+/// Shared metrics hub.
+#[derive(Debug)]
+pub struct Metrics {
+    start: Instant,
+    instances: Vec<Mutex<InstanceCounters>>,
+    labels: Vec<String>,
+}
+
+/// Immutable snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct InstanceSnapshot {
+    pub label: String,
+    pub frames: usize,
+    pub fps: f64,
+    pub latency_ms_p50: f64,
+    pub latency_ms_p99: f64,
+    pub latency_ms_mean: f64,
+    pub psnr_mean: f64,
+    pub ssim_pct_mean: f64,
+    pub dropped: usize,
+}
+
+impl Metrics {
+    pub fn new(labels: &[String]) -> Self {
+        Metrics {
+            start: Instant::now(),
+            instances: labels.iter().map(|_| Mutex::new(Default::default())).collect(),
+            labels: labels.to_vec(),
+        }
+    }
+
+    pub fn record_frame(&self, instance: usize, latency_s: f64) {
+        let mut c = self.instances[instance].lock().unwrap();
+        c.frames += 1;
+        c.latency.add(latency_s);
+    }
+
+    pub fn record_fidelity(&self, instance: usize, psnr: f64, ssim_pct: f64) {
+        let mut c = self.instances[instance].lock().unwrap();
+        if psnr.is_finite() {
+            c.psnr.add(psnr);
+        }
+        c.ssim_pct.add(ssim_pct);
+    }
+
+    pub fn record_drop(&self, instance: usize) {
+        self.instances[instance].lock().unwrap().dropped += 1;
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn snapshot(&self) -> Vec<InstanceSnapshot> {
+        let elapsed = self.elapsed().max(f64::MIN_POSITIVE);
+        self.instances
+            .iter()
+            .zip(self.labels.iter())
+            .map(|(c, label)| {
+                let c = c.lock().unwrap();
+                InstanceSnapshot {
+                    label: label.clone(),
+                    frames: c.frames,
+                    fps: c.frames as f64 / elapsed,
+                    latency_ms_p50: c.latency.p50() * 1e3,
+                    latency_ms_p99: c.latency.p99() * 1e3,
+                    latency_ms_mean: c.latency.mean() * 1e3,
+                    psnr_mean: c.psnr.mean(),
+                    ssim_pct_mean: c.ssim_pct.mean(),
+                    dropped: c.dropped,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new(&["gan".to_string(), "yolo".to_string()]);
+        m.record_frame(0, 0.010);
+        m.record_frame(0, 0.020);
+        m.record_frame(1, 0.005);
+        m.record_fidelity(0, 25.0, 80.0);
+        m.record_drop(1);
+        let snap = m.snapshot();
+        assert_eq!(snap[0].frames, 2);
+        assert!(snap[0].latency_ms_mean > 9.0 && snap[0].latency_ms_mean < 21.0);
+        assert_eq!(snap[0].psnr_mean, 25.0);
+        assert_eq!(snap[1].dropped, 1);
+        assert!(snap[0].fps > 0.0);
+    }
+
+    #[test]
+    fn infinite_psnr_ignored() {
+        let m = Metrics::new(&["g".to_string()]);
+        m.record_fidelity(0, f64::INFINITY, 100.0);
+        m.record_fidelity(0, 30.0, 90.0);
+        assert_eq!(m.snapshot()[0].psnr_mean, 30.0);
+    }
+}

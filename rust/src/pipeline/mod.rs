@@ -1,0 +1,20 @@
+//! The streaming pipeline coordinator (Layer 3 proper).
+//!
+//! DeepStream-equivalent: CT frames flow from [`source`]s through the
+//! [`batcher`] and [`router`] into per-model engine workers that execute
+//! the AOT-compiled artifacts via PJRT, with bounded queues providing
+//! backpressure and [`metrics`] aggregating throughput/latency. Both of
+//! the paper's deployment schemes run on this machinery:
+//!
+//! * **standalone** (Fig 1 A): one CT stream, GAN + YOLO concurrently;
+//! * **client-server** (Fig 1 B): several hospital streams multiplexed.
+
+pub mod batcher;
+pub mod driver;
+pub mod frame;
+pub mod metrics;
+pub mod router;
+pub mod source;
+
+pub use driver::{run_pipeline, PipelineReport};
+pub use frame::Frame;

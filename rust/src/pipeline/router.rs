@@ -1,0 +1,99 @@
+//! Frame routing.
+//!
+//! Decides which model instance(s) process each incoming frame:
+//!
+//! * `Fanout` — every frame goes to every instance (the paper's
+//!   standalone scheme: the same CT slice is reconstructed by the GAN
+//!   *and* diagnosed by YOLO);
+//! * `RoundRobin` — frames alternate across instances (the two-GAN
+//!   multi-stream reconstruction workload);
+//! * `ByStream` — stream *s* maps to instance *s mod n* (client-server).
+
+use super::frame::Frame;
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    Fanout,
+    RoundRobin,
+    ByStream,
+}
+
+/// Stateful router.
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutePolicy,
+    instances: usize,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy, instances: usize) -> Self {
+        assert!(instances > 0);
+        Router {
+            policy,
+            instances,
+            rr_next: 0,
+        }
+    }
+
+    /// Instances that must process this frame.
+    pub fn route(&mut self, frame: &Frame) -> Vec<usize> {
+        match self.policy {
+            RoutePolicy::Fanout => (0..self.instances).collect(),
+            RoutePolicy::RoundRobin => {
+                let i = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.instances;
+                vec![i]
+            }
+            RoutePolicy::ByStream => vec![frame.stream % self.instances],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn frame(stream: usize) -> Frame {
+        Frame {
+            id: 0,
+            stream,
+            data: vec![],
+            width: 0,
+            height: 0,
+            gt_mri: None,
+            admitted: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn fanout_hits_all() {
+        let mut r = Router::new(RoutePolicy::Fanout, 3);
+        assert_eq!(r.route(&frame(0)), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_alternates() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 2);
+        assert_eq!(r.route(&frame(0)), vec![0]);
+        assert_eq!(r.route(&frame(0)), vec![1]);
+        assert_eq!(r.route(&frame(0)), vec![0]);
+    }
+
+    #[test]
+    fn by_stream_is_stable() {
+        let mut r = Router::new(RoutePolicy::ByStream, 2);
+        assert_eq!(r.route(&frame(0)), vec![0]);
+        assert_eq!(r.route(&frame(1)), vec![1]);
+        assert_eq!(r.route(&frame(5)), vec![1]);
+        assert_eq!(r.route(&frame(0)), vec![0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_instances_rejected() {
+        Router::new(RoutePolicy::Fanout, 0);
+    }
+}

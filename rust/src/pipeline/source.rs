@@ -1,0 +1,90 @@
+//! Frame sources.
+//!
+//! [`PhantomSource`] synthesizes paired CT/MRI phantoms (the stand-in for
+//! the CT scanner feed — DESIGN.md §2) so the pipeline can be driven and
+//! *scored* without external data. Sources are plain iterators; the driver
+//! moves them onto their own thread.
+
+use super::frame::Frame;
+use crate::imaging::phantom::{paired_sample, PhantomConfig};
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Synthetic CT stream with ground truth attached.
+pub struct PhantomSource {
+    cfg: PhantomConfig,
+    rng: Rng,
+    stream: usize,
+    next_id: u64,
+    remaining: usize,
+}
+
+impl PhantomSource {
+    pub fn new(cfg: PhantomConfig, seed: u64, stream: usize, frames: usize) -> Self {
+        PhantomSource {
+            cfg,
+            rng: Rng::new(seed ^ (stream as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            stream,
+            next_id: 0,
+            remaining: frames,
+        }
+    }
+}
+
+impl Iterator for PhantomSource {
+    type Item = Frame;
+
+    fn next(&mut self) -> Option<Frame> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let s = paired_sample(&self.cfg, &mut self.rng);
+        // scale [0,1] -> [-1,1] (model input convention)
+        let data: Vec<f32> = s.ct.data.iter().map(|&v| v * 2.0 - 1.0).collect();
+        let gt: Vec<f32> = s.mri.data.iter().map(|&v| v * 2.0 - 1.0).collect();
+        let frame = Frame {
+            id: self.next_id,
+            stream: self.stream,
+            data,
+            width: s.ct.width,
+            height: s.ct.height,
+            gt_mri: Some(gt),
+            admitted: Instant::now(),
+        };
+        self.next_id += 1;
+        Some(frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_requested_frames() {
+        let src = PhantomSource::new(PhantomConfig::default(), 1, 0, 5);
+        let frames: Vec<Frame> = src.collect();
+        assert_eq!(frames.len(), 5);
+        assert_eq!(frames[0].width, 64);
+        assert_eq!(frames[4].id, 4);
+        assert!(frames[0].gt_mri.is_some());
+    }
+
+    #[test]
+    fn frames_scaled_to_tanh_range() {
+        let mut src = PhantomSource::new(PhantomConfig::default(), 2, 0, 1);
+        let f = src.next().unwrap();
+        let mn = f.data.iter().copied().fold(f32::INFINITY, f32::min);
+        let mx = f.data.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        assert!(mn >= -1.0 && mx <= 1.0);
+        assert!(mx > 0.5, "skull should be bright");
+    }
+
+    #[test]
+    fn streams_differ() {
+        let a: Vec<Frame> = PhantomSource::new(PhantomConfig::default(), 1, 0, 2).collect();
+        let b: Vec<Frame> = PhantomSource::new(PhantomConfig::default(), 1, 1, 2).collect();
+        assert_ne!(a[0].data, b[0].data);
+    }
+}

@@ -1,0 +1,236 @@
+//! YOLO post-processing: anchor-free decode + NMS.
+//!
+//! The detector head emits, per scale, a `(S, S, 4*reg_max + classes)` map
+//! (DFL box distances + class logits). Decoding integrates the DFL bins
+//! into left/top/right/bottom distances per cell, converts to boxes, and
+//! non-maximum suppression keeps the best detections — all in rust on the
+//! L3 path (the paper's diagnostic output).
+
+use crate::util::stats::Summary;
+
+/// A detection in pixel coordinates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Detection {
+    pub x0: f32,
+    pub y0: f32,
+    pub x1: f32,
+    pub y1: f32,
+    pub score: f32,
+    pub class: usize,
+}
+
+impl Detection {
+    pub fn area(&self) -> f32 {
+        (self.x1 - self.x0).max(0.0) * (self.y1 - self.y0).max(0.0)
+    }
+}
+
+/// Intersection-over-union of two boxes.
+pub fn iou(a: &Detection, b: &Detection) -> f32 {
+    let ix0 = a.x0.max(b.x0);
+    let iy0 = a.y0.max(b.y0);
+    let ix1 = a.x1.min(b.x1);
+    let iy1 = a.y1.min(b.y1);
+    let inter = (ix1 - ix0).max(0.0) * (iy1 - iy0).max(0.0);
+    let union = a.area() + b.area() - inter;
+    if union <= 0.0 {
+        0.0
+    } else {
+        inter / union
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Decode one scale's head output.
+///
+/// `map` is `(s, s, 4*reg_max + classes)` row-major; `stride` is the pixel
+/// stride of this scale (8/16/32). Returns raw candidates above
+/// `conf_threshold`.
+pub fn decode_scale(
+    map: &[f32],
+    s: usize,
+    reg_max: usize,
+    classes: usize,
+    stride: f32,
+    conf_threshold: f32,
+) -> Vec<Detection> {
+    let ch = 4 * reg_max + classes;
+    assert_eq!(map.len(), s * s * ch, "head map size mismatch");
+    let mut out = Vec::new();
+    for gy in 0..s {
+        for gx in 0..s {
+            let base = (gy * s + gx) * ch;
+            let cell = &map[base..base + ch];
+            // class scores
+            let (mut best_c, mut best_s) = (0usize, f32::NEG_INFINITY);
+            for (c, &logit) in cell[4 * reg_max..].iter().enumerate() {
+                if logit > best_s {
+                    best_s = logit;
+                    best_c = c;
+                }
+            }
+            let score = sigmoid(best_s);
+            if score < conf_threshold {
+                continue;
+            }
+            // DFL: softmax-weighted expectation over bins for each side
+            let mut dist = [0f32; 4];
+            for (side, d) in dist.iter_mut().enumerate() {
+                let bins = &cell[side * reg_max..(side + 1) * reg_max];
+                let mx = bins.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let exps: Vec<f32> = bins.iter().map(|&b| (b - mx).exp()).collect();
+                let z: f32 = exps.iter().sum();
+                *d = exps
+                    .iter()
+                    .enumerate()
+                    .map(|(i, e)| i as f32 * e / z)
+                    .sum();
+            }
+            let cx = (gx as f32 + 0.5) * stride;
+            let cy = (gy as f32 + 0.5) * stride;
+            out.push(Detection {
+                x0: cx - dist[0] * stride,
+                y0: cy - dist[1] * stride,
+                x1: cx + dist[2] * stride,
+                y1: cy + dist[3] * stride,
+                score,
+                class: best_c,
+            });
+        }
+    }
+    out
+}
+
+/// Greedy non-maximum suppression (per class).
+pub fn nms(mut dets: Vec<Detection>, iou_threshold: f32) -> Vec<Detection> {
+    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    let mut keep: Vec<Detection> = Vec::new();
+    for d in dets {
+        if keep
+            .iter()
+            .all(|k| k.class != d.class || iou(k, &d) < iou_threshold)
+        {
+            keep.push(d);
+        }
+    }
+    keep
+}
+
+/// Full postprocess over the three scales of the lite detector.
+pub fn postprocess(
+    scales: &[(Vec<f32>, usize, f32)], // (map, s, stride)
+    reg_max: usize,
+    classes: usize,
+    conf_threshold: f32,
+    iou_threshold: f32,
+) -> Vec<Detection> {
+    let mut all = Vec::new();
+    for (map, s, stride) in scales {
+        all.extend(decode_scale(map, *s, reg_max, classes, *stride, conf_threshold));
+    }
+    nms(all, iou_threshold)
+}
+
+/// Summarize detection confidences (for reports).
+pub fn confidence_summary(dets: &[Detection]) -> Summary {
+    let mut s = Summary::new();
+    for d in dets {
+        s.add(d.score as f64);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn boxed(x0: f32, y0: f32, x1: f32, y1: f32, score: f32, class: usize) -> Detection {
+        Detection { x0, y0, x1, y1, score, class }
+    }
+
+    #[test]
+    fn iou_identity_and_disjoint() {
+        let a = boxed(0.0, 0.0, 10.0, 10.0, 1.0, 0);
+        assert!((iou(&a, &a) - 1.0).abs() < 1e-6);
+        let b = boxed(20.0, 20.0, 30.0, 30.0, 1.0, 0);
+        assert_eq!(iou(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        let a = boxed(0.0, 0.0, 10.0, 10.0, 1.0, 0);
+        let b = boxed(5.0, 0.0, 15.0, 10.0, 1.0, 0);
+        // inter 50, union 150
+        assert!((iou(&a, &b) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nms_suppresses_overlaps() {
+        let dets = vec![
+            boxed(0.0, 0.0, 10.0, 10.0, 0.9, 0),
+            boxed(1.0, 1.0, 11.0, 11.0, 0.8, 0),
+            boxed(20.0, 20.0, 30.0, 30.0, 0.7, 0),
+        ];
+        let kept = nms(dets, 0.5);
+        assert_eq!(kept.len(), 2);
+        assert_eq!(kept[0].score, 0.9);
+        assert_eq!(kept[1].score, 0.7);
+    }
+
+    #[test]
+    fn nms_is_per_class() {
+        let dets = vec![
+            boxed(0.0, 0.0, 10.0, 10.0, 0.9, 0),
+            boxed(1.0, 1.0, 11.0, 11.0, 0.8, 1),
+        ];
+        assert_eq!(nms(dets, 0.5).len(), 2);
+    }
+
+    #[test]
+    fn decode_finds_confident_cell() {
+        let (s, reg_max, classes) = (4usize, 4usize, 1usize);
+        let ch = 4 * reg_max + classes;
+        let mut map = vec![0f32; s * s * ch];
+        // cell (1, 2): strong class logit, uniform DFL bins
+        let base = (2 * s + 1) * ch;
+        map[base + 4 * reg_max] = 6.0; // sigmoid ~ 0.997
+        // threshold 0.6: zero-logit cells (sigmoid 0.5) are filtered
+        let dets = decode_scale(&map, s, reg_max, classes, 8.0, 0.6);
+        assert_eq!(dets.len(), 1);
+        let d = &dets[0];
+        // centre of cell (1,2) at stride 8 = (12, 20)
+        assert!((0.5 * (d.x0 + d.x1) - 12.0).abs() < 1e-3);
+        assert!((0.5 * (d.y0 + d.y1) - 20.0).abs() < 1e-3);
+        assert!(d.score > 0.99);
+    }
+
+    #[test]
+    fn decode_threshold_filters_all_when_uniform() {
+        let (s, reg_max, classes) = (2usize, 2usize, 2usize);
+        let map = vec![0f32; s * s * (4 * reg_max + classes)];
+        // all logits 0 -> score 0.5; threshold 0.6 filters everything
+        assert!(decode_scale(&map, s, reg_max, classes, 8.0, 0.6).is_empty());
+    }
+
+    #[test]
+    fn postprocess_merges_scales() {
+        let (reg_max, classes) = (2usize, 1usize);
+        let ch = 4 * reg_max + classes;
+        let mut m1 = vec![0f32; 4 * ch];
+        m1[4 * reg_max] = 5.0;
+        let mut m2 = vec![0f32; ch];
+        m2[4 * reg_max] = 5.0;
+        let dets = postprocess(
+            &[(m1, 2, 8.0), (m2, 1, 16.0)],
+            reg_max,
+            classes,
+            0.5,
+            0.5,
+        );
+        assert!(!dets.is_empty());
+    }
+}

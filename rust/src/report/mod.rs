@@ -1,0 +1,484 @@
+//! Report generators — one function per table/figure of the paper.
+//!
+//! Each generator runs the corresponding experiment on the simulator (or
+//! the real PJRT pipeline for accuracy numbers) and prints the same rows /
+//! series the paper reports, plus a JSON blob for EXPERIMENTS.md. See
+//! DESIGN.md §4 for the experiment index.
+
+use crate::config::json::{arr, num, obj, s, Json};
+use crate::config::GanVariant;
+use crate::cost::flops::node_cost;
+use crate::cost::latency::{layer_latency, LatencyModel};
+use crate::dla::DlaVersion;
+use crate::error::Result;
+use crate::graph::Graph;
+use crate::hw::{self, EngineKind, SocSpec};
+use crate::imaging::{self, Image};
+use crate::models::pix2pix::{generator, Pix2PixConfig};
+use crate::models::resnet::resnet50;
+use crate::models::yolov8::{yolov8, YoloConfig};
+use crate::sched::{haxconn, naive};
+use crate::sim::{simulate, SimConfig};
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+fn gan(v: GanVariant) -> Graph {
+    generator(&Pix2PixConfig::paper(), v).expect("paper pix2pix builds")
+}
+
+fn yolo() -> Graph {
+    yolov8(&YoloConfig::nano()).expect("yolov8 builds")
+}
+
+/// Table I — best engine pairing per medical-imaging algorithm.
+///
+/// Classical algorithms are *really executed* on the CPU (wall-clock); the
+/// GPU/FPGA/NPU latencies come from the engine models (roofline over each
+/// algorithm's flops/bytes profile). ResNet50 uses the graph cost model.
+pub fn table1(soc: &SocSpec) -> Json {
+    let size = 512usize;
+    let frame_px = (size * size) as f64;
+
+    // Measure CPU wall-clock on real implementations.
+    let mut rng = Rng::new(42);
+    let mut img = Image::zeros(size, size);
+    for v in &mut img.data {
+        *v = rng.next_f32();
+    }
+    let cpu_ms = |f: &dyn Fn(&Image)| -> f64 {
+        let t0 = Instant::now();
+        let mut n = 0;
+        while t0.elapsed().as_millis() < 120 {
+            f(&img);
+            n += 1;
+        }
+        t0.elapsed().as_secs_f64() * 1e3 / n as f64
+    };
+
+    struct Algo {
+        name: &'static str,
+        cpu_ms: f64,
+        flops: f64,
+        bytes: f64,
+        /// suits massively-parallel engines (GPU)
+        parallel: bool,
+        /// suits pipelined fixed-function fabric (FPGA)
+        streaming: bool,
+    }
+
+    let algos = vec![
+        Algo {
+            name: "Median Filter",
+            cpu_ms: cpu_ms(&|i| {
+                imaging::median::median3(i);
+            }),
+            flops: frame_px * 30.0,
+            bytes: frame_px * 8.0,
+            parallel: true,
+            // data-dependent compare network: poor fit for shallow pipelines
+            streaming: false,
+        },
+        Algo {
+            name: "Histogram Equalization",
+            cpu_ms: cpu_ms(&|i| {
+                imaging::histeq::equalize(i);
+            }),
+            flops: frame_px * 4.0,
+            bytes: frame_px * 8.0,
+            parallel: true,
+            streaming: true, // two linear passes: ideal stream pipeline
+        },
+        Algo {
+            name: "Sobel for Image Segmentation",
+            cpu_ms: cpu_ms(&|i| {
+                imaging::sobel::sobel_edges(i, 0.5);
+            }),
+            flops: frame_px * 14.0,
+            bytes: frame_px * 8.0,
+            parallel: false, // tiny stencil: launch overhead dominates on GPU
+            streaming: true,
+        },
+        Algo {
+            name: "Canny for Image Segmentation",
+            cpu_ms: cpu_ms(&|i| {
+                imaging::canny::canny(i, 0.1, 0.3);
+            }),
+            flops: frame_px * 60.0,
+            bytes: frame_px * 24.0,
+            parallel: true,
+            streaming: false, // hysteresis BFS is irregular
+        },
+        Algo {
+            name: "Lempel-Ziv-Welch",
+            cpu_ms: {
+                let bytes = img.to_u8();
+                let t0 = Instant::now();
+                let mut n = 0;
+                while t0.elapsed().as_millis() < 120 {
+                    imaging::lzw::compress(&bytes);
+                    n += 1;
+                }
+                t0.elapsed().as_secs_f64() * 1e3 / n as f64
+            },
+            flops: frame_px * 12.0,
+            bytes: frame_px * 10.0,
+            parallel: true, // block-parallel dictionary coding
+            streaming: false,
+        },
+        Algo {
+            name: "Discrete Cosine Transform",
+            cpu_ms: cpu_ms(&|i| {
+                imaging::dct::dct_image(i);
+            }),
+            flops: frame_px * 32.0,
+            bytes: frame_px * 8.0,
+            parallel: true,
+            streaming: false,
+        },
+    ];
+
+    let mut rows = Vec::new();
+    println!("Table I: ideal hardware per medical-imaging algorithm (512x512)");
+    println!(
+        "{:<32} {:>9} {:>9} {:>9} {:>9}  {}",
+        "Algorithm", "CPU ms", "GPU ms", "FPGA ms", "NPU ms", "Best pairing"
+    );
+    let model_ms = |flops: f64, bytes: f64, e: &hw::EngineSpec, eff_mult: f64| -> f64 {
+        let compute = flops / (e.elementwise_rate * eff_mult);
+        let mem = bytes / e.mem_bw;
+        (compute.max(mem) + e.launch_overhead) * 1e3
+    };
+    for a in algos {
+        let gpu = model_ms(a.flops, a.bytes, &soc.gpu, if a.parallel { 1.0 } else { 0.12 });
+        let fpga = model_ms(a.flops, a.bytes, &hw::fpga(), if a.streaming { 1.0 } else { 0.2 });
+        let npu = model_ms(a.flops, a.bytes, &hw::npu(), 0.25); // poor fit for pixel algorithms
+        let mut best = ("CPU and GPU", gpu);
+        if fpga < best.1 {
+            best = ("CPU and FPGA", fpga);
+        }
+        if npu < best.1 {
+            best = ("CPU and NPU", npu);
+        }
+        if a.cpu_ms < best.1 {
+            best = ("CPU", a.cpu_ms);
+        }
+        println!(
+            "{:<32} {:>9.3} {:>9.3} {:>9.3} {:>9.3}  {}",
+            a.name, a.cpu_ms, gpu, fpga, npu, best.0
+        );
+        rows.push(obj(vec![
+            ("algorithm", s(a.name)),
+            ("cpu_ms", num(a.cpu_ms)),
+            ("gpu_ms", num(gpu)),
+            ("fpga_ms", num(fpga)),
+            ("npu_ms", num(npu)),
+            ("best", s(best.0)),
+        ]));
+    }
+    // ResNet50: DNN workload through the graph cost model on each engine.
+    let rn = resnet50(224).expect("resnet50 builds");
+    let m = LatencyModel::new(soc.clone());
+    let cpu_ms_rn = m.graph_latency(&rn, EngineKind::Cpu) * 1e3;
+    let gpu_ms_rn = m.graph_latency(&rn, EngineKind::Gpu) * 1e3;
+    let layers = rn.compute_layers();
+    let npu_spec = hw::npu();
+    let npu_ms_rn: f64 = layers
+        .iter()
+        .map(|&id| layer_latency(&node_cost(&rn, id), &npu_spec))
+        .sum::<f64>()
+        * 1e3;
+    let fpga_spec = hw::fpga();
+    let fpga_ms_rn: f64 = layers
+        .iter()
+        .map(|&id| layer_latency(&node_cost(&rn, id), &fpga_spec))
+        .sum::<f64>()
+        * 1e3;
+    let mut best = ("CPU and GPU", gpu_ms_rn);
+    if npu_ms_rn < best.1 {
+        best = ("CPU and NPU", npu_ms_rn);
+    }
+    if fpga_ms_rn < best.1 {
+        best = ("CPU and FPGA", fpga_ms_rn);
+    }
+    println!(
+        "{:<32} {:>9.3} {:>9.3} {:>9.3} {:>9.3}  {}",
+        "ResNet50", cpu_ms_rn, gpu_ms_rn, fpga_ms_rn, npu_ms_rn, best.0
+    );
+    rows.push(obj(vec![
+        ("algorithm", s("ResNet50")),
+        ("cpu_ms", num(cpu_ms_rn)),
+        ("gpu_ms", num(gpu_ms_rn)),
+        ("fpga_ms", num(fpga_ms_rn)),
+        ("npu_ms", num(npu_ms_rn)),
+        ("best", s(best.0)),
+    ]));
+    arr(rows)
+}
+
+/// Table II — parameter counts from the full-scale IR plus (when
+/// available) the measured accuracy of the trained scaled models from
+/// `artifacts/table2.json`.
+pub fn table2(artifact_dir: &str) -> Json {
+    println!("Table II: original vs modified Pix2Pix");
+    println!(
+        "{:<16} {:>14} {:>10} {:>10} {:>10}",
+        "Variant", "Params(256px)", "SSIM", "PSNR", "MSE"
+    );
+    let trained = std::fs::read_to_string(format!("{artifact_dir}/table2.json"))
+        .ok()
+        .and_then(|t| Json::parse(&t).ok());
+    let mut rows = Vec::new();
+    for v in GanVariant::all() {
+        let g = gan(v);
+        let params = g.param_count();
+        let (ssim, psnr, mse) = trained
+            .as_ref()
+            .and_then(|t| t.get(v.name()))
+            .map(|m| {
+                (
+                    m.get("ssim_pct").and_then(|x| x.as_f64()).unwrap_or(f64::NAN),
+                    m.get("psnr").and_then(|x| x.as_f64()).unwrap_or(f64::NAN),
+                    m.get("mse").and_then(|x| x.as_f64()).unwrap_or(f64::NAN),
+                )
+            })
+            .unwrap_or((f64::NAN, f64::NAN, f64::NAN));
+        println!(
+            "{:<16} {:>14} {:>10.2} {:>10.2} {:>10.2}",
+            v.name(),
+            params,
+            ssim,
+            psnr,
+            mse
+        );
+        rows.push(obj(vec![
+            ("variant", s(v.name())),
+            ("params_paper_scale", num(params as f64)),
+            ("ssim_pct", num(ssim)),
+            ("psnr", num(psnr)),
+            ("mse", num(mse)),
+        ]));
+    }
+    arr(rows)
+}
+
+/// Figs 8–10 — standalone execution: throughput per variant and GPU
+/// utilization (single-stream, trtexec-style).
+pub fn fig9_fig10(soc: &SocSpec) -> Json {
+    println!("Fig 9/10: standalone DLA execution per variant");
+    println!(
+        "{:<16} {:>10} {:>10} {:>10} {:>12}",
+        "Variant", "FPS", "GPUutil%", "DLAutil%", "DLA blocks"
+    );
+    let mut rows = Vec::new();
+    for v in GanVariant::all() {
+        let g = gan(v);
+        let sched = naive::standalone(&g, EngineKind::Dla);
+        let mut cfg = SimConfig::new(soc.clone(), 96);
+        cfg.max_inflight = 1; // trtexec profiles single-stream
+        let r = simulate(&[&g], &sched, &cfg).expect("sim");
+        let gs = r.timeline.engine_stats(EngineKind::Gpu);
+        let ds = r.timeline.engine_stats(EngineKind::Dla);
+        println!(
+            "{:<16} {:>10.1} {:>10.1} {:>10.1} {:>12}",
+            v.name(),
+            r.instances[0].fps,
+            gs.utilization * 100.0,
+            ds.utilization * 100.0,
+            ds.span_count
+        );
+        rows.push(obj(vec![
+            ("variant", s(v.name())),
+            ("fps", num(r.instances[0].fps)),
+            ("gpu_util_pct", num(gs.utilization * 100.0)),
+            ("dla_util_pct", num(ds.utilization * 100.0)),
+        ]));
+    }
+    arr(rows)
+}
+
+/// Figs 11/12 — naive scheduling (client-server): GAN on DLA + YOLO on
+/// GPU concurrently.
+pub fn fig11_fig12(soc: &SocSpec) -> Json {
+    println!("Fig 11/12: naive concurrent scheduling (GAN->DLA, YOLO->GPU)");
+    println!(
+        "{:<16} {:>14} {:>14}",
+        "Variant", "GPU(yolo) FPS", "DLA(gan) FPS"
+    );
+    let y = yolo();
+    let mut rows = Vec::new();
+    for v in GanVariant::all() {
+        let g = gan(v);
+        let sched = naive::gan_dla_yolo_gpu(&g, &y);
+        let r = simulate(&[&g, &y], &sched, &SimConfig::new(soc.clone(), 192)).expect("sim");
+        println!(
+            "{:<16} {:>14.1} {:>14.1}",
+            v.name(),
+            r.instances[1].fps,
+            r.instances[0].fps
+        );
+        rows.push(obj(vec![
+            ("variant", s(v.name())),
+            ("gpu_yolo_fps", num(r.instances[1].fps)),
+            ("dla_gan_fps", num(r.instances[0].fps)),
+        ]));
+    }
+    arr(rows)
+}
+
+/// Tables III/IV + Fig 13 — two GAN instances under HaX-CoNN.
+pub fn table3_table4_fig13(soc: &SocSpec) -> Json {
+    println!("Table III/IV + Fig 13: two GAN instances, HaX-CoNN");
+    println!(
+        "{:<16} {:>8} {:>8} {:>12} {:>12} {:>11} {:>13}",
+        "Variant", "DLA>GPU", "GPU>DLA", "GPU FPS", "DLA FPS", "DLA blocks", "meanblock ms"
+    );
+    let mut rows = Vec::new();
+    for v in GanVariant::all() {
+        let g = gan(v);
+        let (sched, _ss) = haxconn::two_gans(&g, soc, DlaVersion::V2).expect("sched");
+        let r = simulate(&[&g], &sched, &SimConfig::new(soc.clone(), 192)).expect("sim");
+        let p1 = sched.instances[0].partition_points().0;
+        let p2 = sched.instances[1].partition_points().1;
+        let gpu_fps = r.fps_of_home(EngineKind::Gpu).unwrap_or(0.0);
+        let dla_fps = r.fps_of_home(EngineKind::Dla).unwrap_or(0.0);
+        let ds = r.timeline.engine_stats(EngineKind::Dla);
+        println!(
+            "{:<16} {:>8} {:>8} {:>12.2} {:>12.2} {:>11} {:>13.2}",
+            v.name(),
+            p1.map(|x| x.to_string()).unwrap_or_else(|| "-".into()),
+            p2.map(|x| x.to_string()).unwrap_or_else(|| "-".into()),
+            gpu_fps,
+            dla_fps,
+            ds.span_count,
+            ds.mean_block * 1e3,
+        );
+        rows.push(obj(vec![
+            ("variant", s(v.name())),
+            ("dla_to_gpu", num(p1.unwrap_or(0) as f64)),
+            ("gpu_to_dla", num(p2.unwrap_or(0) as f64)),
+            ("gpu_fps", num(gpu_fps)),
+            ("dla_fps", num(dla_fps)),
+            ("dla_blocks", num(ds.span_count as f64)),
+            ("dla_mean_block_ms", num(ds.mean_block * 1e3)),
+            ("dla_idle_gap_ms_mean", num(ds.idle_gaps.mean() * 1e3)),
+        ]));
+    }
+    arr(rows)
+}
+
+/// Tables V/VI + Fig 14 — GAN + YOLOv8 under HaX-CoNN.
+pub fn table5_table6_fig14(soc: &SocSpec) -> Json {
+    println!("Table V/VI + Fig 14: GAN + YOLOv8, HaX-CoNN");
+    println!(
+        "{:<16} {:>8} {:>8} {:>12} {:>12}",
+        "Variant", "DLA>GPU", "GPU>DLA", "GPU FPS", "DLA FPS"
+    );
+    let y = yolo();
+    let mut rows = Vec::new();
+    for v in GanVariant::all() {
+        let g = gan(v);
+        let (sched, _ss) = haxconn::gan_plus_yolo(&g, &y, soc, DlaVersion::V2).expect("sched");
+        let r = simulate(&[&g, &y], &sched, &SimConfig::new(soc.clone(), 192)).expect("sim");
+        let (p1, p2) = sched.instances[0].partition_points();
+        // Columns by dominant engine (paper convention).
+        let gpu_fps = r.fps_of_home(EngineKind::Gpu).unwrap_or(0.0);
+        let dla_fps = r.fps_of_home(EngineKind::Dla).unwrap_or(gpu_fps);
+        println!(
+            "{:<16} {:>8} {:>8} {:>12.2} {:>12.2}",
+            v.name(),
+            p1.map(|x| x.to_string()).unwrap_or_else(|| "-".into()),
+            p2.map(|x| x.to_string()).unwrap_or_else(|| "-".into()),
+            gpu_fps,
+            dla_fps
+        );
+        rows.push(obj(vec![
+            ("variant", s(v.name())),
+            ("gan_dla_to_gpu", num(p1.unwrap_or(0) as f64)),
+            ("gan_gpu_to_dla", num(p2.unwrap_or(0) as f64)),
+            ("gpu_fps", num(gpu_fps)),
+            ("dla_fps", num(dla_fps)),
+        ]));
+    }
+    arr(rows)
+}
+
+/// Fig 13/14 ASCII timelines for one variant (the Nsight-figure stand-in).
+pub fn timeline_ascii(soc: &SocSpec, variant: GanVariant, with_yolo: bool) -> Result<String> {
+    let g = gan(variant);
+    let y;
+    let (models, sched): (Vec<&Graph>, _) = if with_yolo {
+        y = yolo();
+        let (sched, _) = haxconn::gan_plus_yolo(&g, &y, soc, DlaVersion::V2)?;
+        (vec![&g, &y], sched)
+    } else {
+        let (sched, _) = haxconn::two_gans(&g, soc, DlaVersion::V2)?;
+        (vec![&g], sched)
+    };
+    let mut cfg = SimConfig::new(soc.clone(), 12);
+    cfg.record_timeline = true;
+    let r = simulate(&models, &sched, &cfg)?;
+    Ok(r.timeline.ascii(100))
+}
+
+/// Everything at once (the `report all` subcommand).
+pub fn all_reports(artifact_dir: &str) -> Json {
+    let soc = hw::orin();
+    obj(vec![
+        ("table1", table1(&soc)),
+        ("table2", table2(artifact_dir)),
+        ("fig9_fig10", fig9_fig10(&soc)),
+        ("fig11_fig12", fig11_fig12(&soc)),
+        ("table3_table4_fig13", table3_table4_fig13(&soc)),
+        ("table5_table6_fig14", table5_table6_fig14(&soc)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_param_columns() {
+        let j = table2("artifacts");
+        let rows = j.as_arr().unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(
+            rows[0].get("params_paper_scale").unwrap().as_u64().unwrap(),
+            54_425_859
+        );
+        assert_eq!(
+            rows[2].get("params_paper_scale").unwrap().as_u64().unwrap(),
+            64_637_268
+        );
+    }
+
+    #[test]
+    fn fig9_order_matches_paper() {
+        let soc = hw::orin();
+        let j = fig9_fig10(&soc);
+        let rows = j.as_arr().unwrap();
+        let fps: Vec<f64> = rows
+            .iter()
+            .map(|r| r.get("fps").unwrap().as_f64().unwrap())
+            .collect();
+        // original > cropping > convolution (Fig 9)
+        assert!(fps[0] > fps[1]);
+        assert!(fps[1] > fps[2]);
+        // GPU util: original nonzero, modified zero (Fig 10)
+        let util: Vec<f64> = rows
+            .iter()
+            .map(|r| r.get("gpu_util_pct").unwrap().as_f64().unwrap())
+            .collect();
+        assert!(util[0] > 5.0);
+        assert!(util[1].abs() < 1e-9);
+        assert!(util[2].abs() < 1e-9);
+    }
+
+    #[test]
+    fn timeline_ascii_renders() {
+        let soc = hw::orin();
+        let a = timeline_ascii(&soc, GanVariant::Cropping, false).unwrap();
+        assert!(a.contains("GPU"));
+        assert!(a.contains("DLA"));
+    }
+}

@@ -1,0 +1,158 @@
+//! Artifact loading and execution.
+//!
+//! An [`Artifact`] is one compiled model: the PJRT executable built from
+//! `<name>.hlo.txt` plus the device-resident weight literals from
+//! `<name>.weights.bin`. `run_image` feeds a single NHWC frame and returns
+//! the flattened outputs — the call the L3 hot path makes per frame.
+
+use super::client::RuntimeClient;
+use super::weights::WeightsFile;
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One loaded model.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Device-resident weight buffers in parameter order (uploaded once at
+    /// load time — the request path only transfers the frame).
+    weights: Vec<xla::PjRtBuffer>,
+    client: xla::PjRtClient,
+    /// Input image shape (N, H, W, C) from the meta side-car.
+    pub input_shape: [usize; 4],
+}
+
+/// One named output tensor, flattened.
+#[derive(Debug, Clone)]
+pub struct OutputTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Artifact {
+    /// Load `<dir>/<name>.{hlo.txt,weights.bin,meta.json}` and compile.
+    pub fn load(client: &RuntimeClient, dir: &Path, name: &str) -> Result<Self> {
+        let hlo = dir.join(format!("{name}.hlo.txt"));
+        let wpath = dir.join(format!("{name}.weights.bin"));
+        let meta_path = dir.join(format!("{name}.meta.json"));
+        if !hlo.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact `{name}` missing: {} (run `make artifacts`)",
+                hlo.display()
+            )));
+        }
+        let exe = client.compile_hlo_text(&hlo)?;
+        let wfile = WeightsFile::load(&wpath)?;
+        let mut weights = Vec::with_capacity(wfile.tensors.len());
+        for t in &wfile.tensors {
+            let buf = client
+                .client
+                .buffer_from_host_buffer::<f32>(&t.data, &t.dims, None)
+                .map_err(|e| Error::Xla(e.to_string()))?;
+            weights.push(buf);
+        }
+
+        // meta.json: {"input": [1, H, W, C], ...}
+        let meta_text = std::fs::read_to_string(&meta_path)
+            .map_err(|e| Error::Runtime(format!("read {}: {e}", meta_path.display())))?;
+        let meta = crate::config::json::Json::parse(&meta_text)
+            .map_err(|e| Error::Runtime(format!("meta.json: {e}")))?;
+        let dims: Vec<usize> = meta
+            .get("input")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| Error::Runtime("meta.json missing `input`".into()))?
+            .iter()
+            .filter_map(|v| v.as_u64().map(|d| d as usize))
+            .collect();
+        if dims.len() != 4 {
+            return Err(Error::Runtime(format!("input rank {} != 4", dims.len())));
+        }
+
+        Ok(Artifact {
+            name: name.to_string(),
+            exe,
+            weights,
+            client: client.client.clone(),
+            input_shape: [dims[0], dims[1], dims[2], dims[3]],
+        })
+    }
+
+    /// Execute on one flattened NHWC frame. Returns every output tensor
+    /// (the AOT export always lowers with `return_tuple=True`).
+    pub fn run_image(&self, frame: &[f32]) -> Result<Vec<OutputTensor>> {
+        let expect: usize = self.input_shape.iter().product();
+        if frame.len() != expect {
+            return Err(Error::Runtime(format!(
+                "frame has {} elements, artifact `{}` expects {:?}",
+                frame.len(),
+                self.name,
+                self.input_shape
+            )));
+        }
+        let input = self
+            .client
+            .buffer_from_host_buffer::<f32>(frame, &self.input_shape, None)
+            .map_err(|e| Error::Xla(e.to_string()))?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weights.len());
+        args.push(&input);
+        for w in &self.weights {
+            args.push(w);
+        }
+        let result = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| Error::Xla(format!("execute `{}`: {e}", self.name)))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Xla(e.to_string()))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| Error::Xla(e.to_string()))?;
+        let mut outs = Vec::with_capacity(parts.len());
+        for lit in parts {
+            let shape = lit.array_shape().map_err(|e| Error::Xla(e.to_string()))?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = lit
+                .to_vec::<f32>()
+                .map_err(|e| Error::Xla(e.to_string()))?;
+            outs.push(OutputTensor { dims, data });
+        }
+        Ok(outs)
+    }
+
+    pub fn weight_count(&self) -> usize {
+        self.weights.len()
+    }
+}
+
+/// All artifacts of one deployment, loaded once at startup.
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    artifacts: HashMap<String, Artifact>,
+}
+
+impl ArtifactRegistry {
+    /// Load the named artifacts from `dir`.
+    pub fn load(client: &RuntimeClient, dir: &Path, names: &[&str]) -> Result<Self> {
+        let mut artifacts = HashMap::new();
+        for &name in names {
+            artifacts.insert(name.to_string(), Artifact::load(client, dir, name)?);
+        }
+        Ok(ArtifactRegistry {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("artifact `{name}` not loaded")))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+}

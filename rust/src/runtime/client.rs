@@ -1,0 +1,54 @@
+//! PJRT client wrapper.
+//!
+//! Thin, panic-free wrapper over `xla::PjRtClient` that converts errors
+//! into the library error type and centralizes the CPU-client setup used
+//! by every executor. One client is shared per process (compilations and
+//! buffers are tied to it).
+
+use crate::error::{Error, Result};
+
+/// A process-wide PJRT client handle.
+pub struct RuntimeClient {
+    pub client: xla::PjRtClient,
+}
+
+impl RuntimeClient {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| Error::Xla(e.to_string()))?;
+        Ok(RuntimeClient { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Compile HLO text into an executable.
+    pub fn compile_hlo_text(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(|e| Error::Xla(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| Error::Xla(format!("compile {}: {e}", path.display())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_boots() {
+        let c = RuntimeClient::cpu().unwrap();
+        assert_eq!(c.platform().to_lowercase(), "cpu");
+        assert!(c.device_count() >= 1);
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime — loads and executes the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `python/compile/aot.py` lowers each model ONCE to HLO text plus a
+//! `*.weights.bin` side-car; this module loads them through the `xla`
+//! crate (`PjRtClient` → `HloModuleProto::from_text_file` → compile →
+//! execute). Python is never on the request path: after `make artifacts`
+//! the rust binary is self-contained.
+
+pub mod artifact;
+pub mod client;
+pub mod weights;
+
+pub use artifact::{Artifact, ArtifactRegistry};
+pub use client::RuntimeClient;
+pub use weights::WeightsFile;

@@ -1,0 +1,176 @@
+//! `weights.bin` parser.
+//!
+//! Format written by `python/compile/aot.py::write_weights_bin`
+//! (little-endian):
+//!
+//! ```text
+//! magic  b"EPW1"
+//! count  u32
+//! per tensor: rank u32, dims u32*rank, data f32*prod(dims)
+//! ```
+
+use crate::error::{Error, Result};
+use std::path::Path;
+
+/// One weight tensor.
+#[derive(Debug, Clone)]
+pub struct WeightTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl WeightTensor {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// A parsed weights file.
+#[derive(Debug, Clone)]
+pub struct WeightsFile {
+    pub tensors: Vec<WeightTensor>,
+}
+
+impl WeightsFile {
+    /// Parse from raw bytes.
+    pub fn parse(bytes: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > bytes.len() {
+                return Err(Error::Runtime("weights.bin truncated".into()));
+            }
+            let s = &bytes[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let read_u32 = |pos: &mut usize| -> Result<u32> {
+            let b = take(pos, 4)?;
+            Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        };
+
+        if take(&mut pos, 4)? != b"EPW1" {
+            return Err(Error::Runtime("weights.bin: bad magic".into()));
+        }
+        let count = read_u32(&mut pos)? as usize;
+        if count > 1_000_000 {
+            return Err(Error::Runtime(format!("weights.bin: absurd count {count}")));
+        }
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let rank = read_u32(&mut pos)? as usize;
+            if rank > 8 {
+                return Err(Error::Runtime(format!("weights.bin: rank {rank} > 8")));
+            }
+            let mut dims = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                dims.push(read_u32(&mut pos)? as usize);
+            }
+            let numel: usize = dims.iter().product();
+            let raw = take(&mut pos, numel * 4)?;
+            let mut data = Vec::with_capacity(numel);
+            for chunk in raw.chunks_exact(4) {
+                data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+            }
+            tensors.push(WeightTensor { dims, data });
+        }
+        if pos != bytes.len() {
+            return Err(Error::Runtime(format!(
+                "weights.bin: {} trailing bytes",
+                bytes.len() - pos
+            )));
+        }
+        Ok(WeightsFile { tensors })
+    }
+
+    /// Load from disk.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::parse(&std::fs::read(path)?)
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// Serialize back to bytes (round-trip support / tests).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"EPW1");
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for t in &self.tensors {
+            out.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
+            for &d in &t.dims {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &v in &t.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> WeightsFile {
+        WeightsFile {
+            tensors: vec![
+                WeightTensor {
+                    dims: vec![2, 3],
+                    data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+                },
+                WeightTensor {
+                    dims: vec![4],
+                    data: vec![0.5; 4],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let w = sample();
+        let bytes = w.to_bytes();
+        let back = WeightsFile::parse(&bytes).unwrap();
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.tensors[0].dims, vec![2, 3]);
+        assert_eq!(back.tensors[0].data, w.tensors[0].data);
+        assert_eq!(back.param_count(), 10);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample().to_bytes();
+        bytes[0] = b'X';
+        assert!(WeightsFile::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let bytes = sample().to_bytes();
+        assert!(WeightsFile::parse(&bytes[..bytes.len() - 2]).is_err());
+        assert!(WeightsFile::parse(&bytes[..6]).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = sample().to_bytes();
+        bytes.push(0);
+        assert!(WeightsFile::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let w = WeightsFile {
+            tensors: vec![WeightTensor {
+                dims: vec![],
+                data: vec![42.0],
+            }],
+        };
+        let back = WeightsFile::parse(&w.to_bytes()).unwrap();
+        assert_eq!(back.tensors[0].numel(), 1);
+        assert_eq!(back.tensors[0].data, vec![42.0]);
+    }
+}

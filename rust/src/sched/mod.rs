@@ -1,0 +1,220 @@
+//! Scheduling of concurrent models across the GPU and DLA.
+//!
+//! * [`naive`] — each model statically pinned to one engine (the paper's
+//!   client-server scheme, Figs 11/12);
+//! * [`haxconn`] — HaX-CoNN-style partitioned streaming schedules
+//!   (standalone scheme, Tables III–VI): each instance is split at one or
+//!   two transition points and the instances swap engines so both stay
+//!   busy. The paper derives these "by aligning the execution times of the
+//!   GPU and DLA"; [`solver`] performs that alignment as a branch-and-bound
+//!   search over transition points (substituting HaX-CoNN's Z3 use — see
+//!   DESIGN.md).
+//!
+//! All schedules share the [`Schedule`] representation consumed by the
+//! discrete-event simulator in [`crate::sim`].
+
+pub mod haxconn;
+pub mod jedi;
+pub mod naive;
+pub mod solver;
+
+use crate::dla::rules::{check_layer, DlaVersion};
+use crate::error::{Error, Result};
+use crate::graph::{Graph, NodeId};
+use crate::hw::EngineKind;
+
+/// A contiguous run of compute layers of one model on one engine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SegmentPlan {
+    pub engine: EngineKind,
+    /// Half-open range into `graph.compute_layers()`.
+    pub start: usize,
+    pub end: usize,
+}
+
+/// The schedule of one model instance.
+#[derive(Debug, Clone)]
+pub struct InstanceSchedule {
+    /// Index into the workload's model list.
+    pub model: usize,
+    /// Human-readable instance label ("gan-dla", "yolo", ...).
+    pub label: String,
+    /// Ordered engine segments covering all compute layers exactly once.
+    pub segments: Vec<SegmentPlan>,
+}
+
+impl InstanceSchedule {
+    /// Partition points in the paper's Table III/V format:
+    /// (DLA→GPU layer, GPU→DLA layer), if present.
+    pub fn partition_points(&self) -> (Option<usize>, Option<usize>) {
+        let mut dla_to_gpu = None;
+        let mut gpu_to_dla = None;
+        for w in self.segments.windows(2) {
+            match (w[0].engine, w[1].engine) {
+                (EngineKind::Dla, EngineKind::Gpu) if dla_to_gpu.is_none() => {
+                    dla_to_gpu = Some(w[1].start)
+                }
+                (EngineKind::Gpu, EngineKind::Dla) if gpu_to_dla.is_none() => {
+                    gpu_to_dla = Some(w[1].start)
+                }
+                _ => {}
+            }
+        }
+        (dla_to_gpu, gpu_to_dla)
+    }
+
+    /// Check the segments tile `[0, n_layers)` in order.
+    pub fn validate(&self, n_layers: usize) -> Result<()> {
+        if self.segments.is_empty() {
+            return Err(Error::Sched(format!("instance `{}` has no segments", self.label)));
+        }
+        let mut expect = 0usize;
+        for s in &self.segments {
+            if s.start != expect || s.end <= s.start {
+                return Err(Error::Sched(format!(
+                    "instance `{}`: segment [{}, {}) does not tile at {}",
+                    self.label, s.start, s.end, expect
+                )));
+            }
+            expect = s.end;
+        }
+        if expect != n_layers {
+            return Err(Error::Sched(format!(
+                "instance `{}`: segments cover {} of {} layers",
+                self.label, expect, n_layers
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A complete concurrent schedule: the models plus one entry per instance.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub instances: Vec<InstanceSchedule>,
+}
+
+/// Default TensorRT-like minimum DLA subgraph size used when expanding
+/// fallback (tiny compatible islands between incompatible layers stay on
+/// the GPU to avoid transition churn).
+pub const DEFAULT_MIN_ISLAND: usize = 3;
+
+/// Expand one instance segment into execution *steps*, honouring DLA
+/// fallback: layers inside a DLA segment that the DLA cannot run are
+/// re-routed to the GPU (what the TensorRT engine plan would do), splitting
+/// the segment; compatible islands shorter than [`DEFAULT_MIN_ISLAND`] are
+/// merged into the surrounding GPU run. GPU segments never split.
+pub fn expand_fallback(
+    graph: &Graph,
+    segment: &SegmentPlan,
+    version: DlaVersion,
+) -> Vec<(EngineKind, Vec<NodeId>)> {
+    expand_fallback_with(graph, segment, version, DEFAULT_MIN_ISLAND)
+}
+
+/// [`expand_fallback`] with explicit `min_island`.
+pub fn expand_fallback_with(
+    graph: &Graph,
+    segment: &SegmentPlan,
+    version: DlaVersion,
+    min_island: usize,
+) -> Vec<(EngineKind, Vec<NodeId>)> {
+    let layers = graph.compute_layers();
+    let ids = &layers[segment.start..segment.end];
+    if segment.engine != EngineKind::Dla {
+        return vec![(segment.engine, ids.to_vec())];
+    }
+    let flags: Vec<bool> = ids
+        .iter()
+        .map(|&id| {
+            let node = graph.node(id);
+            check_layer(&node.kind, &graph.input_shapes(id), version).is_supported()
+        })
+        .collect();
+    let engines = crate::dla::planner::assign_engines(&flags, min_island);
+    let mut out: Vec<(EngineKind, Vec<NodeId>)> = Vec::new();
+    for (&id, &engine) in ids.iter().zip(engines.iter()) {
+        match out.last_mut() {
+            Some((e, v)) if *e == engine => v.push(id),
+            _ => out.push((engine, vec![id])),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GanVariant;
+    use crate::models::pix2pix::{generator, Pix2PixConfig};
+
+    #[test]
+    fn validate_tiling() {
+        let inst = InstanceSchedule {
+            model: 0,
+            label: "t".into(),
+            segments: vec![
+                SegmentPlan { engine: EngineKind::Dla, start: 0, end: 4 },
+                SegmentPlan { engine: EngineKind::Gpu, start: 4, end: 10 },
+            ],
+        };
+        inst.validate(10).unwrap();
+        assert!(inst.validate(11).is_err());
+        let bad = InstanceSchedule {
+            model: 0,
+            label: "b".into(),
+            segments: vec![SegmentPlan { engine: EngineKind::Gpu, start: 1, end: 10 }],
+        };
+        assert!(bad.validate(10).is_err());
+    }
+
+    #[test]
+    fn partition_points_extraction() {
+        let inst = InstanceSchedule {
+            model: 0,
+            label: "t".into(),
+            segments: vec![
+                SegmentPlan { engine: EngineKind::Dla, start: 0, end: 4 },
+                SegmentPlan { engine: EngineKind::Gpu, start: 4, end: 14 },
+                SegmentPlan { engine: EngineKind::Dla, start: 14, end: 50 },
+            ],
+        };
+        assert_eq!(inst.partition_points(), (Some(4), Some(14)));
+    }
+
+    #[test]
+    fn fallback_expansion_splits_original_dla_segment() {
+        let g = generator(&Pix2PixConfig::paper(), GanVariant::Original).unwrap();
+        let n = g.compute_layers().len();
+        let seg = SegmentPlan { engine: EngineKind::Dla, start: 0, end: n };
+        let steps = expand_fallback(&g, &seg, DlaVersion::V2);
+        assert!(steps.len() >= 2, "padded deconvs split the segment");
+        assert!(steps.iter().any(|(e, _)| *e == EngineKind::Gpu));
+        // Without island merging the segment shatters much further.
+        let raw = expand_fallback_with(&g, &seg, DlaVersion::V2, 1);
+        assert!(raw.len() > 10, "raw fallback fragments: {}", raw.len());
+        assert!(raw.len() > steps.len());
+        // coverage preserved in order
+        let flat: Vec<_> = steps.iter().flat_map(|(_, v)| v.clone()).collect();
+        assert_eq!(flat, g.compute_layers());
+    }
+
+    #[test]
+    fn fallback_expansion_noop_for_clean_model() {
+        let g = generator(&Pix2PixConfig::paper(), GanVariant::Cropping).unwrap();
+        let n = g.compute_layers().len();
+        let seg = SegmentPlan { engine: EngineKind::Dla, start: 0, end: n };
+        let steps = expand_fallback(&g, &seg, DlaVersion::V2);
+        assert_eq!(steps.len(), 1);
+        assert_eq!(steps[0].0, EngineKind::Dla);
+    }
+
+    #[test]
+    fn gpu_segments_never_split() {
+        let g = generator(&Pix2PixConfig::paper(), GanVariant::Original).unwrap();
+        let n = g.compute_layers().len();
+        let seg = SegmentPlan { engine: EngineKind::Gpu, start: 0, end: n };
+        let steps = expand_fallback(&g, &seg, DlaVersion::V2);
+        assert_eq!(steps.len(), 1);
+    }
+}

@@ -1,0 +1,76 @@
+//! Naive static scheduling — the client-server scheme (paper Fig 3,
+//! Figs 11/12): the GAN is pinned to the DLA (falling back per layer where
+//! incompatible) and the YOLO detector is pinned to the GPU.
+
+use super::{InstanceSchedule, Schedule, SegmentPlan};
+use crate::graph::Graph;
+use crate::hw::EngineKind;
+
+/// GAN on DLA + detector on GPU.
+pub fn gan_dla_yolo_gpu(gan: &Graph, yolo: &Graph) -> Schedule {
+    Schedule {
+        instances: vec![
+            InstanceSchedule {
+                model: 0,
+                label: "gan-dla".to_string(),
+                segments: vec![SegmentPlan {
+                    engine: EngineKind::Dla,
+                    start: 0,
+                    end: gan.compute_layers().len(),
+                }],
+            },
+            InstanceSchedule {
+                model: 1,
+                label: "yolo-gpu".to_string(),
+                segments: vec![SegmentPlan {
+                    engine: EngineKind::Gpu,
+                    start: 0,
+                    end: yolo.compute_layers().len(),
+                }],
+            },
+        ],
+    }
+}
+
+/// A single model alone on one engine (standalone profiling, Figs 8–10).
+pub fn standalone(model: &Graph, engine: EngineKind) -> Schedule {
+    Schedule {
+        instances: vec![InstanceSchedule {
+            model: 0,
+            label: format!("{}-{}", model.name, engine.name().to_lowercase()),
+            segments: vec![SegmentPlan {
+                engine,
+                start: 0,
+                end: model.compute_layers().len(),
+            }],
+        }],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GanVariant;
+    use crate::models::pix2pix::{generator, Pix2PixConfig};
+    use crate::models::yolov8::{yolov8, YoloConfig};
+
+    #[test]
+    fn naive_schedule_pins_models() {
+        let gan = generator(&Pix2PixConfig::paper(), GanVariant::Original).unwrap();
+        let yolo = yolov8(&YoloConfig::nano()).unwrap();
+        let s = gan_dla_yolo_gpu(&gan, &yolo);
+        assert_eq!(s.instances.len(), 2);
+        s.instances[0].validate(gan.compute_layers().len()).unwrap();
+        s.instances[1].validate(yolo.compute_layers().len()).unwrap();
+        assert_eq!(s.instances[0].segments[0].engine, EngineKind::Dla);
+        assert_eq!(s.instances[1].segments[0].engine, EngineKind::Gpu);
+    }
+
+    #[test]
+    fn standalone_schedule() {
+        let gan = generator(&Pix2PixConfig::paper(), GanVariant::Cropping).unwrap();
+        let s = standalone(&gan, EngineKind::Dla);
+        assert_eq!(s.instances.len(), 1);
+        s.instances[0].validate(gan.compute_layers().len()).unwrap();
+    }
+}

@@ -1,0 +1,17 @@
+//! Discrete-event simulation of concurrent model execution on the SoC.
+//!
+//! This is the hardware substitute (DESIGN.md §2): it plays the role the
+//! physical Jetson + DeepStream + Nsight stack plays in the paper. Model
+//! instances stream frames through their scheduled engine segments; the two
+//! engines are exclusive resources with FIFO queues; DLA-incompatible
+//! layers inside DLA segments bounce to the GPU (fallback) exactly as the
+//! TensorRT engine plan would; transitions pay reformat costs; concurrent
+//! engine activity suffers PCCS memory contention. The produced
+//! [`timeline::Timeline`] is the Nsight-equivalent artifact behind
+//! Figs 13/14.
+
+pub mod soc_sim;
+pub mod timeline;
+
+pub use soc_sim::{simulate, SimConfig, SimResult};
+pub use timeline::{Span, Timeline};

@@ -1,0 +1,404 @@
+//! The discrete-event SoC simulator.
+//!
+//! Executes a [`Schedule`] over model graphs on the two-engine SoC model:
+//! instances stream `frames` frames through their engine segments with
+//! bounded pipelining, engines are exclusive FIFO resources, DLA fallback
+//! sub-segments land on the GPU, inter-engine handoffs pay the reformat
+//! cost, and concurrently-active engines slow each other down per the PCCS
+//! contention model.
+
+use super::timeline::{Span, Timeline};
+use crate::cost::contention::{bandwidth_demand, memory_intensity, slowdown};
+use crate::cost::flops::{node_cost, LayerCost};
+use crate::cost::latency::layer_latency;
+use crate::dla::rules::DlaVersion;
+use crate::error::{Error, Result};
+use crate::graph::Graph;
+use crate::hw::{EngineKind, SocSpec};
+use crate::sched::{expand_fallback, Schedule};
+use crate::util::stats::Summary;
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub soc: SocSpec,
+    pub version: DlaVersion,
+    /// Frames per instance.
+    pub frames: usize,
+    /// Maximum frames of one instance in flight (pipeline depth).
+    pub max_inflight: usize,
+    /// Record the full span timeline (disable for long benchmark runs).
+    pub record_timeline: bool,
+}
+
+impl SimConfig {
+    pub fn new(soc: SocSpec, frames: usize) -> Self {
+        SimConfig {
+            soc,
+            version: DlaVersion::V2,
+            frames,
+            max_inflight: 4,
+            record_timeline: true,
+        }
+    }
+}
+
+/// One executable step of an instance (post fallback expansion).
+#[derive(Debug, Clone)]
+struct Step {
+    engine: EngineKind,
+    /// Isolated duration, seconds.
+    duration: f64,
+    /// Aggregate cost (for contention estimates).
+    intensity: f64,
+    bw_demand: f64,
+    /// Transition latency paid before this step when the previous step ran
+    /// elsewhere.
+    transition_in: f64,
+}
+
+/// Per-instance results.
+#[derive(Debug, Clone)]
+pub struct InstanceResult {
+    pub label: String,
+    pub frames: usize,
+    pub fps: f64,
+    /// Per-frame end-to-end latency statistics, seconds.
+    pub latency: Summary,
+    /// Engine where this instance spends most of its execution time —
+    /// the column the paper's tables put it in.
+    pub home_engine: EngineKind,
+}
+
+/// Full simulation output.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub instances: Vec<InstanceResult>,
+    pub timeline: Timeline,
+    pub makespan: f64,
+}
+
+impl SimResult {
+    /// FPS of the instance whose home engine is `e` (paper table columns).
+    pub fn fps_of_home(&self, e: EngineKind) -> Option<f64> {
+        self.instances
+            .iter()
+            .find(|i| i.home_engine == e)
+            .map(|i| i.fps)
+    }
+}
+
+/// Run the simulation.
+pub fn simulate(
+    models: &[&Graph],
+    schedule: &Schedule,
+    cfg: &SimConfig,
+) -> Result<SimResult> {
+    // ---- Compile instances into step chains ----
+    let mut chains: Vec<Vec<Step>> = Vec::new();
+    let mut home_engines: Vec<EngineKind> = Vec::new();
+    for inst in &schedule.instances {
+        let graph = models
+            .get(inst.model)
+            .ok_or_else(|| Error::Sim(format!("instance `{}` references model {}", inst.label, inst.model)))?;
+        inst.validate(graph.compute_layers().len())?;
+        let mut steps: Vec<Step> = Vec::new();
+        let mut prev_engine: Option<EngineKind> = None;
+        let mut prev_bytes = 0usize;
+        for seg in &inst.segments {
+            for (engine, nodes) in expand_fallback(graph, seg, cfg.version) {
+                let spec = cfg.soc.engine(engine);
+                let mut duration = 0.0;
+                let mut agg = LayerCost::ZERO;
+                for &id in &nodes {
+                    let c = node_cost(graph, id);
+                    duration += layer_latency(&c, spec);
+                    agg.flops += c.flops;
+                    agg.bytes += c.bytes;
+                    agg.is_mac |= c.is_mac;
+                }
+                let transition_in = match prev_engine {
+                    Some(pe) if pe != engine => cfg.soc.transition.latency(prev_bytes),
+                    _ => 0.0,
+                };
+                steps.push(Step {
+                    engine,
+                    duration,
+                    intensity: memory_intensity(&agg, spec),
+                    bw_demand: bandwidth_demand(&agg, spec),
+                    transition_in,
+                });
+                prev_engine = Some(engine);
+                prev_bytes = nodes
+                    .last()
+                    .map(|&id| graph.node(id).shape.bytes())
+                    .unwrap_or(0);
+            }
+        }
+        // Home engine: where the instance spends the most time (the
+        // paper's table columns group instances by dominant engine).
+        let mut tg = 0.0;
+        let mut td = 0.0;
+        for st in &steps {
+            match st.engine {
+                EngineKind::Gpu => tg += st.duration,
+                _ => td += st.duration,
+            }
+        }
+        home_engines.push(if tg >= td { EngineKind::Gpu } else { EngineKind::Dla });
+        chains.push(steps);
+    }
+
+    // ---- Event-driven execution ----
+    #[derive(Clone, Copy)]
+    struct Pending {
+        instance: usize,
+        frame: usize,
+        step: usize,
+        ready: f64,
+    }
+
+    let n_inst = chains.len();
+    let mut engine_free: [f64; 2] = [0.0, 0.0]; // [gpu, dla]
+    let mut engine_cur: [(f64, f64, f64); 2] = [(0.0, 0.0, 0.0); 2]; // (t0, t1, bw) of job running
+    let eidx = |e: EngineKind| match e {
+        EngineKind::Gpu => 0usize,
+        EngineKind::Dla => 1usize,
+        _ => unreachable!("sim engines are GPU/DLA"),
+    };
+
+    // step completion times per (instance, frame, step); frames processed
+    // in order per stage.
+    let mut done_step: Vec<Vec<f64>> = chains
+        .iter()
+        .map(|c| vec![0.0f64; c.len()])
+        .collect(); // last completion per stage
+    let mut frame_done: Vec<Vec<f64>> = (0..n_inst)
+        .map(|_| Vec::with_capacity(cfg.frames.min(1 << 20)))
+        .collect();
+    let mut timeline = Timeline::default();
+    let mut pending: Vec<Pending> = Vec::new();
+
+    // Seed: the first `max_inflight` frames of every instance (admission
+    // control; further frames are admitted as frames complete).
+    for i in 0..n_inst {
+        if !chains[i].is_empty() {
+            for f in 0..cfg.max_inflight.min(cfg.frames) {
+                pending.push(Pending { instance: i, frame: f, step: 0, ready: 0.0 });
+            }
+        }
+    }
+
+    while let Some(best_idx) = {
+        // Pick the dispatchable job with the earliest feasible start;
+        // tie-break by (frame, step, instance) to keep FIFO order.
+        let mut best: Option<(usize, (f64, usize, usize, usize))> = None;
+        for (idx, p) in pending.iter().enumerate() {
+            let st = &chains[p.instance][p.step];
+            let e = eidx(st.engine);
+            let start = p.ready.max(engine_free[e]);
+            let key = (start, p.frame, p.step, p.instance);
+            if best.map(|(_, bk)| key < bk).unwrap_or(true) {
+                best = Some((idx, key));
+            }
+        }
+        best.map(|(i, _)| i)
+    } {
+        let p = pending.swap_remove(best_idx);
+        let st = &chains[p.instance][p.step];
+        let e = eidx(st.engine);
+        let other = 1 - e;
+        // The reformat/fence of an engine handoff occupies the destination
+        // engine before the compute starts (this is what punishes the
+        // fragmented fallback plans — Fig 13).
+        let start = p.ready.max(engine_free[e]);
+        let exec_start = start + st.transition_in;
+
+        // Contention: if the other engine is executing, stretch.
+        let (ot0, ot1, obw) = engine_cur[other];
+        let factor = if exec_start >= ot0 && exec_start < ot1 {
+            slowdown(&cfg.soc, st.intensity, obw)
+        } else {
+            1.0
+        };
+        let duration = st.duration * factor;
+        let end = exec_start + duration;
+        engine_free[e] = end;
+        engine_cur[e] = (exec_start, end, st.bw_demand);
+
+        if cfg.record_timeline {
+            if st.transition_in > 0.0 {
+                timeline.push(Span {
+                    engine: st.engine,
+                    instance: p.instance,
+                    frame: p.frame,
+                    t0: start,
+                    t1: exec_start,
+                    is_transition: true,
+                });
+            }
+            timeline.push(Span {
+                engine: st.engine,
+                instance: p.instance,
+                frame: p.frame,
+                t0: exec_start,
+                t1: end,
+                is_transition: false,
+            });
+        }
+
+        done_step[p.instance][p.step] = end;
+        // Schedule the next step of this frame.
+        if p.step + 1 < chains[p.instance].len() {
+            let ready = end;
+            // Stage FIFO kept via the dispatch tie-break.
+            pending.push(Pending {
+                instance: p.instance,
+                frame: p.frame,
+                step: p.step + 1,
+                ready,
+            });
+        } else {
+            frame_done[p.instance].push(end);
+            // Backpressure admission: frame f's completion admits frame
+            // f + max_inflight.
+            let next_frame = p.frame + cfg.max_inflight;
+            if next_frame < cfg.frames {
+                pending.push(Pending {
+                    instance: p.instance,
+                    frame: next_frame,
+                    step: 0,
+                    ready: end,
+                });
+            }
+        }
+    }
+
+    let makespan = timeline.makespan().max(
+        frame_done
+            .iter()
+            .flat_map(|v| v.iter().copied())
+            .fold(0.0, f64::max),
+    );
+
+    // ---- Aggregate ----
+    let mut instances = Vec::new();
+    for (i, inst) in schedule.instances.iter().enumerate() {
+        let mut latency = Summary::new();
+        // Approximate per-frame latency: completion spacing converges to
+        // the period; report chain latency = completion - admission is
+        // tracked implicitly (completion diffs).
+        let dones = &frame_done[i];
+        for w in dones.windows(2) {
+            latency.add(w[1] - w[0]);
+        }
+        let last = dones.last().copied().unwrap_or(0.0);
+        let first = dones.first().copied().unwrap_or(0.0);
+        // Steady-state FPS: exclude the first frame (pipeline fill).
+        let fps = if dones.len() > 1 && last > first {
+            (dones.len() - 1) as f64 / (last - first)
+        } else if last > 0.0 {
+            1.0 / last
+        } else {
+            0.0
+        };
+        instances.push(InstanceResult {
+            label: inst.label.clone(),
+            frames: dones.len(),
+            fps,
+            latency,
+            home_engine: home_engines[i],
+        });
+    }
+
+    Ok(SimResult {
+        instances,
+        timeline,
+        makespan,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GanVariant;
+    use crate::hw::orin;
+    use crate::models::pix2pix::{generator, Pix2PixConfig};
+    use crate::sched::naive;
+
+    fn gan(v: GanVariant) -> Graph {
+        generator(&Pix2PixConfig::paper(), v).unwrap()
+    }
+
+    #[test]
+    fn standalone_gpu_matches_latency_model() {
+        let g = gan(GanVariant::Original);
+        let sched = naive::standalone(&g, EngineKind::Gpu);
+        let cfg = SimConfig::new(orin(), 32);
+        let r = simulate(&[&g], &sched, &cfg).unwrap();
+        let fps = r.instances[0].fps;
+        // Must agree with the analytic single-engine number (~170).
+        assert!((150.0..195.0).contains(&fps), "fps {fps}");
+    }
+
+    #[test]
+    fn standalone_dla_original_uses_gpu_fallback_fig10() {
+        let g = gan(GanVariant::Original);
+        let sched = naive::standalone(&g, EngineKind::Dla);
+        // trtexec-style standalone profiling is single-stream.
+        let mut cfg = SimConfig::new(orin(), 32);
+        cfg.max_inflight = 1;
+        let r = simulate(&[&g], &sched, &cfg).unwrap();
+        let gpu_util = r.timeline.engine_stats(EngineKind::Gpu).utilization;
+        // Fig 10: the original model keeps the GPU significantly busy
+        // (paper measures ~20%; our simulator is coarser, accept a band).
+        assert!(
+            (0.05..0.8).contains(&gpu_util),
+            "gpu utilization {gpu_util}"
+        );
+    }
+
+    #[test]
+    fn standalone_dla_modified_zero_gpu_fig10() {
+        let g = gan(GanVariant::Cropping);
+        let sched = naive::standalone(&g, EngineKind::Dla);
+        let cfg = SimConfig::new(orin(), 32);
+        let r = simulate(&[&g], &sched, &cfg).unwrap();
+        let gpu_util = r.timeline.engine_stats(EngineKind::Gpu).utilization;
+        assert_eq!(gpu_util, 0.0, "modified model must never touch the GPU");
+    }
+
+    #[test]
+    fn makespan_monotone_in_frames() {
+        let g = gan(GanVariant::Cropping);
+        let sched = naive::standalone(&g, EngineKind::Dla);
+        let r1 = simulate(&[&g], &sched, &SimConfig::new(orin(), 8)).unwrap();
+        let r2 = simulate(&[&g], &sched, &SimConfig::new(orin(), 32)).unwrap();
+        assert!(r2.makespan > r1.makespan);
+        assert_eq!(r2.instances[0].frames, 32);
+    }
+
+    #[test]
+    fn timeline_spans_do_not_overlap_per_engine() {
+        let g = gan(GanVariant::Original);
+        let sched = naive::standalone(&g, EngineKind::Dla);
+        let r = simulate(&[&g], &sched, &SimConfig::new(orin(), 16)).unwrap();
+        for engine in [EngineKind::Gpu, EngineKind::Dla] {
+            let mut spans: Vec<_> = r
+                .timeline
+                .spans
+                .iter()
+                .filter(|s| s.engine == engine && !s.is_transition)
+                .collect();
+            spans.sort_by(|a, b| a.t0.partial_cmp(&b.t0).unwrap());
+            for w in spans.windows(2) {
+                assert!(
+                    w[1].t0 >= w[0].t1 - 1e-12,
+                    "overlap on {engine}: {:?} vs {:?}",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Execution timelines — the Nsight Systems substitute.
+//!
+//! Every simulated engine occupation is recorded as a [`Span`]; the
+//! [`Timeline`] derives the quantities the paper reads off its Nsight
+//! screenshots (Figs 10/13/14): per-engine utilization, idle-gap
+//! statistics and block fragmentation, and renders an ASCII timing diagram
+//! plus a JSON export.
+
+use crate::config::json::{arr, num, obj, s, Json};
+use crate::hw::EngineKind;
+use crate::util::stats::Summary;
+
+/// One contiguous engine occupation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub engine: EngineKind,
+    /// Instance index within the workload.
+    pub instance: usize,
+    pub frame: usize,
+    pub t0: f64,
+    pub t1: f64,
+    /// True for transition/reformat time rather than layer execution.
+    pub is_transition: bool,
+}
+
+/// A complete simulation trace.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    pub spans: Vec<Span>,
+}
+
+/// Idle/fragmentation statistics for one engine (what Fig 13's "more idle
+/// time between the DLA instances and smaller blocks" refers to).
+#[derive(Debug, Clone)]
+pub struct EngineStats {
+    pub engine: EngineKind,
+    pub busy: f64,
+    pub span_count: usize,
+    pub utilization: f64,
+    /// Gap statistics between consecutive busy spans.
+    pub idle_gaps: Summary,
+    /// Mean busy-block length.
+    pub mean_block: f64,
+}
+
+impl Timeline {
+    pub fn push(&mut self, span: Span) {
+        debug_assert!(span.t1 >= span.t0);
+        self.spans.push(span);
+    }
+
+    /// End of the last span.
+    pub fn makespan(&self) -> f64 {
+        self.spans.iter().map(|s| s.t1).fold(0.0, f64::max)
+    }
+
+    /// Compute-only spans of one engine, time-sorted.
+    fn engine_spans(&self, engine: EngineKind) -> Vec<&Span> {
+        let mut v: Vec<&Span> = self
+            .spans
+            .iter()
+            .filter(|s| s.engine == engine && !s.is_transition)
+            .collect();
+        v.sort_by(|a, b| a.t0.partial_cmp(&b.t0).unwrap());
+        v
+    }
+
+    /// Engine statistics over the trace (utilization relative to the
+    /// trace makespan).
+    pub fn engine_stats(&self, engine: EngineKind) -> EngineStats {
+        let spans = self.engine_spans(engine);
+        let busy: f64 = spans.iter().map(|s| s.t1 - s.t0).sum();
+        let total = self.makespan().max(f64::MIN_POSITIVE);
+        let mut gaps = Summary::new();
+        for w in spans.windows(2) {
+            let gap = (w[1].t0 - w[0].t1).max(0.0);
+            if gap > 0.0 {
+                gaps.add(gap);
+            }
+        }
+        EngineStats {
+            engine,
+            busy,
+            span_count: spans.len(),
+            utilization: busy / total,
+            idle_gaps: gaps,
+            mean_block: if spans.is_empty() { 0.0 } else { busy / spans.len() as f64 },
+        }
+    }
+
+    /// ASCII timing diagram (one row per engine, `width` character bins) —
+    /// the textual stand-in for the paper's Nsight figures.
+    pub fn ascii(&self, width: usize) -> String {
+        let total = self.makespan();
+        if total <= 0.0 {
+            return String::new();
+        }
+        let mut out = String::new();
+        for engine in [EngineKind::Gpu, EngineKind::Dla] {
+            let mut row = vec![' '; width];
+            for span in self.spans.iter().filter(|s| s.engine == engine) {
+                let a = ((span.t0 / total) * width as f64) as usize;
+                let b = (((span.t1 / total) * width as f64).ceil() as usize).min(width);
+                let ch = if span.is_transition {
+                    '.'
+                } else {
+                    char::from_digit(span.instance as u32 % 10, 10).unwrap_or('#')
+                };
+                for slot in row.iter_mut().take(b).skip(a) {
+                    *slot = ch;
+                }
+            }
+            out.push_str(&format!("{:>4} |{}|\n", engine.name(), row.iter().collect::<String>()));
+        }
+        out
+    }
+
+    /// JSON export (chrome-trace-like), for offline inspection.
+    pub fn to_json(&self) -> Json {
+        arr(self
+            .spans
+            .iter()
+            .map(|sp| {
+                obj(vec![
+                    ("engine", s(sp.engine.name())),
+                    ("instance", num(sp.instance as f64)),
+                    ("frame", num(sp.frame as f64)),
+                    ("t0", num(sp.t0)),
+                    ("t1", num(sp.t1)),
+                    ("transition", Json::Bool(sp.is_transition)),
+                ])
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(e: EngineKind, i: usize, t0: f64, t1: f64) -> Span {
+        Span {
+            engine: e,
+            instance: i,
+            frame: 0,
+            t0,
+            t1,
+            is_transition: false,
+        }
+    }
+
+    #[test]
+    fn makespan_and_utilization() {
+        let mut t = Timeline::default();
+        t.push(span(EngineKind::Gpu, 0, 0.0, 1.0));
+        t.push(span(EngineKind::Gpu, 0, 2.0, 3.0));
+        t.push(span(EngineKind::Dla, 1, 0.0, 4.0));
+        assert_eq!(t.makespan(), 4.0);
+        let g = t.engine_stats(EngineKind::Gpu);
+        assert!((g.utilization - 0.5).abs() < 1e-9);
+        assert_eq!(g.span_count, 2);
+        let d = t.engine_stats(EngineKind::Dla);
+        assert!((d.utilization - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_gap_statistics() {
+        let mut t = Timeline::default();
+        t.push(span(EngineKind::Dla, 0, 0.0, 1.0));
+        t.push(span(EngineKind::Dla, 0, 1.5, 2.5));
+        t.push(span(EngineKind::Dla, 0, 4.0, 5.0));
+        let st = t.engine_stats(EngineKind::Dla);
+        assert_eq!(st.idle_gaps.count(), 2);
+        assert!((st.idle_gaps.mean() - 1.0).abs() < 1e-9);
+        assert!((st.mean_block - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transitions_excluded_from_stats() {
+        let mut t = Timeline::default();
+        t.push(span(EngineKind::Gpu, 0, 0.0, 1.0));
+        t.push(Span {
+            engine: EngineKind::Gpu,
+            instance: 0,
+            frame: 0,
+            t0: 1.0,
+            t1: 2.0,
+            is_transition: true,
+        });
+        let g = t.engine_stats(EngineKind::Gpu);
+        assert_eq!(g.span_count, 1);
+        assert!((g.busy - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ascii_has_two_rows() {
+        let mut t = Timeline::default();
+        t.push(span(EngineKind::Gpu, 0, 0.0, 1.0));
+        t.push(span(EngineKind::Dla, 1, 0.5, 1.5));
+        let a = t.ascii(40);
+        assert_eq!(a.lines().count(), 2);
+        assert!(a.contains("GPU"));
+        assert!(a.contains("DLA"));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = Timeline::default();
+        t.push(span(EngineKind::Gpu, 2, 0.0, 1.0));
+        let j = t.to_json().to_compact();
+        let back = crate::config::json::Json::parse(&j).unwrap();
+        assert_eq!(back.as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is offline and the vendored crate set does not
+//! include `rand`, `proptest` or a stats crate, so this module provides the
+//! minimal substrates the rest of the library needs: a deterministic PRNG
+//! ([`rng::Rng`]), summary statistics ([`stats`]), and a tiny
+//! property-testing harness ([`prop`]) used by the test suite.
+
+pub mod prop;
+pub mod rng;
+pub mod stats;

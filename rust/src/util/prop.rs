@@ -1,0 +1,73 @@
+//! Minimal property-based testing harness.
+//!
+//! `proptest` is not available in the offline vendor set, so this module
+//! provides the small subset the test suite needs: run a property over many
+//! seeded random cases and, on failure, report the seed so the case can be
+//! replayed deterministically.
+
+use super::rng::Rng;
+
+/// Number of cases per property (overridable via `EDGEPIPE_PROP_CASES`).
+pub fn default_cases() -> u32 {
+    std::env::var("EDGEPIPE_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` against `cases` seeded RNGs; panic with the failing seed on
+/// the first violated case.
+pub fn check_with<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, cases: u32, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0xE06E_0000_0000_0000u64 ^ (case as u64).wrapping_mul(0x9E37_79B9);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Run with the default number of cases.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, prop: F) {
+    check_with(name, default_cases(), prop)
+}
+
+/// Convenience assertion for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check_with("count", 10, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fail`")]
+    fn failing_property_panics_with_seed() {
+        check_with("fail", 10, |r| {
+            let x = r.below(100);
+            prop_assert!(x < 50, "x={x} not < 50");
+            Ok(())
+        });
+    }
+}

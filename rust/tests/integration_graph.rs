@@ -1,0 +1,76 @@
+//! Integration: model surgery -> DLA planning -> cost model, end to end
+//! over the paper-scale graphs.
+
+use edgepipe::config::GanVariant;
+use edgepipe::cost::latency::LatencyModel;
+use edgepipe::dla::{plan, planner::plan_with_island, DlaVersion};
+use edgepipe::hw::{orin, EngineKind};
+use edgepipe::models::pix2pix::{discriminator, generator, Pix2PixConfig};
+use edgepipe::models::resnet::{resnet101, resnet50};
+use edgepipe::models::vgg::vgg19;
+use edgepipe::models::yolov8::{yolov8, YoloConfig};
+
+#[test]
+fn all_models_build_and_validate() {
+    let cfg = Pix2PixConfig::paper();
+    for v in GanVariant::all() {
+        generator(&cfg, v).unwrap().validate().unwrap();
+    }
+    discriminator(&cfg).unwrap().validate().unwrap();
+    yolov8(&YoloConfig::nano()).unwrap().validate().unwrap();
+    resnet50(224).unwrap().validate().unwrap();
+    resnet101(224).unwrap().validate().unwrap();
+    vgg19(224).unwrap().validate().unwrap();
+}
+
+#[test]
+fn surgery_to_planning_pipeline() {
+    // The full contribution chain: original model falls back; surgery
+    // makes it resident; the planner agrees; latency reflects it.
+    let cfg = Pix2PixConfig::paper();
+    let soc = orin();
+    let m = LatencyModel::new(soc);
+
+    let orig = generator(&cfg, GanVariant::Original).unwrap();
+    let orig_plan = plan(&orig, DlaVersion::V2, 16).unwrap();
+    assert!(!orig_plan.fully_dla_resident());
+    assert_eq!(orig_plan.fallback_reasons.len(), 8); // the 8 padded deconvs
+
+    for v in [GanVariant::Cropping, GanVariant::Convolution] {
+        let g = generator(&cfg, v).unwrap();
+        let p = plan(&g, DlaVersion::V2, 16).unwrap();
+        assert!(p.fully_dla_resident(), "{v:?}");
+        // standalone: modified slower than the island-merged original plan
+        let orig_eff = plan_with_island(&orig, DlaVersion::V2, 16, 3).unwrap();
+        assert!(m.plan_latency(&g, &p) > m.plan_latency(&orig, &orig_eff));
+    }
+}
+
+#[test]
+fn interface_preserved_across_variants() {
+    let cfg = Pix2PixConfig::paper();
+    let reference = generator(&cfg, GanVariant::Original).unwrap();
+    let out_ref = reference.node(reference.outputs()[0]).shape;
+    for v in GanVariant::all() {
+        let g = generator(&cfg, v).unwrap();
+        assert_eq!(g.node(g.outputs()[0]).shape, out_ref, "{v:?}");
+        let input = g.node(g.inputs()[0]).shape;
+        assert_eq!((input.c, input.h, input.w), (3, 256, 256));
+    }
+}
+
+#[test]
+fn dla_latency_ordering_consistent() {
+    // DLA is slower than GPU for each full variant, both engines are
+    // faster than CPU.
+    let soc = orin();
+    let m = LatencyModel::new(soc);
+    for v in GanVariant::all() {
+        let g = generator(&Pix2PixConfig::paper(), v).unwrap();
+        let gpu = m.graph_latency(&g, EngineKind::Gpu);
+        let dla = m.graph_latency(&g, EngineKind::Dla);
+        let cpu = m.graph_latency(&g, EngineKind::Cpu);
+        assert!(gpu < dla, "{v:?}");
+        assert!(dla < cpu, "{v:?}");
+    }
+}

@@ -1,0 +1,102 @@
+//! Integration: the full serving pipeline over real artifacts.
+
+use edgepipe::config::{GanVariant, PipelineConfig, Workload};
+use edgepipe::pipeline::run_pipeline;
+use std::path::Path;
+
+fn artifacts_ready() -> bool {
+    Path::new("artifacts/gen_cropping.hlo.txt").exists()
+        && Path::new("artifacts/yolo_lite.hlo.txt").exists()
+}
+
+#[test]
+fn standalone_pipeline_reconstructs_accurately() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = PipelineConfig {
+        variant: GanVariant::Cropping,
+        workload: Workload::GanStandalone,
+        frames: 24,
+        ..PipelineConfig::default()
+    };
+    let rep = run_pipeline(&cfg).unwrap();
+    assert_eq!(rep.instances[0].frames, 24);
+    assert_eq!(rep.dropped, 0);
+    // trained model quality bar (well above the ~13 dB of an untrained net)
+    assert!(
+        rep.instances[0].psnr_mean > 25.0,
+        "psnr {}",
+        rep.instances[0].psnr_mean
+    );
+    assert!(rep.instances[0].ssim_pct_mean > 80.0);
+}
+
+#[test]
+fn gan_plus_yolo_pipeline_processes_both() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = PipelineConfig {
+        variant: GanVariant::Cropping,
+        workload: Workload::GanPlusYolo,
+        frames: 16,
+        ..PipelineConfig::default()
+    };
+    let rep = run_pipeline(&cfg).unwrap();
+    assert_eq!(rep.instances.len(), 2);
+    assert_eq!(rep.instances[0].frames, 16);
+    assert_eq!(rep.instances[1].frames, 16);
+    assert!(rep.instances[0].latency_ms_p50 > 0.0);
+}
+
+#[test]
+fn two_gans_round_robin_splits_frames() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = PipelineConfig {
+        variant: GanVariant::Cropping,
+        workload: Workload::TwoGans,
+        frames: 20,
+        ..PipelineConfig::default()
+    };
+    let rep = run_pipeline(&cfg).unwrap();
+    assert_eq!(rep.instances[0].frames + rep.instances[1].frames, 20);
+    assert_eq!(rep.instances[0].frames, 10);
+}
+
+#[test]
+fn multi_stream_client_server() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = PipelineConfig {
+        variant: GanVariant::Cropping,
+        workload: Workload::TwoGans,
+        frames: 16,
+        streams: 4,
+        max_batch: 4,
+        batch_timeout_us: 2000,
+        ..PipelineConfig::default()
+    };
+    let rep = run_pipeline(&cfg).unwrap();
+    // 4 streams x 4 frames, split across instances by stream
+    assert_eq!(rep.instances[0].frames + rep.instances[1].frames, 16);
+    assert_eq!(rep.dropped, 0);
+}
+
+#[test]
+fn missing_artifacts_fail_fast() {
+    let cfg = PipelineConfig {
+        artifact_dir: "/nonexistent".into(),
+        frames: 1,
+        ..PipelineConfig::default()
+    };
+    let err = run_pipeline(&cfg).unwrap_err();
+    assert!(err.to_string().contains("make artifacts"));
+}

@@ -1,0 +1,131 @@
+//! Integration: scheduler -> simulator over the paper's three experiment
+//! families, asserting the *shape* results of the evaluation section.
+
+use edgepipe::config::GanVariant;
+use edgepipe::dla::DlaVersion;
+use edgepipe::hw::{orin, EngineKind};
+use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
+use edgepipe::models::yolov8::{yolov8, YoloConfig};
+use edgepipe::sched::{haxconn, naive};
+use edgepipe::sim::{simulate, SimConfig};
+
+fn gan(v: GanVariant) -> edgepipe::graph::Graph {
+    generator(&Pix2PixConfig::paper(), v).unwrap()
+}
+
+#[test]
+fn fig9_standalone_ordering() {
+    // original > cropping > convolution standalone.
+    let soc = orin();
+    let mut fps = Vec::new();
+    for v in GanVariant::all() {
+        let g = gan(v);
+        let sched = naive::standalone(&g, EngineKind::Dla);
+        let mut cfg = SimConfig::new(soc.clone(), 48);
+        cfg.max_inflight = 1;
+        let r = simulate(&[&g], &sched, &cfg).unwrap();
+        fps.push(r.instances[0].fps);
+    }
+    assert!(fps[0] > fps[1], "original {} vs crop {}", fps[0], fps[1]);
+    assert!(fps[1] > fps[2], "crop {} vs conv {}", fps[1], fps[2]);
+}
+
+#[test]
+fn fig11_naive_concurrent_gpu_uplift() {
+    // Hardware-aware models lift concurrent GPU (YOLO) throughput.
+    let soc = orin();
+    let y = yolov8(&YoloConfig::nano()).unwrap();
+    let run = |v: GanVariant| {
+        let g = gan(v);
+        let sched = naive::gan_dla_yolo_gpu(&g, &y);
+        let r = simulate(&[&g, &y], &sched, &SimConfig::new(soc.clone(), 96)).unwrap();
+        (r.instances[1].fps, r.instances[0].fps) // (gpu yolo, dla gan)
+    };
+    let (gpu_orig, _) = run(GanVariant::Original);
+    let (gpu_crop, dla_crop) = run(GanVariant::Cropping);
+    let (gpu_conv, dla_conv) = run(GanVariant::Convolution);
+    assert!(
+        gpu_crop > gpu_orig * 1.05,
+        "crop must lift GPU throughput: {gpu_crop} vs {gpu_orig}"
+    );
+    assert!(gpu_conv > gpu_orig * 1.05);
+    // Fig 12: DLA throughput of crop beats conv (fewer layers).
+    assert!(dla_crop > dla_conv);
+}
+
+#[test]
+fn table4_two_gans_balance() {
+    let soc = orin();
+    // Modified variants: balanced FPS between the two instances.
+    for v in [GanVariant::Cropping, GanVariant::Convolution] {
+        let g = gan(v);
+        let (sched, _) = haxconn::two_gans(&g, &soc, DlaVersion::V2).unwrap();
+        let r = simulate(&[&g], &sched, &SimConfig::new(soc.clone(), 128)).unwrap();
+        let a = r.instances[0].fps;
+        let b = r.instances[1].fps;
+        let ratio = a.max(b) / a.min(b);
+        assert!(ratio < 1.15, "{v:?} unbalanced: {a} vs {b}");
+    }
+    // Original: unbalanced (GPU-dominant instance much faster).
+    let g = gan(GanVariant::Original);
+    let (sched, _) = haxconn::two_gans(&g, &soc, DlaVersion::V2).unwrap();
+    let r = simulate(&[&g], &sched, &SimConfig::new(soc.clone(), 128)).unwrap();
+    let gpu = r.fps_of_home(EngineKind::Gpu).unwrap();
+    let dla = r.fps_of_home(EngineKind::Dla).unwrap();
+    assert!(gpu > dla * 1.2, "original should be unbalanced: {gpu} vs {dla}");
+}
+
+#[test]
+fn fig13_fragmentation() {
+    // Original: many small DLA blocks; modified: few large blocks.
+    let soc = orin();
+    let stats = |v: GanVariant| {
+        let g = gan(v);
+        let (sched, _) = haxconn::two_gans(&g, &soc, DlaVersion::V2).unwrap();
+        let r = simulate(&[&g], &sched, &SimConfig::new(soc.clone(), 64)).unwrap();
+        let ds = r.timeline.engine_stats(EngineKind::Dla);
+        (ds.span_count, ds.mean_block)
+    };
+    let (blocks_orig, mean_orig) = stats(GanVariant::Original);
+    let (blocks_crop, mean_crop) = stats(GanVariant::Cropping);
+    assert!(
+        blocks_orig > 2 * blocks_crop,
+        "fragmentation: {blocks_orig} vs {blocks_crop}"
+    );
+    assert!(mean_crop > 2.0 * mean_orig, "block size: {mean_crop} vs {mean_orig}");
+}
+
+#[test]
+fn table6_gan_yolo_balance() {
+    let soc = orin();
+    let y = yolov8(&YoloConfig::nano()).unwrap();
+    for v in [GanVariant::Cropping, GanVariant::Convolution] {
+        let g = gan(v);
+        let (sched, _) = haxconn::gan_plus_yolo(&g, &y, &soc, DlaVersion::V2).unwrap();
+        let r = simulate(&[&g, &y], &sched, &SimConfig::new(soc.clone(), 128)).unwrap();
+        let a = r.instances[0].fps;
+        let b = r.instances[1].fps;
+        assert!((a.max(b) / a.min(b)) < 1.15, "{v:?}: {a} vs {b}");
+        // ~150 fps class on the calibrated Orin
+        assert!(a > 100.0 && a < 260.0, "{v:?} fps {a}");
+    }
+}
+
+#[test]
+fn haxconn_beats_naive_for_modified_models() {
+    // The headline: partitioned scheduling outperforms naive pinning in
+    // total throughput for the DLA-compatible models.
+    let soc = orin();
+    let y = yolov8(&YoloConfig::nano()).unwrap();
+    let g = gan(GanVariant::Cropping);
+    let naive_sched = naive::gan_dla_yolo_gpu(&g, &y);
+    let rn = simulate(&[&g, &y], &naive_sched, &SimConfig::new(soc.clone(), 96)).unwrap();
+    let (hax, _) = haxconn::gan_plus_yolo(&g, &y, &soc, DlaVersion::V2).unwrap();
+    let rh = simulate(&[&g, &y], &hax, &SimConfig::new(soc.clone(), 96)).unwrap();
+    let naive_total: f64 = rn.instances.iter().map(|i| i.fps).sum();
+    let hax_total: f64 = rh.instances.iter().map(|i| i.fps).sum();
+    assert!(
+        hax_total > naive_total,
+        "haxconn {hax_total} should beat naive {naive_total}"
+    );
+}

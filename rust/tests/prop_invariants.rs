@@ -1,0 +1,205 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! scheduling, simulation, codecs) using the in-tree harness.
+
+use edgepipe::config::GanVariant;
+use edgepipe::dla::planner::assign_engines;
+use edgepipe::dla::DlaVersion;
+use edgepipe::hw::{orin, EngineKind};
+use edgepipe::imaging::lzw;
+use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
+use edgepipe::postproc::{iou, nms, Detection};
+use edgepipe::prop_assert;
+use edgepipe::sched::{expand_fallback_with, SegmentPlan};
+use edgepipe::sim::{simulate, SimConfig};
+use edgepipe::util::prop::check;
+use edgepipe::util::rng::Rng;
+
+#[test]
+fn prop_lzw_roundtrip() {
+    check("lzw roundtrip", |rng: &mut Rng| {
+        let len = rng.below(4000) as usize;
+        // mixed entropy: runs + random
+        let mut data = Vec::with_capacity(len);
+        while data.len() < len {
+            if rng.chance(0.5) {
+                let b = rng.below(256) as u8;
+                for _ in 0..rng.below(20) + 1 {
+                    data.push(b);
+                }
+            } else {
+                data.push(rng.below(256) as u8);
+            }
+        }
+        data.truncate(len);
+        let back = lzw::decompress(&lzw::compress(&data), data.len())
+            .map_err(|e| e.to_string())?;
+        prop_assert!(back == data, "roundtrip mismatch at len {len}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fallback_expansion_partitions() {
+    // For any segment range, fallback expansion covers exactly that range
+    // in order, regardless of min_island.
+    let g = generator(&Pix2PixConfig::paper(), GanVariant::Original).unwrap();
+    let n = g.compute_layers().len();
+    check("fallback partition", |rng: &mut Rng| {
+        let a = rng.below(n as u64) as usize;
+        let b = a + 1 + rng.below((n - a) as u64) as usize;
+        let min_island = 1 + rng.below(6) as usize;
+        let seg = SegmentPlan { engine: EngineKind::Dla, start: a, end: b };
+        let steps = expand_fallback_with(&g, &seg, DlaVersion::V2, min_island);
+        let flat: Vec<_> = steps.iter().flat_map(|(_, v)| v.clone()).collect();
+        let expect = &g.compute_layers()[a..b];
+        prop_assert!(flat == expect, "range [{a},{b}) not covered");
+        // consecutive steps alternate engines
+        for w in steps.windows(2) {
+            prop_assert!(w[0].0 != w[1].0, "adjacent steps share an engine");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_assign_engines_no_small_islands() {
+    check("island merge", |rng: &mut Rng| {
+        let n = 1 + rng.below(64) as usize;
+        let flags: Vec<bool> = (0..n).map(|_| rng.chance(0.6)).collect();
+        let min_island = 1 + rng.below(5) as usize;
+        let engines = assign_engines(&flags, min_island);
+        prop_assert!(engines.len() == n);
+        // no DLA island shorter than min_island may touch a GPU run
+        let mut i = 0;
+        while i < n {
+            if engines[i] == EngineKind::Dla {
+                let start = i;
+                while i < n && engines[i] == EngineKind::Dla {
+                    i += 1;
+                }
+                let len = i - start;
+                let touches_gpu = start > 0 || i < n;
+                if touches_gpu && min_island > 1 {
+                    prop_assert!(
+                        len >= min_island,
+                        "island of {len} survived (min {min_island})"
+                    );
+                }
+            } else {
+                i += 1;
+            }
+        }
+        // incompatible layers never land on DLA
+        for (f, e) in flags.iter().zip(engines.iter()) {
+            if !f {
+                prop_assert!(*e == EngineKind::Gpu, "incompatible layer on DLA");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nms_output_is_antichain() {
+    check("nms antichain", |rng: &mut Rng| {
+        let n = rng.below(40) as usize;
+        let dets: Vec<Detection> = (0..n)
+            .map(|_| {
+                let x0 = rng.range_f64(0.0, 50.0) as f32;
+                let y0 = rng.range_f64(0.0, 50.0) as f32;
+                Detection {
+                    x0,
+                    y0,
+                    x1: x0 + rng.range_f64(1.0, 20.0) as f32,
+                    y1: y0 + rng.range_f64(1.0, 20.0) as f32,
+                    score: rng.next_f32(),
+                    class: rng.below(3) as usize,
+                }
+            })
+            .collect();
+        let thr = 0.3 + 0.4 * rng.next_f32();
+        let kept = nms(dets.clone(), thr);
+        prop_assert!(kept.len() <= dets.len());
+        // no two kept boxes of the same class overlap above threshold
+        for (i, a) in kept.iter().enumerate() {
+            for b in kept.iter().skip(i + 1) {
+                if a.class == b.class {
+                    prop_assert!(iou(a, b) < thr, "kept boxes overlap");
+                }
+            }
+        }
+        // scores are sorted descending
+        for w in kept.windows(2) {
+            prop_assert!(w[0].score >= w[1].score);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulator_conservation() {
+    // All admitted frames complete; per-engine spans never overlap; the
+    // makespan bounds every span.
+    let g = generator(&Pix2PixConfig::paper(), GanVariant::Cropping).unwrap();
+    let soc = orin();
+    check("sim conservation", |rng: &mut Rng| {
+        let frames = 4 + rng.below(24) as usize;
+        let n = g.compute_layers().len();
+        let p = 1 + rng.below(n as u64 - 1) as usize;
+        let sched = edgepipe::sched::Schedule {
+            instances: vec![edgepipe::sched::InstanceSchedule {
+                model: 0,
+                label: "x".into(),
+                segments: vec![
+                    SegmentPlan { engine: EngineKind::Dla, start: 0, end: p },
+                    SegmentPlan { engine: EngineKind::Gpu, start: p, end: n },
+                ],
+            }],
+        };
+        let mut cfg = SimConfig::new(soc.clone(), frames);
+        cfg.max_inflight = 1 + rng.below(4) as usize;
+        let r = simulate(&[&g], &sched, &cfg).map_err(|e| e.to_string())?;
+        prop_assert!(r.instances[0].frames == frames, "lost frames");
+        let makespan = r.makespan;
+        for sp in &r.timeline.spans {
+            prop_assert!(sp.t1 <= makespan + 1e-9);
+            prop_assert!(sp.t0 <= sp.t1);
+        }
+        for engine in [EngineKind::Gpu, EngineKind::Dla] {
+            let mut spans: Vec<_> = r
+                .timeline
+                .spans
+                .iter()
+                .filter(|s| s.engine == engine && !s.is_transition)
+                .collect();
+            spans.sort_by(|a, b| a.t0.partial_cmp(&b.t0).unwrap());
+            for w in spans.windows(2) {
+                prop_assert!(w[1].t0 >= w[0].t1 - 1e-9, "engine overlap");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schedule_validation_rejects_gaps() {
+    check("schedule gaps", |rng: &mut Rng| {
+        let n = 10 + rng.below(50) as usize;
+        let a = 1 + rng.below(n as u64 - 2) as usize;
+        // gap: second segment starts past `a`
+        let gap_start = a + 1 + rng.below((n - a) as u64) as usize;
+        if gap_start >= n {
+            return Ok(());
+        }
+        let inst = edgepipe::sched::InstanceSchedule {
+            model: 0,
+            label: "g".into(),
+            segments: vec![
+                SegmentPlan { engine: EngineKind::Dla, start: 0, end: a },
+                SegmentPlan { engine: EngineKind::Gpu, start: gap_start, end: n },
+            ],
+        };
+        prop_assert!(inst.validate(n).is_err(), "gap accepted");
+        Ok(())
+    });
+}
