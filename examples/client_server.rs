@@ -1,24 +1,29 @@
 //! Client-server scheme (Fig 1 B): several hospital CT streams multiplexed
-//! into the reconstruction service under the naive schedule, with two GAN
-//! instances sharing the load (ByStream routing) and dynamic batching.
+//! into the reconstruction service, composed explicitly with the session
+//! API — two GAN instances sharing the load (ByStream routing) and dynamic
+//! batching set per instance through `PipelineBuilder`.
 
-use edgepipe::config::{GanVariant, PipelineConfig, Workload};
-use edgepipe::pipeline::run_pipeline;
+use edgepipe::config::{GanVariant, Workload};
+use edgepipe::pipeline::batcher::BatchPolicy;
+use edgepipe::pipeline::router::RoutePolicy;
+use edgepipe::session::Session;
+use std::time::Duration;
 
 fn main() -> edgepipe::Result<()> {
     println!("== Client-server scheme: 4 hospital streams, two GAN instances ==");
     for variant in GanVariant::all() {
-        let cfg = PipelineConfig {
-            variant,
-            workload: Workload::TwoGans,
-            frames: 128,
-            streams: 4,
-            queue_depth: 16,
-            max_batch: 4,
-            batch_timeout_us: 2000,
-            ..PipelineConfig::default()
-        };
-        let rep = run_pipeline(&cfg)?;
+        let session = Session::builder()
+            .workload(Workload::TwoGans, variant)
+            .route(RoutePolicy::ByStream)
+            .batch(BatchPolicy {
+                max_batch: 4,
+                timeout: Duration::from_micros(2000),
+            })
+            .frames(128)
+            .streams(4)
+            .queue_depth(16)
+            .build()?;
+        let rep = session.run()?;
         println!(
             "{:<14} total {:>6.1} fps over {} frames ({} dropped)",
             variant.name(),

@@ -1,13 +1,18 @@
 //! Hardware sweep: every experiment on both Jetson devices (Xavier vs
 //! Orin), showing the Orin advantage the paper's §III.A quotes, plus the
-//! subgraph-limit failure mode from §II.C.
+//! subgraph-limit failure mode from §II.C — and the same device sweep
+//! through the serving pipeline itself, by pointing the session API at
+//! `SimBackend` (no artifacts needed).
 
-use edgepipe::config::GanVariant;
+use edgepipe::config::{GanVariant, Workload};
 use edgepipe::dla::{planner, DlaVersion};
 use edgepipe::hw::{orin, xavier, EngineKind};
 use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
+use edgepipe::pipeline::SimBackend;
 use edgepipe::sched::haxconn;
+use edgepipe::session::Session;
 use edgepipe::sim::{simulate, SimConfig};
+use std::sync::Arc;
 
 fn main() -> edgepipe::Result<()> {
     for (soc, version) in [(xavier(), DlaVersion::V1), (orin(), DlaVersion::V2)] {
@@ -42,5 +47,24 @@ fn main() -> edgepipe::Result<()> {
         p.dla_subgraphs,
         p.fully_dla_resident()
     );
+
+    // Serving-pipeline sweep: the production coordinator (session API)
+    // priced per device by the latency-model backend.
+    println!("== Serving pipeline on SimBackend (GAN+YOLO, 64 frames) ==");
+    for soc in [xavier(), orin()] {
+        let session = Session::builder()
+            .workload(Workload::GanPlusYolo, GanVariant::Cropping)
+            .frames(64)
+            .backend(Arc::new(SimBackend::new(soc.clone())))
+            .build()?;
+        let rep = session.run()?;
+        println!(
+            "  {:<18} total {:>6.1} fps ({} frames, {} dropped)",
+            soc.name,
+            rep.total_fps(),
+            rep.total_frames,
+            rep.dropped
+        );
+    }
     Ok(())
 }

@@ -1,5 +1,19 @@
 //! Quickstart: load the AOT artifacts, reconstruct an MRI from one CT
-//! phantom, diagnose it with the detector, and save the images (Fig 7).
+//! phantom, diagnose it with the detector, save the images (Fig 7), then
+//! serve the same two models as a streaming pipeline through the session
+//! API:
+//!
+//! ```text
+//! Session::builder()
+//!     .instance(InstanceSpec::new("gan", "gen_cropping").scored(true))
+//!     .instance(InstanceSpec::new("yolo", "yolo_lite"))
+//!     .route(RoutePolicy::Fanout)
+//!     .build()?
+//!     .run()?
+//! ```
+//!
+//! (The historical `Workload` enum arms are sugar: presets that lower
+//! into the same `PipelineSpec`s.)
 //!
 //! ```text
 //! make artifacts && cargo run --release --example quickstart
@@ -8,8 +22,11 @@
 use edgepipe::imaging::metrics::fidelity;
 use edgepipe::imaging::phantom::{paired_sample, PhantomConfig};
 use edgepipe::imaging::Image;
+use edgepipe::pipeline::router::RoutePolicy;
+use edgepipe::pipeline::spec::InstanceSpec;
 use edgepipe::postproc;
 use edgepipe::runtime::{Artifact, RuntimeClient};
+use edgepipe::session::Session;
 use edgepipe::util::rng::Rng;
 use std::path::Path;
 
@@ -70,5 +87,20 @@ fn main() -> edgepipe::Result<()> {
     sample.mri.save_pgm(Path::new("target/quickstart/mri_ground_truth.pgm"))?;
     mri_img.save_pgm(Path::new("target/quickstart/mri_reconstructed.pgm"))?;
     println!("wrote target/quickstart/{{ct_input,mri_ground_truth,mri_reconstructed}}.pgm");
+
+    // --- The same two models as a served pipeline (session API) ---
+    let session = Session::builder()
+        .instance(InstanceSpec::new("gan", "gen_cropping").scored(true))
+        .instance(InstanceSpec::new("yolo", "yolo_lite"))
+        .route(RoutePolicy::Fanout)
+        .frames(32)
+        .build()?;
+    let rep = session.run()?;
+    println!(
+        "served 32 CT frames: total {:.1} fps, {} dropped, gan psnr {:.2}",
+        rep.total_fps(),
+        rep.dropped,
+        rep.instances[0].psnr_mean
+    );
     Ok(())
 }

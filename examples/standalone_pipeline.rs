@@ -6,20 +6,24 @@
 //!    schedule (L3 scheduling contribution);
 //! 2. simulates the schedule on the calibrated Orin SoC model (the timing
 //!    claim — Tables V/VI);
-//! 3. streams 256 synthetic CT frames through the *real* coordinator:
-//!    router → batcher → workers executing the AOT-compiled JAX/Pallas
-//!    artifacts via PJRT (L1/L2 numerics), reporting measured
-//!    latency/throughput and online reconstruction PSNR/SSIM.
+//! 3. streams 256 synthetic CT frames through the *real* coordinator via
+//!    the composable session API —
+//!    `Session::builder().workload(...).build()?.run()?` — with workers
+//!    executing the AOT-compiled JAX/Pallas artifacts through PJRT
+//!    (L1/L2 numerics), reporting measured latency/throughput and online
+//!    reconstruction PSNR/SSIM. The `Workload` arms are presets lowering
+//!    into `PipelineSpec`s; arbitrary instance mixes use
+//!    `.instance(InstanceSpec::new(...))` instead.
 //!
 //! Results are recorded in EXPERIMENTS.md §E2E.
 
-use edgepipe::config::{GanVariant, PipelineConfig, Workload};
+use edgepipe::config::{GanVariant, Workload};
 use edgepipe::dla::DlaVersion;
 use edgepipe::hw::{orin, EngineKind};
 use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
 use edgepipe::models::yolov8::{yolov8, YoloConfig};
-use edgepipe::pipeline::run_pipeline;
 use edgepipe::sched::haxconn;
+use edgepipe::session::Session;
 use edgepipe::sim::{simulate, SimConfig};
 
 fn main() -> edgepipe::Result<()> {
@@ -60,20 +64,19 @@ fn main() -> edgepipe::Result<()> {
         ds.utilization * 100.0
     );
 
-    // ---- 3. Real serving through PJRT ----
+    // ---- 3. Real serving through PJRT (session API) ----
     println!("== Real PJRT serving (256 frames) ==");
-    let cfg = PipelineConfig {
-        variant,
-        workload: Workload::GanPlusYolo,
-        frames: 256,
-        ..PipelineConfig::default()
-    };
-    let rep = run_pipeline(&cfg)?;
+    let session = Session::builder()
+        .workload(Workload::GanPlusYolo, variant)
+        .frames(256)
+        .build()?;
+    let rep = session.run()?;
     println!(
-        "  processed {} frames in {:.2} s (total pipeline {:.1} fps)",
+        "  processed {} frames in {:.2} s (total pipeline {:.1} fps, {} dropped)",
         rep.total_frames,
         rep.wall_seconds,
-        rep.total_fps()
+        rep.total_fps(),
+        rep.dropped
     );
     for inst in &rep.instances {
         println!(

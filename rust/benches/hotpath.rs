@@ -1,5 +1,6 @@
 //! Hot-path micro-benches for the performance pass (EXPERIMENTS.md §Perf):
-//! simulator event throughput, scheduler search, NMS, JSON, PJRT execute.
+//! simulator event throughput, scheduler search, NMS, JSON, frame routing,
+//! coordinator overhead, PJRT execute.
 
 mod bench_util;
 
@@ -9,11 +10,15 @@ use edgepipe::config::GanVariant;
 use edgepipe::hw::orin;
 use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
 use edgepipe::models::yolov8::{yolov8, YoloConfig};
+use edgepipe::pipeline::router::{RoutePolicy, Router};
+use edgepipe::pipeline::{Frame, InferenceBackend, InstanceSpec, SimBackend};
 use edgepipe::postproc::{nms, Detection};
 use edgepipe::sched::haxconn;
+use edgepipe::session::Session;
 use edgepipe::sim::{simulate, SimConfig};
 use edgepipe::util::rng::Rng;
-use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
 
 fn main() {
     let soc = orin();
@@ -43,6 +48,64 @@ fn main() {
         "{:<40} {:>10.2}x",
         "hotpath/trace_overhead",
         ms_tl / ms
+    );
+
+    // Router hot path: `route` returns an allocation-free iterator (was a
+    // Vec<usize> per frame). 100k routed frames per iteration; the fanout
+    // case is the one that used to allocate an 8-element Vec every frame.
+    let rframe = Frame {
+        id: 0,
+        stream: 3,
+        data: Vec::new(),
+        width: 0,
+        height: 0,
+        gt_mri: None,
+        admitted: Instant::now(),
+    };
+    let mut route_sink = 0usize;
+    for (policy, label) in [
+        (RoutePolicy::Fanout, "route_fanout8_100k_frames"),
+        (RoutePolicy::RoundRobin, "route_rr8_100k_frames"),
+        (RoutePolicy::ByStream, "route_bystream8_100k_frames"),
+    ] {
+        let mut router = Router::new(policy, 8);
+        let ms = b.measure(label, 200, || {
+            for _ in 0..100_000 {
+                route_sink = route_sink.wrapping_add(router.route(&rframe).sum::<usize>());
+            }
+        });
+        println!(
+            "{:<40} {:>10.0} routes/s",
+            format!("hotpath/{label}_rate"),
+            100_000.0 / (ms / 1e3)
+        );
+    }
+    println!("route checksum: {route_sink}");
+
+    // Coordinator overhead: a full 2-instance fanout session on the sim
+    // backend with latencies zeroed and fidelity scoring off, so the
+    // measurement is source synthesis + channels + router + batcher +
+    // metrics + thread handoff (phantom generation is part of the serving
+    // loop and stays in; per-frame SSIM would otherwise dominate). Built
+    // once outside the loop to keep build/prepare graph pricing out.
+    let backend: Arc<dyn InferenceBackend> =
+        Arc::new(SimBackend::new(orin()).with_time_scale(0.0));
+    let session_frames = 256usize;
+    let session = Session::builder()
+        .instance(InstanceSpec::new("gan", "gen_cropping"))
+        .instance(InstanceSpec::new("yolo", "yolo_lite"))
+        .route(RoutePolicy::Fanout)
+        .frames(session_frames)
+        .backend(Arc::clone(&backend))
+        .build()
+        .unwrap();
+    let ms = b.measure("session_sim_fanout_256_frames", 1000, || {
+        session.run().unwrap();
+    });
+    println!(
+        "{:<40} {:>10.0} frames/s",
+        "hotpath/session_overhead_rate",
+        session_frames as f64 / (ms / 1e3)
     );
 
     // NMS over 1k random boxes.
@@ -78,6 +141,12 @@ fn main() {
     });
 
     // PJRT execute on the real artifact if available.
+    pjrt_benches(&b);
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_benches(b: &Bench) {
+    use std::path::Path;
     if Path::new("artifacts/gen_cropping.hlo.txt").exists() {
         let client = edgepipe::runtime::RuntimeClient::cpu().unwrap();
         let a = edgepipe::runtime::Artifact::load(&client, Path::new("artifacts"), "gen_cropping")
@@ -94,4 +163,9 @@ fn main() {
     } else {
         println!("artifacts missing; skipping PJRT benches");
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_benches(_b: &Bench) {
+    println!("pjrt feature disabled; skipping PJRT benches");
 }

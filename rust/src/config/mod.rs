@@ -8,8 +8,13 @@
 pub mod json;
 
 use crate::error::{Error, Result};
+use crate::hw::EngineKind;
+use crate::pipeline::batcher::BatchPolicy;
+use crate::pipeline::router::RoutePolicy;
+use crate::pipeline::spec::{check_artifact_name, InstanceSpec, PipelineSpec};
 use json::Json;
 use std::path::Path;
+use std::time::Duration;
 
 /// Which Jetson device the simulator models.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -137,6 +142,57 @@ impl Workload {
             Workload::GanPlusYolo => "gan+yolo",
         }
     }
+
+    pub fn all() -> [Workload; 4] {
+        [
+            Workload::GanStandalone,
+            Workload::GanPlusYoloNaive,
+            Workload::TwoGans,
+            Workload::GanPlusYolo,
+        ]
+    }
+
+    /// Lower this preset into an open [`PipelineSpec`] — the four
+    /// historical arms are now sugar over the composable pipeline API.
+    /// Engine placements follow the paper's deployments (GAN on the DLA
+    /// next to YOLO on the GPU; two GANs split across engines); only the
+    /// sim backend prices them, the PJRT path runs on the CPU client.
+    pub fn spec(self, variant: GanVariant) -> PipelineSpec {
+        let gan = format!("gen_{}", variant.name());
+        let (instances, route) = match self {
+            Workload::GanStandalone => (
+                vec![InstanceSpec::new("gan", gan)
+                    .on_engine(EngineKind::Gpu)
+                    .scored(true)],
+                RoutePolicy::Fanout,
+            ),
+            Workload::GanPlusYoloNaive | Workload::GanPlusYolo => (
+                vec![
+                    InstanceSpec::new("gan", gan)
+                        .on_engine(EngineKind::Dla)
+                        .scored(true),
+                    InstanceSpec::new("yolo", "yolo_lite").on_engine(EngineKind::Gpu),
+                ],
+                RoutePolicy::Fanout,
+            ),
+            Workload::TwoGans => (
+                vec![
+                    InstanceSpec::new("gan-inst1", gan.clone())
+                        .on_engine(EngineKind::Gpu)
+                        .scored(true),
+                    InstanceSpec::new("gan-inst2", gan)
+                        .on_engine(EngineKind::Dla)
+                        .scored(true),
+                ],
+                RoutePolicy::RoundRobin,
+            ),
+        };
+        PipelineSpec {
+            instances,
+            route,
+            ..PipelineSpec::default()
+        }
+    }
 }
 
 /// Top-level pipeline configuration.
@@ -162,6 +218,12 @@ pub struct PipelineConfig {
     pub artifact_dir: String,
     /// Run real PJRT inference for every frame (vs timing-only simulation).
     pub execute_numerics: bool,
+    /// Explicit instance set (the open `instances: [...]` config array).
+    /// When non-empty it overrides the `workload` preset entirely.
+    pub instances: Vec<InstanceSpec>,
+    /// Explicit route policy; `None` derives it from the workload and
+    /// stream count (the pre-refactor behavior).
+    pub route: Option<RoutePolicy>,
 }
 
 impl Default for PipelineConfig {
@@ -181,6 +243,8 @@ impl Default for PipelineConfig {
             seed: 0xED6E,
             artifact_dir: "artifacts".to_string(),
             execute_numerics: false,
+            instances: Vec::new(),
+            route: None,
         }
     }
 }
@@ -200,8 +264,14 @@ impl PipelineConfig {
             .as_obj()
             .ok_or_else(|| Error::Config("config root must be an object".into()))?;
         let mut cfg = PipelineConfig::default();
+        // `instances` entries default their batch policy to the top-level
+        // `max_batch`/`batch_timeout_us`, so parse them after the scalar
+        // keys (BTreeMap order would otherwise make this order-dependent).
+        let mut instances_json: Option<&Json> = None;
         for (key, val) in obj {
             match key.as_str() {
+                "instances" => instances_json = Some(val),
+                "route" => cfg.route = Some(RoutePolicy::parse(req_str(val, key)?)?),
                 "device" => cfg.device = DeviceKind::parse(req_str(val, key)?)?,
                 "variant" => cfg.variant = GanVariant::parse(req_str(val, key)?)?,
                 "scheduler" => cfg.scheduler = SchedulerKind::parse(req_str(val, key)?)?,
@@ -219,6 +289,18 @@ impl PipelineConfig {
                         .ok_or_else(|| Error::Config(format!("`{key}` must be a bool")))?
                 }
                 other => return Err(Error::Config(format!("unknown config key `{other}`"))),
+            }
+        }
+        if let Some(list) = instances_json {
+            let default_batch = BatchPolicy {
+                max_batch: cfg.max_batch,
+                timeout: Duration::from_micros(cfg.batch_timeout_us),
+            };
+            let entries = list
+                .as_arr()
+                .ok_or_else(|| Error::Config("`instances` must be an array".into()))?;
+            for entry in entries {
+                cfg.instances.push(parse_instance(entry, default_batch)?);
             }
         }
         cfg.validate()?;
@@ -239,12 +321,52 @@ impl PipelineConfig {
         if self.max_batch == 0 {
             return Err(Error::Config("max_batch must be > 0".into()));
         }
+        if !self.instances.is_empty() {
+            // Surface structural problems (duplicate labels, zero batch)
+            // at config-parse time rather than at session build.
+            self.spec().validate()?;
+        }
         Ok(())
+    }
+
+    /// Lower this config into the open [`PipelineSpec`]: explicit
+    /// `instances` win over the `workload` preset; the route defaults to
+    /// the pre-refactor derivation (`TwoGans` goes `ByStream` under
+    /// multi-stream load, everything else keeps its preset policy).
+    pub fn spec(&self) -> PipelineSpec {
+        let mut spec = if self.instances.is_empty() {
+            let mut spec = self.workload.spec(self.variant);
+            // Preset instances inherit the config-level batch policy.
+            let batch = BatchPolicy {
+                max_batch: self.max_batch,
+                timeout: Duration::from_micros(self.batch_timeout_us),
+            };
+            for inst in &mut spec.instances {
+                inst.batch = batch;
+            }
+            if self.workload == Workload::TwoGans && self.streams > 1 {
+                spec.route = RoutePolicy::ByStream;
+            }
+            spec
+        } else {
+            PipelineSpec {
+                instances: self.instances.clone(),
+                ..PipelineSpec::default()
+            }
+        };
+        if let Some(route) = self.route {
+            spec.route = route;
+        }
+        spec.frames = self.frames;
+        spec.streams = self.streams;
+        spec.queue_depth = self.queue_depth;
+        spec.seed = self.seed;
+        spec
     }
 
     /// Serialize back to JSON (for experiment provenance records).
     pub fn to_json(&self) -> Json {
-        json::obj(vec![
+        let mut pairs = vec![
             ("device", json::s(self.device.name())),
             ("variant", json::s(self.variant.name())),
             ("scheduler", json::s(self.scheduler.name())),
@@ -257,8 +379,92 @@ impl PipelineConfig {
             ("seed", json::num(self.seed as f64)),
             ("artifact_dir", json::s(&self.artifact_dir)),
             ("execute_numerics", Json::Bool(self.execute_numerics)),
-        ])
+        ];
+        if let Some(route) = self.route {
+            pairs.push(("route", json::s(route.name())));
+        }
+        if !self.instances.is_empty() {
+            let entries = self
+                .instances
+                .iter()
+                .map(|inst| {
+                    json::obj(vec![
+                        ("label", json::s(&inst.label)),
+                        ("artifact", json::s(&inst.artifact)),
+                        ("engine", json::s(&inst.engine.name().to_ascii_lowercase())),
+                        ("max_batch", json::num(inst.batch.max_batch as f64)),
+                        (
+                            "batch_timeout_us",
+                            json::num(inst.batch.timeout.as_micros() as f64),
+                        ),
+                        ("score_fidelity", Json::Bool(inst.score_fidelity)),
+                    ])
+                })
+                .collect();
+            pairs.push(("instances", json::arr(entries)));
+        }
+        json::obj(pairs)
     }
+}
+
+/// `EngineKind::parse` with the config-flavored error. All engine kinds
+/// are accepted so provenance records round-trip; the sim backend rejects
+/// placements its SoC model lacks with its own clear error.
+fn parse_engine(s: &str) -> Result<EngineKind> {
+    EngineKind::parse(s).ok_or_else(|| {
+        let known = EngineKind::ALL
+            .iter()
+            .map(|e| e.name().to_ascii_lowercase())
+            .collect::<Vec<_>>()
+            .join(", ");
+        Error::Config(format!("unknown engine `{s}` (known: {known})"))
+    })
+}
+
+/// Parse one entry of the `instances` config array into an [`InstanceSpec`].
+fn parse_instance(entry: &Json, default_batch: BatchPolicy) -> Result<InstanceSpec> {
+    let obj = entry
+        .as_obj()
+        .ok_or_else(|| Error::Config("each `instances` entry must be an object".into()))?;
+    let mut label: Option<String> = None;
+    let mut artifact: Option<String> = None;
+    let mut engine = EngineKind::Gpu;
+    let mut batch = default_batch;
+    let mut score: Option<bool> = None;
+    for (key, val) in obj {
+        match key.as_str() {
+            "label" => label = Some(req_str(val, key)?.to_string()),
+            "artifact" => artifact = Some(req_str(val, key)?.to_string()),
+            "engine" => engine = parse_engine(req_str(val, key)?)?,
+            "max_batch" => batch.max_batch = req_u64(val, key)? as usize,
+            "batch_timeout_us" => batch.timeout = Duration::from_micros(req_u64(val, key)?),
+            "score_fidelity" => {
+                score = Some(
+                    val.as_bool()
+                        .ok_or_else(|| Error::Config(format!("`{key}` must be a bool")))?,
+                )
+            }
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown instance key `{other}` (known: label, artifact, engine, \
+                     max_batch, batch_timeout_us, score_fidelity)"
+                )))
+            }
+        }
+    }
+    let artifact =
+        artifact.ok_or_else(|| Error::Config("`instances` entry missing `artifact`".into()))?;
+    check_artifact_name(&artifact)?;
+    let label = label.unwrap_or_else(|| artifact.clone());
+    // GAN-style reconstructions score fidelity by default.
+    let score_fidelity = score.unwrap_or_else(|| artifact.starts_with("gen_"));
+    Ok(InstanceSpec {
+        label,
+        artifact,
+        engine,
+        batch,
+        score_fidelity,
+    })
 }
 
 fn req_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
@@ -312,5 +518,112 @@ mod tests {
             SchedulerKind::HaxConn
         );
         assert_eq!(Workload::parse("2gan").unwrap(), Workload::TwoGans);
+    }
+
+    #[test]
+    fn workload_presets_lower_to_specs() {
+        for (w, n, route) in [
+            (Workload::GanStandalone, 1, RoutePolicy::Fanout),
+            (Workload::GanPlusYoloNaive, 2, RoutePolicy::Fanout),
+            (Workload::TwoGans, 2, RoutePolicy::RoundRobin),
+            (Workload::GanPlusYolo, 2, RoutePolicy::Fanout),
+        ] {
+            let spec = w.spec(GanVariant::Cropping);
+            assert_eq!(spec.instances.len(), n, "{w:?}");
+            assert_eq!(spec.route, route, "{w:?}");
+            spec.validate().unwrap();
+        }
+        let spec = Workload::TwoGans.spec(GanVariant::Original);
+        assert_eq!(spec.instances[0].artifact, "gen_original");
+        assert!(spec.instances[0].score_fidelity);
+    }
+
+    #[test]
+    fn config_lowering_matches_prerefactor_routes() {
+        // TwoGans: RoundRobin single-stream, ByStream multi-stream.
+        let mut cfg = PipelineConfig {
+            workload: Workload::TwoGans,
+            ..PipelineConfig::default()
+        };
+        assert_eq!(cfg.spec().route, RoutePolicy::RoundRobin);
+        cfg.streams = 4;
+        assert_eq!(cfg.spec().route, RoutePolicy::ByStream);
+        // Explicit route wins.
+        cfg.route = Some(RoutePolicy::Fanout);
+        assert_eq!(cfg.spec().route, RoutePolicy::Fanout);
+        // Preset instances inherit the config-level batch policy.
+        cfg.max_batch = 4;
+        let spec = cfg.spec();
+        assert_eq!(spec.instances[0].batch.max_batch, 4);
+        assert_eq!(spec.frames, cfg.frames);
+        assert_eq!(spec.streams, 4);
+    }
+
+    #[test]
+    fn instances_array_parses_to_specs() {
+        let cfg = PipelineConfig::from_json_str(
+            r#"{
+                "frames": 32,
+                "route": "round-robin",
+                "max_batch": 2,
+                "instances": [
+                    {"artifact": "gen_cropping", "label": "g0"},
+                    {"artifact": "gen_cropping", "label": "g1", "engine": "dla",
+                     "max_batch": 8, "score_fidelity": false}
+                ]
+            }"#,
+        )
+        .unwrap();
+        let spec = cfg.spec();
+        assert_eq!(spec.instances.len(), 2);
+        assert_eq!(spec.route, RoutePolicy::RoundRobin);
+        assert_eq!(spec.frames, 32);
+        // defaults: top-level batch policy, gen_* scored
+        assert_eq!(spec.instances[0].batch.max_batch, 2);
+        assert!(spec.instances[0].score_fidelity);
+        // overrides
+        assert_eq!(spec.instances[1].engine, EngineKind::Dla);
+        assert_eq!(spec.instances[1].batch.max_batch, 8);
+        assert!(!spec.instances[1].score_fidelity);
+        // instances survive the provenance round-trip
+        let back = PipelineConfig::from_json_str(&cfg.to_json().to_pretty()).unwrap();
+        assert_eq!(back.instances.len(), 2);
+        assert_eq!(back.instances[1].batch.max_batch, 8);
+        assert_eq!(back.route, Some(RoutePolicy::RoundRobin));
+    }
+
+    #[test]
+    fn instances_array_errors_are_clear() {
+        let err = PipelineConfig::from_json_str(
+            r#"{"instances": [{"artifact": "resnet999"}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown artifact"));
+
+        let err = PipelineConfig::from_json_str(
+            r#"{"instances": [{"artifact": "yolo_lite", "engine": "tpu"}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown engine"));
+
+        let err =
+            PipelineConfig::from_json_str(r#"{"instances": [{"label": "x"}]}"#).unwrap_err();
+        assert!(err.to_string().contains("missing `artifact`"));
+
+        let err = PipelineConfig::from_json_str(r#"{"route": "hash"}"#).unwrap_err();
+        assert!(err.to_string().contains("unknown route policy"));
+
+        let err = PipelineConfig::from_json_str(
+            r#"{"instances": [{"artifact": "yolo_lite", "engin": "gpu"}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown instance key"));
+
+        // duplicate labels caught at parse time
+        let err = PipelineConfig::from_json_str(
+            r#"{"instances": [{"artifact": "yolo_lite"}, {"artifact": "yolo_lite"}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("duplicate instance label"));
     }
 }

@@ -24,6 +24,14 @@ pub enum EngineKind {
 }
 
 impl EngineKind {
+    pub const ALL: [EngineKind; 5] = [
+        EngineKind::Cpu,
+        EngineKind::Gpu,
+        EngineKind::Dla,
+        EngineKind::Fpga,
+        EngineKind::Npu,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             EngineKind::Cpu => "CPU",
@@ -32,6 +40,11 @@ impl EngineKind {
             EngineKind::Fpga => "FPGA",
             EngineKind::Npu => "NPU",
         }
+    }
+
+    /// Parse a case-insensitive engine name (the config/JSON form).
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        Self::ALL.into_iter().find(|e| e.name().eq_ignore_ascii_case(s))
     }
 }
 
@@ -277,6 +290,15 @@ mod tests {
         let o = orin();
         assert_eq!(o.engine(EngineKind::Gpu).kind, EngineKind::Gpu);
         assert_eq!(o.engine(EngineKind::Dla).kind, EngineKind::Dla);
+    }
+
+    #[test]
+    fn engine_names_roundtrip_through_parse() {
+        for e in EngineKind::ALL {
+            assert_eq!(EngineKind::parse(e.name()), Some(e));
+            assert_eq!(EngineKind::parse(&e.name().to_ascii_lowercase()), Some(e));
+        }
+        assert_eq!(EngineKind::parse("tpu"), None);
     }
 
     #[test]

@@ -10,7 +10,38 @@
 //! surgery), and schedules the two models HaX-CoNN-style so both engines
 //! stay busy (~150 FPS each).
 //!
-//! This crate provides:
+//! ## Serving entry point
+//!
+//! Pipelines are described declaratively and launched through the
+//! composable [`session::Session`] API — any number of model instances,
+//! any routing/batching mix, on a pluggable
+//! [`pipeline::backend::InferenceBackend`]:
+//!
+//! ```no_run
+//! use edgepipe::pipeline::router::RoutePolicy;
+//! use edgepipe::pipeline::spec::InstanceSpec;
+//! use edgepipe::session::Session;
+//!
+//! let report = Session::builder()
+//!     .instance(InstanceSpec::new("gan", "gen_cropping").scored(true))
+//!     .instance(InstanceSpec::new("yolo", "yolo_lite"))
+//!     .route(RoutePolicy::Fanout)
+//!     .frames(256)
+//!     .build()?   // fail-fast: spec + backend validated before any thread spawns
+//!     .run()?;
+//! println!("total {:.1} fps ({} dropped)", report.total_fps(), report.dropped);
+//! # Ok::<(), edgepipe::Error>(())
+//! ```
+//!
+//! The default backend executes AOT-compiled PJRT artifacts
+//! ([`pipeline::backend::PjrtBackend`]); swap in
+//! [`pipeline::backend::SimBackend`] to drive the identical coordinator
+//! from the calibrated latency model with no artifacts on disk. The old
+//! `Workload` enum arms survive as presets that lower into specs
+//! (`Workload::GanPlusYolo.spec(variant)`, or
+//! `Session::builder().workload(...)`).
+//!
+//! ## Layers
 //!
 //! * [`graph`] — layer-graph IR with shape inference and the paper's
 //!   model-surgery passes;
@@ -26,7 +57,10 @@
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
 //!   (HLO text + weights), Python never on the request path;
 //! * [`pipeline`] — the streaming coordinator (sources → batcher → router →
-//!   engine workers → sinks) used by both deployment schemes;
+//!   instance workers → sinks) plus the declarative [`pipeline::spec`] and
+//!   pluggable [`pipeline::backend`];
+//! * [`session`] — the `PipelineBuilder` → `Session` facade that binds
+//!   spec to backend with fail-fast validation;
 //! * [`imaging`], [`postproc`] — phantoms, PSNR/SSIM/MSE, the Table I
 //!   classical algorithms, YOLO decode + NMS;
 //! * [`report`] — regenerates every table and figure of the paper.
@@ -42,9 +76,12 @@ pub mod models;
 pub mod pipeline;
 pub mod postproc;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sched;
+pub mod session;
 pub mod sim;
 pub mod util;
 
 pub use error::{Error, Result};
+pub use session::{PipelineBuilder, Session};

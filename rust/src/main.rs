@@ -11,16 +11,18 @@
 //! (The vendored offline crate set has no `clap`; argument parsing is the
 //! small hand-rolled `Args` below.)
 
-use edgepipe::config::{GanVariant, PipelineConfig, SchedulerKind, Workload};
+use edgepipe::config::{DeviceKind, GanVariant, PipelineConfig, SchedulerKind, Workload};
 use edgepipe::dla::{planner, DlaVersion};
 use edgepipe::error::Result;
 use edgepipe::hw;
 use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
 use edgepipe::models::yolov8::{yolov8, YoloConfig};
-use edgepipe::pipeline::run_pipeline;
+use edgepipe::pipeline::SimBackend;
 use edgepipe::sched::haxconn;
+use edgepipe::session::PipelineBuilder;
 use edgepipe::{report, Error};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Minimal `--key value` / `--flag` parser.
 struct Args {
@@ -71,12 +73,17 @@ fn usage() -> ! {
         "edgepipe — edge GPU aware multi-model MRI pipeline (paper reproduction)
 
 USAGE:
-  edgepipe report <table1|table2|fig9|fig11|table4|table6|all> [--artifacts DIR] [--json FILE]
+  edgepipe report <table1|table2|fig9|fig11|table4|table6|pipeline|all>
+                  [--artifacts DIR] [--json FILE]
   edgepipe timeline [--variant original|cropping|convolution] [--with-yolo]
   edgepipe run [--config FILE] [--variant V] [--workload W] [--frames N]
-               [--streams N] [--artifacts DIR] [--seed N]
+               [--streams N] [--artifacts DIR] [--seed N] [--backend pjrt|sim]
   edgepipe check-dla [--variant V]
   edgepipe schedule [--variant V] [--with-yolo]
+
+`run` lowers the config through the Session/PipelineBuilder API; pass a
+config file with an `instances: [...]` array for arbitrary instance mixes,
+and `--backend sim` to serve from the latency model with no artifacts.
 "
     );
     std::process::exit(2)
@@ -122,6 +129,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 "fig11" | "fig12" => report::fig11_fig12(&soc),
                 "table3" | "table4" | "fig13" => report::table3_table4_fig13(&soc),
                 "table5" | "table6" | "fig14" => report::table5_table6_fig14(&soc),
+                "pipeline" => report::pipeline_report(&soc),
                 "all" => report::all_reports(dir),
                 other => {
                     return Err(Error::Config(format!("unknown report `{other}`")));
@@ -172,17 +180,38 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             }
             cfg.validate()?;
             eprintln!("config: {}", cfg.to_json().to_compact());
-            let rep = run_pipeline(&cfg)?;
+            let mut builder = PipelineBuilder::from_config(&cfg);
+            match args.opt("backend").unwrap_or("pjrt") {
+                "pjrt" => {}
+                "sim" => {
+                    let soc = match cfg.device {
+                        DeviceKind::Orin => hw::orin(),
+                        DeviceKind::Xavier => hw::xavier(),
+                    };
+                    builder = builder.backend(Arc::new(SimBackend::new(soc)));
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown backend `{other}` (known: pjrt, sim)"
+                    )));
+                }
+            }
+            let session = builder.build()?;
+            let rep = session.run()?;
             println!(
-                "processed {} frames in {:.2}s ({} dropped)",
-                rep.total_frames, rep.wall_seconds, rep.dropped
+                "processed {} frames in {:.2}s ({} dropped) [{} backend]",
+                rep.total_frames,
+                rep.wall_seconds,
+                rep.dropped,
+                session.backend_name()
             );
             for inst in &rep.instances {
                 println!(
-                    "  {:<12} {:>6} frames  {:>8.2} fps  lat p50 {:>7.2} ms  p99 {:>7.2} ms  \
-                     psnr {:>6.2}  ssim {:>6.2}",
+                    "  {:<12} {:>6} frames  {:>4} dropped  {:>8.2} fps  lat p50 {:>7.2} ms  \
+                     p99 {:>7.2} ms  psnr {:>6.2}  ssim {:>6.2}",
                     inst.label,
                     inst.frames,
+                    inst.dropped,
                     inst.fps,
                     inst.latency_ms_p50,
                     inst.latency_ms_p99,

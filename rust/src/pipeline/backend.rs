@@ -1,0 +1,272 @@
+//! Pluggable inference backends.
+//!
+//! The coordinator is generic over *how* an instance executes a frame:
+//!
+//! * [`PjrtBackend`] — the real serving path: PJRT execution of the
+//!   AOT-compiled JAX/Pallas artifacts (HLO text + weights on disk);
+//! * [`SimBackend`] — a deterministic stand-in priced by the calibrated
+//!   roofline latency model ([`crate::cost`]), so the full pipeline
+//!   (router, batcher, backpressure, metrics) can be driven, tested and
+//!   benchmarked with **no artifacts on disk** and no `make artifacts`.
+//!
+//! Backends are shared across worker threads (`Send + Sync`); all
+//! per-thread state (PJRT handles are not `Send`) lives in the
+//! [`ModelRunner`] each worker opens after the thread boundary.
+
+use super::frame::Frame;
+use super::spec::{artifact_graph, InstanceSpec};
+use crate::cost::latency::LatencyModel;
+use crate::error::{Error, Result};
+use crate::hw::{EngineKind, SocSpec};
+#[cfg(feature = "pjrt")]
+use crate::runtime::{Artifact, RuntimeClient};
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Per-worker model executor, constructed on the worker thread via
+/// [`InferenceBackend::open`].
+pub trait ModelRunner {
+    /// Run one frame through the model; returns the primary output tensor
+    /// flattened (the reconstruction for GAN-style models).
+    fn run(&mut self, frame: &Frame) -> Result<Vec<f32>>;
+}
+
+/// Where and how pipeline instances execute.
+pub trait InferenceBackend: Send + Sync {
+    /// Short backend identifier (`pjrt`, `sim`).
+    fn name(&self) -> &'static str;
+
+    /// Fail-fast check that `spec` is servable. Called by the session
+    /// builder before any worker thread spawns, so a missing artifact or an
+    /// unmodelable placement errors at build time, not mid-stream.
+    fn prepare(&self, spec: &InstanceSpec) -> Result<()>;
+
+    /// Open a per-worker runner for `spec` (called on the worker thread).
+    fn open(&self, spec: &InstanceSpec) -> Result<Box<dyn ModelRunner>>;
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend (the real serving path)
+// ---------------------------------------------------------------------------
+
+/// Executes AOT artifacts through PJRT. Each worker owns a private client +
+/// compiled executable — the same isolation a per-engine TensorRT context
+/// gives on the Jetson. Gated behind the default-on `pjrt` cargo feature
+/// (the `xla` bindings need the native XLA extension; build with
+/// `--no-default-features` to serve from [`SimBackend`] alone).
+#[cfg(feature = "pjrt")]
+pub struct PjrtBackend {
+    artifact_dir: PathBuf,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtBackend {
+    pub fn new(artifact_dir: impl Into<PathBuf>) -> Self {
+        PjrtBackend {
+            artifact_dir: artifact_dir.into(),
+        }
+    }
+
+    pub fn artifact_dir(&self) -> &std::path::Path {
+        &self.artifact_dir
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl InferenceBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prepare(&self, spec: &InstanceSpec) -> Result<()> {
+        let hlo = self.artifact_dir.join(format!("{}.hlo.txt", spec.artifact));
+        if !hlo.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact `{}` missing: {} (run `make artifacts`)",
+                spec.artifact,
+                hlo.display()
+            )));
+        }
+        Ok(())
+    }
+
+    fn open(&self, spec: &InstanceSpec) -> Result<Box<dyn ModelRunner>> {
+        let client = RuntimeClient::cpu()?;
+        let artifact = Artifact::load(&client, &self.artifact_dir, &spec.artifact)?;
+        Ok(Box::new(PjrtRunner { artifact }))
+    }
+}
+
+#[cfg(feature = "pjrt")]
+struct PjrtRunner {
+    artifact: Artifact,
+}
+
+#[cfg(feature = "pjrt")]
+impl ModelRunner for PjrtRunner {
+    fn run(&mut self, frame: &Frame) -> Result<Vec<f32>> {
+        let outputs = self.artifact.run_image(&frame.data)?;
+        let first = outputs.into_iter().next().ok_or_else(|| {
+            Error::Runtime(format!("artifact `{}` produced no outputs", self.artifact.name))
+        })?;
+        Ok(first.data)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sim backend (deterministic, artifact-free)
+// ---------------------------------------------------------------------------
+
+/// Deterministic latency-model backend. Each known artifact maps to its
+/// layer graph; a frame "executes" by sleeping that graph's roofline
+/// latency on the instance's engine (scaled by `time_scale`) and echoing
+/// the input as the output tensor — deterministic content, finite PSNR
+/// against synthetic ground truth, no PJRT anywhere.
+pub struct SimBackend {
+    soc: SocSpec,
+    time_scale: f64,
+}
+
+impl SimBackend {
+    pub fn new(soc: SocSpec) -> Self {
+        SimBackend {
+            soc,
+            time_scale: 1.0,
+        }
+    }
+
+    /// Scale modeled latencies; `0.0` skips sleeping entirely, which turns
+    /// a session run into a pure coordinator-overhead measurement (used by
+    /// the `hotpath` bench and CI tests).
+    pub fn with_time_scale(mut self, scale: f64) -> Self {
+        self.time_scale = scale.max(0.0);
+        self
+    }
+
+    /// Modeled single-frame latency for `spec` on this SoC, seconds. The
+    /// artifact → graph mapping is the shared [`super::spec::ARTIFACT_CATALOG`].
+    pub fn frame_latency(&self, spec: &InstanceSpec) -> Result<f64> {
+        match spec.engine {
+            EngineKind::Gpu | EngineKind::Dla | EngineKind::Cpu => {}
+            other => {
+                return Err(Error::Config(format!(
+                    "sim backend: engine {other} is not part of SoC `{}`",
+                    self.soc.name
+                )))
+            }
+        }
+        let g = artifact_graph(&spec.artifact)?;
+        Ok(LatencyModel::new(self.soc.clone()).graph_latency(&g, spec.engine))
+    }
+}
+
+impl InferenceBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn prepare(&self, spec: &InstanceSpec) -> Result<()> {
+        self.frame_latency(spec).map(|_| ())
+    }
+
+    fn open(&self, spec: &InstanceSpec) -> Result<Box<dyn ModelRunner>> {
+        let secs = self.frame_latency(spec)? * self.time_scale;
+        Ok(Box::new(SimRunner {
+            sleep: Duration::from_secs_f64(secs),
+        }))
+    }
+}
+
+struct SimRunner {
+    sleep: Duration,
+}
+
+impl ModelRunner for SimRunner {
+    fn run(&mut self, frame: &Frame) -> Result<Vec<f32>> {
+        if !self.sleep.is_zero() {
+            std::thread::sleep(self.sleep);
+        }
+        Ok(frame.data.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{orin, xavier};
+    use std::time::Instant;
+
+    fn inst(artifact: &str, engine: EngineKind) -> InstanceSpec {
+        InstanceSpec::new("t", artifact).on_engine(engine)
+    }
+
+    #[test]
+    fn sim_prices_known_artifacts() {
+        let b = SimBackend::new(orin());
+        let gan = b.frame_latency(&inst("gen_cropping", EngineKind::Gpu)).unwrap();
+        let yolo = b.frame_latency(&inst("yolo_lite", EngineKind::Gpu)).unwrap();
+        assert!(gan > 0.0 && yolo > 0.0);
+        // the reduced 64x64 detector is far cheaper than the paper-scale GAN
+        assert!(yolo < gan);
+        // DLA-placed GAN is slower than GPU-placed on the same SoC
+        let dla = b.frame_latency(&inst("gen_cropping", EngineKind::Dla)).unwrap();
+        assert!(dla > gan);
+    }
+
+    #[test]
+    fn sim_rejects_unknown_artifact_and_engine() {
+        let b = SimBackend::new(orin());
+        let err = b.prepare(&inst("nope", EngineKind::Gpu)).unwrap_err();
+        assert!(err.to_string().contains("unknown artifact"));
+        let err = b.prepare(&inst("gen_cropping", EngineKind::Fpga)).unwrap_err();
+        assert!(err.to_string().contains("not part of SoC"));
+    }
+
+    #[test]
+    fn sim_runner_is_deterministic_identity() {
+        let b = SimBackend::new(orin()).with_time_scale(0.0);
+        let spec = inst("yolo_lite", EngineKind::Gpu);
+        let mut r = b.open(&spec).unwrap();
+        let frame = Frame {
+            id: 0,
+            stream: 0,
+            data: vec![0.25, -0.5, 1.0],
+            width: 0,
+            height: 0,
+            gt_mri: None,
+            admitted: Instant::now(),
+        };
+        assert_eq!(r.run(&frame).unwrap(), frame.data);
+        assert_eq!(r.run(&frame).unwrap(), frame.data);
+    }
+
+    #[test]
+    fn time_scale_zero_skips_sleep() {
+        let b = SimBackend::new(xavier()).with_time_scale(0.0);
+        let spec = inst("gen_original", EngineKind::Gpu);
+        let mut r = b.open(&spec).unwrap();
+        let frame = Frame {
+            id: 0,
+            stream: 0,
+            data: vec![0.0; 16],
+            width: 4,
+            height: 4,
+            gt_mri: None,
+            admitted: Instant::now(),
+        };
+        let t0 = Instant::now();
+        for _ in 0..64 {
+            r.run(&frame).unwrap();
+        }
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[cfg(feature = "pjrt")]
+    #[test]
+    fn pjrt_prepare_fails_fast_on_missing_artifact() {
+        let b = PjrtBackend::new("/nonexistent");
+        let err = b.prepare(&inst("gen_cropping", EngineKind::Gpu)).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

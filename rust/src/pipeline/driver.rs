@@ -1,29 +1,37 @@
 //! End-to-end pipeline driver.
 //!
 //! Wires sources → router → bounded per-instance queues (backpressure) →
-//! engine worker threads executing PJRT artifacts → metrics. This is the
-//! real serving path: every frame is reconstructed/diagnosed by the
-//! AOT-compiled JAX/Pallas models, Python nowhere in sight.
+//! per-instance worker threads executing through a pluggable
+//! [`InferenceBackend`] → metrics. With the [`super::backend::PjrtBackend`]
+//! this is the real serving path: every frame is reconstructed/diagnosed by
+//! the AOT-compiled JAX/Pallas models, Python nowhere in sight. With the
+//! [`super::backend::SimBackend`] the identical coordinator runs against
+//! the calibrated latency model — no artifacts required.
 //!
-//! Note on engines: the testbed has no physical DLA, so both "engines"
-//! execute on the CPU PJRT client; the *scheduling structure* (which
+//! The public entry point is [`crate::session::Session`]; [`run_pipeline`]
+//! survives as a thin compatibility wrapper that lowers a
+//! [`PipelineConfig`] through the session builder.
+//!
+//! Note on engines: the testbed has no physical DLA, so the PJRT "engines"
+//! all execute on the CPU client; the *scheduling structure* (which
 //! instance runs where, queue topology, backpressure) is identical to the
 //! paper's deployment and the timing claims are made by [`crate::sim`].
 
-use super::batcher::{next_batch, BatchPolicy};
+use super::backend::InferenceBackend;
+use super::batcher::next_batch;
 use super::frame::Frame;
 use super::metrics::{InstanceSnapshot, Metrics};
-use super::router::{RoutePolicy, Router};
+use super::router::Router;
 use super::source::PhantomSource;
-use crate::config::{PipelineConfig, Workload};
+use super::spec::PipelineSpec;
+use crate::config::json::{arr, num, obj, s, Json};
+use crate::config::PipelineConfig;
 use crate::error::{Error, Result};
 use crate::imaging::metrics::fidelity;
 use crate::imaging::Image;
-use crate::runtime::{Artifact, RuntimeClient};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
-use std::time::Duration;
 
 /// Online fidelity (PSNR/SSIM) is sampled rather than computed per frame:
 /// SSIM costs ~1 ms/frame on this core (~8% of GAN inference) and the mean
@@ -31,20 +39,14 @@ use std::time::Duration;
 /// §Perf iteration 2).
 const SCORE_EVERY: u64 = 4;
 
-/// A model instance bound to an artifact.
-struct InstanceSpec {
-    label: String,
-    artifact: String,
-    /// Score reconstruction fidelity against the frame's ground truth.
-    score_fidelity: bool,
-}
-
 /// Final pipeline report.
 #[derive(Debug, Clone)]
 pub struct PipelineReport {
     pub instances: Vec<InstanceSnapshot>,
     pub wall_seconds: f64,
     pub total_frames: usize,
+    /// Total frame copies shed on overload/disconnect across all instances
+    /// (per-instance counts are on each [`InstanceSnapshot`]).
     pub dropped: usize,
 }
 
@@ -52,116 +54,87 @@ impl PipelineReport {
     pub fn total_fps(&self) -> f64 {
         self.instances.iter().map(|i| i.fps).sum()
     }
-}
 
-fn instance_specs(workload: Workload, variant: &str) -> Vec<InstanceSpec> {
-    let gan = format!("gen_{variant}");
-    match workload {
-        Workload::GanStandalone => vec![InstanceSpec {
-            label: "gan".into(),
-            artifact: gan,
-            score_fidelity: true,
-        }],
-        Workload::GanPlusYoloNaive | Workload::GanPlusYolo => vec![
-            InstanceSpec {
-                label: "gan".into(),
-                artifact: gan,
-                score_fidelity: true,
-            },
-            InstanceSpec {
-                label: "yolo".into(),
-                artifact: "yolo_lite".into(),
-                score_fidelity: false,
-            },
-        ],
-        Workload::TwoGans => vec![
-            InstanceSpec {
-                label: "gan-inst1".into(),
-                artifact: gan.clone(),
-                score_fidelity: true,
-            },
-            InstanceSpec {
-                label: "gan-inst2".into(),
-                artifact: gan,
-                score_fidelity: true,
-            },
-        ],
+    /// JSON form for experiment provenance records and `report` output.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("wall_seconds", num(self.wall_seconds)),
+            ("total_frames", num(self.total_frames as f64)),
+            ("dropped", num(self.dropped as f64)),
+            ("total_fps", num(self.total_fps())),
+            (
+                "instances",
+                arr(self
+                    .instances
+                    .iter()
+                    .map(|i| {
+                        obj(vec![
+                            ("label", s(&i.label)),
+                            ("frames", num(i.frames as f64)),
+                            ("fps", num(i.fps)),
+                            ("latency_ms_p50", num(i.latency_ms_p50)),
+                            ("latency_ms_p99", num(i.latency_ms_p99)),
+                            ("latency_ms_mean", num(i.latency_ms_mean)),
+                            ("psnr_mean", num(i.psnr_mean)),
+                            ("ssim_pct_mean", num(i.ssim_pct_mean)),
+                            ("dropped", num(i.dropped as f64)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
     }
 }
 
-fn route_policy(workload: Workload, streams: usize) -> RoutePolicy {
-    match workload {
-        Workload::TwoGans => {
-            if streams > 1 {
-                RoutePolicy::ByStream
-            } else {
-                RoutePolicy::RoundRobin
-            }
-        }
-        _ => RoutePolicy::Fanout,
-    }
-}
-
-/// Run the configured pipeline to completion and report.
+/// Run a [`PipelineConfig`] to completion and report (compatibility
+/// wrapper: lowers the config through [`crate::session::PipelineBuilder`]
+/// onto the default PJRT backend).
 pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
-    let specs = instance_specs(cfg.workload, cfg.variant.name());
-    // Fail fast on missing artifacts before spawning anything.
-    for spec in &specs {
-        let hlo = std::path::Path::new(&cfg.artifact_dir)
-            .join(format!("{}.hlo.txt", spec.artifact));
-        if !hlo.exists() {
-            return Err(Error::Runtime(format!(
-                "artifact `{}` missing: {} (run `make artifacts`)",
-                spec.artifact,
-                hlo.display()
-            )));
-        }
-    }
+    crate::session::PipelineBuilder::from_config(cfg).build()?.run()
+}
 
-    let labels: Vec<String> = specs.iter().map(|s| s.label.clone()).collect();
+/// Execute `spec` on `backend`: the coordinator core behind
+/// [`crate::session::Session::run`].
+pub(crate) fn execute(
+    spec: &PipelineSpec,
+    backend: &Arc<dyn InferenceBackend>,
+) -> Result<PipelineReport> {
+    spec.validate()?;
+
+    let labels: Vec<String> = spec.instances.iter().map(|i| i.label.clone()).collect();
     let metrics = Arc::new(Metrics::new(&labels));
     let dropped_total = Arc::new(AtomicUsize::new(0));
 
     // Per-instance bounded queues: the backpressure boundary.
     let mut senders: Vec<SyncSender<Frame>> = Vec::new();
     let mut receivers: Vec<Receiver<Frame>> = Vec::new();
-    for _ in &specs {
-        let (tx, rx) = sync_channel::<Frame>(cfg.queue_depth);
+    for _ in &spec.instances {
+        let (tx, rx) = sync_channel::<Frame>(spec.queue_depth);
         senders.push(tx);
         receivers.push(rx);
     }
 
-    // Workers: one thread per instance (the two-engine analogue). PJRT
-    // handles are not Send (Rc internals), so each worker owns a private
-    // client + compiled artifact — the same isolation a per-engine
-    // TensorRT context gives on the Jetson.
+    // Workers: one thread per instance (the two-engine analogue). All
+    // non-`Send` executor state (e.g. PJRT handles) is created inside the
+    // thread by `backend.open` — the same isolation a per-engine TensorRT
+    // context gives on the Jetson.
     let mut handles = Vec::new();
-    for (idx, (spec, rx)) in specs.iter().zip(receivers.into_iter()).enumerate() {
+    for (idx, (inst, rx)) in spec.instances.iter().zip(receivers.into_iter()).enumerate() {
         let metrics = Arc::clone(&metrics);
-        let artifact_name = spec.artifact.clone();
-        let artifact_dir = cfg.artifact_dir.clone();
-        let score = spec.score_fidelity;
-        let policy = BatchPolicy {
-            max_batch: cfg.max_batch,
-            timeout: Duration::from_micros(cfg.batch_timeout_us),
-        };
+        let backend = Arc::clone(backend);
+        let inst = inst.clone();
         let handle = std::thread::Builder::new()
-            .name(format!("worker-{}", spec.label))
+            .name(format!("worker-{}", inst.label))
             .spawn(move || -> Result<()> {
-                let client = RuntimeClient::cpu()?;
-                let artifact = Artifact::load(
-                    &client,
-                    std::path::Path::new(&artifact_dir),
-                    &artifact_name,
-                )?;
-                while let Some(batch) = next_batch(&rx, policy) {
+                let mut runner = backend.open(&inst)?;
+                while let Some(batch) = next_batch(&rx, inst.batch) {
                     for frame in batch {
-                        let outputs = artifact.run_image(&frame.data)?;
+                        let out = runner.run(&frame)?;
                         let latency = frame.admitted.elapsed().as_secs_f64();
                         metrics.record_frame(idx, latency);
-                        if score && frame.id % SCORE_EVERY == 0 {
-                            if let (Some(gt), Some(out)) = (&frame.gt_mri, outputs.first()) {
-                                record_fidelity(&metrics, idx, &frame, gt, &out.data);
+                        if inst.score_fidelity && frame.id % SCORE_EVERY == 0 {
+                            if let Some(gt) = &frame.gt_mri {
+                                record_fidelity(&metrics, idx, &frame, gt, &out);
                             }
                         }
                     }
@@ -173,14 +146,14 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
     }
 
     // Source + router on the main thread (frames are cheap to make).
-    let mut router = Router::new(route_policy(cfg.workload, cfg.streams), specs.len());
-    let per_stream = cfg.frames / cfg.streams.max(1);
-    let mut sources: Vec<PhantomSource> = (0..cfg.streams)
-        .map(|s| {
+    let mut router = Router::new(spec.route, spec.instances.len());
+    let per_stream = spec.frames / spec.streams.max(1);
+    let mut sources: Vec<PhantomSource> = (0..spec.streams)
+        .map(|st| {
             PhantomSource::new(
                 crate::imaging::phantom::PhantomConfig::default(),
-                cfg.seed,
-                s,
+                spec.seed,
+                st,
                 per_stream,
             )
         })
@@ -192,20 +165,33 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
             if let Some(frame) = src.next() {
                 all_done = false;
                 total_frames += 1;
-                for target in router.route(&frame) {
-                    // Blocking send with drop-on-overload for non-primary
-                    // copies keeps the pipeline moving (backpressure).
-                    match senders[target].try_send(frame.clone()) {
-                        Ok(()) => {}
-                        Err(TrySendError::Full(f)) => {
-                            // Block: the paper's pipeline is lossless.
-                            if senders[target].send(f).is_err() {
-                                break 'outer;
-                            }
+                let targets = router.route(&frame);
+                let copies = targets.len();
+                let mut frame = Some(frame);
+                for (copy, target) in targets.enumerate() {
+                    // Last copy moves the frame; earlier copies clone it.
+                    let f = if copy + 1 == copies {
+                        frame.take().expect("one frame per routed copy")
+                    } else {
+                        frame.as_ref().expect("one frame per routed copy").clone()
+                    };
+                    if copy == 0 {
+                        // The primary copy is lossless: block under
+                        // backpressure (the paper's pipeline drops nothing
+                        // on its main reconstruction path).
+                        if senders[target].send(f).is_err() {
+                            // Worker gone — its error surfaces at join.
+                            break 'outer;
                         }
-                        Err(TrySendError::Disconnected(_)) => {
-                            dropped_total.fetch_add(1, Ordering::Relaxed);
-                            metrics.record_drop(target);
+                    } else {
+                        // Fanout copies beyond the primary shed load
+                        // instead of stalling the whole pipeline.
+                        match senders[target].try_send(f) {
+                            Ok(()) => {}
+                            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                                dropped_total.fetch_add(1, Ordering::Relaxed);
+                                metrics.record_drop(target);
+                            }
                         }
                     }
                 }

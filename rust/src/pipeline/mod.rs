@@ -1,20 +1,30 @@
 //! The streaming pipeline coordinator (Layer 3 proper).
 //!
 //! DeepStream-equivalent: CT frames flow from [`source`]s through the
-//! [`batcher`] and [`router`] into per-model engine workers that execute
-//! the AOT-compiled artifacts via PJRT, with bounded queues providing
-//! backpressure and [`metrics`] aggregating throughput/latency. Both of
-//! the paper's deployment schemes run on this machinery:
+//! [`batcher`] and [`router`] into per-instance workers that execute
+//! through a pluggable [`backend`] (PJRT artifacts or the deterministic
+//! latency-model sim), with bounded queues providing backpressure and
+//! [`metrics`] aggregating throughput/latency. What runs is described
+//! declaratively by a [`spec::PipelineSpec`] — any number of instances,
+//! not just the historical four `Workload` arms — and launched through
+//! [`crate::session::Session`]. Both of the paper's deployment schemes run
+//! on this machinery:
 //!
 //! * **standalone** (Fig 1 A): one CT stream, GAN + YOLO concurrently;
 //! * **client-server** (Fig 1 B): several hospital streams multiplexed.
 
+pub mod backend;
 pub mod batcher;
 pub mod driver;
 pub mod frame;
 pub mod metrics;
 pub mod router;
 pub mod source;
+pub mod spec;
 
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
+pub use backend::{InferenceBackend, ModelRunner, SimBackend};
 pub use driver::{run_pipeline, PipelineReport};
 pub use frame::Frame;
+pub use spec::{InstanceSpec, PipelineSpec};

@@ -8,8 +8,13 @@
 //! * `RoundRobin` — frames alternate across instances (the two-GAN
 //!   multi-stream reconstruction workload);
 //! * `ByStream` — stream *s* maps to instance *s mod n* (client-server).
+//!
+//! `route` is on the per-frame hot path, so it returns the allocation-free
+//! [`RouteTargets`] iterator instead of a `Vec` (the `hotpath` bench's
+//! `route_*` cases track this).
 
 use super::frame::Frame;
+use crate::error::{Error, Result};
 
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -18,6 +23,58 @@ pub enum RoutePolicy {
     RoundRobin,
     ByStream,
 }
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fanout" => Ok(RoutePolicy::Fanout),
+            "round-robin" | "roundrobin" | "rr" => Ok(RoutePolicy::RoundRobin),
+            "by-stream" | "bystream" => Ok(RoutePolicy::ByStream),
+            other => Err(Error::Config(format!(
+                "unknown route policy `{other}` (known: fanout, round-robin, by-stream)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::Fanout => "fanout",
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::ByStream => "by-stream",
+        }
+    }
+}
+
+/// Allocation-free set of instance indices one frame routes to. The first
+/// yielded index is the *primary* copy (lossless under backpressure); the
+/// driver treats later fanout copies as droppable on overload.
+#[derive(Debug, Clone)]
+pub enum RouteTargets {
+    /// Every instance, in order (fanout).
+    All(std::ops::Range<usize>),
+    /// Exactly one instance.
+    One(std::iter::Once<usize>),
+}
+
+impl Iterator for RouteTargets {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        match self {
+            RouteTargets::All(r) => r.next(),
+            RouteTargets::One(o) => o.next(),
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        match self {
+            RouteTargets::All(r) => r.size_hint(),
+            RouteTargets::One(o) => o.size_hint(),
+        }
+    }
+}
+
+impl ExactSizeIterator for RouteTargets {}
 
 /// Stateful router.
 #[derive(Debug)]
@@ -37,16 +94,18 @@ impl Router {
         }
     }
 
-    /// Instances that must process this frame.
-    pub fn route(&mut self, frame: &Frame) -> Vec<usize> {
+    /// Instances that must process this frame (no per-call allocation).
+    pub fn route(&mut self, frame: &Frame) -> RouteTargets {
         match self.policy {
-            RoutePolicy::Fanout => (0..self.instances).collect(),
+            RoutePolicy::Fanout => RouteTargets::All(0..self.instances),
             RoutePolicy::RoundRobin => {
                 let i = self.rr_next;
                 self.rr_next = (self.rr_next + 1) % self.instances;
-                vec![i]
+                RouteTargets::One(std::iter::once(i))
             }
-            RoutePolicy::ByStream => vec![frame.stream % self.instances],
+            RoutePolicy::ByStream => {
+                RouteTargets::One(std::iter::once(frame.stream % self.instances))
+            }
         }
     }
 }
@@ -68,27 +127,52 @@ mod tests {
         }
     }
 
+    fn targets(r: &mut Router, f: &Frame) -> Vec<usize> {
+        r.route(f).collect()
+    }
+
     #[test]
     fn fanout_hits_all() {
         let mut r = Router::new(RoutePolicy::Fanout, 3);
-        assert_eq!(r.route(&frame(0)), vec![0, 1, 2]);
+        let t = r.route(&frame(0));
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.collect::<Vec<_>>(), vec![0, 1, 2]);
     }
 
     #[test]
     fn round_robin_alternates() {
         let mut r = Router::new(RoutePolicy::RoundRobin, 2);
-        assert_eq!(r.route(&frame(0)), vec![0]);
-        assert_eq!(r.route(&frame(0)), vec![1]);
-        assert_eq!(r.route(&frame(0)), vec![0]);
+        assert_eq!(targets(&mut r, &frame(0)), vec![0]);
+        assert_eq!(targets(&mut r, &frame(0)), vec![1]);
+        assert_eq!(targets(&mut r, &frame(0)), vec![0]);
     }
 
     #[test]
     fn by_stream_is_stable() {
         let mut r = Router::new(RoutePolicy::ByStream, 2);
-        assert_eq!(r.route(&frame(0)), vec![0]);
-        assert_eq!(r.route(&frame(1)), vec![1]);
-        assert_eq!(r.route(&frame(5)), vec![1]);
-        assert_eq!(r.route(&frame(0)), vec![0]);
+        assert_eq!(targets(&mut r, &frame(0)), vec![0]);
+        assert_eq!(targets(&mut r, &frame(1)), vec![1]);
+        assert_eq!(targets(&mut r, &frame(5)), vec![1]);
+        assert_eq!(targets(&mut r, &frame(0)), vec![0]);
+    }
+
+    #[test]
+    fn single_target_len_is_one() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 4);
+        assert_eq!(r.route(&frame(0)).len(), 1);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [
+            RoutePolicy::Fanout,
+            RoutePolicy::RoundRobin,
+            RoutePolicy::ByStream,
+        ] {
+            assert_eq!(RoutePolicy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(RoutePolicy::parse("rr").unwrap(), RoutePolicy::RoundRobin);
+        assert!(RoutePolicy::parse("hash").is_err());
     }
 
     #[test]

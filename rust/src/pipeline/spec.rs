@@ -1,0 +1,272 @@
+//! Declarative pipeline description — the open replacement for the four
+//! hardcoded `Workload` enum arms.
+//!
+//! A [`PipelineSpec`] names an arbitrary set of model [`InstanceSpec`]s
+//! (any mix of GAN variants, the detector, and future models), how frames
+//! are routed between them, and the stream/backpressure shape. It is pure
+//! data: *what* to run. *How* it executes is the
+//! [`super::backend::InferenceBackend`] the session binds it to, and the
+//! entry point that does the binding is [`crate::session::Session`].
+//! The old `Workload` arms survive as presets that lower into specs
+//! (`Workload::GanPlusYolo.spec(variant)`).
+
+use super::batcher::BatchPolicy;
+use super::router::RoutePolicy;
+use crate::config::GanVariant;
+use crate::error::{Error, Result};
+use crate::graph::Graph;
+use crate::hw::EngineKind;
+use crate::models::pix2pix::{generator, Pix2PixConfig};
+use crate::models::yolov8::yolo_lite;
+
+/// Builder for one catalog entry's layer graph (used by the sim backend to
+/// price per-frame latency).
+pub type ArtifactGraphFn = fn() -> Result<Graph>;
+
+fn gen_original_graph() -> Result<Graph> {
+    generator(&Pix2PixConfig::paper(), GanVariant::Original)
+}
+fn gen_cropping_graph() -> Result<Graph> {
+    generator(&Pix2PixConfig::paper(), GanVariant::Cropping)
+}
+fn gen_convolution_graph() -> Result<Graph> {
+    generator(&Pix2PixConfig::paper(), GanVariant::Convolution)
+}
+fn yolo_lite_graph() -> Result<Graph> {
+    yolo_lite()
+}
+
+/// The artifact catalog: every name the AOT export pipeline emits
+/// (`python/compile/aot.py`), paired with its layer-graph builder. Single
+/// source of truth — the JSON config loader validates names against it and
+/// [`super::backend::SimBackend`] prices latency from it, so a typo fails
+/// with a clear message instead of a missing-file error three layers down,
+/// and the two views cannot drift.
+pub const ARTIFACT_CATALOG: [(&str, ArtifactGraphFn); 4] = [
+    ("gen_original", gen_original_graph),
+    ("gen_cropping", gen_cropping_graph),
+    ("gen_convolution", gen_convolution_graph),
+    ("yolo_lite", yolo_lite_graph),
+];
+
+/// Comma-separated catalog names (for error messages).
+pub fn known_artifact_names() -> String {
+    ARTIFACT_CATALOG
+        .iter()
+        .map(|(name, _)| *name)
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Reject artifact names outside the compiled-in catalog.
+pub fn check_artifact_name(name: &str) -> Result<()> {
+    artifact_graph_fn(name).map(|_| ())
+}
+
+/// Layer graph for a catalog artifact (errors on unknown names).
+pub fn artifact_graph(name: &str) -> Result<Graph> {
+    artifact_graph_fn(name)?()
+}
+
+fn artifact_graph_fn(name: &str) -> Result<ArtifactGraphFn> {
+    ARTIFACT_CATALOG
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, f)| *f)
+        .ok_or_else(|| {
+            Error::Config(format!(
+                "unknown artifact `{name}` (known: {})",
+                known_artifact_names()
+            ))
+        })
+}
+
+/// One model instance of a pipeline: which artifact it serves, where it is
+/// placed, and how it batches.
+#[derive(Debug, Clone)]
+pub struct InstanceSpec {
+    /// Display / metrics label; must be unique within a spec.
+    pub label: String,
+    /// AOT artifact name (e.g. `gen_cropping`, `yolo_lite`).
+    pub artifact: String,
+    /// Engine placement. [`super::backend::SimBackend`] prices per-frame
+    /// latency with it; the PJRT path executes on the CPU client regardless
+    /// (the testbed has no physical DLA — scheduling structure is what is
+    /// reproduced, timing claims are made by [`crate::sim`]).
+    pub engine: EngineKind,
+    /// Per-instance dynamic batching policy.
+    pub batch: BatchPolicy,
+    /// Score reconstruction fidelity (PSNR/SSIM) against the frame's
+    /// ground truth (GAN-style instances).
+    pub score_fidelity: bool,
+}
+
+impl InstanceSpec {
+    /// A GPU-placed, batch-1, unscored instance; chain the builder-style
+    /// methods to adjust.
+    pub fn new(label: impl Into<String>, artifact: impl Into<String>) -> Self {
+        InstanceSpec {
+            label: label.into(),
+            artifact: artifact.into(),
+            engine: EngineKind::Gpu,
+            batch: BatchPolicy::default(),
+            score_fidelity: false,
+        }
+    }
+
+    /// Pin the instance to an engine.
+    pub fn on_engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Set the dynamic batching policy.
+    pub fn with_batch(mut self, batch: BatchPolicy) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Enable/disable online fidelity scoring.
+    pub fn scored(mut self, yes: bool) -> Self {
+        self.score_fidelity = yes;
+        self
+    }
+}
+
+/// A full declarative pipeline: instances, routing, and stream shape.
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    pub instances: Vec<InstanceSpec>,
+    /// How frames map to instances.
+    pub route: RoutePolicy,
+    /// Number of CT frames to stream through the pipeline.
+    pub frames: usize,
+    /// Number of concurrent input streams (client-server scheme > 1).
+    pub streams: usize,
+    /// Maximum in-flight frames per instance before backpressure.
+    pub queue_depth: usize,
+    /// RNG seed for workload generation.
+    pub seed: u64,
+}
+
+impl Default for PipelineSpec {
+    fn default() -> Self {
+        PipelineSpec {
+            instances: Vec::new(),
+            route: RoutePolicy::Fanout,
+            frames: 256,
+            streams: 1,
+            queue_depth: 4,
+            seed: 0xED6E,
+        }
+    }
+}
+
+impl PipelineSpec {
+    /// Fail-fast structural validation (instance set, labels, counts).
+    pub fn validate(&self) -> Result<()> {
+        if self.instances.is_empty() {
+            return Err(Error::Pipeline(
+                "pipeline spec has no instances (add at least one)".into(),
+            ));
+        }
+        for (i, inst) in self.instances.iter().enumerate() {
+            if inst.label.is_empty() {
+                return Err(Error::Pipeline(format!("instance {i} has an empty label")));
+            }
+            if inst.artifact.is_empty() {
+                return Err(Error::Pipeline(format!(
+                    "instance `{}` has an empty artifact name",
+                    inst.label
+                )));
+            }
+            if inst.batch.max_batch == 0 {
+                return Err(Error::Pipeline(format!(
+                    "instance `{}`: max_batch must be > 0",
+                    inst.label
+                )));
+            }
+            if self.instances[..i].iter().any(|o| o.label == inst.label) {
+                return Err(Error::Pipeline(format!(
+                    "duplicate instance label `{}`",
+                    inst.label
+                )));
+            }
+        }
+        if self.frames == 0 {
+            return Err(Error::Pipeline("frames must be > 0".into()));
+        }
+        if self.streams == 0 {
+            return Err(Error::Pipeline("streams must be > 0".into()));
+        }
+        if self.queue_depth == 0 {
+            return Err(Error::Pipeline("queue_depth must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_instance_spec() -> PipelineSpec {
+        PipelineSpec {
+            instances: vec![
+                InstanceSpec::new("gan", "gen_cropping").scored(true),
+                InstanceSpec::new("yolo", "yolo_lite").on_engine(EngineKind::Dla),
+            ],
+            ..PipelineSpec::default()
+        }
+    }
+
+    #[test]
+    fn valid_spec_passes() {
+        two_instance_spec().validate().unwrap();
+    }
+
+    #[test]
+    fn empty_instances_rejected() {
+        let err = PipelineSpec::default().validate().unwrap_err();
+        assert!(err.to_string().contains("no instances"));
+    }
+
+    #[test]
+    fn duplicate_labels_rejected() {
+        let mut spec = two_instance_spec();
+        spec.instances[1].label = "gan".into();
+        let err = spec.validate().unwrap_err();
+        assert!(err.to_string().contains("duplicate instance label"));
+    }
+
+    #[test]
+    fn zero_counts_rejected() {
+        let mut spec = two_instance_spec();
+        spec.frames = 0;
+        assert!(spec.validate().is_err());
+        let mut spec = two_instance_spec();
+        spec.queue_depth = 0;
+        assert!(spec.validate().is_err());
+        let mut spec = two_instance_spec();
+        spec.instances[0].batch.max_batch = 0;
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn artifact_catalog_is_enforced() {
+        check_artifact_name("gen_cropping").unwrap();
+        check_artifact_name("yolo_lite").unwrap();
+        let err = check_artifact_name("resnet999").unwrap_err();
+        assert!(err.to_string().contains("unknown artifact"));
+        assert!(err.to_string().contains("gen_original"));
+    }
+
+    #[test]
+    fn every_catalog_entry_builds_a_graph() {
+        // the catalog is one table: any name that parses must also price
+        for (name, _) in ARTIFACT_CATALOG {
+            let g = artifact_graph(name).unwrap();
+            assert!(!g.compute_layers().is_empty(), "{name}");
+        }
+    }
+}

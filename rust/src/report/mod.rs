@@ -420,6 +420,42 @@ pub fn timeline_ascii(soc: &SocSpec, variant: GanVariant, with_yolo: bool) -> Re
     Ok(r.timeline.ascii(100))
 }
 
+/// Serving-pipeline summary: every `Workload` preset lowered to a
+/// `PipelineSpec` and run through the real coordinator (router, batcher,
+/// backpressure, metrics) on the latency-model backend — the artifact-free
+/// companion to the PJRT accuracy numbers.
+pub fn pipeline_report(soc: &SocSpec) -> Json {
+    use crate::config::Workload;
+    use crate::pipeline::SimBackend;
+    use crate::session::Session;
+    use std::sync::Arc;
+
+    println!("Pipeline: workload presets on the sim backend ({})", soc.name);
+    println!("{:<18} {:>10} {:>8} {:>8}", "workload", "total fps", "frames", "dropped");
+    let mut rows = Vec::new();
+    for w in Workload::all() {
+        let session = Session::builder()
+            .workload(w, GanVariant::Cropping)
+            .frames(96)
+            .backend(Arc::new(SimBackend::new(soc.clone())))
+            .build()
+            .expect("sim session builds for every preset");
+        let rep = session.run().expect("sim session runs");
+        println!(
+            "{:<18} {:>10.1} {:>8} {:>8}",
+            w.name(),
+            rep.total_fps(),
+            rep.total_frames,
+            rep.dropped
+        );
+        rows.push(obj(vec![
+            ("workload", s(w.name())),
+            ("report", rep.to_json()),
+        ]));
+    }
+    arr(rows)
+}
+
 /// Everything at once (the `report all` subcommand).
 pub fn all_reports(artifact_dir: &str) -> Json {
     let soc = hw::orin();
@@ -430,6 +466,7 @@ pub fn all_reports(artifact_dir: &str) -> Json {
         ("fig11_fig12", fig11_fig12(&soc)),
         ("table3_table4_fig13", table3_table4_fig13(&soc)),
         ("table5_table6_fig14", table5_table6_fig14(&soc)),
+        ("pipeline", pipeline_report(&soc)),
     ])
 }
 

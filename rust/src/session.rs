@@ -1,0 +1,243 @@
+//! The serving facade — the crate's single execution entry point.
+//!
+//! A [`Session`] binds a declarative [`PipelineSpec`] (*what* runs) to an
+//! [`InferenceBackend`] (*how* it runs) after fail-fast validation, and
+//! [`Session::run`] drives the coordinator to completion. Build one with
+//! [`Session::builder`]:
+//!
+//! ```no_run
+//! use edgepipe::pipeline::router::RoutePolicy;
+//! use edgepipe::pipeline::spec::InstanceSpec;
+//! use edgepipe::session::Session;
+//!
+//! let report = Session::builder()
+//!     .instance(InstanceSpec::new("gan", "gen_cropping").scored(true))
+//!     .instance(InstanceSpec::new("yolo", "yolo_lite"))
+//!     .route(RoutePolicy::Fanout)
+//!     .frames(64)
+//!     .build()?
+//!     .run()?;
+//! println!("{:.1} fps", report.total_fps());
+//! # Ok::<(), edgepipe::Error>(())
+//! ```
+//!
+//! The four historical `Workload` arms are presets lowered through
+//! [`PipelineBuilder::workload`] (equivalently `Workload::spec(variant)`);
+//! arbitrary instance mixes — three GANs, five detectors, anything the
+//! backend can serve — go through [`PipelineBuilder::instance`].
+
+use crate::config::{GanVariant, PipelineConfig, Workload};
+use crate::error::Result;
+use crate::pipeline::backend::InferenceBackend;
+#[cfg(feature = "pjrt")]
+use crate::pipeline::backend::PjrtBackend;
+use crate::pipeline::batcher::BatchPolicy;
+use crate::pipeline::driver::{self, PipelineReport};
+use crate::pipeline::router::RoutePolicy;
+use crate::pipeline::spec::{InstanceSpec, PipelineSpec};
+use std::sync::Arc;
+
+/// A validated, runnable pipeline: spec + backend.
+pub struct Session {
+    spec: PipelineSpec,
+    backend: Arc<dyn InferenceBackend>,
+}
+
+impl Session {
+    /// Start composing a pipeline.
+    pub fn builder() -> PipelineBuilder {
+        PipelineBuilder::new()
+    }
+
+    /// The validated spec this session runs.
+    pub fn spec(&self) -> &PipelineSpec {
+        &self.spec
+    }
+
+    /// Which backend executes the instances (`pjrt`, `sim`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Stream all frames through the pipeline and report.
+    pub fn run(&self) -> Result<PipelineReport> {
+        driver::execute(&self.spec, &self.backend)
+    }
+}
+
+/// Composable builder for [`Session`]s.
+pub struct PipelineBuilder {
+    spec: PipelineSpec,
+    backend: Option<Arc<dyn InferenceBackend>>,
+    artifact_dir: String,
+}
+
+impl Default for PipelineBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PipelineBuilder {
+    pub fn new() -> Self {
+        PipelineBuilder {
+            spec: PipelineSpec::default(),
+            backend: None,
+            artifact_dir: "artifacts".to_string(),
+        }
+    }
+
+    /// Lower a full [`PipelineConfig`] (CLI flags / JSON file) into a
+    /// builder: explicit `instances` win over the `workload` preset, and
+    /// the artifact directory seeds the default PJRT backend.
+    pub fn from_config(cfg: &PipelineConfig) -> Self {
+        PipelineBuilder {
+            spec: cfg.spec(),
+            backend: None,
+            artifact_dir: cfg.artifact_dir.clone(),
+        }
+    }
+
+    /// Append one model instance.
+    pub fn instance(mut self, inst: InstanceSpec) -> Self {
+        self.spec.instances.push(inst);
+        self
+    }
+
+    /// Replace the instance set and route with a `Workload` preset
+    /// (sugar: the four paper arms lowered via `Workload::spec`).
+    pub fn workload(mut self, workload: Workload, variant: GanVariant) -> Self {
+        let preset = workload.spec(variant);
+        self.spec.instances = preset.instances;
+        self.spec.route = preset.route;
+        self
+    }
+
+    /// Set the routing policy.
+    pub fn route(mut self, route: RoutePolicy) -> Self {
+        self.spec.route = route;
+        self
+    }
+
+    /// Apply one batching policy to every instance added so far.
+    pub fn batch(mut self, batch: BatchPolicy) -> Self {
+        for inst in &mut self.spec.instances {
+            inst.batch = batch;
+        }
+        self
+    }
+
+    pub fn frames(mut self, frames: usize) -> Self {
+        self.spec.frames = frames;
+        self
+    }
+
+    pub fn streams(mut self, streams: usize) -> Self {
+        self.spec.streams = streams;
+        self
+    }
+
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.spec.queue_depth = depth;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.spec.seed = seed;
+        self
+    }
+
+    /// Artifact directory for the default PJRT backend (ignored when an
+    /// explicit backend is set).
+    pub fn artifact_dir(mut self, dir: impl Into<String>) -> Self {
+        self.artifact_dir = dir.into();
+        self
+    }
+
+    /// Plug in an execution backend (default: [`PjrtBackend`] over the
+    /// artifact directory).
+    pub fn backend(mut self, backend: Arc<dyn InferenceBackend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Validate the spec, bind the backend, and fail fast on anything the
+    /// backend cannot serve — all before a single thread spawns.
+    pub fn build(self) -> Result<Session> {
+        let PipelineBuilder {
+            spec,
+            backend,
+            artifact_dir,
+        } = self;
+        spec.validate()?;
+        #[cfg(feature = "pjrt")]
+        let backend: Arc<dyn InferenceBackend> =
+            backend.unwrap_or_else(|| Arc::new(PjrtBackend::new(artifact_dir.as_str())));
+        #[cfg(not(feature = "pjrt"))]
+        let backend: Arc<dyn InferenceBackend> = {
+            let _ = artifact_dir;
+            backend.ok_or_else(|| {
+                crate::error::Error::Config(
+                    "no inference backend set and the `pjrt` feature is disabled; \
+                     pass .backend(Arc::new(SimBackend::new(...)))"
+                        .into(),
+                )
+            })?
+        };
+        for inst in &spec.instances {
+            backend.prepare(inst)?;
+        }
+        Ok(Session { spec, backend })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::orin;
+    use crate::pipeline::backend::SimBackend;
+
+    fn sim() -> Arc<dyn InferenceBackend> {
+        Arc::new(SimBackend::new(orin()).with_time_scale(0.0))
+    }
+
+    #[test]
+    fn empty_builder_fails_fast() {
+        let err = Session::builder().backend(sim()).build().unwrap_err();
+        assert!(err.to_string().contains("no instances"));
+    }
+
+    #[test]
+    fn unknown_artifact_fails_at_build_not_run() {
+        let err = Session::builder()
+            .instance(InstanceSpec::new("x", "not_a_model"))
+            .backend(sim())
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown artifact"));
+    }
+
+    #[cfg(feature = "pjrt")]
+    #[test]
+    fn missing_pjrt_artifacts_fail_at_build() {
+        let err = Session::builder()
+            .instance(InstanceSpec::new("gan", "gen_cropping"))
+            .artifact_dir("/nonexistent")
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn workload_preset_populates_builder() {
+        let session = Session::builder()
+            .workload(Workload::GanPlusYolo, GanVariant::Cropping)
+            .frames(8)
+            .backend(sim())
+            .build()
+            .unwrap();
+        assert_eq!(session.spec().instances.len(), 2);
+        assert_eq!(session.spec().route, RoutePolicy::Fanout);
+        assert_eq!(session.backend_name(), "sim");
+    }
+}

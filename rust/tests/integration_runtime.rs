@@ -1,5 +1,6 @@
 //! Integration: PJRT runtime against the real artifacts (skipped when
 //! `make artifacts` has not run).
+#![cfg(feature = "pjrt")]
 
 use edgepipe::runtime::{Artifact, RuntimeClient, WeightsFile};
 use std::path::Path;
