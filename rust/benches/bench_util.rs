@@ -1,21 +1,54 @@
 //! Tiny shared bench harness (criterion is not in the offline vendor
-//! set). Measures wall-clock over enough iterations for stability and
-//! prints mean / throughput lines that `cargo bench` surfaces.
+//! set). Measures wall-clock over enough iterations for stability, prints
+//! mean / throughput lines that `cargo bench` surfaces, and records every
+//! measurement so a bench main can emit a machine-readable
+//! `BENCH_<name>.json` (name → ns/op plus derived rates) for the perf
+//! trajectory and the CI `bench-smoke` artifact.
+//!
+//! Short mode: set `EDGEPIPE_BENCH_SMOKE=1` to cap each measurement's
+//! wall-clock budget so CI can validate the bench + JSON cheaply.
 
+// Each bench main uses a different subset of the harness.
+#![allow(dead_code)]
+
+use edgepipe::config::json::{num, obj, Json};
+use std::cell::RefCell;
 use std::time::Instant;
+
+struct Entry {
+    label: String,
+    ns_per_op: f64,
+    iters: u64,
+    /// Derived throughput figures, e.g. `("frames_per_s", 1234.0)`.
+    rates: Vec<(String, f64)>,
+}
 
 pub struct Bench {
     pub name: &'static str,
+    smoke: bool,
+    entries: RefCell<Vec<Entry>>,
 }
 
 impl Bench {
     pub fn new(name: &'static str) -> Self {
-        println!("== bench: {name} ==");
-        Bench { name }
+        let smoke =
+            matches!(std::env::var("EDGEPIPE_BENCH_SMOKE"), Ok(v) if !v.is_empty() && v != "0");
+        if smoke {
+            println!("== bench: {name} (smoke mode) ==");
+        } else {
+            println!("== bench: {name} ==");
+        }
+        Bench {
+            name,
+            smoke,
+            entries: RefCell::new(Vec::new()),
+        }
     }
 
-    /// Time `f` for at least `min_ms` of wall clock; report mean ms/iter.
+    /// Time `f` for at least `min_ms` of wall clock (capped in smoke
+    /// mode); report and record mean ms/iter.
     pub fn measure<F: FnMut()>(&self, label: &str, min_ms: u64, mut f: F) -> f64 {
+        let min_ms = if self.smoke { min_ms.min(25) } else { min_ms };
         // warmup
         f();
         let t0 = Instant::now();
@@ -31,6 +64,59 @@ impl Bench {
             mean_ms,
             iters
         );
+        self.entries.borrow_mut().push(Entry {
+            label: label.to_string(),
+            ns_per_op: mean_ms * 1e6,
+            iters,
+            rates: Vec::new(),
+        });
         mean_ms
+    }
+
+    /// Print a derived throughput figure and attach it to `label`'s
+    /// recorded entry (creating one when the figure has no timed entry).
+    pub fn rate(&self, label: &str, unit: &str, value: f64) {
+        println!(
+            "{:<40} {:>12.1} {unit}",
+            format!("{}/{label}", self.name),
+            value
+        );
+        let mut entries = self.entries.borrow_mut();
+        match entries.iter_mut().find(|e| e.label == label) {
+            Some(e) => e.rates.push((unit.to_string(), value)),
+            None => entries.push(Entry {
+                label: label.to_string(),
+                ns_per_op: 0.0,
+                iters: 0,
+                rates: vec![(unit.to_string(), value)],
+            }),
+        }
+    }
+
+    /// Write everything recorded so far as `BENCH_<name>.json`-style
+    /// machine-readable output: `entries` maps each label to its ns/op,
+    /// iteration count, and derived rates.
+    pub fn write_json(&self, path: &str) {
+        let entries = self.entries.borrow();
+        let entry_objs: Vec<(&str, Json)> = entries
+            .iter()
+            .map(|e| {
+                let mut fields = vec![
+                    ("ns_per_op", num(e.ns_per_op)),
+                    ("iters", num(e.iters as f64)),
+                ];
+                for (unit, value) in &e.rates {
+                    fields.push((unit.as_str(), num(*value)));
+                }
+                (e.label.as_str(), obj(fields))
+            })
+            .collect();
+        let doc = obj(vec![
+            ("bench", edgepipe::config::json::s(self.name)),
+            ("smoke", Json::Bool(self.smoke)),
+            ("entries", obj(entry_objs)),
+        ]);
+        std::fs::write(path, doc.to_pretty()).expect("write bench json");
+        println!("wrote {path} ({} entries)", entries.len());
     }
 }

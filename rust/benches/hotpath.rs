@@ -1,6 +1,10 @@
 //! Hot-path micro-benches for the performance pass (EXPERIMENTS.md §Perf):
 //! simulator event throughput, scheduler search, NMS, JSON, frame routing,
-//! coordinator overhead, PJRT execute.
+//! block DCT, batched vs unbatched dispatch, coordinator overhead, PJRT
+//! execute. Emits `BENCH_hotpath.json` (name → ns/op + derived rates) so
+//! every run seeds the machine-readable perf trajectory; CI's
+//! `bench-smoke` job runs this in short mode (`EDGEPIPE_BENCH_SMOKE=1`)
+//! and archives the JSON.
 
 mod bench_util;
 
@@ -8,8 +12,11 @@ use bench_util::Bench;
 use edgepipe::config::json::Json;
 use edgepipe::config::GanVariant;
 use edgepipe::hw::orin;
+use edgepipe::imaging::dct::{dct8_block, idct8_block};
 use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
 use edgepipe::models::yolov8::{yolov8, YoloConfig};
+use edgepipe::pipeline::batcher::BatchPolicy;
+use edgepipe::pipeline::plane::FramePlane;
 use edgepipe::pipeline::router::{RoutePolicy, Router};
 use edgepipe::pipeline::{Frame, InferenceBackend, InstanceSpec, SimBackend};
 use edgepipe::postproc::{nms, Detection};
@@ -18,7 +25,7 @@ use edgepipe::session::Session;
 use edgepipe::sim::{simulate, SimConfig};
 use edgepipe::util::rng::Rng;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn main() {
     let soc = orin();
@@ -35,28 +42,24 @@ fn main() {
         simulate(&[&g, &y], &sched, &cfg).unwrap();
     });
     // each frame ~6 steps across 2 instances
-    println!(
-        "{:<40} {:>10.0} jobs/s",
-        "hotpath/sim_job_rate",
-        (frames as f64 * 6.0) / (ms / 1e3)
+    b.rate(
+        "sim_2048_frames_no_trace",
+        "jobs_per_s",
+        (frames as f64 * 6.0) / (ms / 1e3),
     );
     let ms_tl = b.measure("sim_2048_frames_with_trace", 500, || {
         let cfg = SimConfig::new(soc.clone(), frames);
         simulate(&[&g, &y], &sched, &cfg).unwrap();
     });
-    println!(
-        "{:<40} {:>10.2}x",
-        "hotpath/trace_overhead",
-        ms_tl / ms
-    );
+    b.rate("sim_2048_frames_with_trace", "trace_overhead_x", ms_tl / ms);
 
-    // Router hot path: `route` returns an allocation-free iterator (was a
-    // Vec<usize> per frame). 100k routed frames per iteration; the fanout
-    // case is the one that used to allocate an 8-element Vec every frame.
+    // Router hot path: `route` returns an allocation-free iterator and the
+    // driver's fanout copies are Arc refcount bumps — zero pixel copies.
+    // 100k routed frames per iteration.
     let rframe = Frame {
         id: 0,
         stream: 3,
-        data: Vec::new(),
+        data: FramePlane::from_vec(Vec::new()),
         width: 0,
         height: 0,
         gt_mri: None,
@@ -74,20 +77,71 @@ fn main() {
                 route_sink = route_sink.wrapping_add(router.route(&rframe).sum::<usize>());
             }
         });
-        println!(
-            "{:<40} {:>10.0} routes/s",
-            format!("hotpath/{label}_rate"),
-            100_000.0 / (ms / 1e3)
-        );
+        b.rate(label, "routes_per_s", 100_000.0 / (ms / 1e3));
     }
     println!("route checksum: {route_sink}");
 
+    // Block DCT throughput: the 8x8 basis table is memoized (was 64 `cos`
+    // calls per block); 10k forward + inverse transforms per iteration.
+    let mut rng = Rng::new(7);
+    let mut block = [0f32; 64];
+    for v in &mut block {
+        *v = rng.next_f32() - 0.5;
+    }
+    let mut dct_sink = 0f32;
+    let ms = b.measure("dct8_block_10k_blocks", 200, || {
+        let mut blk = block;
+        for _ in 0..5_000 {
+            blk = idct8_block(&dct8_block(&blk));
+        }
+        dct_sink += blk[0];
+    });
+    b.rate("dct8_block_10k_blocks", "blocks_per_s", 10_000.0 / (ms / 1e3));
+    println!("dct checksum: {dct_sink}");
+
+    // Batched vs unbatched dispatch through the sim backend's roofline
+    // pricing: execute_batch(4) is ONE dispatch that amortizes launch
+    // overhead and weight traffic, so it must cost less than 4 single
+    // dispatches. time_scale shrinks the modeled sleeps to keep the bench
+    // quick while preserving the ratio.
+    let dispatch_backend = SimBackend::new(orin()).with_time_scale(0.05);
+    let dispatch_spec = InstanceSpec::new("gan", "gen_cropping").with_batch(BatchPolicy {
+        max_batch: 4,
+        timeout: Duration::from_micros(500),
+    });
+    let mut dispatch_runner = dispatch_backend.open(&dispatch_spec).unwrap();
+    let dispatch_frames: Vec<Frame> = (0..4)
+        .map(|i| Frame {
+            id: i,
+            stream: 0,
+            data: FramePlane::from_vec(vec![0.1; 64 * 64]),
+            width: 64,
+            height: 64,
+            gt_mri: None,
+            admitted: Instant::now(),
+        })
+        .collect();
+    let ms_single4 = b.measure("sim_dispatch_single_x4", 150, || {
+        for f in &dispatch_frames {
+            dispatch_runner.run(f).unwrap();
+        }
+    });
+    let ms_batch4 = b.measure("sim_dispatch_batched_4", 150, || {
+        dispatch_runner.execute_batch(&dispatch_frames).unwrap();
+    });
+    b.rate(
+        "sim_dispatch_batched_4",
+        "speedup_vs_4x_single",
+        ms_single4 / ms_batch4,
+    );
+
     // Coordinator overhead: a full 2-instance fanout session on the sim
     // backend with latencies zeroed and fidelity scoring off, so the
-    // measurement is source synthesis + channels + router + batcher +
-    // metrics + thread handoff (phantom generation is part of the serving
-    // loop and stays in; per-frame SSIM would otherwise dominate). Built
-    // once outside the loop to keep build/prepare graph pricing out.
+    // measurement is source synthesis + pooled planes + channels + router
+    // + batcher + metrics + thread handoff (phantom generation is part of
+    // the serving loop and stays in; per-frame SSIM would otherwise
+    // dominate). Built once outside the loop to keep build/prepare graph
+    // pricing out.
     let backend: Arc<dyn InferenceBackend> =
         Arc::new(SimBackend::new(orin()).with_time_scale(0.0));
     let session_frames = 256usize;
@@ -102,10 +156,33 @@ fn main() {
     let ms = b.measure("session_sim_fanout_256_frames", 1000, || {
         session.run().unwrap();
     });
-    println!(
-        "{:<40} {:>10.0} frames/s",
-        "hotpath/session_overhead_rate",
-        session_frames as f64 / (ms / 1e3)
+    b.rate(
+        "session_sim_fanout_256_frames",
+        "frames_per_s",
+        session_frames as f64 / (ms / 1e3),
+    );
+
+    // The same coordinator with batch-4 policies: fewer dispatches for the
+    // same frame count (the session-level view of batched execution).
+    let batch4 = BatchPolicy {
+        max_batch: 4,
+        timeout: Duration::from_micros(500),
+    };
+    let session_b4 = Session::builder()
+        .instance(InstanceSpec::new("gan", "gen_cropping").with_batch(batch4))
+        .instance(InstanceSpec::new("yolo", "yolo_lite").with_batch(batch4))
+        .route(RoutePolicy::Fanout)
+        .frames(session_frames)
+        .backend(Arc::clone(&backend))
+        .build()
+        .unwrap();
+    let ms_b4 = b.measure("session_sim_fanout_256_frames_batch4", 1000, || {
+        session_b4.run().unwrap();
+    });
+    b.rate(
+        "session_sim_fanout_256_frames_batch4",
+        "frames_per_s",
+        session_frames as f64 / (ms_b4 / 1e3),
     );
 
     // NMS over 1k random boxes.
@@ -142,6 +219,8 @@ fn main() {
 
     // PJRT execute on the real artifact if available.
     pjrt_benches(&b);
+
+    b.write_json("BENCH_hotpath.json");
 }
 
 #[cfg(feature = "pjrt")]

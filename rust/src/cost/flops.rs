@@ -28,12 +28,21 @@ impl LayerCost {
     };
 }
 
+/// Bytes of model parameters a layer fetches per dispatch (FP16 weights).
+/// Single source of truth for the weight-precision factor — `layer_cost`
+/// folds this into `bytes`, and the batched roofline
+/// ([`crate::cost::latency::batched_layer_latency`]) splits it back out
+/// to amortize weight traffic across a batch.
+pub fn layer_param_bytes(kind: &LayerKind, inputs: &[Shape]) -> f64 {
+    kind.param_count(inputs) as f64 * 2.0
+}
+
 /// Compute cost of a layer from its attributes and I/O shapes.
 pub fn layer_cost(kind: &LayerKind, inputs: &[Shape], output: Shape) -> LayerCost {
     use LayerKind::*;
     let in_bytes: f64 = inputs.iter().map(|s| s.bytes() as f64).sum();
     let out_bytes = output.bytes() as f64;
-    let param_bytes = kind.param_count(inputs) as f64 * 2.0; // FP16 weights
+    let param_bytes = layer_param_bytes(kind, inputs);
     let io = in_bytes + out_bytes + param_bytes;
 
     match kind {

@@ -25,9 +25,25 @@ pub struct LatencyModel {
 
 /// Latency of one layer cost on one engine, seconds.
 pub fn layer_latency(cost: &LayerCost, engine: &EngineSpec) -> f64 {
+    batched_layer_latency(cost, 0.0, engine, 1)
+}
+
+/// Roofline latency of one layer executed as a **batched dispatch** of
+/// `n` frames, seconds: compute and activation traffic scale with `n`,
+/// while the weight fetch (`param_bytes` of `cost.bytes`) and the kernel
+/// launch are paid once per dispatch. `n == 1` is exactly
+/// [`layer_latency`] (the activation/weight split cancels out there), so
+/// the single-frame calibration and the batched pricing cannot drift.
+pub fn batched_layer_latency(
+    cost: &LayerCost,
+    param_bytes: f64,
+    engine: &EngineSpec,
+    n: usize,
+) -> f64 {
     if cost.flops == 0.0 && cost.bytes == 0.0 {
         return 0.0; // structural markers
     }
+    let n = n.max(1) as f64;
     let compute = if cost.is_mac {
         let eff = engine.effective_flops()
             * if cost.is_deconv { engine.deconv_boost } else { 1.0 };
@@ -36,8 +52,9 @@ pub fn layer_latency(cost: &LayerCost, engine: &EngineSpec) -> f64 {
         // element ops: flops here counts elements processed
         cost.flops / engine.elementwise_rate
     };
-    let memory = cost.bytes / engine.mem_bw;
-    compute.max(memory) + engine.launch_overhead
+    let act_bytes = (cost.bytes - param_bytes).max(0.0);
+    let memory = (n * act_bytes + param_bytes) / engine.mem_bw;
+    (n * compute).max(memory) + engine.launch_overhead
 }
 
 impl LatencyModel {
@@ -151,6 +168,26 @@ mod tests {
                 t_orig * 1e3
             );
         }
+    }
+
+    #[test]
+    fn batched_layer_latency_amortizes_weights_and_launch() {
+        let soc = orin();
+        let engine = soc.engine(EngineKind::Gpu);
+        let cost = LayerCost {
+            flops: 1e9,
+            bytes: 9e6,
+            is_mac: true,
+            is_deconv: false,
+        };
+        // n = 1 is exactly the single-frame roofline, any weight split
+        let single = layer_latency(&cost, engine);
+        assert_eq!(batched_layer_latency(&cost, 0.0, engine, 1), single);
+        assert_eq!(batched_layer_latency(&cost, 8e6, engine, 1), single);
+        // a batch of 4 amortizes the launch and the 8 MB of weights
+        let b4 = batched_layer_latency(&cost, 8e6, engine, 4);
+        assert!(b4 < 4.0 * single);
+        assert!(b4 >= single);
     }
 
     #[test]

@@ -4,27 +4,32 @@
 //! JPEG-style transform used in medical image compression pipelines.
 
 use super::image::Image;
+use std::sync::OnceLock;
 
 const N: usize = 8;
 
-/// Precomputed cosine basis: `BASIS[k][n] = cos(pi/N * (n + 0.5) * k)`.
-fn basis() -> [[f32; N]; N] {
-    let mut b = [[0f32; N]; N];
-    for (k, row) in b.iter_mut().enumerate() {
-        for (n, v) in row.iter_mut().enumerate() {
-            *v = (std::f32::consts::PI / N as f32 * (n as f32 + 0.5) * k as f32).cos();
+/// Scaled cosine basis with the orthonormal `alpha(k)` factor folded in:
+/// `BASIS[k][n] = alpha(k) * cos(pi/N * (n + 0.5) * k)` where
+/// `alpha(0) = sqrt(1/N)` and `alpha(k>0) = sqrt(2/N)`. Built once — the
+/// per-block transforms previously recomputed all 64 `cos` calls (plus 16
+/// `sqrt`s) on every invocation.
+fn basis() -> &'static [[f32; N]; N] {
+    static BASIS: OnceLock<[[f32; N]; N]> = OnceLock::new();
+    BASIS.get_or_init(|| {
+        let mut b = [[0f32; N]; N];
+        for (k, row) in b.iter_mut().enumerate() {
+            let alpha = if k == 0 {
+                (1.0 / N as f32).sqrt()
+            } else {
+                (2.0 / N as f32).sqrt()
+            };
+            for (n, v) in row.iter_mut().enumerate() {
+                *v = alpha
+                    * (std::f32::consts::PI / N as f32 * (n as f32 + 0.5) * k as f32).cos();
+            }
         }
-    }
-    b
-}
-
-#[inline]
-fn alpha(k: usize) -> f32 {
-    if k == 0 {
-        (1.0 / N as f32).sqrt()
-    } else {
-        (2.0 / N as f32).sqrt()
-    }
+        b
+    })
 }
 
 /// Forward 8×8 DCT-II of one block (row-major 64 elements).
@@ -39,7 +44,7 @@ pub fn dct8_block(block: &[f32; 64]) -> [f32; 64] {
             for n in 0..N {
                 s += block[y * N + n] * b[k][n];
             }
-            tmp[y * N + k] = alpha(k) * s;
+            tmp[y * N + k] = s;
         }
     }
     // columns
@@ -49,7 +54,7 @@ pub fn dct8_block(block: &[f32; 64]) -> [f32; 64] {
             for n in 0..N {
                 s += tmp[n * N + x] * b[k][n];
             }
-            out[k * N + x] = alpha(k) * s;
+            out[k * N + x] = s;
         }
     }
     out
@@ -64,7 +69,7 @@ pub fn idct8_block(coeffs: &[f32; 64]) -> [f32; 64] {
         for n in 0..N {
             let mut s = 0.0;
             for k in 0..N {
-                s += alpha(k) * coeffs[k * N + x] * b[k][n];
+                s += coeffs[k * N + x] * b[k][n];
             }
             tmp[n * N + x] = s;
         }
@@ -75,7 +80,7 @@ pub fn idct8_block(coeffs: &[f32; 64]) -> [f32; 64] {
         for n in 0..N {
             let mut s = 0.0;
             for k in 0..N {
-                s += alpha(k) * tmp[y * N + k] * b[k][n];
+                s += tmp[y * N + k] * b[k][n];
             }
             out[y * N + n] = s;
         }

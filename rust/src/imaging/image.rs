@@ -43,6 +43,31 @@ impl Image {
         })
     }
 
+    /// Build from a borrowed slice through a per-pixel map: one
+    /// allocation, length-validated before mapping (the pipeline's
+    /// fidelity path rescales shared `[-1, 1]` planes with this per
+    /// scored frame).
+    pub fn from_mapped(
+        width: usize,
+        height: usize,
+        src: &[f32],
+        f: impl Fn(f32) -> f32,
+    ) -> Result<Self> {
+        if src.len() != width * height {
+            return Err(Error::Imaging(format!(
+                "data length {} != {}x{}",
+                src.len(),
+                width,
+                height
+            )));
+        }
+        Ok(Image {
+            width,
+            height,
+            data: src.iter().map(|&v| f(v)).collect(),
+        })
+    }
+
     #[inline]
     pub fn get(&self, x: usize, y: usize) -> f32 {
         self.data[y * self.width + x]
@@ -181,6 +206,13 @@ mod tests {
     fn from_data_validates_length() {
         assert!(Image::from_data(2, 2, vec![0.0; 3]).is_err());
         assert!(Image::from_data(2, 2, vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn from_mapped_applies_transform() {
+        let img = Image::from_mapped(2, 2, &[-1.0, 0.0, 0.5, 1.0], |x| (x + 1.0) / 2.0).unwrap();
+        assert_eq!(img.data, vec![0.0, 0.5, 0.75, 1.0]);
+        assert!(Image::from_mapped(2, 2, &[0.0; 3], |x| x).is_err());
     }
 
     #[test]

@@ -41,6 +41,26 @@
 //! (`Workload::GanPlusYolo.spec(variant)`, or
 //! `Session::builder().workload(...)`).
 //!
+//! ## Frame data path (zero-copy)
+//!
+//! Pixel planes travel the pipeline as [`pipeline::plane::FramePlane`]s
+//! behind `Arc`. Routing a frame to several instances (fanout) bumps
+//! refcounts instead of copying the W×H plane; the synthetic source
+//! recycles its sealed plane buffers through a
+//! [`pipeline::plane::PlanePool`] instead of re-allocating them per
+//! frame. A plane is
+//! copied exactly once per inference — when a backend writes its output
+//! tensor out — and never on route, enqueue, or batch (the sim backend
+//! even echoes the input plane by refcount). Ground truth rides only the
+//! copies headed to fidelity-scoring instances. Workers drain the batcher
+//! and execute each batch as **one** dispatch through
+//! [`pipeline::backend::ModelRunner::execute_batch`], so `max_batch > 1`
+//! reduces dispatch count and amortizes per-dispatch launch overhead and
+//! weight traffic (priced by
+//! [`pipeline::backend::SimBackend::batch_latency`]; stacked into a
+//! single PJRT transfer + execute on the real path). The `hotpath` bench
+//! records this contract in a machine-readable `BENCH_hotpath.json`.
+//!
 //! ## Layers
 //!
 //! * [`graph`] — layer-graph IR with shape inference and the paper's

@@ -3,7 +3,9 @@
 //! Collects frames up to `max_batch` or until `timeout` elapses after the
 //! first frame (the vLLM/DeepStream policy). The paper's pipelines are
 //! latency-oriented batch-1, but the client-server scheme benefits from
-//! small batches under multi-stream load.
+//! small batches under multi-stream load — the worker hands the whole
+//! batch to [`super::backend::ModelRunner::execute_batch`] as one
+//! dispatch.
 
 use super::frame::Frame;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
@@ -27,23 +29,30 @@ impl Default for BatchPolicy {
 
 /// Pull the next batch from `rx`. Returns `None` when the channel is
 /// closed and drained.
+///
+/// The wait strategy is a single deadline fixed when the first frame
+/// arrives, with exactly one `recv_timeout` per additional frame for the
+/// *remaining* window — no periodic re-polling, no drift accumulation, no
+/// busy-spin. A disconnect mid-batch flushes the partial batch
+/// immediately instead of waiting out the window; the disconnect itself
+/// surfaces as `None` on the next call, once the channel is drained.
 pub fn next_batch(rx: &Receiver<Frame>, policy: BatchPolicy) -> Option<Vec<Frame>> {
     // Block for the first frame.
     let first = rx.recv().ok()?;
-    let mut batch = vec![first];
+    let mut batch = Vec::with_capacity(policy.max_batch.max(1));
+    batch.push(first);
     if policy.max_batch <= 1 {
         return Some(batch);
     }
     let deadline = Instant::now() + policy.timeout;
     while batch.len() < policy.max_batch {
-        let now = Instant::now();
-        if now >= deadline {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
             break;
         }
-        match rx.recv_timeout(deadline - now) {
+        match rx.recv_timeout(remaining) {
             Ok(f) => batch.push(f),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
         }
     }
     Some(batch)
@@ -52,6 +61,7 @@ pub fn next_batch(rx: &Receiver<Frame>, policy: BatchPolicy) -> Option<Vec<Frame
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pipeline::plane::FramePlane;
     use std::sync::mpsc::sync_channel;
     use std::time::Instant as StdInstant;
 
@@ -59,7 +69,7 @@ mod tests {
         Frame {
             id,
             stream: 0,
-            data: vec![],
+            data: FramePlane::from_vec(Vec::new()),
             width: 0,
             height: 0,
             gt_mri: None,
@@ -103,6 +113,67 @@ mod tests {
         let b = next_batch(&rx, policy).unwrap();
         assert_eq!(b.len(), 2);
         assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn timeout_expiry_waits_the_window_once() {
+        let (tx, rx) = sync_channel(8);
+        tx.send(frame(0)).unwrap();
+        let timeout = Duration::from_millis(25);
+        let policy = BatchPolicy {
+            max_batch: 4,
+            timeout,
+        };
+        let t0 = StdInstant::now();
+        let b = next_batch(&rx, policy).unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(b.len(), 1);
+        // waited out the window exactly once: no early return, no
+        // repeated re-arming of the timeout
+        assert!(waited >= timeout, "returned after {waited:?} < {timeout:?}");
+        assert!(
+            waited < timeout * 20,
+            "deadline drifted: waited {waited:?} for a {timeout:?} window"
+        );
+        drop(tx);
+    }
+
+    #[test]
+    fn zero_timeout_returns_first_frame_immediately() {
+        let (tx, rx) = sync_channel(8);
+        tx.send(frame(0)).unwrap();
+        tx.send(frame(1)).unwrap();
+        let policy = BatchPolicy {
+            max_batch: 4,
+            timeout: Duration::ZERO,
+        };
+        let b = next_batch(&rx, policy).unwrap();
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn disconnect_mid_batch_flushes_partial_promptly() {
+        let (tx, rx) = sync_channel(8);
+        tx.send(frame(0)).unwrap();
+        let sender = std::thread::spawn(move || {
+            tx.send(frame(1)).unwrap();
+            // dropping the only sender disconnects the channel while the
+            // batcher still wants two more frames
+        });
+        let policy = BatchPolicy {
+            max_batch: 4,
+            timeout: Duration::from_secs(5),
+        };
+        let t0 = StdInstant::now();
+        let b = next_batch(&rx, policy).unwrap();
+        sender.join().unwrap();
+        assert_eq!(b.len(), 2, "partial batch must flush on disconnect");
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "disconnect must not wait out the 5s window"
+        );
+        // drained + disconnected channel ends the stream
+        assert!(next_batch(&rx, policy).is_none());
     }
 
     #[test]

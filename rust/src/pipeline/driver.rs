@@ -8,6 +8,30 @@
 //! [`super::backend::SimBackend`] the identical coordinator runs against
 //! the calibrated latency model — no artifacts required.
 //!
+//! ## Frame data path (zero-copy)
+//!
+//! Per-frame memory traffic is what eats the paper's 150 FPS margin, so
+//! the hot path never copies a pixel plane:
+//!
+//! * **source** — [`super::source::PhantomSource`] fills buffers drawn
+//!   from a shared [`super::plane::PlanePool`] and seals them into
+//!   `Arc`-shared [`super::plane::FramePlane`]s; once the workers release
+//!   a frame, its buffers park back on the pool and are reused, so the
+//!   sealed planes are recycled instead of re-allocated per frame;
+//! * **route** — fanout materialises each target's copy with
+//!   `Frame::clone`: refcount bumps, zero pixel copies. Ground truth only
+//!   rides the copies headed to fidelity-scoring instances; everyone else
+//!   gets `gt_mri: None`;
+//! * **dispatch** — workers hand each batch from
+//!   [`super::batcher::next_batch`] to
+//!   [`super::backend::ModelRunner::execute_batch`] as **one** dispatch,
+//!   so `max_batch > 1` genuinely reduces dispatch count (the sim prices
+//!   the amortized launch/weight traffic; PJRT stacks the frames into a
+//!   single transfer + execute);
+//! * **write-out** — the only place a plane is ever materialised is a
+//!   backend writing a fresh output tensor (the sim even skips that by
+//!   echoing the input plane with a refcount bump).
+//!
 //! The public entry point is [`crate::session::Session`]; [`run_pipeline`]
 //! survives as a thin compatibility wrapper that lowers a
 //! [`PipelineConfig`] through the session builder.
@@ -21,6 +45,7 @@ use super::backend::InferenceBackend;
 use super::batcher::next_batch;
 use super::frame::Frame;
 use super::metrics::{InstanceSnapshot, Metrics};
+use super::plane::PlanePool;
 use super::router::Router;
 use super::source::PhantomSource;
 use super::spec::PipelineSpec;
@@ -117,7 +142,8 @@ pub(crate) fn execute(
     // Workers: one thread per instance (the two-engine analogue). All
     // non-`Send` executor state (e.g. PJRT handles) is created inside the
     // thread by `backend.open` — the same isolation a per-engine TensorRT
-    // context gives on the Jetson.
+    // context gives on the Jetson. Each batch the batcher yields goes to
+    // the backend as ONE dispatch.
     let mut handles = Vec::new();
     for (idx, (inst, rx)) in spec.instances.iter().zip(receivers.into_iter()).enumerate() {
         let metrics = Arc::clone(&metrics);
@@ -128,13 +154,23 @@ pub(crate) fn execute(
             .spawn(move || -> Result<()> {
                 let mut runner = backend.open(&inst)?;
                 while let Some(batch) = next_batch(&rx, inst.batch) {
-                    for frame in batch {
-                        let out = runner.run(&frame)?;
+                    let outs = runner.execute_batch(&batch)?;
+                    if outs.len() != batch.len() {
+                        // a silent mismatch would leak frames out of the
+                        // produced = processed + dropped conservation
+                        return Err(Error::Pipeline(format!(
+                            "instance `{}`: backend returned {} outputs for a batch of {}",
+                            inst.label,
+                            outs.len(),
+                            batch.len()
+                        )));
+                    }
+                    for (frame, out) in batch.iter().zip(outs.iter()) {
                         let latency = frame.admitted.elapsed().as_secs_f64();
                         metrics.record_frame(idx, latency);
                         if inst.score_fidelity && frame.id % SCORE_EVERY == 0 {
                             if let Some(gt) = &frame.gt_mri {
-                                record_fidelity(&metrics, idx, &frame, gt, &out);
+                                record_fidelity(&metrics, idx, frame, gt, out);
                             }
                         }
                     }
@@ -145,8 +181,12 @@ pub(crate) fn execute(
         handles.push(handle);
     }
 
-    // Source + router on the main thread (frames are cheap to make).
+    // Source + router on the main thread. All sources draw from (and
+    // return to) one plane pool, so frame synthesis recycles the buffers
+    // the workers release.
     let mut router = Router::new(spec.route, spec.instances.len());
+    let scoring: Vec<bool> = spec.instances.iter().map(|i| i.score_fidelity).collect();
+    let pool = PlanePool::default();
     let per_stream = spec.frames / spec.streams.max(1);
     let mut sources: Vec<PhantomSource> = (0..spec.streams)
         .map(|st| {
@@ -156,6 +196,7 @@ pub(crate) fn execute(
                 st,
                 per_stream,
             )
+            .with_pool(pool.clone())
         })
         .collect();
     let mut total_frames = 0usize;
@@ -169,12 +210,18 @@ pub(crate) fn execute(
                 let copies = targets.len();
                 let mut frame = Some(frame);
                 for (copy, target) in targets.enumerate() {
-                    // Last copy moves the frame; earlier copies clone it.
-                    let f = if copy + 1 == copies {
+                    // Last copy moves the frame; earlier copies clone it —
+                    // an Arc refcount bump per plane, never a pixel copy.
+                    let mut f = if copy + 1 == copies {
                         frame.take().expect("one frame per routed copy")
                     } else {
                         frame.as_ref().expect("one frame per routed copy").clone()
                     };
+                    // Ground truth is only consumed by fidelity scoring:
+                    // don't carry the plane through other queues.
+                    if !scoring[target] {
+                        f.gt_mri = None;
+                    }
                     if copy == 0 {
                         // The primary copy is lossless: block under
                         // backpressure (the paper's pipeline drops nothing
@@ -216,12 +263,13 @@ pub(crate) fn execute(
 }
 
 fn record_fidelity(metrics: &Metrics, idx: usize, frame: &Frame, gt: &[f32], out: &[f32]) {
-    let to01 = |v: &[f32]| -> Vec<f32> { v.iter().map(|&x| (x + 1.0) / 2.0).collect() };
     if gt.len() != frame.numel() || out.len() != frame.numel() {
         return;
     }
-    let a = Image::from_data(frame.width, frame.height, to01(gt));
-    let b = Image::from_data(frame.width, frame.height, to01(out));
+    // [-1, 1] model range -> [0, 1] image range
+    let to01 = |x: f32| (x + 1.0) / 2.0;
+    let a = Image::from_mapped(frame.width, frame.height, gt, to01);
+    let b = Image::from_mapped(frame.width, frame.height, out, to01);
     if let (Ok(a), Ok(b)) = (a, b) {
         if let Ok(f) = fidelity(&a, &b) {
             metrics.record_fidelity(idx, f.psnr, f.ssim_pct);

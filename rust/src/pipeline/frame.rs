@@ -1,5 +1,12 @@
 //! Frame and frame metadata.
+//!
+//! Pixel planes are [`FramePlane`]s behind `Arc`: cloning a `Frame` (the
+//! router's fanout path) bumps two refcounts and copies a few words of
+//! metadata — it never touches pixel memory. See [`super::plane`] for the
+//! sharing/recycling invariants.
 
+use super::plane::FramePlane;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// One CT slice travelling through the pipeline.
@@ -9,13 +16,15 @@ pub struct Frame {
     pub id: u64,
     /// Source stream (client-server scheme has several).
     pub stream: usize,
-    /// Flattened NHWC pixels in [-1, 1] (model input scaling).
-    pub data: Vec<f32>,
+    /// Flattened NHWC pixels in [-1, 1] (model input scaling), shared —
+    /// routed copies of this frame alias the same plane.
+    pub data: Arc<FramePlane>,
     pub width: usize,
     pub height: usize,
     /// Ground-truth MRI in [-1, 1] when the source is synthetic (enables
-    /// online PSNR/SSIM without stopping the pipeline).
-    pub gt_mri: Option<Vec<f32>>,
+    /// online PSNR/SSIM without stopping the pipeline). The driver strips
+    /// it from copies routed to instances that do not score fidelity.
+    pub gt_mri: Option<Arc<FramePlane>>,
     /// Admission timestamp for end-to-end latency.
     pub admitted: Instant,
 }
@@ -35,12 +44,31 @@ mod tests {
         let f = Frame {
             id: 0,
             stream: 0,
-            data: vec![0.0; 64 * 64],
+            data: FramePlane::from_vec(vec![0.0; 64 * 64]),
             width: 64,
             height: 64,
             gt_mri: None,
             admitted: Instant::now(),
         };
         assert_eq!(f.numel(), 4096);
+    }
+
+    #[test]
+    fn clone_shares_planes_zero_copy() {
+        let f = Frame {
+            id: 1,
+            stream: 0,
+            data: FramePlane::from_vec(vec![0.25; 16]),
+            width: 4,
+            height: 4,
+            gt_mri: Some(FramePlane::from_vec(vec![0.75; 16])),
+            admitted: Instant::now(),
+        };
+        let g = f.clone();
+        assert!(Arc::ptr_eq(&f.data, &g.data), "pixel plane must be shared");
+        assert!(Arc::ptr_eq(f.gt_mri.as_ref().unwrap(), g.gt_mri.as_ref().unwrap()));
+        assert_eq!(Arc::strong_count(&f.data), 2);
+        drop(g);
+        assert_eq!(Arc::strong_count(&f.data), 1);
     }
 }

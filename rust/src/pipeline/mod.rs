@@ -2,9 +2,11 @@
 //!
 //! DeepStream-equivalent: CT frames flow from [`source`]s through the
 //! [`batcher`] and [`router`] into per-instance workers that execute
-//! through a pluggable [`backend`] (PJRT artifacts or the deterministic
-//! latency-model sim), with bounded queues providing backpressure and
-//! [`metrics`] aggregating throughput/latency. What runs is described
+//! whole batches in one dispatch through a pluggable [`backend`] (PJRT
+//! artifacts or the deterministic latency-model sim), with bounded queues
+//! providing backpressure and [`metrics`] aggregating throughput/latency.
+//! Pixel planes are `Arc`-shared [`plane::FramePlane`]s recycled through a
+//! [`plane::PlanePool`] — routing and batching never copy pixels. What runs is described
 //! declaratively by a [`spec::PipelineSpec`] — any number of instances,
 //! not just the historical four `Workload` arms — and launched through
 //! [`crate::session::Session`]. Both of the paper's deployment schemes run
@@ -18,13 +20,15 @@ pub mod batcher;
 pub mod driver;
 pub mod frame;
 pub mod metrics;
+pub mod plane;
 pub mod router;
 pub mod source;
 pub mod spec;
 
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
-pub use backend::{InferenceBackend, ModelRunner, SimBackend};
+pub use backend::{InferenceBackend, ModelRunner, Output, SimBackend};
 pub use driver::{run_pipeline, PipelineReport};
 pub use frame::Frame;
+pub use plane::{FramePlane, PlanePool};
 pub use spec::{InstanceSpec, PipelineSpec};

@@ -1,0 +1,190 @@
+//! Shared pixel planes and the recycling buffer pool.
+//!
+//! A [`FramePlane`] is one immutable W×H `f32` plane behind an `Arc`:
+//! routing a frame to several instances (fanout) and batching are refcount
+//! bumps, never O(W×H) memcpys. The [`PlanePool`] closes the allocation
+//! loop: when the *last* `Arc` to a pooled plane drops (after every worker
+//! is done with the frame), its buffer parks on the pool shelf and the
+//! source picks it up for the next frame — sealed plane buffers are
+//! allocated once and recycled, not re-allocated per frame.
+//!
+//! Invariants:
+//!
+//! * a plane is immutable once sealed — sharing is always safe;
+//! * a plane is copied at most once per inference: when a backend writes a
+//!   fresh output tensor out. Routing, queueing and batching never copy;
+//! * dropping the pool while planes are in flight is fine — their buffers
+//!   are simply freed instead of parked (the shelf link is a `Weak`).
+
+use std::sync::{Arc, Mutex, Weak};
+
+/// How many free buffers a pool shelf retains before excess buffers are
+/// dropped (bounds worst-case memory when consumers stall).
+const DEFAULT_RETAIN: usize = 64;
+
+#[derive(Debug)]
+struct Shelf {
+    free: Mutex<Vec<Vec<f32>>>,
+    retain: usize,
+}
+
+/// One immutable, shareable pixel plane. Dereferences to `[f32]`.
+#[derive(Debug)]
+pub struct FramePlane {
+    data: Vec<f32>,
+    /// Pool to return the buffer to on final drop (`None` = plain heap).
+    shelf: Option<Weak<Shelf>>,
+}
+
+impl FramePlane {
+    /// Wrap an owned buffer into a shared plane with no pool backing.
+    pub fn from_vec(data: Vec<f32>) -> Arc<FramePlane> {
+        Arc::new(FramePlane { data, shelf: None })
+    }
+
+    /// The raw pixel slice (also available through `Deref`).
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl std::ops::Deref for FramePlane {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl AsRef<[f32]> for FramePlane {
+    fn as_ref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl PartialEq for FramePlane {
+    fn eq(&self, other: &Self) -> bool {
+        self.data == other.data
+    }
+}
+
+impl Drop for FramePlane {
+    fn drop(&mut self) {
+        if let Some(weak) = self.shelf.take() {
+            if let Some(shelf) = weak.upgrade() {
+                if let Ok(mut free) = shelf.free.lock() {
+                    if free.len() < shelf.retain {
+                        free.push(std::mem::take(&mut self.data));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Recycling allocator for [`FramePlane`] buffers. Cloning is cheap and
+/// shares the shelf, so every source in a pipeline can draw from (and
+/// return to) the same pool across threads.
+#[derive(Debug, Clone)]
+pub struct PlanePool {
+    shelf: Arc<Shelf>,
+}
+
+impl Default for PlanePool {
+    fn default() -> Self {
+        PlanePool::with_retain(DEFAULT_RETAIN)
+    }
+}
+
+impl PlanePool {
+    /// Pool retaining up to `retain` free buffers.
+    pub fn with_retain(retain: usize) -> Self {
+        PlanePool {
+            shelf: Arc::new(Shelf {
+                free: Mutex::new(Vec::new()),
+                retain,
+            }),
+        }
+    }
+
+    /// An empty buffer with capacity for `len` elements — recycled from the
+    /// shelf when one is parked, freshly allocated otherwise. Fill it and
+    /// [`seal`](PlanePool::seal) it into a plane.
+    pub fn acquire(&self, len: usize) -> Vec<f32> {
+        let recycled = self.shelf.free.lock().unwrap().pop();
+        let mut buf = recycled.unwrap_or_default();
+        buf.clear();
+        buf.reserve(len);
+        buf
+    }
+
+    /// Freeze a filled buffer into a shared plane whose backing buffer
+    /// returns to this pool when the last `Arc` drops.
+    pub fn seal(&self, data: Vec<f32>) -> Arc<FramePlane> {
+        Arc::new(FramePlane {
+            data,
+            shelf: Some(Arc::downgrade(&self.shelf)),
+        })
+    }
+
+    /// Number of free buffers currently parked (introspection for tests
+    /// and benches).
+    pub fn parked(&self) -> usize {
+        self.shelf.free.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plane_derefs_to_pixels() {
+        let p = FramePlane::from_vec(vec![1.0, 2.0, 3.0]);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p[1], 2.0);
+        assert_eq!(p.as_slice(), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn sealed_buffer_returns_to_pool_on_final_drop() {
+        let pool = PlanePool::default();
+        let plane = pool.seal(vec![0.5; 16]);
+        let copy = Arc::clone(&plane);
+        drop(plane);
+        assert_eq!(pool.parked(), 0, "live clone must keep the buffer out");
+        drop(copy);
+        assert_eq!(pool.parked(), 1, "final drop must park the buffer");
+        // the recycled buffer keeps its capacity
+        let buf = pool.acquire(16);
+        assert!(buf.capacity() >= 16);
+        assert!(buf.is_empty());
+        assert_eq!(pool.parked(), 0);
+    }
+
+    #[test]
+    fn retain_bounds_the_shelf() {
+        let pool = PlanePool::with_retain(2);
+        for _ in 0..5 {
+            drop(pool.seal(vec![0.0; 8]));
+        }
+        assert_eq!(pool.parked(), 2);
+    }
+
+    #[test]
+    fn pool_drop_before_planes_is_safe() {
+        let pool = PlanePool::default();
+        let plane = pool.seal(vec![1.0; 4]);
+        drop(pool);
+        drop(plane); // shelf is gone; buffer is freed, no panic
+    }
+
+    #[test]
+    fn unpooled_planes_compare_by_content() {
+        let a = FramePlane::from_vec(vec![1.0, 2.0]);
+        let b = FramePlane::from_vec(vec![1.0, 2.0]);
+        let c = FramePlane::from_vec(vec![3.0]);
+        assert_eq!(*a, *b);
+        assert_ne!(*a, *c);
+    }
+}

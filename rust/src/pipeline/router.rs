@@ -11,7 +11,9 @@
 //!
 //! `route` is on the per-frame hot path, so it returns the allocation-free
 //! [`RouteTargets`] iterator instead of a `Vec` (the `hotpath` bench's
-//! `route_*` cases track this).
+//! `route_*` cases track this). Routing is also zero-copy on pixels: the
+//! driver materialises each target's copy with `Frame::clone`, which only
+//! bumps the shared [`super::plane::FramePlane`] refcounts.
 
 use super::frame::Frame;
 use crate::error::{Error, Result};
@@ -119,7 +121,7 @@ mod tests {
         Frame {
             id: 0,
             stream,
-            data: vec![],
+            data: crate::pipeline::plane::FramePlane::from_vec(Vec::new()),
             width: 0,
             height: 0,
             gt_mri: None,

@@ -4,8 +4,16 @@
 //! the CT scanner feed — DESIGN.md §2) so the pipeline can be driven and
 //! *scored* without external data. Sources are plain iterators; the driver
 //! moves them onto their own thread.
+//!
+//! Plane buffers are drawn from a [`PlanePool`]: once the pipeline's
+//! workers release a frame, its buffers park on the pool shelf and the
+//! next `next()` call reuses them, so the sealed CT/MRI planes are
+//! recycled rather than re-allocated per frame (the phantom generator's
+//! internal scratch in [`paired_sample`] still allocates). The driver
+//! shares one pool across all sources ([`PhantomSource::with_pool`]).
 
 use super::frame::Frame;
+use super::plane::PlanePool;
 use crate::imaging::phantom::{paired_sample, PhantomConfig};
 use crate::util::rng::Rng;
 use std::time::Instant;
@@ -17,6 +25,7 @@ pub struct PhantomSource {
     stream: usize,
     next_id: u64,
     remaining: usize,
+    pool: PlanePool,
 }
 
 impl PhantomSource {
@@ -27,7 +36,15 @@ impl PhantomSource {
             stream,
             next_id: 0,
             remaining: frames,
+            pool: PlanePool::default(),
         }
+    }
+
+    /// Draw plane buffers from (and return them to) a shared pool instead
+    /// of this source's private one.
+    pub fn with_pool(mut self, pool: PlanePool) -> Self {
+        self.pool = pool;
+        self
     }
 }
 
@@ -40,16 +57,19 @@ impl Iterator for PhantomSource {
         }
         self.remaining -= 1;
         let s = paired_sample(&self.cfg, &mut self.rng);
-        // scale [0,1] -> [-1,1] (model input convention)
-        let data: Vec<f32> = s.ct.data.iter().map(|&v| v * 2.0 - 1.0).collect();
-        let gt: Vec<f32> = s.mri.data.iter().map(|&v| v * 2.0 - 1.0).collect();
+        // scale [0,1] -> [-1,1] (model input convention), into recycled
+        // buffers
+        let mut data = self.pool.acquire(s.ct.data.len());
+        data.extend(s.ct.data.iter().map(|&v| v * 2.0 - 1.0));
+        let mut gt = self.pool.acquire(s.mri.data.len());
+        gt.extend(s.mri.data.iter().map(|&v| v * 2.0 - 1.0));
         let frame = Frame {
             id: self.next_id,
             stream: self.stream,
-            data,
+            data: self.pool.seal(data),
             width: s.ct.width,
             height: s.ct.height,
-            gt_mri: Some(gt),
+            gt_mri: Some(self.pool.seal(gt)),
             admitted: Instant::now(),
         };
         self.next_id += 1;
@@ -86,5 +106,18 @@ mod tests {
         let a: Vec<Frame> = PhantomSource::new(PhantomConfig::default(), 1, 0, 2).collect();
         let b: Vec<Frame> = PhantomSource::new(PhantomConfig::default(), 1, 1, 2).collect();
         assert_ne!(a[0].data, b[0].data);
+    }
+
+    #[test]
+    fn shared_pool_recycles_released_planes() {
+        let pool = PlanePool::default();
+        let mut src = PhantomSource::new(PhantomConfig::default(), 3, 0, 4)
+            .with_pool(pool.clone());
+        let f0 = src.next().unwrap();
+        assert_eq!(pool.parked(), 0);
+        drop(f0); // releases data + gt planes
+        assert_eq!(pool.parked(), 2);
+        let _f1 = src.next().unwrap(); // reuses both buffers
+        assert_eq!(pool.parked(), 0);
     }
 }

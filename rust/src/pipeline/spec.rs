@@ -49,6 +49,12 @@ pub const ARTIFACT_CATALOG: [(&str, ArtifactGraphFn); 4] = [
     ("yolo_lite", yolo_lite_graph),
 ];
 
+/// Largest accepted `max_batch`. The sim runner precomputes a
+/// per-batch-size latency table and the batcher pre-sizes its buffers
+/// from the policy, so an unbounded configured value must not be able to
+/// turn into unbounded work/allocation.
+pub const MAX_BATCH_LIMIT: usize = 1024;
+
 /// Comma-separated catalog names (for error messages).
 pub fn known_artifact_names() -> String {
     ARTIFACT_CATALOG
@@ -94,7 +100,10 @@ pub struct InstanceSpec {
     /// (the testbed has no physical DLA — scheduling structure is what is
     /// reproduced, timing claims are made by [`crate::sim`]).
     pub engine: EngineKind,
-    /// Per-instance dynamic batching policy.
+    /// Per-instance dynamic batching policy. Batches reach the backend as
+    /// a single [`super::backend::ModelRunner::execute_batch`] dispatch,
+    /// so `max_batch > 1` reduces dispatch count (and amortizes launch
+    /// overhead / weight traffic), it does not just group bookkeeping.
     pub batch: BatchPolicy,
     /// Score reconstruction fidelity (PSNR/SSIM) against the frame's
     /// ground truth (GAN-style instances).
@@ -186,6 +195,12 @@ impl PipelineSpec {
                     inst.label
                 )));
             }
+            if inst.batch.max_batch > MAX_BATCH_LIMIT {
+                return Err(Error::Pipeline(format!(
+                    "instance `{}`: max_batch {} exceeds the supported maximum {MAX_BATCH_LIMIT}",
+                    inst.label, inst.batch.max_batch
+                )));
+            }
             if self.instances[..i].iter().any(|o| o.label == inst.label) {
                 return Err(Error::Pipeline(format!(
                     "duplicate instance label `{}`",
@@ -250,6 +265,16 @@ mod tests {
         let mut spec = two_instance_spec();
         spec.instances[0].batch.max_batch = 0;
         assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn absurd_max_batch_rejected() {
+        let mut spec = two_instance_spec();
+        spec.instances[0].batch.max_batch = 100_000_000;
+        let err = spec.validate().unwrap_err();
+        assert!(err.to_string().contains("exceeds the supported maximum"));
+        spec.instances[0].batch.max_batch = MAX_BATCH_LIMIT;
+        spec.validate().unwrap();
     }
 
     #[test]

@@ -122,6 +122,23 @@ impl Artifact {
         Ok(outs)
     }
 
+    /// Execute `n` frames stacked along the leading batch dimension in
+    /// **one** dispatch: a single host buffer, a single device transfer,
+    /// a single execute. Only valid when the artifact was compiled with
+    /// batch `n` (`input_shape[0] == n`); the pipeline backend zero-pads
+    /// partial batches up to `n` before calling this.
+    pub fn run_images_stacked(&self, stacked: &[f32], n: usize) -> Result<Vec<OutputTensor>> {
+        if self.input_shape[0] != n {
+            return Err(Error::Runtime(format!(
+                "artifact `{}` compiled for batch {}, got a stack of {n}",
+                self.name, self.input_shape[0]
+            )));
+        }
+        // shape check (n * H * W * C) and execution are shared with the
+        // single-frame path
+        self.run_image(stacked)
+    }
+
     pub fn weight_count(&self) -> usize {
         self.weights.len()
     }

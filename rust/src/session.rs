@@ -25,6 +25,14 @@
 //! [`PipelineBuilder::workload`] (equivalently `Workload::spec(variant)`);
 //! arbitrary instance mixes — three GANs, five detectors, anything the
 //! backend can serve — go through [`PipelineBuilder::instance`].
+//!
+//! The serving hot path behind [`Session::run`] is zero-copy: pixel
+//! planes are `Arc`-shared [`crate::pipeline::plane::FramePlane`]s
+//! recycled through a [`crate::pipeline::plane::PlanePool`], and workers
+//! execute whole batches as single dispatches
+//! ([`crate::pipeline::backend::ModelRunner::execute_batch`]) — see the
+//! [`crate::pipeline::driver`] module docs for the full data-path
+//! contract.
 
 use crate::config::{GanVariant, PipelineConfig, Workload};
 use crate::error::Result;

@@ -5,11 +5,13 @@
 
 use edgepipe::config::{GanVariant, PipelineConfig, Workload};
 use edgepipe::hw;
+use edgepipe::imaging::phantom::PhantomConfig;
 use edgepipe::pipeline::batcher::BatchPolicy;
 use edgepipe::pipeline::driver::PipelineReport;
-use edgepipe::pipeline::router::RoutePolicy;
+use edgepipe::pipeline::router::{RoutePolicy, Router};
+use edgepipe::pipeline::source::PhantomSource;
 use edgepipe::pipeline::spec::InstanceSpec;
-use edgepipe::pipeline::{InferenceBackend, SimBackend};
+use edgepipe::pipeline::{Frame, InferenceBackend, SimBackend};
 use edgepipe::session::{PipelineBuilder, Session};
 use std::sync::Arc;
 use std::time::Duration;
@@ -61,6 +63,58 @@ fn assert_conservation(rep: &PipelineReport, copies_per_instance: usize) {
     }
     let dropped: usize = rep.instances.iter().map(|i| i.dropped).sum();
     assert_eq!(dropped, rep.dropped, "per-instance drops disagree with total");
+}
+
+/// Fanout routing is zero-copy: every routed copy of a frame aliases the
+/// SAME pixel plane (`Arc` pointer equality), and materialising the copies
+/// only grows the plane's refcount — no pixel memory moves.
+#[test]
+fn fanout_routing_shares_planes_zero_copy() {
+    let mut src = PhantomSource::new(PhantomConfig::default(), 7, 0, 1);
+    let frame = src.next().unwrap();
+    let mut router = Router::new(RoutePolicy::Fanout, 4);
+
+    let base = Arc::strong_count(&frame.data);
+    // materialise one copy per routed target, exactly as the driver does
+    let copies: Vec<Frame> = router.route(&frame).map(|_target| frame.clone()).collect();
+    assert_eq!(copies.len(), 4);
+    assert_eq!(
+        Arc::strong_count(&frame.data),
+        base + 4,
+        "each routed copy must be a refcount bump, not a plane copy"
+    );
+    for c in &copies {
+        assert!(
+            Arc::ptr_eq(&c.data, &frame.data),
+            "routed copy must alias the original pixel plane"
+        );
+    }
+    drop(copies);
+    assert_eq!(Arc::strong_count(&frame.data), base);
+}
+
+/// Batched execution with `max_batch = 4` is one dispatch per batch but
+/// must process exactly the same frame population as batch-1.
+#[test]
+fn batched_execution_matches_batch1_frame_counts() {
+    let rep1 = two_instance_session(RoutePolicy::Fanout, 1, 48, 1)
+        .run()
+        .unwrap();
+    let rep4 = two_instance_session(RoutePolicy::Fanout, 4, 48, 1)
+        .run()
+        .unwrap();
+    for rep in [&rep1, &rep4] {
+        assert_eq!(rep.total_frames, 48);
+        assert_conservation(rep, 48);
+        // the primary instance is lossless regardless of batching
+        assert_eq!(rep.instances[0].frames, 48);
+        assert_eq!(rep.instances[0].dropped, 0);
+    }
+    // batching changes dispatch count, never the processed population
+    assert_eq!(
+        rep1.instances[0].frames + rep1.instances[0].dropped,
+        rep4.instances[0].frames + rep4.instances[0].dropped,
+    );
 }
 
 #[test]
