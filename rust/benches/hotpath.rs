@@ -11,7 +11,7 @@ mod bench_util;
 use bench_util::Bench;
 use edgepipe::config::json::Json;
 use edgepipe::config::GanVariant;
-use edgepipe::hw::orin;
+use edgepipe::hw::{orin, EngineKind};
 use edgepipe::imaging::dct::{dct8_block, idct8_block};
 use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
 use edgepipe::models::yolov8::{yolov8, YoloConfig};
@@ -184,6 +184,38 @@ fn main() {
         "frames_per_s",
         session_frames as f64 / (ms_b4 / 1e3),
     );
+
+    // Engine-arbitrated serving: GAN pinned to DLA0 next to YOLO on the
+    // GPU with real (scaled) modeled engine holds. The per-engine
+    // utilization figures from the arbiter's serving timeline ride into
+    // the bench JSON — CI's bench-smoke job validates them.
+    let engines_backend: Arc<dyn InferenceBackend> =
+        Arc::new(SimBackend::new(orin()).with_time_scale(0.02));
+    let engines_frames = 64usize;
+    let engines_session = Session::builder()
+        .instance(InstanceSpec::new("gan", "gen_cropping").on_engine(EngineKind::Dla))
+        .instance(InstanceSpec::new("yolo", "yolo_lite").on_engine(EngineKind::Gpu))
+        .route(RoutePolicy::Fanout)
+        .frames(engines_frames)
+        .backend(engines_backend)
+        .build()
+        .unwrap();
+    let mut engine_stats = Vec::new();
+    let ms_eng = b.measure("session_sim_engines_dla_gpu_64", 300, || {
+        engine_stats = engines_session.run().unwrap().engines;
+    });
+    b.rate(
+        "session_sim_engines_dla_gpu_64",
+        "frames_per_s",
+        engines_frames as f64 / (ms_eng / 1e3),
+    );
+    for e in &engine_stats {
+        b.rate(
+            "session_sim_engines_dla_gpu_64",
+            &format!("{}_utilization_pct", e.label.to_ascii_lowercase()),
+            e.utilization * 100.0,
+        );
+    }
 
     // NMS over 1k random boxes.
     let mut rng = Rng::new(3);

@@ -110,7 +110,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no inf/NaN literal; emitting one would make
+                    // the whole document unparseable. Degrade to null.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -424,6 +428,16 @@ mod tests {
         assert_eq!(Json::parse("3.5").unwrap(), Json::Num(3.5));
         assert_eq!(Json::parse("-2e3").unwrap(), Json::Num(-2000.0));
         assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // A bare `inf`/`NaN` token would make the document unparseable.
+        assert_eq!(num(f64::INFINITY).to_compact(), "null");
+        assert_eq!(num(f64::NEG_INFINITY).to_compact(), "null");
+        assert_eq!(num(f64::NAN).to_compact(), "null");
+        let doc = obj(vec![("x", num(f64::INFINITY))]).to_compact();
+        Json::parse(&doc).unwrap();
     }
 
     #[test]

@@ -121,6 +121,10 @@ pub enum Workload {
     TwoGans,
     /// GAN + YOLOv8, HaX-CoNN partitioned (Tables V/VI, Fig 14).
     GanPlusYolo,
+    /// Two DLA-resident GANs (one per DLA core) splitting the
+    /// reconstruction load, plus YOLOv8 on the GPU seeing every frame —
+    /// the paper's doubled-throughput dual-GAN deployment.
+    DualGan,
 }
 
 impl Workload {
@@ -130,6 +134,7 @@ impl Workload {
             "gan+yolo-naive" | "naive" => Ok(Workload::GanPlusYoloNaive),
             "two-gans" | "2gan" => Ok(Workload::TwoGans),
             "gan+yolo" => Ok(Workload::GanPlusYolo),
+            "dual-gan" | "dual_gan" | "dualgan" => Ok(Workload::DualGan),
             other => Err(Error::Config(format!("unknown workload `{other}`"))),
         }
     }
@@ -140,23 +145,26 @@ impl Workload {
             Workload::GanPlusYoloNaive => "gan+yolo-naive",
             Workload::TwoGans => "two-gans",
             Workload::GanPlusYolo => "gan+yolo",
+            Workload::DualGan => "dual-gan",
         }
     }
 
-    pub fn all() -> [Workload; 4] {
+    pub fn all() -> [Workload; 5] {
         [
             Workload::GanStandalone,
             Workload::GanPlusYoloNaive,
             Workload::TwoGans,
             Workload::GanPlusYolo,
+            Workload::DualGan,
         ]
     }
 
-    /// Lower this preset into an open [`PipelineSpec`] — the four
-    /// historical arms are now sugar over the composable pipeline API.
-    /// Engine placements follow the paper's deployments (GAN on the DLA
-    /// next to YOLO on the GPU; two GANs split across engines); only the
-    /// sim backend prices them, the PJRT path runs on the CPU client.
+    /// Lower this preset into an open [`PipelineSpec`] — the historical
+    /// arms are sugar over the composable pipeline API. Engine placements
+    /// follow the paper's deployments (GAN on the DLA next to YOLO on the
+    /// GPU; two GANs split across engines; the dual-GAN pair split across
+    /// the two DLA cores) and are *enforced* by the serving-path
+    /// [`crate::pipeline::engines::EngineArbiter`].
     pub fn spec(self, variant: GanVariant) -> PipelineSpec {
         let gan = format!("gen_{}", variant.name());
         let (instances, route) = match self {
@@ -185,6 +193,18 @@ impl Workload {
                         .scored(true),
                 ],
                 RoutePolicy::RoundRobin,
+            ),
+            Workload::DualGan => (
+                vec![
+                    InstanceSpec::new("gan-dla0", gan.clone())
+                        .on_engine_unit(EngineKind::Dla, 0)
+                        .scored(true),
+                    InstanceSpec::new("gan-dla1", gan)
+                        .on_engine_unit(EngineKind::Dla, 1)
+                        .scored(true),
+                    InstanceSpec::new("yolo", "yolo_lite").on_engine(EngineKind::Gpu),
+                ],
+                RoutePolicy::RrFanoutLast,
             ),
         };
         PipelineSpec {
@@ -392,6 +412,7 @@ impl PipelineConfig {
                         ("label", json::s(&inst.label)),
                         ("artifact", json::s(&inst.artifact)),
                         ("engine", json::s(&inst.engine.name().to_ascii_lowercase())),
+                        ("engine_index", json::num(inst.engine_index as f64)),
                         ("max_batch", json::num(inst.batch.max_batch as f64)),
                         (
                             "batch_timeout_us",
@@ -429,6 +450,7 @@ fn parse_instance(entry: &Json, default_batch: BatchPolicy) -> Result<InstanceSp
     let mut label: Option<String> = None;
     let mut artifact: Option<String> = None;
     let mut engine = EngineKind::Gpu;
+    let mut engine_index = 0usize;
     let mut batch = default_batch;
     let mut score: Option<bool> = None;
     for (key, val) in obj {
@@ -436,6 +458,7 @@ fn parse_instance(entry: &Json, default_batch: BatchPolicy) -> Result<InstanceSp
             "label" => label = Some(req_str(val, key)?.to_string()),
             "artifact" => artifact = Some(req_str(val, key)?.to_string()),
             "engine" => engine = parse_engine(req_str(val, key)?)?,
+            "engine_index" => engine_index = req_u64(val, key)? as usize,
             "max_batch" => batch.max_batch = req_u64(val, key)? as usize,
             "batch_timeout_us" => batch.timeout = Duration::from_micros(req_u64(val, key)?),
             "score_fidelity" => {
@@ -447,7 +470,7 @@ fn parse_instance(entry: &Json, default_batch: BatchPolicy) -> Result<InstanceSp
             other => {
                 return Err(Error::Config(format!(
                     "unknown instance key `{other}` (known: label, artifact, engine, \
-                     max_batch, batch_timeout_us, score_fidelity)"
+                     engine_index, max_batch, batch_timeout_us, score_fidelity)"
                 )))
             }
         }
@@ -462,6 +485,7 @@ fn parse_instance(entry: &Json, default_batch: BatchPolicy) -> Result<InstanceSp
         label,
         artifact,
         engine,
+        engine_index,
         batch,
         score_fidelity,
     })
@@ -527,6 +551,7 @@ mod tests {
             (Workload::GanPlusYoloNaive, 2, RoutePolicy::Fanout),
             (Workload::TwoGans, 2, RoutePolicy::RoundRobin),
             (Workload::GanPlusYolo, 2, RoutePolicy::Fanout),
+            (Workload::DualGan, 3, RoutePolicy::RrFanoutLast),
         ] {
             let spec = w.spec(GanVariant::Cropping);
             assert_eq!(spec.instances.len(), n, "{w:?}");
@@ -536,6 +561,18 @@ mod tests {
         let spec = Workload::TwoGans.spec(GanVariant::Original);
         assert_eq!(spec.instances[0].artifact, "gen_original");
         assert!(spec.instances[0].score_fidelity);
+    }
+
+    #[test]
+    fn dual_gan_preset_splits_the_dla_cores() {
+        let spec = Workload::DualGan.spec(GanVariant::Cropping);
+        assert_eq!(spec.instances[0].engine, EngineKind::Dla);
+        assert_eq!(spec.instances[0].engine_index, 0);
+        assert_eq!(spec.instances[1].engine, EngineKind::Dla);
+        assert_eq!(spec.instances[1].engine_index, 1);
+        assert_eq!(spec.instances[2].engine, EngineKind::Gpu);
+        assert!(!spec.instances[2].score_fidelity);
+        assert_eq!(Workload::parse("dual-gan").unwrap(), Workload::DualGan);
     }
 
     #[test]
@@ -590,6 +627,36 @@ mod tests {
         assert_eq!(back.instances.len(), 2);
         assert_eq!(back.instances[1].batch.max_batch, 8);
         assert_eq!(back.route, Some(RoutePolicy::RoundRobin));
+    }
+
+    #[test]
+    fn engine_index_parses_and_roundtrips() {
+        let cfg = PipelineConfig::from_json_str(
+            r#"{
+                "frames": 8,
+                "route": "rr+fanout",
+                "instances": [
+                    {"artifact": "gen_cropping", "label": "g0", "engine": "dla"},
+                    {"artifact": "gen_cropping", "label": "g1", "engine": "dla",
+                     "engine_index": 1},
+                    {"artifact": "yolo_lite"}
+                ]
+            }"#,
+        )
+        .unwrap();
+        let spec = cfg.spec();
+        assert_eq!(spec.route, RoutePolicy::RrFanoutLast);
+        assert_eq!(spec.instances[0].engine_index, 0);
+        assert_eq!(spec.instances[1].engine_index, 1);
+        let back = PipelineConfig::from_json_str(&cfg.to_json().to_pretty()).unwrap();
+        assert_eq!(back.instances[1].engine_index, 1);
+        // out-of-range unit rejected at parse time (spec validation)
+        let err = PipelineConfig::from_json_str(
+            r#"{"instances": [{"artifact": "gen_cropping", "engine": "dla",
+                "engine_index": 2}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("out of range"));
     }
 
     #[test]

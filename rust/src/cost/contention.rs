@@ -29,8 +29,19 @@ pub fn bandwidth_demand(cost: &LayerCost, engine: &EngineSpec) -> f64 {
 /// phases hide contention, memory-bound phases feel it fully.
 pub fn slowdown(soc: &SocSpec, self_intensity: f64, corunner_bw: f64) -> f64 {
     debug_assert!((0.0..=1.0).contains(&self_intensity));
-    let pressure = (corunner_bw / soc.dram_bw).min(1.0);
-    1.0 + soc.contention_gamma * self_intensity.clamp(0.0, 1.0) * pressure
+    slowdown_parts(soc.contention_gamma, soc.dram_bw, self_intensity, corunner_bw)
+}
+
+/// The PCCS formula from raw parts — the single definition shared by the
+/// SoC-level [`slowdown`] (discrete-event sim) and the serving arbiter's
+/// [`crate::pipeline::engines::DispatchProfile`], so the two execution
+/// paths cannot drift apart.
+pub fn slowdown_parts(gamma: f64, dram_bw: f64, self_intensity: f64, corunner_bw: f64) -> f64 {
+    if dram_bw <= 0.0 {
+        return 1.0;
+    }
+    let pressure = (corunner_bw / dram_bw).clamp(0.0, 1.0);
+    1.0 + gamma * self_intensity.clamp(0.0, 1.0) * pressure
 }
 
 /// Memory intensity of a layer on an engine: ratio of memory time to

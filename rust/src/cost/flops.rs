@@ -28,6 +28,23 @@ impl LayerCost {
     };
 }
 
+/// Aggregate cost of a node set: flops/bytes summed, MAC-ness ORed — the
+/// PCCS contention inputs. Single definition shared by the discrete-event
+/// sim's per-segment aggregation ([`crate::sim::soc_sim`]) and the
+/// serving arbiter's dispatch pricing
+/// ([`crate::pipeline::backend::SimBackend`]), so the two execution paths
+/// feed the contention model identically.
+pub fn aggregate_cost(graph: &Graph, ids: &[NodeId]) -> LayerCost {
+    let mut agg = LayerCost::ZERO;
+    for &id in ids {
+        let c = node_cost(graph, id);
+        agg.flops += c.flops;
+        agg.bytes += c.bytes;
+        agg.is_mac |= c.is_mac;
+    }
+    agg
+}
+
 /// Bytes of model parameters a layer fetches per dispatch (FP16 weights).
 /// Single source of truth for the weight-precision factor — `layer_cost`
 /// folds this into `bytes`, and the batched roofline

@@ -46,6 +46,27 @@ impl EngineKind {
     pub fn parse(s: &str) -> Option<EngineKind> {
         Self::ALL.into_iter().find(|e| e.name().eq_ignore_ascii_case(s))
     }
+
+    /// Number of physical units of this engine class on the paper's
+    /// testbeds: the Jetson AGX Xavier and Orin both carry **two** DLA
+    /// cores next to the single GPU (§III.A) — the dual-GAN deployments
+    /// pin one instance per DLA core. Everything else is a single unit.
+    pub fn units(&self) -> usize {
+        match self {
+            EngineKind::Dla => 2,
+            _ => 1,
+        }
+    }
+
+    /// Display label for one unit of this engine class (`GPU`, `DLA0`,
+    /// `DLA1`, ...). Single-unit classes keep the bare name.
+    pub fn unit_label(&self, index: usize) -> String {
+        if self.units() > 1 {
+            format!("{}{}", self.name(), index)
+        } else {
+            self.name().to_string()
+        }
+    }
 }
 
 impl fmt::Display for EngineKind {
@@ -290,6 +311,14 @@ mod tests {
         let o = orin();
         assert_eq!(o.engine(EngineKind::Gpu).kind, EngineKind::Gpu);
         assert_eq!(o.engine(EngineKind::Dla).kind, EngineKind::Dla);
+    }
+
+    #[test]
+    fn engine_units_and_labels() {
+        assert_eq!(EngineKind::Dla.units(), 2);
+        assert_eq!(EngineKind::Gpu.units(), 1);
+        assert_eq!(EngineKind::Dla.unit_label(1), "DLA1");
+        assert_eq!(EngineKind::Gpu.unit_label(0), "GPU");
     }
 
     #[test]

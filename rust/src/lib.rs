@@ -41,7 +41,7 @@
 //! (`Workload::GanPlusYolo.spec(variant)`, or
 //! `Session::builder().workload(...)`).
 //!
-//! ## Frame data path (zero-copy)
+//! ## Frame data path (zero-copy, engine-arbitrated)
 //!
 //! Pixel planes travel the pipeline as [`pipeline::plane::FramePlane`]s
 //! behind `Arc`. Routing a frame to several instances (fanout) bumps
@@ -58,8 +58,18 @@
 //! reduces dispatch count and amortizes per-dispatch launch overhead and
 //! weight traffic (priced by
 //! [`pipeline::backend::SimBackend::batch_latency`]; stacked into a
-//! single PJRT transfer + execute on the real path). The `hotpath` bench
-//! records this contract in a machine-readable `BENCH_hotpath.json`.
+//! single PJRT transfer + execute on the real path).
+//!
+//! Every dispatch executes under an exclusive lease on its instance's
+//! physical engine unit (GPU, DLA0, DLA1) from the run's shared
+//! [`pipeline::engines::EngineArbiter`] — engine placement is enforced in
+//! serving, not just in the simulator: same-unit instances serialize,
+//! split placements run concurrently under the PCCS memory-contention
+//! slowdown, occupant switches pay the reformat cost, and the recorded
+//! serving timeline yields the per-engine utilization/idle-gap statistics
+//! on [`pipeline::driver::PipelineReport`]. The `hotpath` bench records
+//! this contract (and the per-engine utilization figures) in a
+//! machine-readable `BENCH_hotpath.json`.
 //!
 //! ## Layers
 //!
@@ -77,8 +87,9 @@
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
 //!   (HLO text + weights), Python never on the request path;
 //! * [`pipeline`] — the streaming coordinator (sources → batcher → router →
-//!   instance workers → sinks) plus the declarative [`pipeline::spec`] and
-//!   pluggable [`pipeline::backend`];
+//!   instance workers → sinks) plus the declarative [`pipeline::spec`],
+//!   pluggable [`pipeline::backend`], and the exclusive-engine
+//!   [`pipeline::engines`] arbiter;
 //! * [`session`] — the `PipelineBuilder` → `Session` facade that binds
 //!   spec to backend with fail-fast validation;
 //! * [`imaging`], [`postproc`] — phantoms, PSNR/SSIM/MSE, the Table I

@@ -82,8 +82,12 @@ USAGE:
   edgepipe schedule [--variant V] [--with-yolo]
 
 `run` lowers the config through the Session/PipelineBuilder API; pass a
-config file with an `instances: [...]` array for arbitrary instance mixes,
-and `--backend sim` to serve from the latency model with no artifacts.
+config file with an `instances: [...]` array for arbitrary instance mixes
+(`engine`/`engine_index` pin placement — e.g. dla/0 and dla/1), and
+`--backend sim` to serve from the latency model with no artifacts.
+Workloads: gan-standalone, gan+yolo-naive, two-gans, gan+yolo, dual-gan.
+Engine placement is enforced by the serving arbiter: same-unit instances
+serialize, split units contend; per-engine utilization is reported.
 "
     );
     std::process::exit(2)
@@ -217,6 +221,19 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     inst.latency_ms_p99,
                     inst.psnr_mean,
                     inst.ssim_pct_mean
+                );
+            }
+            for e in &rep.engines {
+                println!(
+                    "  engine {:<6} util {:>5.1}%  busy {:>8.2} ms  {:>5} dispatches  \
+                     mean block {:>6.2} ms  idle gap mean {:>6.2} ms  p99 {:>6.2} ms",
+                    e.label,
+                    e.utilization * 100.0,
+                    e.busy_seconds * 1e3,
+                    e.dispatches,
+                    e.mean_block_ms,
+                    e.idle_gap_ms_mean,
+                    e.idle_gap_ms_p99
                 );
             }
             Ok(())

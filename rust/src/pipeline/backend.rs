@@ -23,10 +23,12 @@
 //! (zero copy), and a plane is only ever materialised when a backend
 //! writes a fresh tensor out.
 
+use super::engines::DispatchProfile;
 use super::frame::Frame;
 use super::plane::FramePlane;
 use super::spec::{artifact_graph, InstanceSpec};
-use crate::cost::flops::{layer_param_bytes, node_cost, LayerCost};
+use crate::cost::contention::{bandwidth_demand, memory_intensity};
+use crate::cost::flops::{aggregate_cost, layer_param_bytes, node_cost, LayerCost};
 use crate::cost::latency::batched_layer_latency;
 use crate::error::{Error, Result};
 use crate::graph::Graph;
@@ -54,6 +56,16 @@ pub trait ModelRunner {
     fn execute_batch(&mut self, frames: &[Frame]) -> Result<Vec<Output>> {
         frames.iter().map(|f| self.run(f)).collect()
     }
+
+    /// Produce the batch's outputs **without modeling time**: called when
+    /// an external [`super::engines::EngineArbiter`] holds the engine for
+    /// the priced duration instead (the backend supplied a
+    /// [`DispatchProfile`]). Backends whose `execute_batch` sleeps to
+    /// model latency must override this with the sleep-free variant; real
+    /// backends (whose execution *is* the time) keep the default.
+    fn execute_batch_untimed(&mut self, frames: &[Frame]) -> Result<Vec<Output>> {
+        self.execute_batch(frames)
+    }
 }
 
 /// Where and how pipeline instances execute.
@@ -68,6 +80,18 @@ pub trait InferenceBackend: Send + Sync {
 
     /// Open a per-worker runner for `spec` (called on the worker thread).
     fn open(&self, spec: &InstanceSpec) -> Result<Box<dyn ModelRunner>>;
+
+    /// Modeled engine-occupancy profile of one batched dispatch, when the
+    /// backend prices execution instead of performing it. `Some` makes the
+    /// driver hold the instance's engine for the priced duration (via the
+    /// shared [`super::engines::EngineArbiter`]) and call
+    /// [`ModelRunner::execute_batch_untimed`]; `None` (the default, real
+    /// backends) makes the arbiter hold the engine around the real
+    /// dispatch and measure it.
+    fn dispatch_profile(&self, spec: &InstanceSpec) -> Result<Option<DispatchProfile>> {
+        let _ = spec;
+        Ok(None)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -297,6 +321,29 @@ impl SimBackend {
             .map(|(cost, param_bytes)| batched_layer_latency(cost, *param_bytes, engine, n))
             .sum()
     }
+
+    /// Time-scaled per-batch-size dispatch durations for `spec`'s policy
+    /// plus the marginal per-extra-frame cost — the ONE pricing table both
+    /// the standalone [`SimRunner`] and the arbiter's
+    /// [`DispatchProfile`] are built from, so the two paths cannot drift.
+    fn sleep_table(
+        &self,
+        table: &[(LayerCost, f64)],
+        spec: &InstanceSpec,
+    ) -> (Vec<Duration>, Duration) {
+        let max_batch = spec.batch.max_batch.max(1);
+        let mut sleep_for = Vec::with_capacity(max_batch);
+        for n in 1..=max_batch {
+            let secs = self.table_dispatch_latency(table, spec.engine, n) * self.time_scale;
+            sleep_for.push(Duration::from_secs_f64(secs));
+        }
+        let marginal = if max_batch >= 2 {
+            sleep_for[max_batch - 1].saturating_sub(sleep_for[max_batch - 2])
+        } else {
+            sleep_for[0]
+        };
+        (sleep_for, marginal)
+    }
 }
 
 impl InferenceBackend for SimBackend {
@@ -309,26 +356,53 @@ impl InferenceBackend for SimBackend {
     }
 
     fn open(&self, spec: &InstanceSpec) -> Result<Box<dyn ModelRunner>> {
-        // Precompute the dispatch-latency table for every batch size the
-        // instance's policy can produce (bounded by the spec-validation
-        // cap on `max_batch`); the hot path just indexes it. The graph is
-        // built and walked once; each size is a cheap sum over the cached
-        // per-layer costs.
+        // The runner's precomputed dispatch-latency table (one entry per
+        // batch size the instance's policy can produce, bounded by the
+        // spec-validation cap on `max_batch`) IS the dispatch profile's —
+        // one pricing source, so standalone runs and arbitrated serving
+        // cannot drift. The hot path just indexes it.
+        let p = self
+            .dispatch_profile(spec)?
+            .expect("SimBackend::dispatch_profile always prices");
+        Ok(Box::new(SimRunner {
+            sleep_for: p.sleep_for,
+            marginal: p.marginal,
+        }))
+    }
+
+    /// The sim is model-priced: hand the arbiter the per-batch-size
+    /// latency table plus the PCCS inputs (aggregate memory intensity and
+    /// bandwidth demand of the artifact's graph on the pinned engine —
+    /// the same per-segment aggregation [`crate::sim::soc_sim`] uses) and
+    /// the engine-switch reformat cost priced at the model's input tensor.
+    fn dispatch_profile(&self, spec: &InstanceSpec) -> Result<Option<DispatchProfile>> {
         self.check_engine(spec)?;
         let g = artifact_graph(&spec.artifact)?;
-        let table = layer_table(&g);
-        let max_batch = spec.batch.max_batch.max(1);
-        let mut sleep_for = Vec::with_capacity(max_batch);
-        for n in 1..=max_batch {
-            let secs = self.table_dispatch_latency(&table, spec.engine, n) * self.time_scale;
-            sleep_for.push(Duration::from_secs_f64(secs));
-        }
-        let marginal = if max_batch >= 2 {
-            sleep_for[max_batch - 1].saturating_sub(sleep_for[max_batch - 2])
-        } else {
-            sleep_for[0]
-        };
-        Ok(Box::new(SimRunner { sleep_for, marginal }))
+        let (sleep_for, marginal) = self.sleep_table(&layer_table(&g), spec);
+        let engine = self.soc.engine(spec.engine);
+        let layers = g.compute_layers();
+        let agg = aggregate_cost(&g, &layers);
+        let io_bytes = layers
+            .first()
+            .map(|&id| {
+                g.input_shapes(id)
+                    .iter()
+                    .map(|s| s.bytes())
+                    .max()
+                    .unwrap_or(0)
+            })
+            .unwrap_or(0);
+        Ok(Some(DispatchProfile {
+            sleep_for,
+            marginal,
+            intensity: memory_intensity(&agg, engine),
+            bw_demand: bandwidth_demand(&agg, engine),
+            dram_bw: self.soc.dram_bw,
+            gamma: self.soc.contention_gamma,
+            transition: Duration::from_secs_f64(
+                self.soc.transition.latency(io_bytes) * self.time_scale,
+            ),
+        }))
     }
 }
 
@@ -380,6 +454,12 @@ impl ModelRunner for SimRunner {
         if !d.is_zero() {
             std::thread::sleep(d);
         }
+        Ok(frames.iter().map(|f| Arc::clone(&f.data)).collect())
+    }
+
+    /// The sleep is the model; when the arbiter prices the dispatch, just
+    /// echo the planes.
+    fn execute_batch_untimed(&mut self, frames: &[Frame]) -> Result<Vec<Output>> {
         Ok(frames.iter().map(|f| Arc::clone(&f.data)).collect())
     }
 }
@@ -476,6 +556,47 @@ mod tests {
             assert!(Arc::ptr_eq(o, &f.data));
         }
         assert!(r.execute_batch(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn dispatch_profile_prices_like_batch_latency() {
+        let b = SimBackend::new(orin());
+        let spec = inst("gen_cropping", EngineKind::Dla).with_batch(BatchPolicy {
+            max_batch: 4,
+            timeout: Duration::from_micros(500),
+        });
+        let p = b.dispatch_profile(&spec).unwrap().expect("sim is modeled");
+        let one = p.dispatch_duration(1).as_secs_f64();
+        let four = p.dispatch_duration(4).as_secs_f64();
+        assert!((one - b.frame_latency(&spec).unwrap()).abs() < 1e-8);
+        assert!((four - b.batch_latency(&spec, 4).unwrap()).abs() < 1e-8);
+        assert!(four < 4.0 * one && four > one);
+        // beyond the table: marginal extrapolation stays monotone
+        assert!(p.dispatch_duration(6) > p.dispatch_duration(4));
+        // PCCS inputs are sane for a conv-heavy graph
+        assert_eq!(p.slowdown(0.0), 1.0);
+        assert!(p.slowdown(100.0e9) > 1.0);
+    }
+
+    #[test]
+    fn untimed_execution_echoes_without_sleeping() {
+        // time_scale 1.0: a modeled batch of 8 originals costs ≥ 40 ms of
+        // sleep; the untimed path must skip all of it.
+        let b = SimBackend::new(orin());
+        let spec = inst("gen_original", EngineKind::Gpu);
+        let mut r = b.open(&spec).unwrap();
+        let frames: Vec<Frame> = (0..8).map(|i| frame_with(vec![i as f32; 4])).collect();
+        let t0 = Instant::now();
+        let outs = r.execute_batch_untimed(&frames).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_millis(20),
+            "untimed dispatch slept ({:?})",
+            t0.elapsed()
+        );
+        assert_eq!(outs.len(), 8);
+        for (f, o) in frames.iter().zip(outs.iter()) {
+            assert!(Arc::ptr_eq(o, &f.data));
+        }
     }
 
     #[test]

@@ -36,13 +36,25 @@
 //! survives as a thin compatibility wrapper that lowers a
 //! [`PipelineConfig`] through the session builder.
 //!
-//! Note on engines: the testbed has no physical DLA, so the PJRT "engines"
-//! all execute on the CPU client; the *scheduling structure* (which
-//! instance runs where, queue topology, backpressure) is identical to the
-//! paper's deployment and the timing claims are made by [`crate::sim`].
+//! ## Engines are exclusive in serving, not just in sim
+//!
+//! Every worker routes each batched dispatch through the run's shared
+//! [`super::engines::EngineArbiter`], which models the SoC's physical
+//! engine units (GPU, DLA0, DLA1) as exclusive FIFO resources: instances
+//! pinned to the same unit serialize, split placements run concurrently
+//! but pay the PCCS memory-contention slowdown, and occupant switches pay
+//! the reformat cost — the same hardware model [`crate::sim`] uses, now
+//! enforced on the serving path. Model-priced backends (the sim) hold the
+//! engine for the priced duration; the PJRT backend (whose "engines" all
+//! execute on the CPU client — the testbed has no physical DLA) holds the
+//! engine token around its real dispatch, so placement serializes
+//! identically. The arbiter records a serving
+//! [`crate::sim::timeline::Timeline`], from which [`PipelineReport`]
+//! derives per-engine utilization and idle-gap statistics.
 
 use super::backend::InferenceBackend;
 use super::batcher::next_batch;
+use super::engines::{EngineArbiter, EngineSnapshot};
 use super::frame::Frame;
 use super::metrics::{InstanceSnapshot, Metrics};
 use super::plane::PlanePool;
@@ -54,6 +66,7 @@ use crate::config::PipelineConfig;
 use crate::error::{Error, Result};
 use crate::imaging::metrics::fidelity;
 use crate::imaging::Image;
+use crate::sim::timeline::Timeline;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -64,13 +77,26 @@ use std::sync::Arc;
 /// §Perf iteration 2).
 const SCORE_EVERY: u64 = 4;
 
+/// Whether this frame's reconstruction is fidelity-sampled (see
+/// [`SCORE_EVERY`]).
+pub(crate) fn should_score(frame_id: u64) -> bool {
+    frame_id % SCORE_EVERY == 0
+}
+
 /// Final pipeline report.
 #[derive(Debug, Clone)]
 pub struct PipelineReport {
     pub instances: Vec<InstanceSnapshot>,
+    /// Per-engine-unit serving statistics (utilization, idle gaps) from
+    /// the arbiter's timeline — the Nsight-style Figs 10/13 numbers.
+    pub engines: Vec<EngineSnapshot>,
+    /// The serving timeline itself (spans per engine unit / instance /
+    /// frame); not serialized into [`Self::to_json`].
+    pub timeline: Timeline,
+    /// Serving wall time: first frame admission to teardown.
     pub wall_seconds: f64,
     pub total_frames: usize,
-    /// Total frame copies shed on overload/disconnect across all instances
+    /// Total frame copies shed on overload across all instances
     /// (per-instance counts are on each [`InstanceSnapshot`]).
     pub dropped: usize,
 }
@@ -103,6 +129,26 @@ impl PipelineReport {
                             ("psnr_mean", num(i.psnr_mean)),
                             ("ssim_pct_mean", num(i.ssim_pct_mean)),
                             ("dropped", num(i.dropped as f64)),
+                            ("fidelity_skipped", num(i.fidelity_skipped as f64)),
+                        ])
+                    })
+                    .collect()),
+            ),
+            (
+                "engines",
+                arr(self
+                    .engines
+                    .iter()
+                    .map(|e| {
+                        obj(vec![
+                            ("engine", s(&e.label)),
+                            ("utilization", num(e.utilization)),
+                            ("busy_seconds", num(e.busy_seconds)),
+                            ("dispatches", num(e.dispatches as f64)),
+                            ("mean_block_ms", num(e.mean_block_ms)),
+                            ("idle_gap_ms_mean", num(e.idle_gap_ms_mean)),
+                            ("idle_gap_ms_p99", num(e.idle_gap_ms_p99)),
+                            ("idle_gap_count", num(e.idle_gap_count as f64)),
                         ])
                     })
                     .collect()),
@@ -128,6 +174,7 @@ pub(crate) fn execute(
 
     let labels: Vec<String> = spec.instances.iter().map(|i| i.label.clone()).collect();
     let metrics = Arc::new(Metrics::new(&labels));
+    let arbiter = Arc::new(EngineArbiter::new(&spec.instances));
     let dropped_total = Arc::new(AtomicUsize::new(0));
 
     // Per-instance bounded queues: the backpressure boundary.
@@ -139,22 +186,41 @@ pub(crate) fn execute(
         receivers.push(rx);
     }
 
-    // Workers: one thread per instance (the two-engine analogue). All
-    // non-`Send` executor state (e.g. PJRT handles) is created inside the
-    // thread by `backend.open` — the same isolation a per-engine TensorRT
-    // context gives on the Jetson. Each batch the batcher yields goes to
-    // the backend as ONE dispatch.
+    // Workers: one thread per instance. All non-`Send` executor state
+    // (e.g. PJRT handles) is created inside the thread by `backend.open` —
+    // the same isolation a per-engine TensorRT context gives on the
+    // Jetson. Each batch the batcher yields goes to the backend as ONE
+    // dispatch, executed under the instance's exclusive engine lease from
+    // the shared arbiter (pinning two instances to one unit serializes
+    // them; split placements contend through shared DRAM).
     let mut handles = Vec::new();
     for (idx, (inst, rx)) in spec.instances.iter().zip(receivers.into_iter()).enumerate() {
         let metrics = Arc::clone(&metrics);
         let backend = Arc::clone(backend);
+        let arbiter = Arc::clone(&arbiter);
         let inst = inst.clone();
         let handle = std::thread::Builder::new()
             .name(format!("worker-{}", inst.label))
             .spawn(move || -> Result<()> {
                 let mut runner = backend.open(&inst)?;
+                let profile = backend.dispatch_profile(&inst)?;
+                let modeled = profile.is_some();
                 while let Some(batch) = next_batch(&rx, inst.batch) {
-                    let outs = runner.execute_batch(&batch)?;
+                    let outs = arbiter.dispatch(
+                        idx,
+                        batch[0].id,
+                        batch.len(),
+                        profile.as_ref(),
+                        || {
+                            if modeled {
+                                // the arbiter holds the engine for the
+                                // priced duration; don't model time twice
+                                runner.execute_batch_untimed(&batch)
+                            } else {
+                                runner.execute_batch(&batch)
+                            }
+                        },
+                    )?;
                     if outs.len() != batch.len() {
                         // a silent mismatch would leak frames out of the
                         // produced = processed + dropped conservation
@@ -168,9 +234,10 @@ pub(crate) fn execute(
                     for (frame, out) in batch.iter().zip(outs.iter()) {
                         let latency = frame.admitted.elapsed().as_secs_f64();
                         metrics.record_frame(idx, latency);
-                        if inst.score_fidelity && frame.id % SCORE_EVERY == 0 {
-                            if let Some(gt) = &frame.gt_mri {
-                                record_fidelity(&metrics, idx, frame, gt, out);
+                        if inst.score_fidelity && should_score(frame.id) {
+                            match &frame.gt_mri {
+                                Some(gt) => record_fidelity(&metrics, idx, frame, gt, out),
+                                None => metrics.record_fidelity_skipped(idx),
                             }
                         }
                     }
@@ -183,22 +250,29 @@ pub(crate) fn execute(
 
     // Source + router on the main thread. All sources draw from (and
     // return to) one plane pool, so frame synthesis recycles the buffers
-    // the workers release.
+    // the workers release. The requested frame count is distributed
+    // exactly: the first `frames % streams` streams carry one extra frame,
+    // so an indivisible count never silently under-produces.
     let mut router = Router::new(spec.route, spec.instances.len());
     let scoring: Vec<bool> = spec.instances.iter().map(|i| i.score_fidelity).collect();
     let pool = PlanePool::default();
-    let per_stream = spec.frames / spec.streams.max(1);
+    let base = spec.frames / spec.streams;
+    let extra = spec.frames % spec.streams;
     let mut sources: Vec<PhantomSource> = (0..spec.streams)
         .map(|st| {
             PhantomSource::new(
                 crate::imaging::phantom::PhantomConfig::default(),
                 spec.seed,
                 st,
-                per_stream,
+                base + usize::from(st < extra),
             )
             .with_pool(pool.clone())
         })
         .collect();
+    // A `true` entry is a live worker queue; a disconnected (crashed)
+    // fanout target is taken out of the rotation instead of being counted
+    // as load shedding — its error surfaces at join.
+    let mut alive = vec![true; spec.instances.len()];
     let mut total_frames = 0usize;
     'outer: loop {
         let mut all_done = true;
@@ -206,6 +280,7 @@ pub(crate) fn execute(
             if let Some(frame) = src.next() {
                 all_done = false;
                 total_frames += 1;
+                metrics.start_serving();
                 let targets = router.route(&frame);
                 let copies = targets.len();
                 let mut frame = Some(frame);
@@ -227,17 +302,23 @@ pub(crate) fn execute(
                         // backpressure (the paper's pipeline drops nothing
                         // on its main reconstruction path).
                         if senders[target].send(f).is_err() {
-                            // Worker gone — its error surfaces at join.
+                            // Primary worker gone — stop producing; its
+                            // error surfaces at join.
                             break 'outer;
                         }
-                    } else {
+                    } else if alive[target] {
                         // Fanout copies beyond the primary shed load
-                        // instead of stalling the whole pipeline.
+                        // instead of stalling the whole pipeline. Only a
+                        // full queue is genuine shedding — a disconnect is
+                        // a crashed worker, not overload.
                         match senders[target].try_send(f) {
                             Ok(()) => {}
-                            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                            Err(TrySendError::Full(_)) => {
                                 dropped_total.fetch_add(1, Ordering::Relaxed);
                                 metrics.record_drop(target);
+                            }
+                            Err(TrySendError::Disconnected(_)) => {
+                                alive[target] = false;
                             }
                         }
                     }
@@ -256,14 +337,26 @@ pub(crate) fn execute(
 
     Ok(PipelineReport {
         instances: metrics.snapshot(),
+        engines: arbiter.engine_snapshots(),
+        timeline: arbiter.timeline(),
         wall_seconds: metrics.elapsed(),
         total_frames,
         dropped: dropped_total.load(Ordering::Relaxed),
     })
 }
 
-fn record_fidelity(metrics: &Metrics, idx: usize, frame: &Frame, gt: &[f32], out: &[f32]) {
+/// Score one sampled frame's reconstruction fidelity. Unscorable samples
+/// (gt/output shape mismatch, unbuildable images) are *counted* as
+/// `fidelity_skipped` instead of vanishing silently.
+pub(crate) fn record_fidelity(
+    metrics: &Metrics,
+    idx: usize,
+    frame: &Frame,
+    gt: &[f32],
+    out: &[f32],
+) {
     if gt.len() != frame.numel() || out.len() != frame.numel() {
+        metrics.record_fidelity_skipped(idx);
         return;
     }
     // [-1, 1] model range -> [0, 1] image range
@@ -273,6 +366,159 @@ fn record_fidelity(metrics: &Metrics, idx: usize, frame: &Frame, gt: &[f32], out
     if let (Ok(a), Ok(b)) = (a, b) {
         if let Ok(f) = fidelity(&a, &b) {
             metrics.record_fidelity(idx, f.psnr, f.ssim_pct);
+            return;
         }
+    }
+    metrics.record_fidelity_skipped(idx);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::backend::{ModelRunner, Output};
+    use crate::pipeline::plane::FramePlane;
+    use crate::pipeline::router::RoutePolicy;
+    use crate::pipeline::spec::InstanceSpec;
+    use std::time::Instant;
+
+    /// Echoes input planes instantly; instances labelled `fail_label`
+    /// error on every dispatch (a crashed worker).
+    struct EchoOrFail {
+        fail_label: &'static str,
+    }
+
+    impl InferenceBackend for EchoOrFail {
+        fn name(&self) -> &'static str {
+            "echo-or-fail"
+        }
+
+        fn prepare(&self, _spec: &InstanceSpec) -> Result<()> {
+            Ok(())
+        }
+
+        fn open(&self, spec: &InstanceSpec) -> Result<Box<dyn ModelRunner>> {
+            Ok(Box::new(EchoRunner {
+                fail: spec.label == self.fail_label,
+            }))
+        }
+    }
+
+    struct EchoRunner {
+        fail: bool,
+    }
+
+    impl ModelRunner for EchoRunner {
+        fn run(&mut self, frame: &Frame) -> Result<Output> {
+            if self.fail {
+                return Err(Error::Runtime("backend exploded".into()));
+            }
+            Ok(Arc::clone(&frame.data))
+        }
+    }
+
+    fn echo_backend(fail_label: &'static str) -> Arc<dyn InferenceBackend> {
+        Arc::new(EchoOrFail { fail_label })
+    }
+
+    fn frame_8x8() -> Frame {
+        Frame {
+            id: 0,
+            stream: 0,
+            data: FramePlane::from_vec(vec![0.1; 64]),
+            width: 8,
+            height: 8,
+            gt_mri: None,
+            admitted: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn score_every_samples_one_in_four() {
+        assert_eq!((0..32u64).filter(|&id| should_score(id)).count(), 8);
+        assert!(should_score(0));
+        assert!(!should_score(1));
+        assert!(should_score(SCORE_EVERY));
+    }
+
+    #[test]
+    fn fidelity_mismatch_counts_skip_instead_of_vanishing() {
+        let m = Metrics::new(&["g".to_string()]);
+        let frame = frame_8x8();
+        let gt: Vec<f32> = (0..64).map(|i| (i as f32 / 64.0) * 2.0 - 1.0).collect();
+        record_fidelity(&m, 0, &frame, &gt, &[0.0; 10]); // short output
+        record_fidelity(&m, 0, &frame, &gt[..10], &gt); // short ground truth
+        let snap = m.snapshot();
+        assert_eq!(snap[0].fidelity_skipped, 2);
+        assert_eq!(snap[0].psnr_mean, 0.0);
+    }
+
+    #[test]
+    fn fidelity_matched_shapes_score_normally() {
+        let m = Metrics::new(&["g".to_string()]);
+        let frame = frame_8x8();
+        let gt: Vec<f32> = (0..64).map(|i| (i as f32 / 64.0) * 2.0 - 1.0).collect();
+        let out: Vec<f32> = gt.iter().map(|v| (v * 0.8).clamp(-1.0, 1.0)).collect();
+        record_fidelity(&m, 0, &frame, &gt, &out);
+        let snap = m.snapshot();
+        assert_eq!(snap[0].fidelity_skipped, 0);
+        assert!(snap[0].psnr_mean > 0.0 && snap[0].psnr_mean.is_finite());
+    }
+
+    #[test]
+    fn crashed_fanout_worker_surfaces_its_error_at_join() {
+        // The non-primary worker dies on its first dispatch: the source
+        // must stop routing to it (not count the dead queue as load
+        // shedding) and the run must report the worker's own error.
+        let spec = PipelineSpec {
+            instances: vec![
+                InstanceSpec::new("good", "gen_cropping"),
+                InstanceSpec::new("bad", "yolo_lite"),
+            ],
+            route: RoutePolicy::Fanout,
+            frames: 12,
+            queue_depth: 2,
+            ..PipelineSpec::default()
+        };
+        let err = execute(&spec, &echo_backend("bad")).unwrap_err();
+        assert!(
+            err.to_string().contains("backend exploded"),
+            "worker error must not be masked: {err}"
+        );
+    }
+
+    #[test]
+    fn indivisible_frame_count_is_fully_produced() {
+        let spec = PipelineSpec {
+            instances: vec![InstanceSpec::new("gan", "gen_cropping")],
+            route: RoutePolicy::Fanout,
+            frames: 100,
+            streams: 3, // 100 = 34 + 33 + 33, not 3 x 33
+            ..PipelineSpec::default()
+        };
+        let rep = execute(&spec, &echo_backend("")).unwrap();
+        assert_eq!(rep.total_frames, 100);
+        assert_eq!(rep.instances[0].frames, 100);
+        assert_eq!(rep.dropped, 0);
+    }
+
+    #[test]
+    fn empty_report_serializes_to_finite_json() {
+        // all-default accumulators (no frames, no gaps) must not leak
+        // ±inf/NaN into the report JSON
+        let m = Metrics::new(&["a".to_string()]);
+        let rep = PipelineReport {
+            instances: m.snapshot(),
+            engines: Vec::new(),
+            timeline: Timeline::default(),
+            wall_seconds: m.elapsed(),
+            total_frames: 0,
+            dropped: 0,
+        };
+        let txt = rep.to_json().to_compact();
+        Json::parse(&txt).unwrap();
+        assert!(
+            !txt.contains("null"),
+            "non-finite number degraded to null in: {txt}"
+        );
     }
 }

@@ -1,0 +1,522 @@
+//! The serving-path engine arbiter.
+//!
+//! The paper's whole scheduling argument (Figs 10–14) rests on the GPU and
+//! the two DLA cores being **exclusive** resources: two instances pinned to
+//! the same engine serialize, instances on different engines run
+//! concurrently but slow each other down through the shared DRAM (the PCCS
+//! model of [`crate::cost::contention`]), and moving a tensor between
+//! engines pays the TensorRT reformat penalty. The discrete-event
+//! [`crate::sim`] models all of that; before this module existed the
+//! *serving* driver modeled none of it — `InstanceSpec::engine` was
+//! write-only and every worker free-ran on its own thread.
+//!
+//! [`EngineArbiter`] closes that gap. The driver creates one arbiter per
+//! run; every worker routes each batched dispatch through
+//! [`EngineArbiter::dispatch`], which:
+//!
+//! 1. acquires the instance's engine **unit** (GPU, DLA0, DLA1, ...) as an
+//!    exclusive FIFO resource (ticket lock — contenders run in arrival
+//!    order, no barging);
+//! 2. charges the engine-switch reformat cost when the unit's occupant
+//!    changes between dispatches (model-priced backends only);
+//! 3. stretches the priced duration by the PCCS slowdown derived from the
+//!    bandwidth demand of whatever is concurrently occupying *other*
+//!    units (same formula the sim uses);
+//! 4. records the occupation as [`Span`]s on a serving
+//!    [`crate::sim::timeline::Timeline`], from which
+//!    [`EngineArbiter::engine_snapshots`] derives the per-engine
+//!    utilization / idle-gap numbers the paper reads off its Nsight
+//!    screenshots.
+//!
+//! Model-priced backends (the sim) supply a [`DispatchProfile`] and the
+//! arbiter *holds the unit for the priced duration* — the runner itself no
+//! longer sleeps. Real backends (PJRT) supply no profile; the arbiter
+//! simply holds the unit around the real dispatch, so placement serializes
+//! identically in both modes.
+
+use crate::hw::EngineKind;
+use crate::sim::timeline::{Span, Timeline};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::spec::InstanceSpec;
+
+/// Modeled occupancy of one batched dispatch — everything the arbiter
+/// needs to price an engine hold without knowing the backend. Produced by
+/// [`super::backend::InferenceBackend::dispatch_profile`] (the sim prices
+/// it from the artifact's layer graph; real backends return `None` and are
+/// measured instead).
+#[derive(Debug, Clone)]
+pub struct DispatchProfile {
+    /// Wall time of one dispatch of `i + 1` frames (already time-scaled).
+    pub(crate) sleep_for: Vec<Duration>,
+    /// Per-extra-frame cost beyond the precomputed table.
+    pub(crate) marginal: Duration,
+    /// Memory-boundedness of the whole dispatch in `[0, 1]` (PCCS
+    /// `self_intensity`): compute-bound dispatches hide contention,
+    /// streaming ones feel it fully.
+    pub(crate) intensity: f64,
+    /// DRAM bandwidth this dispatch pulls while executing, bytes/s.
+    pub(crate) bw_demand: f64,
+    /// Shared DRAM capability the co-runner pressure normalizes against.
+    pub(crate) dram_bw: f64,
+    /// PCCS contention sensitivity (γ).
+    pub(crate) gamma: f64,
+    /// Reformat/fence cost charged when the engine's occupant switches
+    /// between dispatches (already time-scaled).
+    pub(crate) transition: Duration,
+}
+
+impl DispatchProfile {
+    /// Priced duration of one dispatch of `n` frames (no contention).
+    pub fn dispatch_duration(&self, n: usize) -> Duration {
+        let n = n.max(1);
+        if self.sleep_for.is_empty() {
+            return self.marginal * n as u32;
+        }
+        if n <= self.sleep_for.len() {
+            self.sleep_for[n - 1]
+        } else {
+            self.sleep_for[self.sleep_for.len() - 1]
+                + self.marginal * (n - self.sleep_for.len()) as u32
+        }
+    }
+
+    /// PCCS slowdown factor (≥ 1) given the co-runners' aggregate
+    /// bandwidth demand — delegates to the sim's shared
+    /// [`crate::cost::contention::slowdown_parts`] formula.
+    pub fn slowdown(&self, corunner_bw: f64) -> f64 {
+        crate::cost::contention::slowdown_parts(
+            self.gamma,
+            self.dram_bw,
+            self.intensity,
+            corunner_bw,
+        )
+    }
+}
+
+/// Per-engine serving statistics derived from the arbiter's timeline —
+/// the Nsight-style numbers of the paper's Figs 10/13 (utilization, idle
+/// gaps, block fragmentation), per physical unit.
+#[derive(Debug, Clone)]
+pub struct EngineSnapshot {
+    /// Unit label (`GPU`, `DLA0`, `DLA1`, ...).
+    pub label: String,
+    pub kind: EngineKind,
+    pub unit: usize,
+    /// Busy fraction of the serving window (first to last span).
+    pub utilization: f64,
+    pub busy_seconds: f64,
+    /// Number of compute occupations (batched dispatches).
+    pub dispatches: usize,
+    pub mean_block_ms: f64,
+    pub idle_gap_ms_mean: f64,
+    pub idle_gap_ms_p99: f64,
+    pub idle_gap_count: usize,
+}
+
+/// FIFO ticket state of one physical engine unit.
+#[derive(Debug, Default)]
+struct UnitState {
+    next_ticket: u64,
+    serving: u64,
+    /// Instance index of the current/most recent occupant (engine-switch
+    /// detection).
+    occupant: Option<usize>,
+    /// Bandwidth demand of the dispatch currently holding the unit
+    /// (`0.0` when idle or measured rather than modeled).
+    busy_bw: f64,
+}
+
+#[derive(Debug)]
+struct Unit {
+    label: String,
+    kind: EngineKind,
+    index: usize,
+    state: Mutex<UnitState>,
+    cv: Condvar,
+}
+
+/// Holds one granted FIFO ticket; advances the queue on drop so the unit
+/// is released on every exit path, panics included.
+struct Lease<'a> {
+    unit: &'a Unit,
+}
+
+impl Drop for Lease<'_> {
+    fn drop(&mut self) {
+        let mut st = self.unit.state.lock().unwrap();
+        st.serving += 1;
+        st.busy_bw = 0.0;
+        self.unit.cv.notify_all();
+    }
+}
+
+/// Shared, exclusive-FIFO model of the SoC's physical engines for the
+/// serving path. See the module docs for the contract.
+#[derive(Debug)]
+pub struct EngineArbiter {
+    units: Vec<Unit>,
+    /// `instance index -> unit index` placement map.
+    unit_of: Vec<usize>,
+    epoch: Instant,
+    timeline: Mutex<Timeline>,
+}
+
+impl EngineArbiter {
+    /// Build an arbiter over the distinct engine units the instances are
+    /// pinned to (`InstanceSpec::{engine, engine_index}`).
+    pub fn new(instances: &[InstanceSpec]) -> Self {
+        let mut units: Vec<Unit> = Vec::new();
+        let mut unit_of = Vec::with_capacity(instances.len());
+        for inst in instances {
+            let key = (inst.engine, inst.engine_index);
+            let idx = match units.iter().position(|u| (u.kind, u.index) == key) {
+                Some(i) => i,
+                None => {
+                    units.push(Unit {
+                        label: inst.engine.unit_label(inst.engine_index),
+                        kind: inst.engine,
+                        index: inst.engine_index,
+                        state: Mutex::new(UnitState::default()),
+                        cv: Condvar::new(),
+                    });
+                    units.len() - 1
+                }
+            };
+            unit_of.push(idx);
+        }
+        EngineArbiter {
+            units,
+            unit_of,
+            epoch: Instant::now(),
+            timeline: Mutex::new(Timeline::default()),
+        }
+    }
+
+    /// Serving clock: seconds since arbiter creation (span timebase).
+    fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Number of distinct physical engine units under arbitration.
+    pub fn unit_count(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Execute one batched dispatch of `instance` under its engine's
+    /// exclusive FIFO lease.
+    ///
+    /// With a [`DispatchProfile`] the unit is held for the priced duration
+    /// (occupant-switch reformat + PCCS-stretched batch cost) — `run`
+    /// must produce the outputs *without* modeling time itself
+    /// ([`super::backend::ModelRunner::execute_batch_untimed`]). Without a
+    /// profile, `run` is the real dispatch and the hold is measured.
+    /// Errors from `run` release the unit and propagate; nothing is
+    /// recorded for failed dispatches.
+    pub fn dispatch<T>(
+        &self,
+        instance: usize,
+        frame: u64,
+        batch: usize,
+        profile: Option<&DispatchProfile>,
+        run: impl FnOnce() -> crate::error::Result<T>,
+    ) -> crate::error::Result<T> {
+        let unit = &self.units[self.unit_of[instance]];
+
+        // ---- acquire (FIFO ticket) ----
+        let switched = {
+            let mut st = unit.state.lock().unwrap();
+            let ticket = st.next_ticket;
+            st.next_ticket += 1;
+            while st.serving != ticket {
+                st = unit.cv.wait(st).unwrap();
+            }
+            let switched = st.occupant.is_some() && st.occupant != Some(instance);
+            st.occupant = Some(instance);
+            st.busy_bw = profile.map(|p| p.bw_demand).unwrap_or(0.0);
+            switched
+        };
+        // Release on every exit path — including a panic unwinding out of
+        // `run` — or the unit's ticket queue wedges and every co-pinned
+        // worker (and the driver's join) hangs forever.
+        let lease = Lease { unit };
+
+        // ---- occupy ----
+        let t0 = self.now();
+        let result = run();
+        let mut spans: Vec<Span> = Vec::new();
+        if result.is_ok() {
+            let trans_s = match profile {
+                Some(p) => {
+                    // Concurrent occupancy of *other* units pulls on the
+                    // shared DRAM: stretch this dispatch per PCCS.
+                    let corunner_bw: f64 = self
+                        .units
+                        .iter()
+                        .filter(|u| !std::ptr::eq(*u, unit))
+                        .map(|u| u.state.lock().unwrap().busy_bw)
+                        .sum();
+                    let trans = if switched { p.transition } else { Duration::ZERO };
+                    let exec = p.dispatch_duration(batch).mul_f64(p.slowdown(corunner_bw));
+                    let total = trans + exec;
+                    if !total.is_zero() {
+                        std::thread::sleep(total);
+                    }
+                    trans.as_secs_f64()
+                }
+                None => 0.0,
+            };
+            let t1 = self.now();
+            let exec_start = (t0 + trans_s).min(t1);
+            if trans_s > 0.0 {
+                spans.push(Span {
+                    engine: unit.kind,
+                    unit: unit.index,
+                    instance,
+                    frame: frame as usize,
+                    t0,
+                    t1: exec_start,
+                    is_transition: true,
+                });
+            }
+            spans.push(Span {
+                engine: unit.kind,
+                unit: unit.index,
+                instance,
+                frame: frame as usize,
+                t0: exec_start,
+                t1,
+                is_transition: false,
+            });
+        }
+
+        // ---- release ----
+        drop(lease);
+        if !spans.is_empty() {
+            let mut tl = self.timeline.lock().unwrap();
+            for sp in spans {
+                tl.push(sp);
+            }
+        }
+        result
+    }
+
+    /// Copy of the serving timeline recorded so far.
+    pub fn timeline(&self) -> Timeline {
+        self.timeline.lock().unwrap().clone()
+    }
+
+    /// Per-unit utilization / idle-gap statistics over the serving window
+    /// (first span start to last span end — backend open/compile time
+    /// before the first dispatch does not dilute utilization).
+    pub fn engine_snapshots(&self) -> Vec<EngineSnapshot> {
+        let tl = self.timeline.lock().unwrap();
+        let window = tl.span_window().map(|(a, b)| (b - a).max(f64::MIN_POSITIVE));
+        self.units
+            .iter()
+            .map(|u| {
+                let st = tl.unit_stats(u.kind, u.index);
+                let utilization = window.map(|w| (st.busy / w).min(1.0)).unwrap_or(0.0);
+                EngineSnapshot {
+                    label: u.label.clone(),
+                    kind: u.kind,
+                    unit: u.index,
+                    utilization,
+                    busy_seconds: st.busy,
+                    dispatches: st.span_count,
+                    mean_block_ms: st.mean_block * 1e3,
+                    idle_gap_ms_mean: st.idle_gaps.mean() * 1e3,
+                    idle_gap_ms_p99: st.idle_gaps.p99() * 1e3,
+                    idle_gap_count: st.idle_gaps.count(),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(label: &str, engine: EngineKind, index: usize) -> InstanceSpec {
+        InstanceSpec::new(label, "gen_cropping").on_engine_unit(engine, index)
+    }
+
+    fn profile(ms: u64, transition_ms: u64) -> DispatchProfile {
+        DispatchProfile {
+            sleep_for: vec![Duration::from_millis(ms)],
+            marginal: Duration::from_millis(ms),
+            intensity: 0.5,
+            bw_demand: 50.0e9,
+            dram_bw: 200.0e9,
+            gamma: 0.5,
+            transition: Duration::from_millis(transition_ms),
+        }
+    }
+
+    #[test]
+    fn units_are_deduplicated_and_mapped() {
+        let arb = EngineArbiter::new(&[
+            spec("a", EngineKind::Dla, 0),
+            spec("b", EngineKind::Dla, 0),
+            spec("c", EngineKind::Dla, 1),
+            spec("d", EngineKind::Gpu, 0),
+        ]);
+        assert_eq!(arb.unit_count(), 3);
+        assert_eq!(arb.unit_of, vec![0, 0, 1, 2]);
+    }
+
+    #[test]
+    fn same_unit_dispatches_serialize_without_overlap() {
+        let arb = std::sync::Arc::new(EngineArbiter::new(&[
+            spec("a", EngineKind::Dla, 0),
+            spec("b", EngineKind::Dla, 0),
+        ]));
+        let p = profile(2, 0);
+        std::thread::scope(|s| {
+            for inst in 0..2 {
+                let arb = std::sync::Arc::clone(&arb);
+                let p = p.clone();
+                s.spawn(move || {
+                    for f in 0..4u64 {
+                        arb.dispatch(inst, f, 1, Some(&p), || Ok(())).unwrap();
+                    }
+                });
+            }
+        });
+        let tl = arb.timeline();
+        let mut spans: Vec<_> = tl.spans.iter().filter(|sp| !sp.is_transition).collect();
+        assert_eq!(spans.len(), 8);
+        spans.sort_by(|a, b| a.t0.partial_cmp(&b.t0).unwrap());
+        for w in spans.windows(2) {
+            assert!(
+                w[1].t0 >= w[0].t1 - 1e-9,
+                "exclusive unit overlapped: {:?} vs {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn occupant_switch_pays_transition_once_per_switch() {
+        let arb = EngineArbiter::new(&[
+            spec("a", EngineKind::Dla, 0),
+            spec("b", EngineKind::Dla, 0),
+        ]);
+        let p = profile(1, 2);
+        arb.dispatch(0, 0, 1, Some(&p), || Ok(())).unwrap();
+        arb.dispatch(0, 1, 1, Some(&p), || Ok(())).unwrap(); // same occupant: free
+        arb.dispatch(1, 2, 1, Some(&p), || Ok(())).unwrap(); // switch: pays
+        arb.dispatch(0, 3, 1, Some(&p), || Ok(())).unwrap(); // switch back: pays
+        let tl = arb.timeline();
+        let transitions = tl.spans.iter().filter(|sp| sp.is_transition).count();
+        assert_eq!(transitions, 2);
+    }
+
+    #[test]
+    fn split_units_run_concurrently() {
+        let arb = std::sync::Arc::new(EngineArbiter::new(&[
+            spec("a", EngineKind::Dla, 0),
+            spec("b", EngineKind::Dla, 1),
+        ]));
+        // intensity 0 => no contention stretch; 8 ms of work per unit
+        let p = DispatchProfile {
+            intensity: 0.0,
+            ..profile(4, 0)
+        };
+        std::thread::scope(|s| {
+            for inst in 0..2 {
+                let arb = std::sync::Arc::clone(&arb);
+                let p = p.clone();
+                s.spawn(move || {
+                    for f in 0..2u64 {
+                        arb.dispatch(inst, f, 1, Some(&p), || Ok(())).unwrap();
+                    }
+                });
+            }
+        });
+        // Concurrency is structural: the two units' busy windows overlap
+        // (sleeps run in parallel), unlike same-unit dispatches.
+        let tl = arb.timeline();
+        let window_of = |unit: usize| {
+            let spans: Vec<_> = tl.spans.iter().filter(|sp| sp.unit == unit).collect();
+            let a = spans.iter().map(|sp| sp.t0).fold(f64::INFINITY, f64::min);
+            let b = spans.iter().map(|sp| sp.t1).fold(0.0, f64::max);
+            (a, b)
+        };
+        let (a0, b0) = window_of(0);
+        let (a1, b1) = window_of(1);
+        assert!(
+            b0.min(b1) > a0.max(a1),
+            "split units must overlap in time: unit0 [{a0}, {b0}] vs unit1 [{a1}, {b1}]"
+        );
+        let snaps = arb.engine_snapshots();
+        assert_eq!(snaps.len(), 2);
+        for s in &snaps {
+            assert!(s.utilization > 0.0 && s.utilization <= 1.0);
+            assert_eq!(s.dispatches, 2);
+        }
+    }
+
+    #[test]
+    fn slowdown_is_one_without_corunners_and_saturates() {
+        let p = profile(1, 0);
+        assert_eq!(p.slowdown(0.0), 1.0);
+        let s1 = p.slowdown(50.0e9);
+        let s2 = p.slowdown(150.0e9);
+        let s3 = p.slowdown(1e15); // saturates at dram_bw
+        assert!(1.0 < s1 && s1 < s2);
+        assert!(s2 < s3 + 1e-12);
+        assert!(s3 <= 1.0 + p.gamma * p.intensity + 1e-12);
+    }
+
+    #[test]
+    fn failed_dispatch_releases_unit_and_records_nothing() {
+        let arb = EngineArbiter::new(&[spec("a", EngineKind::Gpu, 0)]);
+        let p = profile(1, 0);
+        let err = arb
+            .dispatch(0, 0, 1, Some(&p), || {
+                Err::<(), _>(crate::error::Error::Pipeline("boom".into()))
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("boom"));
+        assert!(arb.timeline().spans.is_empty());
+        // unit is free again: next dispatch succeeds
+        arb.dispatch(0, 1, 1, Some(&p), || Ok(())).unwrap();
+        assert_eq!(arb.timeline().spans.len(), 1);
+    }
+
+    #[test]
+    fn panicking_dispatch_releases_the_unit() {
+        let arb = EngineArbiter::new(&[spec("a", EngineKind::Gpu, 0)]);
+        let p = profile(1, 0);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            arb.dispatch(0, 0, 1, Some(&p), || -> crate::error::Result<()> {
+                panic!("backend blew up")
+            })
+        }));
+        assert!(res.is_err());
+        // the ticket queue must have advanced: the unit is serviceable,
+        // not wedged (a co-pinned worker would otherwise hang forever)
+        arb.dispatch(0, 1, 1, Some(&p), || Ok(())).unwrap();
+        assert_eq!(arb.timeline().spans.len(), 1);
+    }
+
+    #[test]
+    fn measured_dispatch_records_real_duration() {
+        let arb = EngineArbiter::new(&[spec("a", EngineKind::Gpu, 0)]);
+        arb.dispatch(0, 7, 1, None, || {
+            std::thread::sleep(Duration::from_millis(3));
+            Ok(())
+        })
+        .unwrap();
+        let tl = arb.timeline();
+        assert_eq!(tl.spans.len(), 1);
+        let sp = &tl.spans[0];
+        assert!(!sp.is_transition);
+        assert_eq!(sp.frame, 7);
+        assert!(sp.t1 - sp.t0 >= 0.003);
+    }
+}

@@ -1,7 +1,7 @@
 //! Pipeline metrics aggregation (thread-safe).
 
 use crate::util::stats::Summary;
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 /// Per-instance counters.
@@ -13,12 +13,18 @@ struct InstanceCounters {
     psnr: Summary,
     ssim_pct: Summary,
     dropped: usize,
+    /// Fidelity samples skipped (shape mismatch, missing ground truth,
+    /// unscorable images) — surfaced so silent skips are visible.
+    fidelity_skipped: usize,
 }
 
 /// Shared metrics hub.
 #[derive(Debug)]
 pub struct Metrics {
-    start: Instant,
+    /// Serving-clock origin: set at **first frame admission**, not at
+    /// construction, so backend open/compile time (PJRT can take seconds)
+    /// does not deflate reported FPS.
+    serving_start: OnceLock<Instant>,
     instances: Vec<Mutex<InstanceCounters>>,
     labels: Vec<String>,
 }
@@ -35,15 +41,23 @@ pub struct InstanceSnapshot {
     pub psnr_mean: f64,
     pub ssim_pct_mean: f64,
     pub dropped: usize,
+    pub fidelity_skipped: usize,
 }
 
 impl Metrics {
     pub fn new(labels: &[String]) -> Self {
         Metrics {
-            start: Instant::now(),
+            serving_start: OnceLock::new(),
             instances: labels.iter().map(|_| Mutex::new(Default::default())).collect(),
             labels: labels.to_vec(),
         }
+    }
+
+    /// Start the serving clock (idempotent). The driver calls this when
+    /// the first frame is admitted; FPS and `wall_seconds` are computed
+    /// over serving time only.
+    pub fn start_serving(&self) {
+        self.serving_start.get_or_init(Instant::now);
     }
 
     pub fn record_frame(&self, instance: usize, latency_s: f64) {
@@ -64,12 +78,23 @@ impl Metrics {
         self.instances[instance].lock().unwrap().dropped += 1;
     }
 
+    /// A fidelity sample that could not be scored (mismatched shapes,
+    /// missing ground truth, degenerate images).
+    pub fn record_fidelity_skipped(&self, instance: usize) {
+        self.instances[instance].lock().unwrap().fidelity_skipped += 1;
+    }
+
+    /// Serving seconds since first frame admission (`0.0` before any
+    /// frame was admitted).
     pub fn elapsed(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
+        self.serving_start
+            .get()
+            .map(|s| s.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
     }
 
     pub fn snapshot(&self) -> Vec<InstanceSnapshot> {
-        let elapsed = self.elapsed().max(f64::MIN_POSITIVE);
+        let elapsed = self.elapsed();
         self.instances
             .iter()
             .zip(self.labels.iter())
@@ -78,13 +103,18 @@ impl Metrics {
                 InstanceSnapshot {
                     label: label.clone(),
                     frames: c.frames,
-                    fps: c.frames as f64 / elapsed,
+                    fps: if elapsed > 0.0 {
+                        c.frames as f64 / elapsed
+                    } else {
+                        0.0
+                    },
                     latency_ms_p50: c.latency.p50() * 1e3,
                     latency_ms_p99: c.latency.p99() * 1e3,
                     latency_ms_mean: c.latency.mean() * 1e3,
                     psnr_mean: c.psnr.mean(),
                     ssim_pct_mean: c.ssim_pct.mean(),
                     dropped: c.dropped,
+                    fidelity_skipped: c.fidelity_skipped,
                 }
             })
             .collect()
@@ -98,16 +128,20 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::new(&["gan".to_string(), "yolo".to_string()]);
+        m.start_serving();
         m.record_frame(0, 0.010);
         m.record_frame(0, 0.020);
         m.record_frame(1, 0.005);
         m.record_fidelity(0, 25.0, 80.0);
         m.record_drop(1);
+        m.record_fidelity_skipped(0);
         let snap = m.snapshot();
         assert_eq!(snap[0].frames, 2);
         assert!(snap[0].latency_ms_mean > 9.0 && snap[0].latency_ms_mean < 21.0);
         assert_eq!(snap[0].psnr_mean, 25.0);
         assert_eq!(snap[1].dropped, 1);
+        assert_eq!(snap[0].fidelity_skipped, 1);
+        assert_eq!(snap[1].fidelity_skipped, 0);
         assert!(snap[0].fps > 0.0);
     }
 
@@ -117,5 +151,32 @@ mod tests {
         m.record_fidelity(0, f64::INFINITY, 100.0);
         m.record_fidelity(0, 30.0, 90.0);
         assert_eq!(m.snapshot()[0].psnr_mean, 30.0);
+    }
+
+    #[test]
+    fn serving_clock_starts_at_first_admission_not_construction() {
+        let m = Metrics::new(&["g".to_string()]);
+        // "backend open" time before any frame is admitted
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert_eq!(m.elapsed(), 0.0, "clock must not run before admission");
+        m.start_serving();
+        m.start_serving(); // idempotent
+        for _ in 0..10 {
+            m.record_frame(0, 0.001);
+        }
+        let snap = m.snapshot();
+        // FPS over serving time only: 10 frames in far less than the 50 ms
+        // of pre-serving setup
+        assert!(m.elapsed() < 0.045, "elapsed {} includes setup", m.elapsed());
+        assert!(snap[0].fps > 10.0 / 0.045, "fps {} deflated by setup", snap[0].fps);
+    }
+
+    #[test]
+    fn snapshot_before_serving_is_finite_zero_fps() {
+        let m = Metrics::new(&["g".to_string()]);
+        m.record_frame(0, 0.001);
+        let snap = m.snapshot();
+        assert_eq!(snap[0].fps, 0.0);
+        assert!(snap[0].fps.is_finite());
     }
 }

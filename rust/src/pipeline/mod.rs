@@ -9,15 +9,23 @@
 //! [`plane::PlanePool`] — routing and batching never copy pixels. What runs is described
 //! declaratively by a [`spec::PipelineSpec`] — any number of instances,
 //! not just the historical four `Workload` arms — and launched through
-//! [`crate::session::Session`]. Both of the paper's deployment schemes run
-//! on this machinery:
+//! [`crate::session::Session`]. Engine placement is enforced, not
+//! decorative: every dispatch executes under an exclusive per-unit lease
+//! from the shared [`engines::EngineArbiter`] (GPU, DLA0, DLA1 as FIFO
+//! resources with PCCS contention and reformat costs), which also records
+//! the serving timeline behind the per-engine utilization stats in
+//! [`driver::PipelineReport`]. The paper's deployment schemes all run on
+//! this machinery:
 //!
 //! * **standalone** (Fig 1 A): one CT stream, GAN + YOLO concurrently;
-//! * **client-server** (Fig 1 B): several hospital streams multiplexed.
+//! * **client-server** (Fig 1 B): several hospital streams multiplexed;
+//! * **dual-GAN** (Fig 13): two DLA-resident GANs splitting the load,
+//!   one per DLA core, next to the GPU detector.
 
 pub mod backend;
 pub mod batcher;
 pub mod driver;
+pub mod engines;
 pub mod frame;
 pub mod metrics;
 pub mod plane;
@@ -29,6 +37,7 @@ pub mod spec;
 pub use backend::PjrtBackend;
 pub use backend::{InferenceBackend, ModelRunner, Output, SimBackend};
 pub use driver::{run_pipeline, PipelineReport};
+pub use engines::{DispatchProfile, EngineArbiter, EngineSnapshot};
 pub use frame::Frame;
 pub use plane::{FramePlane, PlanePool};
 pub use spec::{InstanceSpec, PipelineSpec};

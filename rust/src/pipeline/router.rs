@@ -7,7 +7,11 @@
 //!   *and* diagnosed by YOLO);
 //! * `RoundRobin` — frames alternate across instances (the two-GAN
 //!   multi-stream reconstruction workload);
-//! * `ByStream` — stream *s* maps to instance *s mod n* (client-server).
+//! * `ByStream` — stream *s* maps to instance *s mod n* (client-server);
+//! * `RrFanoutLast` — frames round-robin across all instances but the
+//!   last, which receives **every** frame (the dual-GAN deployment: two
+//!   DLA-resident GANs share the reconstruction load while the GPU
+//!   detector sees the full stream).
 //!
 //! `route` is on the per-frame hot path, so it returns the allocation-free
 //! [`RouteTargets`] iterator instead of a `Vec` (the `hotpath` bench's
@@ -24,6 +28,9 @@ pub enum RoutePolicy {
     Fanout,
     RoundRobin,
     ByStream,
+    /// Round-robin across instances `0..n-1`; instance `n-1` additionally
+    /// receives every frame (droppable fanout copy).
+    RrFanoutLast,
 }
 
 impl RoutePolicy {
@@ -32,8 +39,10 @@ impl RoutePolicy {
             "fanout" => Ok(RoutePolicy::Fanout),
             "round-robin" | "roundrobin" | "rr" => Ok(RoutePolicy::RoundRobin),
             "by-stream" | "bystream" => Ok(RoutePolicy::ByStream),
+            "rr+fanout" | "round-robin+fanout" => Ok(RoutePolicy::RrFanoutLast),
             other => Err(Error::Config(format!(
-                "unknown route policy `{other}` (known: fanout, round-robin, by-stream)"
+                "unknown route policy `{other}` (known: fanout, round-robin, by-stream, \
+                 rr+fanout)"
             ))),
         }
     }
@@ -43,6 +52,7 @@ impl RoutePolicy {
             RoutePolicy::Fanout => "fanout",
             RoutePolicy::RoundRobin => "round-robin",
             RoutePolicy::ByStream => "by-stream",
+            RoutePolicy::RrFanoutLast => "rr+fanout",
         }
     }
 }
@@ -56,6 +66,8 @@ pub enum RouteTargets {
     All(std::ops::Range<usize>),
     /// Exactly one instance.
     One(std::iter::Once<usize>),
+    /// Exactly two instances: a round-robin primary plus a broadcast tail.
+    Two(std::array::IntoIter<usize, 2>),
 }
 
 impl Iterator for RouteTargets {
@@ -65,6 +77,7 @@ impl Iterator for RouteTargets {
         match self {
             RouteTargets::All(r) => r.next(),
             RouteTargets::One(o) => o.next(),
+            RouteTargets::Two(t) => t.next(),
         }
     }
 
@@ -72,6 +85,7 @@ impl Iterator for RouteTargets {
         match self {
             RouteTargets::All(r) => r.size_hint(),
             RouteTargets::One(o) => o.size_hint(),
+            RouteTargets::Two(t) => t.size_hint(),
         }
     }
 }
@@ -107,6 +121,15 @@ impl Router {
             }
             RoutePolicy::ByStream => {
                 RouteTargets::One(std::iter::once(frame.stream % self.instances))
+            }
+            RoutePolicy::RrFanoutLast => {
+                if self.instances == 1 {
+                    return RouteTargets::One(std::iter::once(0));
+                }
+                let shards = self.instances - 1;
+                let i = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % shards;
+                RouteTargets::Two([i, self.instances - 1].into_iter())
             }
         }
     }
@@ -165,11 +188,30 @@ mod tests {
     }
 
     #[test]
+    fn rr_fanout_last_shards_and_broadcasts() {
+        // three instances: frames alternate 0/1, instance 2 sees everything
+        let mut r = Router::new(RoutePolicy::RrFanoutLast, 3);
+        assert_eq!(targets(&mut r, &frame(0)), vec![0, 2]);
+        assert_eq!(targets(&mut r, &frame(0)), vec![1, 2]);
+        assert_eq!(targets(&mut r, &frame(0)), vec![0, 2]);
+        let t = r.route(&frame(0));
+        assert_eq!(t.len(), 2);
+        // degenerate single instance: plain unicast
+        let mut r1 = Router::new(RoutePolicy::RrFanoutLast, 1);
+        assert_eq!(targets(&mut r1, &frame(0)), vec![0]);
+        // two instances: shard 0 is always primary, 1 is the broadcast tail
+        let mut r2 = Router::new(RoutePolicy::RrFanoutLast, 2);
+        assert_eq!(targets(&mut r2, &frame(0)), vec![0, 1]);
+        assert_eq!(targets(&mut r2, &frame(0)), vec![0, 1]);
+    }
+
+    #[test]
     fn policy_parse_roundtrip() {
         for p in [
             RoutePolicy::Fanout,
             RoutePolicy::RoundRobin,
             RoutePolicy::ByStream,
+            RoutePolicy::RrFanoutLast,
         ] {
             assert_eq!(RoutePolicy::parse(p.name()).unwrap(), p);
         }

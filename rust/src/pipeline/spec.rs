@@ -95,11 +95,19 @@ pub struct InstanceSpec {
     pub label: String,
     /// AOT artifact name (e.g. `gen_cropping`, `yolo_lite`).
     pub artifact: String,
-    /// Engine placement. [`super::backend::SimBackend`] prices per-frame
-    /// latency with it; the PJRT path executes on the CPU client regardless
-    /// (the testbed has no physical DLA — scheduling structure is what is
-    /// reproduced, timing claims are made by [`crate::sim`]).
+    /// Engine placement. Placement is *load-bearing* in the serving path:
+    /// the driver routes every dispatch through the shared
+    /// [`super::engines::EngineArbiter`], so instances pinned to the same
+    /// physical unit serialize, split placements run concurrently (with
+    /// PCCS contention), and occupant switches pay the reformat cost.
+    /// [`super::backend::SimBackend`] additionally prices per-dispatch
+    /// latency from it; the PJRT path executes on the CPU client but still
+    /// serializes under the same engine token.
     pub engine: EngineKind,
+    /// Physical unit of `engine` this instance is pinned to (the Jetson
+    /// testbeds carry two DLA cores — `EngineKind::units`). `0` unless
+    /// explicitly split, e.g. the dual-GAN deployment's DLA0/DLA1 pair.
+    pub engine_index: usize,
     /// Per-instance dynamic batching policy. Batches reach the backend as
     /// a single [`super::backend::ModelRunner::execute_batch`] dispatch,
     /// so `max_batch > 1` reduces dispatch count (and amortizes launch
@@ -118,14 +126,24 @@ impl InstanceSpec {
             label: label.into(),
             artifact: artifact.into(),
             engine: EngineKind::Gpu,
+            engine_index: 0,
             batch: BatchPolicy::default(),
             score_fidelity: false,
         }
     }
 
-    /// Pin the instance to an engine.
+    /// Pin the instance to an engine (unit 0).
     pub fn on_engine(mut self, engine: EngineKind) -> Self {
         self.engine = engine;
+        self.engine_index = 0;
+        self
+    }
+
+    /// Pin the instance to a specific physical unit of an engine class
+    /// (e.g. `on_engine_unit(EngineKind::Dla, 1)` for the second DLA core).
+    pub fn on_engine_unit(mut self, engine: EngineKind, index: usize) -> Self {
+        self.engine = engine;
+        self.engine_index = index;
         self
     }
 
@@ -199,6 +217,15 @@ impl PipelineSpec {
                 return Err(Error::Pipeline(format!(
                     "instance `{}`: max_batch {} exceeds the supported maximum {MAX_BATCH_LIMIT}",
                     inst.label, inst.batch.max_batch
+                )));
+            }
+            if inst.engine_index >= inst.engine.units() {
+                return Err(Error::Pipeline(format!(
+                    "instance `{}`: engine index {} out of range for {} ({} unit(s))",
+                    inst.label,
+                    inst.engine_index,
+                    inst.engine,
+                    inst.engine.units()
                 )));
             }
             if self.instances[..i].iter().any(|o| o.label == inst.label) {
@@ -275,6 +302,19 @@ mod tests {
         assert!(err.to_string().contains("exceeds the supported maximum"));
         spec.instances[0].batch.max_batch = MAX_BATCH_LIMIT;
         spec.validate().unwrap();
+    }
+
+    #[test]
+    fn engine_index_bounds_enforced() {
+        let mut spec = two_instance_spec();
+        spec.instances[1] = spec.instances[1].clone().on_engine_unit(EngineKind::Dla, 1);
+        spec.validate().unwrap();
+        spec.instances[1].engine_index = 2; // Jetson has two DLA cores
+        let err = spec.validate().unwrap_err();
+        assert!(err.to_string().contains("engine index 2 out of range"));
+        let mut spec = two_instance_spec();
+        spec.instances[0] = spec.instances[0].clone().on_engine_unit(EngineKind::Gpu, 1);
+        assert!(spec.validate().is_err());
     }
 
     #[test]

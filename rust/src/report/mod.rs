@@ -422,8 +422,10 @@ pub fn timeline_ascii(soc: &SocSpec, variant: GanVariant, with_yolo: bool) -> Re
 
 /// Serving-pipeline summary: every `Workload` preset lowered to a
 /// `PipelineSpec` and run through the real coordinator (router, batcher,
-/// backpressure, metrics) on the latency-model backend — the artifact-free
-/// companion to the PJRT accuracy numbers.
+/// backpressure, engine arbiter, metrics) on the latency-model backend —
+/// the artifact-free companion to the PJRT accuracy numbers. Placement is
+/// enforced: the per-engine utilization column comes from the serving
+/// arbiter's timeline, the Nsight-style numbers of Figs 10/13.
 pub fn pipeline_report(soc: &SocSpec) -> Json {
     use crate::config::Workload;
     use crate::pipeline::SimBackend;
@@ -431,7 +433,10 @@ pub fn pipeline_report(soc: &SocSpec) -> Json {
     use std::sync::Arc;
 
     println!("Pipeline: workload presets on the sim backend ({})", soc.name);
-    println!("{:<18} {:>10} {:>8} {:>8}", "workload", "total fps", "frames", "dropped");
+    println!(
+        "{:<18} {:>10} {:>8} {:>8}  engines (util%)",
+        "workload", "total fps", "frames", "dropped"
+    );
     let mut rows = Vec::new();
     for w in Workload::all() {
         let session = Session::builder()
@@ -441,8 +446,14 @@ pub fn pipeline_report(soc: &SocSpec) -> Json {
             .build()
             .expect("sim session builds for every preset");
         let rep = session.run().expect("sim session runs");
+        let engines = rep
+            .engines
+            .iter()
+            .map(|e| format!("{} {:.0}%", e.label, e.utilization * 100.0))
+            .collect::<Vec<_>>()
+            .join("  ");
         println!(
-            "{:<18} {:>10.1} {:>8} {:>8}",
+            "{:<18} {:>10.1} {:>8} {:>8}  {engines}",
             w.name(),
             rep.total_fps(),
             rep.total_frames,

@@ -30,7 +30,12 @@
 //! planes are `Arc`-shared [`crate::pipeline::plane::FramePlane`]s
 //! recycled through a [`crate::pipeline::plane::PlanePool`], and workers
 //! execute whole batches as single dispatches
-//! ([`crate::pipeline::backend::ModelRunner::execute_batch`]) — see the
+//! ([`crate::pipeline::backend::ModelRunner::execute_batch`]) under an
+//! exclusive engine lease from the run's shared
+//! [`crate::pipeline::engines::EngineArbiter`] — pinning two instances to
+//! the same unit serializes them, split placements contend through shared
+//! DRAM, and the resulting per-engine utilization/idle-gap statistics ride
+//! on the [`crate::pipeline::driver::PipelineReport`]. See the
 //! [`crate::pipeline::driver`] module docs for the full data-path
 //! contract.
 

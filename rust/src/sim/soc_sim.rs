@@ -9,7 +9,7 @@
 
 use super::timeline::{Span, Timeline};
 use crate::cost::contention::{bandwidth_demand, memory_intensity, slowdown};
-use crate::cost::flops::{node_cost, LayerCost};
+use crate::cost::flops::{aggregate_cost, node_cost};
 use crate::cost::latency::layer_latency;
 use crate::dla::rules::DlaVersion;
 use crate::error::{Error, Result};
@@ -108,15 +108,11 @@ pub fn simulate(
         for seg in &inst.segments {
             for (engine, nodes) in expand_fallback(graph, seg, cfg.version) {
                 let spec = cfg.soc.engine(engine);
-                let mut duration = 0.0;
-                let mut agg = LayerCost::ZERO;
-                for &id in &nodes {
-                    let c = node_cost(graph, id);
-                    duration += layer_latency(&c, spec);
-                    agg.flops += c.flops;
-                    agg.bytes += c.bytes;
-                    agg.is_mac |= c.is_mac;
-                }
+                let agg = aggregate_cost(graph, &nodes);
+                let duration: f64 = nodes
+                    .iter()
+                    .map(|&id| layer_latency(&node_cost(graph, id), spec))
+                    .sum();
                 let transition_in = match prev_engine {
                     Some(pe) if pe != engine => cfg.soc.transition.latency(prev_bytes),
                     _ => 0.0,
@@ -230,6 +226,7 @@ pub fn simulate(
             if st.transition_in > 0.0 {
                 timeline.push(Span {
                     engine: st.engine,
+                    unit: 0,
                     instance: p.instance,
                     frame: p.frame,
                     t0: start,
@@ -239,6 +236,7 @@ pub fn simulate(
             }
             timeline.push(Span {
                 engine: st.engine,
+                unit: 0,
                 instance: p.instance,
                 frame: p.frame,
                 t0: exec_start,

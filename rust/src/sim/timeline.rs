@@ -14,6 +14,11 @@ use crate::util::stats::Summary;
 #[derive(Debug, Clone, PartialEq)]
 pub struct Span {
     pub engine: EngineKind,
+    /// Physical unit of the engine class (`0` for the GPU, `0`/`1` for the
+    /// two DLA cores). The discrete-event sim models a single merged DLA
+    /// and always records unit `0`; the serving-path arbiter records the
+    /// actual pinned unit.
+    pub unit: usize,
     /// Instance index within the workload.
     pub instance: usize,
     pub frame: usize,
@@ -54,21 +59,46 @@ impl Timeline {
         self.spans.iter().map(|s| s.t1).fold(0.0, f64::max)
     }
 
-    /// Compute-only spans of one engine, time-sorted.
-    fn engine_spans(&self, engine: EngineKind) -> Vec<&Span> {
+    /// `(first span start, last span end)` over the whole trace — the
+    /// busy window a serving-side utilization should be computed over
+    /// (the trace origin may predate the first dispatch, e.g. backend
+    /// open/compile time).
+    pub fn span_window(&self) -> Option<(f64, f64)> {
+        if self.spans.is_empty() {
+            return None;
+        }
+        let t0 = self.spans.iter().map(|s| s.t0).fold(f64::INFINITY, f64::min);
+        let t1 = self.spans.iter().map(|s| s.t1).fold(0.0, f64::max);
+        Some((t0, t1))
+    }
+
+    /// Compute-only spans of one engine (optionally one unit), time-sorted.
+    fn engine_spans(&self, engine: EngineKind, unit: Option<usize>) -> Vec<&Span> {
         let mut v: Vec<&Span> = self
             .spans
             .iter()
-            .filter(|s| s.engine == engine && !s.is_transition)
+            .filter(|s| {
+                s.engine == engine && !s.is_transition && unit.map(|u| s.unit == u).unwrap_or(true)
+            })
             .collect();
         v.sort_by(|a, b| a.t0.partial_cmp(&b.t0).unwrap());
         v
     }
 
     /// Engine statistics over the trace (utilization relative to the
-    /// trace makespan).
+    /// trace makespan), aggregated across all units of the class.
     pub fn engine_stats(&self, engine: EngineKind) -> EngineStats {
-        let spans = self.engine_spans(engine);
+        self.stats_of(engine, None)
+    }
+
+    /// Statistics for one physical unit of an engine class (`DLA0` vs
+    /// `DLA1` — the per-core view the serving arbiter reports).
+    pub fn unit_stats(&self, engine: EngineKind, unit: usize) -> EngineStats {
+        self.stats_of(engine, Some(unit))
+    }
+
+    fn stats_of(&self, engine: EngineKind, unit: Option<usize>) -> EngineStats {
+        let spans = self.engine_spans(engine, unit);
         let busy: f64 = spans.iter().map(|s| s.t1 - s.t0).sum();
         let total = self.makespan().max(f64::MIN_POSITIVE);
         let mut gaps = Summary::new();
@@ -123,6 +153,7 @@ impl Timeline {
             .map(|sp| {
                 obj(vec![
                     ("engine", s(sp.engine.name())),
+                    ("unit", num(sp.unit as f64)),
                     ("instance", num(sp.instance as f64)),
                     ("frame", num(sp.frame as f64)),
                     ("t0", num(sp.t0)),
@@ -139,8 +170,13 @@ mod tests {
     use super::*;
 
     fn span(e: EngineKind, i: usize, t0: f64, t1: f64) -> Span {
+        unit_span(e, 0, i, t0, t1)
+    }
+
+    fn unit_span(e: EngineKind, unit: usize, i: usize, t0: f64, t1: f64) -> Span {
         Span {
             engine: e,
+            unit,
             instance: i,
             frame: 0,
             t0,
@@ -181,6 +217,7 @@ mod tests {
         t.push(span(EngineKind::Gpu, 0, 0.0, 1.0));
         t.push(Span {
             engine: EngineKind::Gpu,
+            unit: 0,
             instance: 0,
             frame: 0,
             t0: 1.0,
@@ -190,6 +227,31 @@ mod tests {
         let g = t.engine_stats(EngineKind::Gpu);
         assert_eq!(g.span_count, 1);
         assert!((g.busy - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unit_stats_separate_the_two_dla_cores() {
+        let mut t = Timeline::default();
+        t.push(unit_span(EngineKind::Dla, 0, 0, 0.0, 1.0));
+        t.push(unit_span(EngineKind::Dla, 0, 0, 1.0, 2.0));
+        t.push(unit_span(EngineKind::Dla, 1, 1, 0.0, 4.0));
+        let d0 = t.unit_stats(EngineKind::Dla, 0);
+        let d1 = t.unit_stats(EngineKind::Dla, 1);
+        assert_eq!(d0.span_count, 2);
+        assert!((d0.busy - 2.0).abs() < 1e-12);
+        assert_eq!(d1.span_count, 1);
+        assert!((d1.utilization - 1.0).abs() < 1e-9);
+        // the merged per-class view still aggregates both cores
+        assert_eq!(t.engine_stats(EngineKind::Dla).span_count, 3);
+    }
+
+    #[test]
+    fn span_window_covers_first_to_last() {
+        let mut t = Timeline::default();
+        assert!(t.span_window().is_none());
+        t.push(span(EngineKind::Gpu, 0, 2.0, 3.0));
+        t.push(span(EngineKind::Dla, 1, 1.0, 2.5));
+        assert_eq!(t.span_window(), Some((1.0, 3.0)));
     }
 
     #[test]

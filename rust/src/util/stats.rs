@@ -44,11 +44,20 @@ impl Summary {
         }
     }
 
+    /// Smallest sample; `0.0` when empty (consistent with [`Self::mean`],
+    /// and keeps empty accumulators out of JSON as `±inf`).
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample; `0.0` when empty (see [`Self::min`]).
     pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples
             .iter()
             .copied()
@@ -118,6 +127,10 @@ mod tests {
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.std(), 0.0);
         assert_eq!(s.p99(), 0.0);
+        // min/max must agree with mean's empty-case convention: finite
+        // zero, never ±inf (which would leak into report JSON)
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
     }
 
     #[test]

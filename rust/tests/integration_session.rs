@@ -4,7 +4,7 @@
 //! disk**, so this file runs in CI after a bare checkout.
 
 use edgepipe::config::{GanVariant, PipelineConfig, Workload};
-use edgepipe::hw;
+use edgepipe::hw::{self, EngineKind};
 use edgepipe::imaging::phantom::PhantomConfig;
 use edgepipe::pipeline::batcher::BatchPolicy;
 use edgepipe::pipeline::driver::PipelineReport;
@@ -271,6 +271,136 @@ fn config_instances_array_runs_end_to_end() {
     assert_eq!(rep.instances[0].label, "g0");
     assert_eq!(rep.instances[0].frames + rep.instances[1].frames, 32);
     assert_eq!(rep.dropped, 0);
+}
+
+/// `count` GAN instances pinned to the given DLA units, served with REAL
+/// (time-scaled) modeled engine occupancy so placement shows up in FPS.
+fn dla_gan_cluster(units: &[usize], frames: usize) -> PipelineReport {
+    let mut builder = Session::builder();
+    for (i, &u) in units.iter().enumerate() {
+        builder = builder.instance(
+            InstanceSpec::new(format!("gan{i}"), "gen_cropping")
+                .on_engine_unit(EngineKind::Dla, u),
+        );
+    }
+    let route = if units.len() == 1 {
+        RoutePolicy::Fanout
+    } else {
+        RoutePolicy::RoundRobin
+    };
+    builder
+        .route(route)
+        .frames(frames)
+        .queue_depth(4)
+        .backend(Arc::new(SimBackend::new(hw::orin()).with_time_scale(0.1)))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+/// The paper's Fig 13 claim, enforced end-to-end in the serving path: two
+/// GANs pinned to the SAME DLA core serialize (aggregate ≈ 1× a single
+/// instance), while splitting them across DLA0/DLA1 approaches 2×.
+#[test]
+fn engine_placement_is_load_bearing_in_serving() {
+    let frames = 64;
+    let single = dla_gan_cluster(&[0], frames);
+    let same = dla_gan_cluster(&[0, 0], frames);
+    let split = dla_gan_cluster(&[0, 1], frames);
+    let f1 = single.total_fps();
+    let f_same = same.total_fps();
+    let f_split = split.total_fps();
+    assert!(f1 > 0.0);
+    assert!(
+        f_same <= 1.15 * f1,
+        "same-DLA pair must serialize: {f_same:.1} fps vs single {f1:.1} fps"
+    );
+    assert!(
+        f_split >= 1.7 * f1,
+        "DLA0/DLA1 split must approach 2x: {f_split:.1} fps vs single {f1:.1} fps"
+    );
+
+    // Exclusivity is structural, not statistical: the shared unit's spans
+    // never overlap in the serving timeline.
+    let mut spans: Vec<_> = same
+        .timeline
+        .spans
+        .iter()
+        .filter(|s| !s.is_transition)
+        .collect();
+    assert_eq!(spans.len(), frames, "one compute span per batch-1 dispatch");
+    spans.sort_by(|a, b| a.t0.partial_cmp(&b.t0).unwrap());
+    for w in spans.windows(2) {
+        assert!(
+            w[1].t0 >= w[0].t1 - 1e-9,
+            "exclusive engine overlapped: {:?} vs {:?}",
+            w[0],
+            w[1]
+        );
+    }
+
+    // The split run reports both DLA cores, each genuinely busy.
+    let labels: Vec<&str> = split.engines.iter().map(|e| e.label.as_str()).collect();
+    assert!(labels.contains(&"DLA0") && labels.contains(&"DLA1"), "{labels:?}");
+    for e in &split.engines {
+        assert!(
+            e.utilization > 0.5 && e.utilization <= 1.0,
+            "{} utilization {}",
+            e.label,
+            e.utilization
+        );
+        assert!(e.dispatches > 0);
+    }
+}
+
+/// Acceptance: a streams-indivisible frame count is produced exactly
+/// (remainder distributed across the first streams), and the report
+/// carries per-engine utilization / idle-gap statistics in its JSON.
+#[test]
+fn report_exposes_engine_stats_and_conserves_indivisible_frames() {
+    let rep = two_instance_session(RoutePolicy::Fanout, 1, 100, 3)
+        .run()
+        .unwrap();
+    assert_eq!(rep.total_frames, 100, "frames % streams must not be dropped");
+    assert_conservation(&rep, 100);
+    let json = rep.to_json();
+    let engines = json.get("engines").unwrap().as_arr().unwrap();
+    assert!(!engines.is_empty());
+    for e in engines {
+        let util = e.get("utilization").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&util), "utilization {util}");
+        assert!(e.get("idle_gap_ms_mean").unwrap().as_f64().is_some());
+        assert!(e.get("idle_gap_ms_p99").unwrap().as_f64().is_some());
+        assert!(e.get("dispatches").is_some());
+        assert!(e.get("engine").unwrap().as_str().is_some());
+    }
+}
+
+#[test]
+fn dual_gan_preset_runs_end_to_end() {
+    let cfg = PipelineConfig {
+        workload: Workload::DualGan,
+        frames: 24,
+        ..PipelineConfig::default()
+    };
+    let rep = PipelineBuilder::from_config(&cfg)
+        .backend(sim())
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(rep.instances.len(), 3);
+    assert_eq!(rep.total_frames, 24);
+    // the two DLA-resident GANs shard the stream losslessly
+    assert_eq!(rep.instances[0].frames, 12);
+    assert_eq!(rep.instances[1].frames, 12);
+    // the GPU detector sees every frame (droppable fanout copies)
+    assert_eq!(rep.instances[2].frames + rep.instances[2].dropped, 24);
+    // three distinct engine units surface in the report
+    let labels: Vec<&str> = rep.engines.iter().map(|e| e.label.as_str()).collect();
+    assert_eq!(labels.len(), 3);
+    assert!(labels.contains(&"DLA0") && labels.contains(&"DLA1") && labels.contains(&"GPU"));
 }
 
 #[test]
