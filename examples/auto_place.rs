@@ -1,0 +1,62 @@
+//! Minimal auto-placement walkthrough: **plan → spec → session**.
+//!
+//! The planner searches the pipeline configuration space (GAN surgery
+//! variant, engine unit per instance, `max_batch`, route policy) for the
+//! allocation predicted to maximize throughput, pricing every candidate
+//! from the cost model — no backend runs during planning. The winning
+//! spec then serves through the ordinary session API, where the engine
+//! arbiter *enforces* the placement the planner predicted.
+//!
+//! Runs on the sim backend with no artifacts:
+//!
+//! ```text
+//! cargo run --release --no-default-features --example auto_place
+//! ```
+
+use edgepipe::dla::DlaVersion;
+use edgepipe::hw;
+use edgepipe::pipeline::SimBackend;
+use edgepipe::placement::{self, PlacementRequest};
+use edgepipe::session::Session;
+use std::sync::Arc;
+
+fn main() -> edgepipe::Result<()> {
+    // The paper's dual-GAN shape on the Xavier testbed: two DLA-resident
+    // reconstruction GANs (GPU reserved for the detector stream).
+    let mut req = PlacementRequest::new(hw::xavier(), DlaVersion::V1).dla_resident_gans();
+    req.frames = 48;
+
+    // Plan: enumerate + prune + score, entirely in virtual time.
+    let outcome = placement::plan(&req)?;
+    println!(
+        "planned: {} — {:.1} predicted fps, {:.2} ms total idle, {} transition(s)",
+        outcome.best_key(),
+        outcome.eval.predicted_fps,
+        outcome.eval.idle_gap_total_ms,
+        outcome.eval.transitions
+    );
+    for u in &outcome.eval.units {
+        println!("  {:<5} predicted util {:>5.1}%", u.label, u.utilization * 100.0);
+    }
+    for (key, reason) in outcome.rejected.iter().take(3) {
+        println!("  rejected {key}: {reason}");
+    }
+
+    // Serve the planned spec on the sim backend (time-scaled so the
+    // example finishes quickly; placement semantics are unchanged).
+    let report = Session::builder()
+        .auto_place(&req)?
+        .frames(64)
+        .backend(Arc::new(SimBackend::new(hw::xavier()).with_time_scale(0.05)))
+        .build()?
+        .run()?;
+    println!(
+        "served: {:.1} fps total, {} dropped",
+        report.total_fps(),
+        report.dropped
+    );
+    for e in &report.engines {
+        println!("  {:<5} served util {:>5.1}%", e.label, e.utilization * 100.0);
+    }
+    Ok(())
+}

@@ -11,7 +11,7 @@ mod bench_util;
 use bench_util::Bench;
 use edgepipe::config::json::Json;
 use edgepipe::config::GanVariant;
-use edgepipe::hw::{orin, EngineKind};
+use edgepipe::hw::{orin, xavier, EngineKind};
 use edgepipe::imaging::dct::{dct8_block, idct8_block};
 use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
 use edgepipe::models::yolov8::{yolov8, YoloConfig};
@@ -216,6 +216,26 @@ fn main() {
             e.utilization * 100.0,
         );
     }
+
+    // Auto-placement search cost: the full two-GAN + detector plan on the
+    // Xavier profile — candidate enumeration with DLA-fallback pruning
+    // plus the virtual-time scoring of every survivor. Tracked so search
+    // cost stays visible in the perf trajectory as the candidate space
+    // grows.
+    let plan_req = {
+        let mut r = edgepipe::placement::PlacementRequest::new(
+            xavier(),
+            edgepipe::dla::DlaVersion::V1,
+        );
+        r.frames = 32;
+        r
+    };
+    let mut plan_fps = 0.0;
+    let ms_plan = b.measure("plan_search_two_gan", 300, || {
+        plan_fps = edgepipe::placement::plan(&plan_req).unwrap().eval.predicted_fps;
+    });
+    b.rate("plan_search_two_gan", "plans_per_s", 1e3 / ms_plan);
+    b.rate("plan_search_two_gan", "predicted_fps", plan_fps);
 
     // NMS over 1k random boxes.
     let mut rng = Rng::new(3);

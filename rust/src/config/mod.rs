@@ -404,24 +404,9 @@ impl PipelineConfig {
             pairs.push(("route", json::s(route.name())));
         }
         if !self.instances.is_empty() {
-            let entries = self
-                .instances
-                .iter()
-                .map(|inst| {
-                    json::obj(vec![
-                        ("label", json::s(&inst.label)),
-                        ("artifact", json::s(&inst.artifact)),
-                        ("engine", json::s(&inst.engine.name().to_ascii_lowercase())),
-                        ("engine_index", json::num(inst.engine_index as f64)),
-                        ("max_batch", json::num(inst.batch.max_batch as f64)),
-                        (
-                            "batch_timeout_us",
-                            json::num(inst.batch.timeout.as_micros() as f64),
-                        ),
-                        ("score_fidelity", Json::Bool(inst.score_fidelity)),
-                    ])
-                })
-                .collect();
+            // Single writer for the instance schema: InstanceSpec::to_json
+            // (shared with `PipelineSpec::to_json` / `plan --emit-spec`).
+            let entries = self.instances.iter().map(|inst| inst.to_json()).collect();
             pairs.push(("instances", json::arr(entries)));
         }
         json::obj(pairs)

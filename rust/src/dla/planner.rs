@@ -39,6 +39,19 @@ impl EnginePlan {
         self.segments.iter().all(|s| s.engine == EngineKind::Dla)
     }
 
+    /// Structured fallback diagnostics: `(node id, layer name, reason)`
+    /// per GPU-fallback layer, resolved against the planned graph. This
+    /// is the machine-readable form of [`Self::fallback_reasons`] —
+    /// consumed by `report pipeline`'s `dla_plans` section and by the
+    /// auto-placement planner's rejection output, not just pretty-printed
+    /// by `check-dla`.
+    pub fn fallback_details(&self, graph: &Graph) -> Vec<(NodeId, String, String)> {
+        self.fallback_reasons
+            .iter()
+            .map(|(id, reason)| (*id, graph.node(*id).name.clone(), reason.clone()))
+            .collect()
+    }
+
     /// Fraction of compute layers on the GPU.
     pub fn gpu_layer_fraction(&self) -> f64 {
         let total: usize = self.segments.iter().map(|s| s.nodes.len()).sum();

@@ -14,7 +14,9 @@
 use std::fmt;
 
 /// Engine classes available across the paper's hardware discussion.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// (`Ord` follows declaration order; the placement planner uses it for
+/// canonical unit multisets.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum EngineKind {
     Cpu,
     Gpu,

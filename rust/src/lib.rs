@@ -71,6 +71,22 @@
 //! this contract (and the per-engine utilization figures) in a
 //! machine-readable `BENCH_hotpath.json`.
 //!
+//! ## Planning vs serving
+//!
+//! Placement does not have to be hand-written: the [`placement`] planner
+//! *searches* the space of pipeline configurations (GAN surgery variant,
+//! engine unit per instance, `max_batch`, route policy) and returns the
+//! spec predicted to maximize throughput under a per-frame latency budget
+//! and a no-GPU-fallback constraint. The flow is **plan → spec →
+//! session**: `placement::plan(request)` prices candidates in virtual
+//! time over the same cost model the serving arbiter charges (no backend
+//! runs during planning), the winning [`pipeline::spec::PipelineSpec`]
+//! travels as JSON (`PipelineSpec::to_json` reloads through the existing
+//! [`config`] parser — the `plan --emit-spec` CLI path) or directly via
+//! [`session::PipelineBuilder::auto_place`], and serving then *enforces*
+//! what planning predicted. Planning is prediction, serving is
+//! enforcement; both read one hardware model, so they cannot drift.
+//!
 //! ## Layers
 //!
 //! * [`graph`] — layer-graph IR with shape inference and the paper's
@@ -90,6 +106,9 @@
 //!   instance workers → sinks) plus the declarative [`pipeline::spec`],
 //!   pluggable [`pipeline::backend`], and the exclusive-engine
 //!   [`pipeline::engines`] arbiter;
+//! * [`placement`] — the auto-placement planner: candidate enumeration
+//!   with DLA-fallback pruning, virtual-time scoring, and the ranked
+//!   search behind the `plan` CLI and `PipelineBuilder::auto_place`;
 //! * [`session`] — the `PipelineBuilder` → `Session` facade that binds
 //!   spec to backend with fail-fast validation;
 //! * [`imaging`], [`postproc`] — phantoms, PSNR/SSIM/MSE, the Table I
@@ -105,6 +124,7 @@ pub mod hw;
 pub mod imaging;
 pub mod models;
 pub mod pipeline;
+pub mod placement;
 pub mod postproc;
 pub mod report;
 #[cfg(feature = "pjrt")]

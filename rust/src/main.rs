@@ -11,13 +11,15 @@
 //! (The vendored offline crate set has no `clap`; argument parsing is the
 //! small hand-rolled `Args` below.)
 
+use edgepipe::config::json::{num, obj, s, Json};
 use edgepipe::config::{DeviceKind, GanVariant, PipelineConfig, SchedulerKind, Workload};
 use edgepipe::dla::{planner, DlaVersion};
 use edgepipe::error::Result;
-use edgepipe::hw;
+use edgepipe::hw::{self, EngineKind};
 use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
 use edgepipe::models::yolov8::{yolov8, YoloConfig};
 use edgepipe::pipeline::SimBackend;
+use edgepipe::placement::{self, PlacementRequest};
 use edgepipe::sched::haxconn;
 use edgepipe::session::PipelineBuilder;
 use edgepipe::{report, Error};
@@ -73,11 +75,15 @@ fn usage() -> ! {
         "edgepipe — edge GPU aware multi-model MRI pipeline (paper reproduction)
 
 USAGE:
-  edgepipe report <table1|table2|fig9|fig11|table4|table6|pipeline|all>
+  edgepipe report <table1|table2|fig9|fig11|table4|table6|pipeline|placement|all>
                   [--artifacts DIR] [--json FILE]
   edgepipe timeline [--variant original|cropping|convolution] [--with-yolo]
   edgepipe run [--config FILE] [--variant V] [--workload W] [--frames N]
                [--streams N] [--artifacts DIR] [--seed N] [--backend pjrt|sim]
+  edgepipe plan [--device orin|xavier] [--gans N] [--no-yolo]
+                [--gan-engines gpu,dla|dla] [--frames N] [--seed N]
+                [--latency-budget-ms X] [--top K] [--emit-spec FILE]
+                [--json FILE]
   edgepipe check-dla [--variant V]
   edgepipe schedule [--variant V] [--with-yolo]
 
@@ -88,6 +94,13 @@ config file with an `instances: [...]` array for arbitrary instance mixes
 Workloads: gan-standalone, gan+yolo-naive, two-gans, gan+yolo, dual-gan.
 Engine placement is enforced by the serving arbiter: same-unit instances
 serialize, split units contend; per-engine utilization is reported.
+
+`plan` searches placements (variant x engine units x max_batch x route)
+instead of hand-writing one: candidates with DLA fallback are rejected
+with per-layer reasons, the rest are priced in virtual time, and the
+ranked table is printed. `--emit-spec` writes the winning spec as JSON
+that reloads through `run --config`; `--gan-engines dla` reserves the GPU
+for the detector (the paper's dual-GAN deployment constraint).
 "
     );
     std::process::exit(2)
@@ -134,6 +147,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 "table3" | "table4" | "fig13" => report::table3_table4_fig13(&soc),
                 "table5" | "table6" | "fig14" => report::table5_table6_fig14(&soc),
                 "pipeline" => report::pipeline_report(&soc),
+                "placement" => report::placement_report(&soc),
                 "all" => report::all_reports(dir),
                 other => {
                     return Err(Error::Config(format!("unknown report `{other}`")));
@@ -235,6 +249,118 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     e.idle_gap_ms_mean,
                     e.idle_gap_ms_p99
                 );
+            }
+            Ok(())
+        }
+        "plan" => {
+            let device = args
+                .opt("device")
+                .map(DeviceKind::parse)
+                .unwrap_or(Ok(DeviceKind::Orin))?;
+            let (soc, version) = match device {
+                DeviceKind::Orin => (hw::orin(), DlaVersion::V2),
+                DeviceKind::Xavier => (hw::xavier(), DlaVersion::V1),
+            };
+            let mut req = PlacementRequest::new(soc, version);
+            if let Some(n) = args.opt("gans") {
+                req.gans = n.parse().map_err(|_| Error::Config("bad --gans".into()))?;
+            }
+            if args.flag("no-yolo") {
+                req.with_yolo = false;
+            }
+            if let Some(list) = args.opt("gan-engines") {
+                let mut engines = Vec::new();
+                for part in list.split(',') {
+                    let e = EngineKind::parse(part.trim()).ok_or_else(|| {
+                        Error::Config(format!("unknown engine `{part}` in --gan-engines"))
+                    })?;
+                    engines.push(e);
+                }
+                req.gan_engines = engines;
+            }
+            if let Some(n) = args.opt("frames") {
+                req.frames = n.parse().map_err(|_| Error::Config("bad --frames".into()))?;
+            }
+            if let Some(x) = args.opt("latency-budget-ms") {
+                req.latency_budget_ms = Some(
+                    x.parse()
+                        .map_err(|_| Error::Config("bad --latency-budget-ms".into()))?,
+                );
+            }
+            if let Some(seed) = args.opt("seed") {
+                req.seed = seed.parse().map_err(|_| Error::Config("bad --seed".into()))?;
+            }
+            let top: usize = args
+                .opt("top")
+                .map(|s| s.parse().map_err(|_| Error::Config("bad --top".into())))
+                .unwrap_or(Ok(10))?;
+
+            let outcome = placement::plan(&req)?;
+            println!(
+                "plan: {} gan(s){} on {} ({} candidate(s) scored, {} rejected, {} pruned)",
+                req.gans,
+                if req.with_yolo { " + yolo" } else { "" },
+                req.soc.name,
+                outcome.ranked.len(),
+                outcome.rejected.len(),
+                outcome.pruned
+            );
+            println!(
+                "{:<4} {:<44} {:>9} {:>10} {:>6}  units (predicted util%)",
+                "rank", "candidate", "fps", "idle ms", "trans"
+            );
+            for (i, sc) in outcome.ranked.iter().take(top).enumerate() {
+                println!(
+                    "{:<4} {:<44} {:>9.1} {:>10.2} {:>6}  {}",
+                    i + 1,
+                    sc.candidate_key,
+                    sc.eval.predicted_fps,
+                    sc.eval.idle_gap_total_ms,
+                    sc.eval.transitions,
+                    sc.eval.unit_summary()
+                );
+            }
+            for (key, reason) in &outcome.rejected {
+                println!("  rejected {key}: {reason}");
+            }
+
+            // Planned vs hand-written preset: the dual_gan comparison the
+            // report's `placement` section tracks.
+            let preset_fps = if req.gans == 2 && req.with_yolo {
+                let preset = Workload::DualGan.spec(GanVariant::Cropping);
+                let eval = placement::evaluate(&preset, &req.soc, req.frames)?;
+                println!(
+                    "planned best {:.1} predicted fps vs dual_gan preset {:.1} ({:+.1}%)",
+                    outcome.eval.predicted_fps,
+                    eval.predicted_fps,
+                    (outcome.eval.predicted_fps / eval.predicted_fps - 1.0) * 100.0
+                );
+                Some(eval.predicted_fps)
+            } else {
+                None
+            };
+
+            if let Some(path) = args.opt("emit-spec") {
+                // Carry the device the plan was priced on: without it,
+                // `run --config` would serve a Xavier-planned spec on the
+                // config-default Orin latency tables.
+                let mut doc = outcome.spec.to_json();
+                if let Json::Obj(map) = &mut doc {
+                    map.insert("device".into(), s(device.name()));
+                }
+                std::fs::write(path, doc.to_pretty())?;
+                eprintln!("wrote {path} (reloads via `run --config {path}`)");
+            }
+            if let Some(path) = args.opt("json") {
+                let mut pairs = vec![
+                    ("device", s(device.name())),
+                    ("outcome", outcome.to_json()),
+                ];
+                if let Some(fps) = preset_fps {
+                    pairs.push(("preset_dual_gan_fps", num(fps)));
+                }
+                std::fs::write(path, obj(pairs).to_pretty())?;
+                eprintln!("wrote {path}");
             }
             Ok(())
         }

@@ -12,6 +12,7 @@
 
 use super::batcher::BatchPolicy;
 use super::router::RoutePolicy;
+use crate::config::json::{arr, num, obj, s, Json};
 use crate::config::GanVariant;
 use crate::error::{Error, Result};
 use crate::graph::Graph;
@@ -158,6 +159,25 @@ impl InstanceSpec {
         self.score_fidelity = yes;
         self
     }
+
+    /// Config-schema JSON for this instance — exactly the shape the
+    /// [`crate::config`] `instances: [...]` parser accepts, so emitted
+    /// specs reload through the existing loader. Single writer: the
+    /// config provenance serializer delegates here.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("label", s(&self.label)),
+            ("artifact", s(&self.artifact)),
+            ("engine", s(&self.engine.name().to_ascii_lowercase())),
+            ("engine_index", num(self.engine_index as f64)),
+            ("max_batch", num(self.batch.max_batch as f64)),
+            (
+                "batch_timeout_us",
+                num(self.batch.timeout.as_micros() as f64),
+            ),
+            ("score_fidelity", Json::Bool(self.score_fidelity)),
+        ])
+    }
 }
 
 /// A full declarative pipeline: instances, routing, and stream shape.
@@ -190,6 +210,31 @@ impl Default for PipelineSpec {
 }
 
 impl PipelineSpec {
+    /// Serialize to a config-schema JSON document (`route`, stream shape,
+    /// and the `instances: [...]` array): the writer half of the config
+    /// loader, so `plan --emit-spec` output reloads through
+    /// [`crate::config::PipelineConfig::from_json_str`] unchanged —
+    /// see [`Self::from_json_str`] for the inverse.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("route", s(self.route.name())),
+            ("frames", num(self.frames as f64)),
+            ("streams", num(self.streams as f64)),
+            ("queue_depth", num(self.queue_depth as f64)),
+            ("seed", num(self.seed as f64)),
+            (
+                "instances",
+                arr(self.instances.iter().map(|i| i.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Reload a spec emitted by [`Self::to_json`] through the existing
+    /// config parser (round trip: spec → JSON → spec).
+    pub fn from_json_str(text: &str) -> Result<PipelineSpec> {
+        Ok(crate::config::PipelineConfig::from_json_str(text)?.spec())
+    }
+
     /// Fail-fast structural validation (instance set, labels, counts).
     pub fn validate(&self) -> Result<()> {
         if self.instances.is_empty() {
@@ -324,6 +369,38 @@ mod tests {
         let err = check_artifact_name("resnet999").unwrap_err();
         assert!(err.to_string().contains("unknown artifact"));
         assert!(err.to_string().contains("gen_original"));
+    }
+
+    #[test]
+    fn spec_json_roundtrips_through_the_config_parser() {
+        use crate::hw::EngineKind;
+        let mut spec = two_instance_spec();
+        spec.instances[1] = spec.instances[1].clone().on_engine_unit(EngineKind::Dla, 1);
+        spec.instances[0].batch.max_batch = 8;
+        spec.route = RoutePolicy::RrFanoutLast;
+        spec.frames = 96;
+        spec.streams = 2;
+        spec.seed = 42;
+        let text = spec.to_json().to_pretty();
+        let back = PipelineSpec::from_json_str(&text).unwrap();
+        assert_eq!(back.instances.len(), 2);
+        assert_eq!(back.route, RoutePolicy::RrFanoutLast);
+        assert_eq!(back.frames, 96);
+        assert_eq!(back.streams, 2);
+        assert_eq!(back.seed, 42);
+        assert_eq!(back.instances[0].batch.max_batch, 8);
+        assert_eq!(back.instances[1].engine, EngineKind::Dla);
+        assert_eq!(back.instances[1].engine_index, 1);
+        assert!(back.instances[0].score_fidelity);
+        // the writer is deterministic: a second trip is byte-identical
+        assert_eq!(back.to_json().to_pretty(), back.to_json().to_pretty());
+        assert_eq!(
+            PipelineSpec::from_json_str(&back.to_json().to_pretty())
+                .unwrap()
+                .to_json()
+                .to_pretty(),
+            back.to_json().to_pretty()
+        );
     }
 
     #[test]

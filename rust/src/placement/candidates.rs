@@ -1,0 +1,353 @@
+//! Candidate enumeration and pruning for the auto-placement search.
+//!
+//! A [`Candidate`] is one point of the pipeline configuration space: a
+//! [`GanVariant`] (the paper's model-surgery axis), a physical engine
+//! unit per GAN instance, the detector's unit, a `max_batch`, and a
+//! route policy. [`enumerate`] generates the pruned space:
+//!
+//! * **no-GPU-fallback constraint** — a variant whose
+//!   [`crate::dla::planner::EnginePlan`] is not fully DLA-resident is
+//!   rejected for DLA placement *before* any scoring, with the plan's
+//!   structured [`fallback_details`](crate::dla::EnginePlan::fallback_details)
+//!   in the rejection reason (stock Pix2Pix's padded deconvs; SiLU on
+//!   DLA v1 for the detector);
+//! * **symmetry pruning** — GAN instances of one candidate are
+//!   interchangeable, so unit assignments are enumerated as sorted
+//!   multisets (placing `{DLA0, DLA1}` once, not twice);
+//! * **route validity** — only policies meaningful for the instance
+//!   shape are generated (`rr+fanout` needs a broadcast tail, round-robin
+//!   needs ≥ 2 reconstruction instances).
+
+use super::PlacementRequest;
+use crate::config::GanVariant;
+use crate::dla::planner;
+use crate::error::Result;
+use crate::graph::Graph;
+use crate::hw::EngineKind;
+use crate::models::pix2pix::{generator, Pix2PixConfig};
+use crate::models::yolov8::yolo_lite;
+use crate::pipeline::batcher::BatchPolicy;
+use crate::pipeline::router::RoutePolicy;
+use crate::pipeline::spec::{InstanceSpec, PipelineSpec};
+use std::time::Duration;
+
+/// One point of the placement search space.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub variant: GanVariant,
+    /// Sorted unit multiset, one entry per GAN instance.
+    pub gan_units: Vec<(EngineKind, usize)>,
+    pub yolo_unit: Option<(EngineKind, usize)>,
+    pub max_batch: usize,
+    pub route: RoutePolicy,
+}
+
+impl Candidate {
+    /// Stable display/identity key (also the deterministic final
+    /// tiebreak of the ranking).
+    pub fn key(&self) -> String {
+        let gans = self
+            .gan_units
+            .iter()
+            .map(|(e, i)| e.unit_label(*i))
+            .collect::<Vec<_>>()
+            .join("+");
+        let yolo = match self.yolo_unit {
+            Some((e, i)) => format!("|yolo:{}", e.unit_label(i)),
+            None => String::new(),
+        };
+        format!(
+            "{}|gan:{gans}{yolo}|b{}|{}",
+            self.variant.name(),
+            self.max_batch,
+            self.route.name()
+        )
+    }
+
+    /// Lower this candidate into a runnable [`PipelineSpec`] (frames and
+    /// seed from the request; the detector is last so `rr+fanout`'s
+    /// broadcast tail lands on it).
+    pub fn to_spec(&self, req: &PlacementRequest) -> PipelineSpec {
+        let batch = BatchPolicy {
+            max_batch: self.max_batch,
+            timeout: Duration::from_micros(500),
+        };
+        let artifact = format!("gen_{}", self.variant.name());
+        let mut instances: Vec<InstanceSpec> = self
+            .gan_units
+            .iter()
+            .enumerate()
+            .map(|(i, &(engine, index))| {
+                InstanceSpec::new(format!("gan{i}"), artifact.clone())
+                    .on_engine_unit(engine, index)
+                    .with_batch(batch)
+                    .scored(true)
+            })
+            .collect();
+        if let Some((engine, index)) = self.yolo_unit {
+            instances.push(
+                InstanceSpec::new("yolo", "yolo_lite")
+                    .on_engine_unit(engine, index)
+                    .with_batch(batch),
+            );
+        }
+        PipelineSpec {
+            instances,
+            route: self.route,
+            frames: req.frames,
+            seed: req.seed,
+            ..PipelineSpec::default()
+        }
+    }
+}
+
+/// The pruned candidate space plus every class of configuration rejected
+/// before scoring, with its reason.
+#[derive(Debug)]
+pub struct Enumeration {
+    pub candidates: Vec<Candidate>,
+    /// `(candidate class, reason)` — surfaced by `plan` so a user can see
+    /// *why* e.g. no DLA placement of the stock generator exists.
+    pub rejected: Vec<(String, String)>,
+}
+
+/// Compress an engine plan's structured fallback diagnostics into one
+/// rejection reason line.
+fn fallback_reason(graph: &Graph, plan: &planner::EnginePlan) -> String {
+    let details = plan.fallback_details(graph);
+    let mut shown: Vec<String> = details
+        .iter()
+        .take(3)
+        .map(|(id, name, reason)| format!("node {id} {name}: {reason}"))
+        .collect();
+    if details.len() > 3 {
+        shown.push(format!("(+{} more)", details.len() - 3));
+    }
+    format!(
+        "GPU fallback on DLA ({} fallback layer(s)): {}",
+        details.len(),
+        shown.join("; ")
+    )
+}
+
+/// Is this graph admissible for DLA placement under the request's rule
+/// set? Returns the rejection reason otherwise.
+fn dla_admissible(graph: &Graph, req: &PlacementRequest) -> std::result::Result<(), String> {
+    // Unbounded subgraph limit: only fully-resident graphs (1 subgraph)
+    // are accepted, so the loadable limit can never bind — and this way a
+    // fragmented plan reports its per-layer fallback reasons instead of
+    // dying on the limit error.
+    match planner::plan(graph, req.dla_version, usize::MAX) {
+        Ok(plan) if plan.fully_dla_resident() => Ok(()),
+        Ok(plan) => Err(fallback_reason(graph, &plan)),
+        Err(e) => Err(e.to_string()),
+    }
+}
+
+/// Sorted multisets of size `n` drawn from `units` (combinations with
+/// repetition, non-decreasing indices — the symmetry pruning).
+fn unit_multisets(units: &[(EngineKind, usize)], n: usize) -> Vec<Vec<(EngineKind, usize)>> {
+    fn rec(
+        units: &[(EngineKind, usize)],
+        n: usize,
+        from: usize,
+        cur: &mut Vec<(EngineKind, usize)>,
+        out: &mut Vec<Vec<(EngineKind, usize)>>,
+    ) {
+        if cur.len() == n {
+            out.push(cur.clone());
+            return;
+        }
+        for i in from..units.len() {
+            cur.push(units[i]);
+            rec(units, n, i, cur, out);
+            cur.pop();
+        }
+    }
+    let mut out = Vec::new();
+    rec(units, n, 0, &mut Vec::new(), &mut out);
+    out
+}
+
+/// Enumerate the pruned candidate space for `req`.
+pub fn enumerate(req: &PlacementRequest) -> Result<Enumeration> {
+    // Physical units of the SoC the sim can price: the GPU plus every DLA
+    // core (the paper's testbeds carry two).
+    let mut all_units: Vec<(EngineKind, usize)> = vec![(EngineKind::Gpu, 0)];
+    for i in 0..EngineKind::Dla.units() {
+        all_units.push((EngineKind::Dla, i));
+    }
+
+    let mut rejected: Vec<(String, String)> = Vec::new();
+
+    // Deployment constraint: which engine classes may host a GAN at all
+    // (the paper's dual-GAN scheme reserves the GPU for the detector).
+    let allowed_units: Vec<(EngineKind, usize)> = all_units
+        .iter()
+        .copied()
+        .filter(|(e, _)| req.gan_engines.contains(e))
+        .collect();
+
+    // No-GPU-fallback constraint, decided once per variant/model, not per
+    // candidate: a non-resident graph never reaches a DLA unit.
+    let mut gan_units_of: Vec<(GanVariant, Vec<(EngineKind, usize)>)> = Vec::new();
+    for &variant in &req.variants {
+        let graph = generator(&Pix2PixConfig::paper(), variant)?;
+        let units = match dla_admissible(&graph, req) {
+            Ok(()) => allowed_units.clone(),
+            Err(reason) => {
+                rejected.push((format!("gen_{}@DLA*", variant.name()), reason));
+                allowed_units
+                    .iter()
+                    .copied()
+                    .filter(|(e, _)| *e != EngineKind::Dla)
+                    .collect()
+            }
+        };
+        if units.is_empty() {
+            rejected.push((
+                format!("gen_{}", variant.name()),
+                "no admissible engine units under the request's gan_engines constraint".into(),
+            ));
+            continue;
+        }
+        gan_units_of.push((variant, units));
+    }
+    let yolo_units: Vec<(EngineKind, usize)> = if req.with_yolo {
+        match dla_admissible(&yolo_lite()?, req) {
+            Ok(()) => all_units.clone(),
+            Err(reason) => {
+                rejected.push(("yolo_lite@DLA*".into(), reason));
+                vec![(EngineKind::Gpu, 0)]
+            }
+        }
+    } else {
+        Vec::new()
+    };
+
+    let routes: Vec<RoutePolicy> = match (req.gans > 1, req.with_yolo) {
+        (true, true) => vec![RoutePolicy::RrFanoutLast, RoutePolicy::Fanout],
+        (true, false) => vec![RoutePolicy::RoundRobin, RoutePolicy::Fanout],
+        (false, _) => vec![RoutePolicy::Fanout],
+    };
+
+    let mut candidates = Vec::new();
+    for (variant, units) in &gan_units_of {
+        for gan_units in unit_multisets(units, req.gans) {
+            let yolo_options: Vec<Option<(EngineKind, usize)>> = if req.with_yolo {
+                yolo_units.iter().map(|&u| Some(u)).collect()
+            } else {
+                vec![None]
+            };
+            for yolo_unit in yolo_options {
+                for &max_batch in &req.max_batches {
+                    for &route in &routes {
+                        candidates.push(Candidate {
+                            variant: *variant,
+                            gan_units: gan_units.clone(),
+                            yolo_unit,
+                            max_batch,
+                            route,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    Ok(Enumeration {
+        candidates,
+        rejected,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dla::DlaVersion;
+    use crate::hw::xavier;
+
+    fn req() -> PlacementRequest {
+        PlacementRequest::new(xavier(), DlaVersion::V1)
+    }
+
+    #[test]
+    fn original_variant_never_reaches_a_dla_unit() {
+        let e = enumerate(&req()).unwrap();
+        for c in &e.candidates {
+            if c.variant == GanVariant::Original {
+                assert!(
+                    c.gan_units.iter().all(|(e, _)| *e == EngineKind::Gpu),
+                    "{}",
+                    c.key()
+                );
+            }
+        }
+        let (_, reason) = e
+            .rejected
+            .iter()
+            .find(|(k, _)| k.starts_with("gen_original"))
+            .expect("original rejected for DLA with a structured reason");
+        assert!(reason.contains("padding must be zero"), "{reason}");
+    }
+
+    #[test]
+    fn detector_falls_back_on_dla_v1_with_reason() {
+        let e = enumerate(&req()).unwrap();
+        let (_, reason) = e
+            .rejected
+            .iter()
+            .find(|(k, _)| k.starts_with("yolo_lite"))
+            .expect("yolo_lite rejected for DLA v1");
+        assert!(reason.contains("SiLU"), "{reason}");
+        for c in &e.candidates {
+            assert_eq!(c.yolo_unit, Some((EngineKind::Gpu, 0)), "{}", c.key());
+        }
+    }
+
+    #[test]
+    fn gan_unit_assignments_are_canonical_multisets() {
+        let e = enumerate(&req()).unwrap();
+        for c in &e.candidates {
+            let mut sorted = c.gan_units.clone();
+            sorted.sort();
+            assert_eq!(sorted, c.gan_units, "non-canonical: {}", c.key());
+        }
+        // resident variants cover the split-DLA placement
+        assert!(e.candidates.iter().any(|c| {
+            c.variant == GanVariant::Cropping
+                && c.gan_units == vec![(EngineKind::Dla, 0), (EngineKind::Dla, 1)]
+        }));
+    }
+
+    #[test]
+    fn gan_engine_constraint_restricts_placement() {
+        let r = req().dla_resident_gans();
+        let e = enumerate(&r).unwrap();
+        assert!(!e.candidates.is_empty());
+        for c in &e.candidates {
+            assert!(
+                c.gan_units.iter().all(|(e, _)| *e == EngineKind::Dla),
+                "{}",
+                c.key()
+            );
+            // the GPU-only variant has no admissible units left
+            assert_ne!(c.variant, GanVariant::Original);
+        }
+        assert!(e.rejected.iter().any(|(k, _)| k == "gen_original"));
+    }
+
+    #[test]
+    fn candidates_lower_to_valid_specs() {
+        let r = req();
+        let e = enumerate(&r).unwrap();
+        assert!(!e.candidates.is_empty());
+        for c in e.candidates.iter().take(16) {
+            let spec = c.to_spec(&r);
+            spec.validate().unwrap();
+            assert_eq!(spec.seed, r.seed);
+            if c.yolo_unit.is_some() {
+                assert_eq!(spec.instances.last().unwrap().artifact, "yolo_lite");
+            }
+        }
+    }
+}

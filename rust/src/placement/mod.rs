@@ -1,0 +1,186 @@
+//! Auto-placement planner: search engine/layer allocations that minimize
+//! inter-engine idle time.
+//!
+//! The paper's headline result is an *allocation*, not a model: layers
+//! and model instances are assigned across GPU/DLA0/DLA1 "in such a way
+//! that the idle time between the hardware engines is reduced", doubling
+//! throughput with two DLA-resident GANs. PR 3 made placement
+//! load-bearing at serving time ([`crate::pipeline::engines::EngineArbiter`]);
+//! this module makes it *searchable*: given a [`PlacementRequest`], the
+//! planner enumerates the pruned space of pipeline configurations
+//! (GAN-surgery variant, engine unit per instance, `max_batch`, route
+//! policy), prices every candidate **without running a real backend**,
+//! and returns the [`PipelineSpec`](crate::pipeline::spec::PipelineSpec)
+//! predicted to maximize throughput subject to a per-frame latency
+//! budget and a no-GPU-fallback constraint.
+//!
+//! ## Planning vs serving
+//!
+//! ```text
+//! PlacementRequest ──plan()──► PlacementOutcome { spec, eval, rejected }
+//!                                      │
+//!                                      ▼  (spec.to_json / auto_place)
+//!                              Session::builder() ──run()──► PipelineReport
+//! ```
+//!
+//! Planning is pure prediction: [`candidates`] rejects DLA placements of
+//! graphs with GPU fallback via [`crate::dla::planner::EnginePlan`],
+//! [`score`] replays a short synthetic frame window in virtual time over
+//! the [`crate::pipeline::backend::SimBackend`] pricing tables (the same
+//! [`crate::cost::latency`]/[`crate::cost::contention`] model the serving
+//! arbiter charges), and [`search`] ranks by (predicted FPS, then total
+//! inter-engine idle time, then transitions). Serving then consumes the
+//! winning spec unchanged — through `plan --emit-spec` + the config
+//! loader, or directly via
+//! [`crate::session::PipelineBuilder::auto_place`].
+
+pub mod candidates;
+pub mod score;
+pub mod search;
+
+pub use candidates::Candidate;
+pub use score::{evaluate, PlacementEval, UnitEval};
+pub use search::{rank_order, ScoredCandidate};
+
+use crate::config::json::{arr, num, obj, s, Json};
+use crate::config::GanVariant;
+use crate::dla::DlaVersion;
+use crate::error::Result;
+use crate::hw::{EngineKind, SocSpec};
+use crate::pipeline::spec::PipelineSpec;
+
+/// What to place: the workload shape, the device, and the constraints.
+#[derive(Debug, Clone)]
+pub struct PlacementRequest {
+    /// Device profile the candidates are priced on (Orin vs Xavier — the
+    /// adapt-per-generation axis of arXiv:2509.06365).
+    pub soc: SocSpec,
+    /// DLA rule set of that device (Xavier = v1, Orin = v2) — drives the
+    /// no-GPU-fallback constraint.
+    pub dla_version: DlaVersion,
+    /// Number of GAN (reconstruction) instances to place.
+    pub gans: usize,
+    /// Place a full-rate `yolo_lite` detector alongside the GANs.
+    pub with_yolo: bool,
+    /// Engine classes admissible for GAN placement. Defaults to GPU +
+    /// DLA (the full space); the paper's dual-GAN deployments reserve
+    /// the GPU for the detector stream, expressed as `vec![Dla]`.
+    pub gan_engines: Vec<EngineKind>,
+    /// GAN-surgery variants to consider (the `GanVariant` search axis).
+    pub variants: Vec<GanVariant>,
+    /// `max_batch` values to consider per candidate.
+    pub max_batches: Vec<usize>,
+    /// Synthetic frame window the dry-run scorer replays (also the
+    /// emitted spec's `frames`).
+    pub frames: usize,
+    /// Reject candidates whose predicted per-frame latency exceeds this.
+    pub latency_budget_ms: Option<f64>,
+    /// Seed carried into the emitted spec (same request + seed ⇒
+    /// byte-identical spec JSON).
+    pub seed: u64,
+    /// Candidates fully scored on the greedy/beam path.
+    pub beam_width: usize,
+    /// Above this many candidates the search switches from exhaustive to
+    /// the beam path.
+    pub max_candidates: usize,
+}
+
+impl PlacementRequest {
+    /// The default two-GAN + detector request on `soc`.
+    pub fn new(soc: SocSpec, dla_version: DlaVersion) -> Self {
+        PlacementRequest {
+            soc,
+            dla_version,
+            gans: 2,
+            with_yolo: true,
+            gan_engines: vec![EngineKind::Gpu, EngineKind::Dla],
+            variants: GanVariant::all().to_vec(),
+            max_batches: vec![1, 2, 4],
+            frames: 64,
+            latency_budget_ms: None,
+            seed: 0xED6E,
+            beam_width: 32,
+            max_candidates: 512,
+        }
+    }
+
+    /// The paper's dual-GAN deployment shape: DLA-resident reconstruction
+    /// (GPU reserved for the detector stream).
+    pub fn dla_resident_gans(mut self) -> Self {
+        self.gan_engines = vec![EngineKind::Dla];
+        self
+    }
+}
+
+/// The planner's answer: the winning spec, its predicted statistics, the
+/// full ranked table, and everything rejected with reasons.
+#[derive(Debug)]
+pub struct PlacementOutcome {
+    /// The best candidate lowered to a runnable spec — feed it to
+    /// [`crate::session::Session`] or emit it with
+    /// [`PipelineSpec::to_json`].
+    pub spec: PipelineSpec,
+    /// Predicted statistics of `spec`.
+    pub eval: PlacementEval,
+    /// Every fully scored candidate, best first (see
+    /// [`search::rank_order`]).
+    pub ranked: Vec<ScoredCandidate>,
+    /// `(candidate class, reason)` for everything excluded before or
+    /// during scoring (DLA fallback, latency budget).
+    pub rejected: Vec<(String, String)>,
+    /// Candidates dropped unscored by the beam path (0 on the exhaustive
+    /// path).
+    pub pruned: usize,
+}
+
+impl PlacementOutcome {
+    /// Identity key of the winning candidate.
+    pub fn best_key(&self) -> &str {
+        self.ranked
+            .first()
+            .map(|sc| sc.candidate_key.as_str())
+            .unwrap_or("")
+    }
+
+    /// JSON form for `plan --json` and the `report placement` section.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("spec", self.spec.to_json()),
+            ("eval", self.eval.to_json()),
+            (
+                "ranked",
+                arr(self
+                    .ranked
+                    .iter()
+                    .map(|sc| {
+                        obj(vec![
+                            ("candidate", s(&sc.candidate_key)),
+                            ("predicted_fps", num(sc.eval.predicted_fps)),
+                            ("idle_gap_total_ms", num(sc.eval.idle_gap_total_ms)),
+                            ("transitions", num(sc.eval.transitions as f64)),
+                            ("latency_ms", num(sc.eval.latency_ms)),
+                        ])
+                    })
+                    .collect()),
+            ),
+            (
+                "rejected",
+                arr(self
+                    .rejected
+                    .iter()
+                    .map(|(key, reason)| {
+                        obj(vec![("candidate", s(key)), ("reason", s(reason))])
+                    })
+                    .collect()),
+            ),
+            ("pruned", num(self.pruned as f64)),
+        ])
+    }
+}
+
+/// Search the placement space for `req` and return the winning spec plus
+/// the full ranked/rejected picture. Deterministic: same request + seed
+/// ⇒ identical outcome (and byte-identical emitted spec JSON).
+pub fn plan(req: &PlacementRequest) -> Result<PlacementOutcome> {
+    search::search(req)
+}

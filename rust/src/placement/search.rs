@@ -1,0 +1,272 @@
+//! The placement search itself: exhaustive over the pruned candidate
+//! space, with a greedy/beam path when the space outgrows the exhaustive
+//! budget.
+//!
+//! Every surviving candidate is priced by the virtual-time dry run of
+//! [`super::score`]; the ranking is lexicographic over the paper's
+//! objectives: **predicted FPS** (desc), then **total inter-engine idle
+//! time** (asc — the quantity the paper's allocation minimizes), then
+//! **engine transitions** (asc), then the candidate key (a deterministic
+//! final tiebreak, so the same request always emits byte-identical
+//! specs). When the enumeration exceeds [`PlacementRequest::max_candidates`],
+//! the beam path ranks all candidates by a cheap uncontended
+//! bottleneck bound (per-unit busy time from
+//! [`SimBackend::batch_latency`]) and fully scores only the top
+//! [`PlacementRequest::beam_width`] — greedy, deterministic, and exact
+//! whenever the cheap bound agrees with the full model on the top set.
+
+use super::candidates::{self, Candidate};
+use super::score::{self, PlacementEval};
+use super::{PlacementOutcome, PlacementRequest};
+use crate::error::{Error, Result};
+use crate::pipeline::backend::SimBackend;
+use crate::pipeline::router::RoutePolicy;
+use std::cmp::Ordering;
+use std::collections::HashMap;
+
+/// One fully scored candidate of the ranked table.
+#[derive(Debug, Clone)]
+pub struct ScoredCandidate {
+    pub candidate: Candidate,
+    /// [`Candidate::key`], precomputed (display + deterministic tiebreak).
+    pub candidate_key: String,
+    pub eval: PlacementEval,
+}
+
+fn cmp_f64(a: f64, b: f64) -> Ordering {
+    a.partial_cmp(&b).unwrap_or(Ordering::Equal)
+}
+
+/// The ranking order (see module docs). Public so `plan` output and the
+/// tests can assert the exact policy.
+pub fn rank_order(a: &ScoredCandidate, b: &ScoredCandidate) -> Ordering {
+    cmp_f64(b.eval.predicted_fps, a.eval.predicted_fps)
+        .then(cmp_f64(a.eval.idle_gap_total_ms, b.eval.idle_gap_total_ms))
+        .then(a.eval.transitions.cmp(&b.eval.transitions))
+        .then(a.candidate_key.cmp(&b.candidate_key))
+}
+
+/// Cheap admission-rate bound: the busiest unit's uncontended busy time
+/// per unique frame over the *lossless* work only (no transitions, no
+/// PCCS; droppable fanout copies don't pace serving, so they don't pace
+/// the bound either — mirroring [`score::evaluate`]). Lower is better;
+/// shares the sim's batch pricing so the beam pre-rank cannot drift far
+/// from the full score.
+fn cheap_bottleneck(
+    c: &Candidate,
+    req: &PlacementRequest,
+    backend: &SimBackend,
+    memo: &mut HashMap<(String, crate::hw::EngineKind, usize), f64>,
+) -> Result<f64> {
+    let spec = c.to_spec(req);
+    let mut busy: HashMap<(crate::hw::EngineKind, usize), f64> = HashMap::new();
+    let n = spec.instances.len();
+    let primary = score::primary_instances(spec.route, n);
+    for (i, inst) in spec.instances.iter().enumerate() {
+        if !primary[i] {
+            continue;
+        }
+        // Fraction of the unique frame stream this instance processes.
+        let share = match spec.route {
+            RoutePolicy::Fanout => 1.0,
+            RoutePolicy::RoundRobin | RoutePolicy::ByStream => 1.0 / n as f64,
+            RoutePolicy::RrFanoutLast => 1.0 / (n.saturating_sub(1)).max(1) as f64,
+        };
+        let b = inst.batch.max_batch.max(1);
+        let key = (inst.artifact.clone(), inst.engine, b);
+        let per_frame = match memo.get(&key) {
+            Some(v) => *v,
+            None => {
+                let v = backend.batch_latency(inst, b)? / b as f64;
+                memo.insert(key, v);
+                v
+            }
+        };
+        *busy.entry((inst.engine, inst.engine_index)).or_insert(0.0) += share * per_frame;
+    }
+    Ok(busy.values().cloned().fold(0.0f64, f64::max))
+}
+
+/// Fully score `pool`, appending survivors to `ranked` and
+/// latency-budget violations to `rejected`.
+fn score_candidates(
+    req: &PlacementRequest,
+    pool: Vec<Candidate>,
+    ranked: &mut Vec<ScoredCandidate>,
+    rejected: &mut Vec<(String, String)>,
+) -> Result<()> {
+    for candidate in pool {
+        let candidate_key = candidate.key();
+        let spec = candidate.to_spec(req);
+        let eval = score::evaluate(&spec, &req.soc, req.frames)?;
+        if let Some(budget) = req.latency_budget_ms {
+            if eval.latency_ms > budget {
+                rejected.push((
+                    candidate_key,
+                    format!(
+                        "predicted per-frame latency {:.2} ms exceeds the {budget:.2} ms budget",
+                        eval.latency_ms
+                    ),
+                ));
+                continue;
+            }
+        }
+        ranked.push(ScoredCandidate {
+            candidate,
+            candidate_key,
+            eval,
+        });
+    }
+    Ok(())
+}
+
+/// Run the full search for `req` (the engine behind
+/// [`super::plan`]).
+pub fn search(req: &PlacementRequest) -> Result<PlacementOutcome> {
+    if req.gans == 0 {
+        return Err(Error::Pipeline(
+            "placement request needs at least one GAN instance".into(),
+        ));
+    }
+    let enumeration = candidates::enumerate(req)?;
+    let mut rejected = enumeration.rejected;
+    let mut cands = enumeration.candidates;
+
+    // Beam path for larger instance counts: cheap-bound pre-rank, full
+    // scoring only for the surviving beam. The overflow is kept around —
+    // see the rescue below.
+    let mut overflow: Vec<Candidate> = Vec::new();
+    if cands.len() > req.max_candidates {
+        let backend = SimBackend::new(req.soc.clone());
+        let mut memo = HashMap::new();
+        let mut bounded: Vec<(f64, Candidate)> = Vec::with_capacity(cands.len());
+        for c in cands {
+            let bound = cheap_bottleneck(&c, req, &backend, &mut memo)?;
+            bounded.push((bound, c));
+        }
+        bounded.sort_by(|a, b| cmp_f64(a.0, b.0).then(a.1.key().cmp(&b.1.key())));
+        let tail = bounded.split_off(req.beam_width.max(1).min(bounded.len()));
+        overflow = tail.into_iter().map(|(_, c)| c).collect();
+        cands = bounded.into_iter().map(|(_, c)| c).collect();
+    }
+
+    let mut ranked: Vec<ScoredCandidate> = Vec::with_capacity(cands.len());
+    score_candidates(req, cands, &mut ranked, &mut rejected)?;
+    let mut pruned = overflow.len();
+    if ranked.is_empty() && !overflow.is_empty() {
+        // Beam rescue: the cheap bound ranks by throughput only, so a
+        // tight latency budget can reject the entire beam while feasible
+        // (e.g. batch-1) candidates sit in the overflow. Score the
+        // remainder before declaring the request infeasible.
+        pruned = 0;
+        score_candidates(req, std::mem::take(&mut overflow), &mut ranked, &mut rejected)?;
+    }
+    ranked.sort_by(rank_order);
+
+    let best = ranked.first().ok_or_else(|| {
+        let reasons: Vec<&str> = rejected.iter().take(3).map(|(_, r)| r.as_str()).collect();
+        Error::Pipeline(format!(
+            "auto-placement found no feasible candidate ({} rejected; e.g. {})",
+            rejected.len(),
+            reasons.join(" / ")
+        ))
+    })?;
+    Ok(PlacementOutcome {
+        spec: best.candidate.to_spec(req),
+        eval: best.eval.clone(),
+        ranked,
+        rejected,
+        pruned,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dla::DlaVersion;
+    use crate::hw::{xavier, EngineKind};
+
+    fn req() -> PlacementRequest {
+        let mut r = PlacementRequest::new(xavier(), DlaVersion::V1);
+        r.frames = 32;
+        r
+    }
+
+    #[test]
+    fn impossible_latency_budget_fails_with_rejections() {
+        let mut r = req();
+        r.latency_budget_ms = Some(1e-6);
+        let err = search(&r).unwrap_err();
+        assert!(err.to_string().contains("no feasible candidate"), "{err}");
+        assert!(err.to_string().contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn zero_gans_rejected() {
+        let mut r = req();
+        r.gans = 0;
+        assert!(search(&r).is_err());
+    }
+
+    #[test]
+    fn beam_path_still_finds_the_dla_split() {
+        // Force the greedy/beam path by shrinking the exhaustive budget;
+        // the cheap bottleneck bound must keep the split-DLA placements
+        // in the beam.
+        let mut r = req();
+        r.max_candidates = 8;
+        r.beam_width = 16;
+        let out = search(&r).unwrap();
+        assert!(out.pruned > 0, "beam path must have pruned something");
+        let gan_units: Vec<(EngineKind, usize)> = out
+            .spec
+            .instances
+            .iter()
+            .filter(|i| i.artifact.starts_with("gen_"))
+            .map(|i| (i.engine, i.engine_index))
+            .collect();
+        assert_eq!(gan_units.len(), 2);
+        assert_ne!(gan_units[0], gan_units[1], "GANs must not share a unit");
+    }
+
+    #[test]
+    fn beam_rescue_scores_overflow_under_tight_budget() {
+        // Budget calibrated to admit only batch-1 placements (batch-2/4
+        // dispatches cost well over 1.2x a single-frame dispatch).
+        let mut r = req();
+        r.gan_engines = vec![EngineKind::Dla];
+        let b1_latency = {
+            let mut probe = r.clone();
+            probe.max_batches = vec![1];
+            search(&probe).unwrap().eval.latency_ms
+        };
+        r.latency_budget_ms = Some(b1_latency * 1.2);
+        // Force the beam path with a beam so narrow the throughput-ranked
+        // head is batch-4 candidates only — all over budget.
+        r.max_candidates = 1;
+        r.beam_width = 2;
+        let out = search(&r).unwrap();
+        assert_eq!(out.pruned, 0, "rescue must score the pruned overflow");
+        assert!(
+            out.spec.instances.iter().all(|i| i.batch.max_batch == 1),
+            "only batch-1 fits the budget: {:?}",
+            out.spec.instances
+        );
+        assert!(out
+            .rejected
+            .iter()
+            .any(|(_, reason)| reason.contains("exceeds")));
+    }
+
+    #[test]
+    fn ranking_is_total_and_deterministic() {
+        let out1 = search(&req()).unwrap();
+        let out2 = search(&req()).unwrap();
+        let keys1: Vec<String> = out1.ranked.iter().map(|s| s.candidate_key.clone()).collect();
+        let keys2: Vec<String> = out2.ranked.iter().map(|s| s.candidate_key.clone()).collect();
+        assert_eq!(keys1, keys2);
+        for w in out1.ranked.windows(2) {
+            assert_ne!(rank_order(&w[0], &w[1]), Ordering::Greater);
+        }
+    }
+}

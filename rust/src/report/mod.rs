@@ -420,12 +420,46 @@ pub fn timeline_ascii(soc: &SocSpec, variant: GanVariant, with_yolo: bool) -> Re
     Ok(r.timeline.ascii(100))
 }
 
+/// Structured DLA-plan diagnostics for one graph: residency, subgraph /
+/// transition counts, and the per-layer [`fallback
+/// details`](crate::dla::EnginePlan::fallback_details) that were
+/// previously collected but write-only for users.
+fn engine_plan_json(g: &Graph, version: DlaVersion) -> Json {
+    match crate::dla::planner::plan(g, version, usize::MAX) {
+        Ok(p) => {
+            let details = p.fallback_details(g);
+            obj(vec![
+                ("model", s(&g.name)),
+                ("fully_dla_resident", Json::Bool(p.fully_dla_resident())),
+                ("dla_subgraphs", num(p.dla_subgraphs as f64)),
+                ("transitions", num(p.transitions as f64)),
+                (
+                    "fallback_reasons",
+                    arr(details
+                        .iter()
+                        .map(|(id, name, reason)| {
+                            obj(vec![
+                                ("node", num(*id as f64)),
+                                ("layer", s(name)),
+                                ("reason", s(reason)),
+                            ])
+                        })
+                        .collect()),
+                ),
+            ])
+        }
+        Err(e) => obj(vec![("model", s(&g.name)), ("error", s(&e.to_string()))]),
+    }
+}
+
 /// Serving-pipeline summary: every `Workload` preset lowered to a
 /// `PipelineSpec` and run through the real coordinator (router, batcher,
 /// backpressure, engine arbiter, metrics) on the latency-model backend —
 /// the artifact-free companion to the PJRT accuracy numbers. Placement is
 /// enforced: the per-engine utilization column comes from the serving
-/// arbiter's timeline, the Nsight-style numbers of Figs 10/13.
+/// arbiter's timeline, the Nsight-style numbers of Figs 10/13. The
+/// `dla_plans` section carries the per-variant fallback diagnostics as
+/// structured data (node / layer / reason), not just counts.
 pub fn pipeline_report(soc: &SocSpec) -> Json {
     use crate::config::Workload;
     use crate::pipeline::SimBackend;
@@ -464,7 +498,86 @@ pub fn pipeline_report(soc: &SocSpec) -> Json {
             ("report", rep.to_json()),
         ]));
     }
-    arr(rows)
+    println!("DLA plans (v2): per-variant GPU-fallback diagnostics");
+    let mut plans = Vec::new();
+    for v in GanVariant::all() {
+        let g = gan(v);
+        let j = engine_plan_json(&g, DlaVersion::V2);
+        let resident = j
+            .get("fully_dla_resident")
+            .and_then(|x| x.as_bool())
+            .unwrap_or(false);
+        let fallbacks = j
+            .get("fallback_reasons")
+            .and_then(|x| x.as_arr())
+            .map(|a| a.len())
+            .unwrap_or(0);
+        println!(
+            "  {:<14} resident {:<5}  {} fallback layer(s)",
+            v.name(),
+            resident,
+            fallbacks
+        );
+        if let Some(reasons) = j.get("fallback_reasons").and_then(|x| x.as_arr()) {
+            for r in reasons.iter().take(3) {
+                println!(
+                    "    node {:>3} {:<22} {}",
+                    r.get("node").and_then(|x| x.as_u64()).unwrap_or(0),
+                    r.get("layer").and_then(|x| x.as_str()).unwrap_or("?"),
+                    r.get("reason").and_then(|x| x.as_str()).unwrap_or("?")
+                );
+            }
+        }
+        plans.push(obj(vec![("variant", s(v.name())), ("plan", j)]));
+    }
+    obj(vec![("workloads", arr(rows)), ("dla_plans", arr(plans))])
+}
+
+/// `report placement` — the planner vs the hand-written preset: the
+/// auto-placement search's winning spec for the two-GAN + detector
+/// request on this SoC, compared against the `dual_gan` preset's
+/// predicted FPS under the same virtual-time scorer.
+pub fn placement_report(soc: &SocSpec) -> Json {
+    use crate::config::Workload;
+    use crate::placement::{self, PlacementRequest};
+
+    let version = if soc.name.contains("xavier") {
+        DlaVersion::V1
+    } else {
+        DlaVersion::V2
+    };
+    let req = PlacementRequest::new(soc.clone(), version).dla_resident_gans();
+    let outcome = placement::plan(&req).expect("two-GAN placement plans on every SoC profile");
+    let preset = Workload::DualGan.spec(GanVariant::Cropping);
+    let preset_eval =
+        placement::evaluate(&preset, soc, req.frames).expect("dual_gan preset scores");
+
+    println!("Placement: planned vs dual_gan preset ({})", soc.name);
+    println!(
+        "  planned {:<44} {:>8.1} fps  idle {:>8.2} ms  {}",
+        outcome.best_key(),
+        outcome.eval.predicted_fps,
+        outcome.eval.idle_gap_total_ms,
+        outcome.eval.unit_summary()
+    );
+    println!(
+        "  preset  {:<44} {:>8.1} fps  idle {:>8.2} ms  {}",
+        "dual_gan(cropping)",
+        preset_eval.predicted_fps,
+        preset_eval.idle_gap_total_ms,
+        preset_eval.unit_summary()
+    );
+    for (key, reason) in outcome.rejected.iter().take(4) {
+        println!("  rejected {key}: {reason}");
+    }
+    obj(vec![
+        ("planned", outcome.to_json()),
+        ("preset_dual_gan", preset_eval.to_json()),
+        (
+            "planned_minus_preset_fps",
+            num(outcome.eval.predicted_fps - preset_eval.predicted_fps),
+        ),
+    ])
 }
 
 /// Everything at once (the `report all` subcommand).
@@ -478,6 +591,7 @@ pub fn all_reports(artifact_dir: &str) -> Json {
         ("table3_table4_fig13", table3_table4_fig13(&soc)),
         ("table5_table6_fig14", table5_table6_fig14(&soc)),
         ("pipeline", pipeline_report(&soc)),
+        ("placement", placement_report(&soc)),
     ])
 }
 
@@ -520,6 +634,27 @@ mod tests {
         assert!(util[0] > 5.0);
         assert!(util[1].abs() < 1e-9);
         assert!(util[2].abs() < 1e-9);
+    }
+
+    #[test]
+    fn engine_plan_json_surfaces_structured_fallbacks() {
+        let j = engine_plan_json(&gan(GanVariant::Original), DlaVersion::V2);
+        assert_eq!(j.get("fully_dla_resident").unwrap().as_bool(), Some(false));
+        let reasons = j.get("fallback_reasons").unwrap().as_arr().unwrap();
+        assert_eq!(reasons.len(), 8, "all 8 padded deconvs must be listed");
+        for r in reasons {
+            assert!(r
+                .get("reason")
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .contains("padding must be zero"));
+            assert!(r.get("layer").unwrap().as_str().is_some());
+            assert!(r.get("node").unwrap().as_u64().is_some());
+        }
+        let ok = engine_plan_json(&gan(GanVariant::Cropping), DlaVersion::V2);
+        assert_eq!(ok.get("fully_dla_resident").unwrap().as_bool(), Some(true));
+        assert!(ok.get("fallback_reasons").unwrap().as_arr().unwrap().is_empty());
     }
 
     #[test]

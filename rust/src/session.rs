@@ -126,6 +126,20 @@ impl PipelineBuilder {
         self
     }
 
+    /// Replace the instance set and route with the auto-placement
+    /// planner's winning candidate for `request` (plan → spec → session:
+    /// serving consumes a *searched* allocation instead of a hand-written
+    /// preset). Stream shape set on the builder (`frames`, `streams`,
+    /// `queue_depth`, `seed`) is preserved; fails when no feasible
+    /// placement exists (every candidate rejected by the DLA-fallback or
+    /// latency-budget constraints).
+    pub fn auto_place(mut self, request: &crate::placement::PlacementRequest) -> Result<Self> {
+        let outcome = crate::placement::plan(request)?;
+        self.spec.instances = outcome.spec.instances;
+        self.spec.route = outcome.spec.route;
+        Ok(self)
+    }
+
     /// Set the routing policy.
     pub fn route(mut self, route: RoutePolicy) -> Self {
         self.spec.route = route;
@@ -239,6 +253,31 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn auto_place_binds_a_planned_spec() {
+        use crate::dla::DlaVersion;
+        use crate::placement::PlacementRequest;
+        let req =
+            PlacementRequest::new(crate::hw::xavier(), DlaVersion::V1).dla_resident_gans();
+        let session = Session::builder()
+            .auto_place(&req)
+            .unwrap()
+            .frames(8)
+            .backend(sim())
+            .build()
+            .unwrap();
+        // planner output: two DLA-resident GANs plus the GPU detector;
+        // builder-level stream shape wins over the planned window
+        assert_eq!(session.spec().instances.len(), 3);
+        assert_eq!(session.spec().frames, 8);
+        assert!(session
+            .spec()
+            .instances
+            .iter()
+            .filter(|i| i.artifact.starts_with("gen_"))
+            .all(|i| i.engine == crate::hw::EngineKind::Dla));
     }
 
     #[test]
