@@ -2,3 +2,22 @@ import os
 import sys
 
 sys.path.insert(0, os.path.dirname(__file__))
+
+# Suites with heavyweight optional deps are skipped (not failed) in slim
+# environments — the CI python job installs only pytest + numpy. The
+# phantom-data tests are numpy-only and always run.
+collect_ignore = []
+try:
+    import jax  # noqa: F401
+except Exception:
+    collect_ignore += [
+        "tests/test_aot.py",
+        "tests/test_kernels.py",
+        "tests/test_model.py",
+        "tests/test_train.py",
+    ]
+try:
+    import hypothesis  # noqa: F401
+except Exception:
+    if "tests/test_kernels.py" not in collect_ignore:
+        collect_ignore.append("tests/test_kernels.py")

@@ -237,6 +237,52 @@ fn main() {
     b.rate("plan_search_two_gan", "plans_per_s", 1e3 / ms_plan);
     b.rate("plan_search_two_gan", "predicted_fps", plan_fps);
 
+    // Serve-loop overhead: the long-running front-end (arrival schedule,
+    // QoS admission, rolling windows, forced drain-and-switch handoffs)
+    // on zeroed latencies — what serving adds on top of the coordinator.
+    // 512 frames across two bursty clients with a handoff every other
+    // checkpoint, so the spec-swap machinery is inside the measurement.
+    use edgepipe::serve::{self, ArrivalProcess, ClientSpec, ReplanPolicy, ServeOptions};
+    let serve_frames = 512usize;
+    let mut serve_replans = 0usize;
+    let ms_serve = b.measure("serve_burst_512_frames", 300, || {
+        let session = Session::builder()
+            .instance(InstanceSpec::new("gan", "gen_cropping"))
+            .instance(InstanceSpec::new("yolo", "yolo_lite"))
+            .route(RoutePolicy::Fanout)
+            .frames(16)
+            .backend(Arc::clone(&backend))
+            .build()
+            .unwrap();
+        let mut opts = ServeOptions::new(orin(), edgepipe::dla::DlaVersion::V2);
+        opts.time_scale = 0.0; // no pacing: pure front-end overhead
+        opts.replan = ReplanPolicy {
+            check_every_frames: 128,
+            force_every_checks: Some(2),
+            ..ReplanPolicy::default()
+        };
+        for i in 0..2 {
+            opts.clients.push(ClientSpec::new(
+                format!("c{i}"),
+                serve_frames / 2,
+                ArrivalProcess::Burst {
+                    burst_fps: 2000.0,
+                    burst_len: 64,
+                    idle_seconds: 0.01,
+                },
+            ));
+        }
+        let rep = serve::serve(session, opts).unwrap();
+        serve_replans = rep.replans.len();
+        assert_eq!(rep.offered, rep.completed + rep.shed);
+    });
+    b.rate(
+        "serve_burst_512_frames",
+        "frames_per_s",
+        serve_frames as f64 / (ms_serve / 1e3),
+    );
+    b.rate("serve_burst_512_frames", "replans", serve_replans as f64);
+
     // NMS over 1k random boxes.
     let mut rng = Rng::new(3);
     let dets: Vec<Detection> = (0..1000)

@@ -71,6 +71,30 @@
 //! this contract (and the per-engine utilization figures) in a
 //! machine-readable `BENCH_hotpath.json`.
 //!
+//! ## Batch run vs serve loop
+//!
+//! There are two ways to drive the coordinator. A **batch run**
+//! ([`session::Session::run`]) streams a fixed frame count through one
+//! spec and exits — the benchmarking shape. The **serve loop**
+//! ([`serve::serve`]) is the deployment shape: an open-ended front-end
+//! fed by concurrent synthetic client streams (Poisson / burst / ramp
+//! arrival processes, per-client frame budgets), guarded by per-class
+//! QoS admission control (token-bucket rate limits plus deadline-aware
+//! shedding — refusals surface as `shed`, never as the pipeline's
+//! overload `dropped`), and observed through rolling telemetry windows
+//! (windowed FPS, p50/p95/p99 latency, per-engine busy fractions cut
+//! from the arbiter's live timeline). Both drive the same
+//! `StreamCore` — every line of routing, backpressure, batching and
+//! engine-arbitration semantics is shared.
+//!
+//! The serve loop is also where the [`placement`] planner becomes
+//! load-bearing at *runtime*: a [`serve::replan`] controller watches the
+//! windows, re-invokes the placement search against the observed load
+//! when engines idle or backlog builds, and swaps the winning spec in at
+//! a frame boundary via a drain-and-switch handoff (the old core
+//! completes every admitted frame before the new one takes over; switch
+//! events are recorded in the merged serving timeline and the report).
+//!
 //! ## Planning vs serving
 //!
 //! Placement does not have to be hand-written: the [`placement`] planner
@@ -111,6 +135,9 @@
 //!   search behind the `plan` CLI and `PipelineBuilder::auto_place`;
 //! * [`session`] — the `PipelineBuilder` → `Session` facade that binds
 //!   spec to backend with fail-fast validation;
+//! * [`serve`] — the long-running serving front-end: synthetic client
+//!   load generation, QoS admission control, rolling telemetry windows,
+//!   and online re-planning with drain-and-switch spec handoff;
 //! * [`imaging`], [`postproc`] — phantoms, PSNR/SSIM/MSE, the Table I
 //!   classical algorithms, YOLO decode + NMS;
 //! * [`report`] — regenerates every table and figure of the paper.
@@ -130,6 +157,7 @@ pub mod report;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod session;
 pub mod sim;
 pub mod util;

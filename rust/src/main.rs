@@ -21,6 +21,7 @@ use edgepipe::models::yolov8::{yolov8, YoloConfig};
 use edgepipe::pipeline::SimBackend;
 use edgepipe::placement::{self, PlacementRequest};
 use edgepipe::sched::haxconn;
+use edgepipe::serve::{self, ArrivalProcess, ClientSpec, QosClass, ReplanPolicy, ServeOptions};
 use edgepipe::session::PipelineBuilder;
 use edgepipe::{report, Error};
 use std::collections::HashMap;
@@ -75,11 +76,17 @@ fn usage() -> ! {
         "edgepipe — edge GPU aware multi-model MRI pipeline (paper reproduction)
 
 USAGE:
-  edgepipe report <table1|table2|fig9|fig11|table4|table6|pipeline|placement|all>
+  edgepipe report <table1|table2|fig9|fig11|table4|table6|pipeline|placement|serve|all>
                   [--artifacts DIR] [--json FILE]
   edgepipe timeline [--variant original|cropping|convolution] [--with-yolo]
   edgepipe run [--config FILE] [--variant V] [--workload W] [--frames N]
                [--streams N] [--artifacts DIR] [--seed N] [--backend pjrt|sim]
+  edgepipe serve [--config FILE] [--workload W] [--variant V] [--sim]
+                 [--duration-frames N] [--clients N]
+                 [--profile poisson|burst|ramp] [--rate-fps X]
+                 [--qos name:prio[:rate_fps[:deadline_ms]],...]
+                 [--no-replan] [--replan-every N] [--min-gain X]
+                 [--time-scale X] [--seed N] [--json FILE]
   edgepipe plan [--device orin|xavier] [--gans N] [--no-yolo]
                 [--gan-engines gpu,dla|dla] [--frames N] [--seed N]
                 [--latency-budget-ms X] [--top K] [--emit-spec FILE]
@@ -95,12 +102,29 @@ Workloads: gan-standalone, gan+yolo-naive, two-gans, gan+yolo, dual-gan.
 Engine placement is enforced by the serving arbiter: same-unit instances
 serialize, split units contend; per-engine utilization is reported.
 
+`serve` is the long-running front-end: --clients concurrent synthetic
+streams (total --duration-frames, shaped by --profile at --rate-fps)
+flow through per-class QoS admission into the same coordinator `run`
+uses. QoS classes are `name:priority[:rate_fps[:deadline_ms]]`
+(priority 0 is never deadline-shed; `-` leaves a slot unset; default:
+`interactive:0` unlimited plus `best-effort:1` rate-capped at the
+nominal rate with a 250 ms deadline). Admission refusals count as
+`shed` — distinct from the pipeline's overload `dropped`. A re-plan
+controller watches windowed idle/backlog and swaps to a better searched
+placement at a frame boundary (drain-and-switch; disable with
+--no-replan). With --sim the arrival schedule is paced by --time-scale
+to match the modeled latencies, so long profiles replay in seconds.
+
 `plan` searches placements (variant x engine units x max_batch x route)
 instead of hand-writing one: candidates with DLA fallback are rejected
 with per-layer reasons, the rest are priced in virtual time, and the
 ranked table is printed. `--emit-spec` writes the winning spec as JSON
 that reloads through `run --config`; `--gan-engines dla` reserves the GPU
 for the detector (the paper's dual-GAN deployment constraint).
+
+CI tracks `rust/BENCH_hotpath.json` as the bench baseline; refresh it by
+running `EDGEPIPE_BENCH_SMOKE=1 cargo bench --no-default-features --bench
+hotpath` and committing the regenerated file (see the bench-smoke job).
 "
     );
     std::process::exit(2)
@@ -148,6 +172,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 "table5" | "table6" | "fig14" => report::table5_table6_fig14(&soc),
                 "pipeline" => report::pipeline_report(&soc),
                 "placement" => report::placement_report(&soc),
+                "serve" => report::serve_report(&soc),
                 "all" => report::all_reports(dir),
                 other => {
                     return Err(Error::Config(format!("unknown report `{other}`")));
@@ -217,10 +242,11 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let session = builder.build()?;
             let rep = session.run()?;
             println!(
-                "processed {} frames in {:.2}s ({} dropped) [{} backend]",
+                "processed {} frames in {:.2}s ({} dropped, {} shed) [{} backend]",
                 rep.total_frames,
                 rep.wall_seconds,
                 rep.dropped,
+                rep.shed,
                 session.backend_name()
             );
             for inst in &rep.instances {
@@ -249,6 +275,155 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     e.idle_gap_ms_mean,
                     e.idle_gap_ms_p99
                 );
+            }
+            Ok(())
+        }
+        "serve" => {
+            let mut cfg = match args.opt("config") {
+                Some(path) => PipelineConfig::from_file(std::path::Path::new(path))?,
+                None => PipelineConfig::default(),
+            };
+            if let Some(v) = args.opt("variant") {
+                cfg.variant = GanVariant::parse(v)?;
+            }
+            if let Some(w) = args.opt("workload") {
+                cfg.workload = Workload::parse(w)?;
+            }
+            if let Some(seed) = args.opt("seed") {
+                cfg.seed = seed.parse().map_err(|_| Error::Config("bad --seed".into()))?;
+            }
+            cfg.validate()?;
+            let (soc, version) = match cfg.device {
+                DeviceKind::Orin => (hw::orin(), DlaVersion::V2),
+                DeviceKind::Xavier => (hw::xavier(), DlaVersion::V1),
+            };
+            let use_sim = args.flag("sim") || args.opt("backend") == Some("sim");
+            // Fast-forward pacing is a --sim affordance: against a real
+            // backend the schedule must replay in real time (1.0), or a
+            // nominal load would arrive 20x compressed.
+            let time_scale: f64 = args
+                .opt("time-scale")
+                .map(|v| v.parse().map_err(|_| Error::Config("bad --time-scale".into())))
+                .unwrap_or(Ok(if use_sim { 0.05 } else { 1.0 }))?;
+            let mut builder = PipelineBuilder::from_config(&cfg);
+            if use_sim {
+                builder = builder
+                    .backend(Arc::new(SimBackend::new(soc.clone()).with_time_scale(time_scale)));
+            }
+            let session = builder.build()?;
+
+            // Load shape: --duration-frames split across --clients, each
+            // shaped by --profile around the nominal per-client rate.
+            let duration: usize = args
+                .opt("duration-frames")
+                .map(|v| v.parse().map_err(|_| Error::Config("bad --duration-frames".into())))
+                .unwrap_or(Ok(1024))?;
+            let n_clients: usize = args
+                .opt("clients")
+                .map(|v| v.parse().map_err(|_| Error::Config("bad --clients".into())))
+                .unwrap_or(Ok(3))?;
+            let n_clients = n_clients.max(1);
+            let rate_fps: f64 = args
+                .opt("rate-fps")
+                .map(|v| v.parse().map_err(|_| Error::Config("bad --rate-fps".into())))
+                .unwrap_or(Ok(120.0))?;
+            let profile = args.opt("profile").unwrap_or("poisson");
+            let per_rate = rate_fps / n_clients as f64;
+            let base = duration / n_clients;
+            let extra = duration % n_clients;
+            let mut opts = ServeOptions::new(soc.clone(), version);
+            opts.time_scale = time_scale;
+            opts.seed = cfg.seed;
+            opts.qos = match args.opt("qos") {
+                Some(list) => list
+                    .split(',')
+                    .map(QosClass::parse)
+                    .collect::<Result<Vec<_>>>()?,
+                None => vec![
+                    QosClass::unlimited("interactive", 0),
+                    QosClass::unlimited("best-effort", 1)
+                        .rate_limited(per_rate, (per_rate * 0.25).max(4.0))
+                        .with_deadline_ms(250.0),
+                ],
+            };
+            for i in 0..n_clients {
+                let frames = base + usize::from(i < extra);
+                let arrivals = match profile {
+                    "poisson" => ArrivalProcess::Poisson { rate_fps: per_rate },
+                    "burst" => ArrivalProcess::Burst {
+                        burst_fps: per_rate * 4.0,
+                        burst_len: 32,
+                        idle_seconds: 0.75 * 32.0 / per_rate,
+                    },
+                    "ramp" => ArrivalProcess::Ramp {
+                        start_fps: per_rate * 0.25,
+                        end_fps: per_rate * 2.5,
+                    },
+                    other => {
+                        return Err(Error::Config(format!(
+                            "unknown profile `{other}` (known: poisson, burst, ramp)"
+                        )));
+                    }
+                };
+                opts.clients.push(
+                    ClientSpec::new(format!("client-{i}"), frames, arrivals)
+                        .qos_class(i % opts.qos.len()),
+                );
+            }
+            opts.replan = if args.flag("no-replan") {
+                ReplanPolicy::disabled()
+            } else {
+                let mut p = ReplanPolicy::default();
+                if let Some(n) = args.opt("replan-every") {
+                    p.check_every_frames = n
+                        .parse()
+                        .map_err(|_| Error::Config("bad --replan-every".into()))?;
+                }
+                if let Some(g) = args.opt("min-gain") {
+                    p.min_gain =
+                        g.parse().map_err(|_| Error::Config("bad --min-gain".into()))?;
+                }
+                p
+            };
+
+            let rep = serve::serve(session, opts)?;
+            println!(
+                "served {} offered / {} completed / {} shed ({} rate, {} deadline) in {:.2}s",
+                rep.offered,
+                rep.completed,
+                rep.shed,
+                rep.shed_rate_limit,
+                rep.shed_deadline,
+                rep.wall_seconds
+            );
+            println!(
+                "latency p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  ({} window(s), {} re-plan(s))",
+                rep.latency_ms_p50,
+                rep.latency_ms_p95,
+                rep.latency_ms_p99,
+                rep.windows.len(),
+                rep.replans.len()
+            );
+            for ev in &rep.replans {
+                println!(
+                    "  re-plan @frame {} ({:.2}s): {} -> {}  [{}] predicted {:.1} -> {:.1} fps",
+                    ev.at_frame,
+                    ev.at_seconds,
+                    ev.from_key,
+                    ev.to_key,
+                    ev.reason,
+                    ev.predicted_fps_before,
+                    ev.predicted_fps_after
+                );
+            }
+            if let Some(last) = rep.windows.last() {
+                for (unit, busy) in &last.engine_busy {
+                    println!("  {:<5} final-window busy {:>5.1}%", unit, busy * 100.0);
+                }
+            }
+            if let Some(path) = args.opt("json") {
+                std::fs::write(path, rep.to_json().to_pretty())?;
+                eprintln!("wrote {path}");
             }
             Ok(())
         }

@@ -27,8 +27,25 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Pull the next batch from `rx`. Returns `None` when the channel is
-/// closed and drained.
+/// Why a batch stopped filling before reaching `max_batch` — the deadline
+/// path and a disconnected source are *different events* (an empty-but-open
+/// queue means "no load right now"; a disconnect means "the stream is
+/// over") and callers that account for load shedding must not conflate
+/// them with each other or with overload drops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchEnd {
+    /// The batch reached `max_batch` frames.
+    Filled,
+    /// The fill window expired with the channel still open (a quiet or
+    /// zero-capacity queue) — more frames may arrive later.
+    Deadline,
+    /// The sender side hung up mid-fill; the partial batch flushes
+    /// immediately and the next call will observe end-of-stream.
+    Disconnected,
+}
+
+/// Pull the next batch from `rx`, reporting *why* it closed. Returns
+/// `None` when the channel is closed and drained.
 ///
 /// The wait strategy is a single deadline fixed when the first frame
 /// arrives, with exactly one `recv_timeout` per additional frame for the
@@ -36,26 +53,42 @@ impl Default for BatchPolicy {
 /// busy-spin. A disconnect mid-batch flushes the partial batch
 /// immediately instead of waiting out the window; the disconnect itself
 /// surfaces as `None` on the next call, once the channel is drained.
-pub fn next_batch(rx: &Receiver<Frame>, policy: BatchPolicy) -> Option<Vec<Frame>> {
+pub fn collect_batch(rx: &Receiver<Frame>, policy: BatchPolicy) -> Option<(Vec<Frame>, BatchEnd)> {
     // Block for the first frame.
     let first = rx.recv().ok()?;
     let mut batch = Vec::with_capacity(policy.max_batch.max(1));
     batch.push(first);
     if policy.max_batch <= 1 {
-        return Some(batch);
+        return Some((batch, BatchEnd::Filled));
     }
     let deadline = Instant::now() + policy.timeout;
+    let mut end = BatchEnd::Filled;
     while batch.len() < policy.max_batch {
         let remaining = deadline.saturating_duration_since(Instant::now());
         if remaining.is_zero() {
+            end = BatchEnd::Deadline;
             break;
         }
         match rx.recv_timeout(remaining) {
             Ok(f) => batch.push(f),
-            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+            Err(RecvTimeoutError::Timeout) => {
+                end = BatchEnd::Deadline;
+                break;
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                end = BatchEnd::Disconnected;
+                break;
+            }
         }
     }
-    Some(batch)
+    Some((batch, end))
+}
+
+/// [`collect_batch`] without the close reason (the worker hot path only
+/// needs the frames; loss accounting happens at routing/admission, not
+/// here).
+pub fn next_batch(rx: &Receiver<Frame>, policy: BatchPolicy) -> Option<Vec<Frame>> {
+    collect_batch(rx, policy).map(|(batch, _)| batch)
 }
 
 #[cfg(test)]
@@ -181,5 +214,36 @@ mod tests {
         let (tx, rx) = sync_channel::<Frame>(1);
         drop(tx);
         assert!(next_batch(&rx, BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn deadline_and_disconnect_report_distinct_ends() {
+        let policy = BatchPolicy {
+            max_batch: 4,
+            timeout: Duration::from_millis(10),
+        };
+        // Quiet-but-open queue: the window expires -> Deadline.
+        let (tx, rx) = sync_channel(8);
+        tx.send(frame(0)).unwrap();
+        let (b, end) = collect_batch(&rx, policy).unwrap();
+        assert_eq!(b.len(), 1);
+        assert_eq!(end, BatchEnd::Deadline, "open queue must report a deadline expiry");
+        drop(tx);
+        // Hung-up source: the partial batch flushes as Disconnected.
+        let (tx, rx) = sync_channel(8);
+        tx.send(frame(0)).unwrap();
+        drop(tx);
+        let (b, end) = collect_batch(&rx, policy).unwrap();
+        assert_eq!(b.len(), 1);
+        assert_eq!(end, BatchEnd::Disconnected, "a dropped sender is not a quiet queue");
+        assert!(collect_batch(&rx, policy).is_none());
+        // Full batch: Filled, regardless of what happens to the sender.
+        let (tx, rx) = sync_channel(8);
+        for i in 0..4 {
+            tx.send(frame(i)).unwrap();
+        }
+        let (b, end) = collect_batch(&rx, policy).unwrap();
+        assert_eq!(b.len(), 4);
+        assert_eq!(end, BatchEnd::Filled);
     }
 }

@@ -23,7 +23,7 @@
 //!   rides the copies headed to fidelity-scoring instances; everyone else
 //!   gets `gt_mri: None`;
 //! * **dispatch** — workers hand each batch from
-//!   [`super::batcher::next_batch`] to
+//!   [`super::batcher::collect_batch`] to
 //!   [`super::backend::ModelRunner::execute_batch`] as **one** dispatch,
 //!   so `max_batch > 1` genuinely reduces dispatch count (the sim prices
 //!   the amortized launch/weight traffic; PJRT stacks the frames into a
@@ -35,6 +35,17 @@
 //! The public entry point is [`crate::session::Session`]; [`run_pipeline`]
 //! survives as a thin compatibility wrapper that lowers a
 //! [`PipelineConfig`] through the session builder.
+//!
+//! ## Batch run vs serve loop
+//!
+//! The coordinator proper is the [`StreamCore`]: workers + queues +
+//! router + arbiter for ONE spec, with frame **admission** decoupled from
+//! frame **generation**. [`execute`] is the fixed-frame batch path (drive
+//! `spec.frames` phantom frames through a core and exit); the
+//! long-running [`crate::serve`] front-end drives the same core from
+//! client arrival processes with QoS admission control, and re-plans
+//! online by draining one core ([`StreamCore::finish`] — every admitted
+//! frame completes) and standing the next one up on the new spec.
 //!
 //! ## Engines are exclusive in serving, not just in sim
 //!
@@ -53,7 +64,7 @@
 //! derives per-engine utilization and idle-gap statistics.
 
 use super::backend::InferenceBackend;
-use super::batcher::next_batch;
+use super::batcher::{collect_batch, BatchEnd};
 use super::engines::{EngineArbiter, EngineSnapshot};
 use super::frame::Frame;
 use super::metrics::{InstanceSnapshot, Metrics};
@@ -68,8 +79,9 @@ use crate::imaging::metrics::fidelity;
 use crate::imaging::Image;
 use crate::sim::timeline::Timeline;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
 use std::sync::Arc;
+use std::thread::JoinHandle;
 
 /// Online fidelity (PSNR/SSIM) is sampled rather than computed per frame:
 /// SSIM costs ~1 ms/frame on this core (~8% of GAN inference) and the mean
@@ -96,9 +108,13 @@ pub struct PipelineReport {
     /// Serving wall time: first frame admission to teardown.
     pub wall_seconds: f64,
     pub total_frames: usize,
-    /// Total frame copies shed on overload across all instances
-    /// (per-instance counts are on each [`InstanceSnapshot`]).
+    /// Total frame copies shed on *overload* (full queue) across all
+    /// instances (per-instance counts are on each [`InstanceSnapshot`]).
     pub dropped: usize,
+    /// Frames refused by QoS *admission control* before routing (the
+    /// serve front-end's counter — `0` for fixed-frame batch runs).
+    /// Distinct from `dropped`; see [`super::metrics`] module docs.
+    pub shed: usize,
 }
 
 impl PipelineReport {
@@ -112,6 +128,7 @@ impl PipelineReport {
             ("wall_seconds", num(self.wall_seconds)),
             ("total_frames", num(self.total_frames as f64)),
             ("dropped", num(self.dropped as f64)),
+            ("shed", num(self.shed as f64)),
             ("total_fps", num(self.total_fps())),
             (
                 "instances",
@@ -164,97 +181,270 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineReport> {
     crate::session::PipelineBuilder::from_config(cfg).build()?.run()
 }
 
-/// Execute `spec` on `backend`: the coordinator core behind
-/// [`crate::session::Session::run`].
+/// Observer of per-frame completions on the serving hot path. The serve
+/// front-end's rolling telemetry ([`crate::serve::telemetry::Telemetry`])
+/// implements this; batch runs pass `None` and pay nothing.
+pub trait CompletionSink: Send + Sync {
+    /// One frame finished executing on `instance` (its index in the
+    /// spec), `latency_s` after admission.
+    fn completed(&self, instance: usize, stream: usize, frame_id: u64, latency_s: f64);
+}
+
+/// The reusable streaming core: workers, queues, router, metrics and the
+/// engine arbiter of one running [`PipelineSpec`], with frame admission
+/// decoupled from frame *generation*.
+///
+/// [`execute`] (the fixed-frame batch path) drives it from phantom
+/// sources until a requested count is reached; the long-running
+/// [`crate::serve`] front-end drives it from client arrival processes,
+/// admits through QoS control, and performs drain-and-switch re-planning
+/// by [`StreamCore::finish`]ing one core and starting the next — the two
+/// paths share every line of routing/backpressure/dispatch semantics.
+pub(crate) struct StreamCore {
+    metrics: Arc<Metrics>,
+    arbiter: Arc<EngineArbiter>,
+    dropped_total: Arc<AtomicUsize>,
+    senders: Vec<SyncSender<Frame>>,
+    handles: Vec<JoinHandle<Result<()>>>,
+    router: Router,
+    scoring: Vec<bool>,
+    /// A `true` entry is a live worker queue; a disconnected (crashed)
+    /// fanout target is taken out of the rotation instead of being
+    /// counted as load shedding — its error surfaces at join.
+    alive: Vec<bool>,
+    submitted: usize,
+}
+
+impl StreamCore {
+    /// Validate `spec`, spawn one worker per instance, and stand the
+    /// queues up. Frames flow once the caller starts [`Self::submit`]ing.
+    pub fn new(
+        spec: &PipelineSpec,
+        backend: &Arc<dyn InferenceBackend>,
+        sink: Option<Arc<dyn CompletionSink>>,
+    ) -> Result<StreamCore> {
+        spec.validate()?;
+
+        let labels: Vec<String> = spec.instances.iter().map(|i| i.label.clone()).collect();
+        let metrics = Arc::new(Metrics::new(&labels));
+        let arbiter = Arc::new(EngineArbiter::new(&spec.instances));
+        let dropped_total = Arc::new(AtomicUsize::new(0));
+
+        // Per-instance bounded queues: the backpressure boundary.
+        let mut senders: Vec<SyncSender<Frame>> = Vec::new();
+        let mut receivers = Vec::new();
+        for _ in &spec.instances {
+            let (tx, rx) = sync_channel::<Frame>(spec.queue_depth);
+            senders.push(tx);
+            receivers.push(rx);
+        }
+
+        // Workers: one thread per instance. All non-`Send` executor state
+        // (e.g. PJRT handles) is created inside the thread by
+        // `backend.open` — the same isolation a per-engine TensorRT
+        // context gives on the Jetson. Each batch the batcher yields goes
+        // to the backend as ONE dispatch, executed under the instance's
+        // exclusive engine lease from the shared arbiter (pinning two
+        // instances to one unit serializes them; split placements contend
+        // through shared DRAM).
+        let mut handles = Vec::new();
+        for (idx, (inst, rx)) in spec.instances.iter().zip(receivers.into_iter()).enumerate() {
+            let metrics = Arc::clone(&metrics);
+            let backend = Arc::clone(backend);
+            let arbiter = Arc::clone(&arbiter);
+            let sink = sink.clone();
+            let inst = inst.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("worker-{}", inst.label))
+                .spawn(move || -> Result<()> {
+                    let mut runner = backend.open(&inst)?;
+                    let profile = backend.dispatch_profile(&inst)?;
+                    let modeled = profile.is_some();
+                    while let Some((batch, end)) = collect_batch(&rx, inst.batch) {
+                        let outs = arbiter.dispatch(
+                            idx,
+                            batch[0].id,
+                            batch.len(),
+                            profile.as_ref(),
+                            || {
+                                if modeled {
+                                    // the arbiter holds the engine for the
+                                    // priced duration; don't model time
+                                    // twice
+                                    runner.execute_batch_untimed(&batch)
+                                } else {
+                                    runner.execute_batch(&batch)
+                                }
+                            },
+                        )?;
+                        if outs.len() != batch.len() {
+                            // a silent mismatch would leak frames out of
+                            // the produced = processed + dropped
+                            // conservation
+                            return Err(Error::Pipeline(format!(
+                                "instance `{}`: backend returned {} outputs for a batch of {}",
+                                inst.label,
+                                outs.len(),
+                                batch.len()
+                            )));
+                        }
+                        for (frame, out) in batch.iter().zip(outs.iter()) {
+                            let latency = frame.admitted.elapsed().as_secs_f64();
+                            metrics.record_frame(idx, latency);
+                            if let Some(sink) = &sink {
+                                sink.completed(idx, frame.stream, frame.id, latency);
+                            }
+                            if inst.score_fidelity && should_score(frame.id) {
+                                match &frame.gt_mri {
+                                    Some(gt) => record_fidelity(&metrics, idx, frame, gt, out),
+                                    None => metrics.record_fidelity_skipped(idx),
+                                }
+                            }
+                        }
+                        if end == BatchEnd::Disconnected {
+                            // A disconnect is end-of-stream (the channel
+                            // was drained before it was reported), NOT a
+                            // quiet queue: exit now instead of paying one
+                            // more blocking recv to learn the same thing.
+                            break;
+                        }
+                    }
+                    Ok(())
+                })
+                .map_err(|e| Error::Pipeline(format!("spawn worker: {e}")))?;
+            handles.push(handle);
+        }
+
+        Ok(StreamCore {
+            metrics,
+            arbiter,
+            dropped_total,
+            senders,
+            handles,
+            router: Router::new(spec.route, spec.instances.len()),
+            scoring: spec.instances.iter().map(|i| i.score_fidelity).collect(),
+            alive: vec![true; spec.instances.len()],
+            submitted: 0,
+        })
+    }
+
+    /// Route one admitted frame into the worker queues. Returns `false`
+    /// when the *primary* worker is gone (stop producing; its error
+    /// surfaces at [`Self::finish`]).
+    pub fn submit(&mut self, frame: Frame) -> bool {
+        self.submitted += 1;
+        self.metrics.start_serving();
+        let targets = self.router.route(&frame);
+        let copies = targets.len();
+        let mut frame = Some(frame);
+        for (copy, target) in targets.enumerate() {
+            // Last copy moves the frame; earlier copies clone it — an Arc
+            // refcount bump per plane, never a pixel copy.
+            let mut f = if copy + 1 == copies {
+                frame.take().expect("one frame per routed copy")
+            } else {
+                frame.as_ref().expect("one frame per routed copy").clone()
+            };
+            // Ground truth is only consumed by fidelity scoring: don't
+            // carry the plane through other queues.
+            if !self.scoring[target] {
+                f.gt_mri = None;
+            }
+            if copy == 0 {
+                // The primary copy is lossless: block under backpressure
+                // (the paper's pipeline drops nothing on its main
+                // reconstruction path).
+                if self.senders[target].send(f).is_err() {
+                    return false;
+                }
+            } else if self.alive[target] {
+                // Fanout copies beyond the primary shed load instead of
+                // stalling the whole pipeline. Only a full queue is
+                // genuine shedding — a disconnect is a crashed worker,
+                // not overload.
+                match self.senders[target].try_send(f) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(_)) => {
+                        self.dropped_total.fetch_add(1, Ordering::Relaxed);
+                        self.metrics.record_drop(target);
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        self.alive[target] = false;
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Count an admission-control shed against this core's metrics (the
+    /// frame never entered a queue — see [`super::metrics`] on why this is
+    /// not `dropped`).
+    pub fn record_shed(&self) {
+        self.metrics.record_shed();
+    }
+
+    /// Frames submitted so far.
+    pub fn submitted(&self) -> usize {
+        self.submitted
+    }
+
+    /// Live per-instance completed-frame counts (serve checkpoint read).
+    pub fn completed_frames(&self) -> Vec<usize> {
+        self.metrics.frames_completed()
+    }
+
+    /// The core's engine arbiter (live timeline access for windowed
+    /// telemetry).
+    pub fn arbiter(&self) -> &EngineArbiter {
+        &self.arbiter
+    }
+
+    /// Drain and tear down: close the queues, let the workers finish
+    /// every admitted frame, join them (propagating worker errors), and
+    /// report. This is the "drain" half of the serve front-end's
+    /// drain-and-switch handoff — nothing admitted is lost.
+    pub fn finish(self) -> Result<PipelineReport> {
+        let StreamCore {
+            metrics,
+            arbiter,
+            dropped_total,
+            senders,
+            handles,
+            submitted,
+            ..
+        } = self;
+        drop(senders);
+        for h in handles {
+            h.join()
+                .map_err(|_| Error::Pipeline("worker panicked".into()))??;
+        }
+        Ok(PipelineReport {
+            instances: metrics.snapshot(),
+            engines: arbiter.engine_snapshots(),
+            timeline: arbiter.timeline(),
+            wall_seconds: metrics.elapsed(),
+            total_frames: submitted,
+            dropped: dropped_total.load(Ordering::Relaxed),
+            shed: metrics.shed_total(),
+        })
+    }
+}
+
+/// Execute `spec` on `backend`: the fixed-frame batch path behind
+/// [`crate::session::Session::run`] — stand a [`StreamCore`] up, stream
+/// exactly `spec.frames` phantom frames through it, drain, and report.
 pub(crate) fn execute(
     spec: &PipelineSpec,
     backend: &Arc<dyn InferenceBackend>,
 ) -> Result<PipelineReport> {
-    spec.validate()?;
+    let mut core = StreamCore::new(spec, backend, None)?;
 
-    let labels: Vec<String> = spec.instances.iter().map(|i| i.label.clone()).collect();
-    let metrics = Arc::new(Metrics::new(&labels));
-    let arbiter = Arc::new(EngineArbiter::new(&spec.instances));
-    let dropped_total = Arc::new(AtomicUsize::new(0));
-
-    // Per-instance bounded queues: the backpressure boundary.
-    let mut senders: Vec<SyncSender<Frame>> = Vec::new();
-    let mut receivers: Vec<Receiver<Frame>> = Vec::new();
-    for _ in &spec.instances {
-        let (tx, rx) = sync_channel::<Frame>(spec.queue_depth);
-        senders.push(tx);
-        receivers.push(rx);
-    }
-
-    // Workers: one thread per instance. All non-`Send` executor state
-    // (e.g. PJRT handles) is created inside the thread by `backend.open` —
-    // the same isolation a per-engine TensorRT context gives on the
-    // Jetson. Each batch the batcher yields goes to the backend as ONE
-    // dispatch, executed under the instance's exclusive engine lease from
-    // the shared arbiter (pinning two instances to one unit serializes
-    // them; split placements contend through shared DRAM).
-    let mut handles = Vec::new();
-    for (idx, (inst, rx)) in spec.instances.iter().zip(receivers.into_iter()).enumerate() {
-        let metrics = Arc::clone(&metrics);
-        let backend = Arc::clone(backend);
-        let arbiter = Arc::clone(&arbiter);
-        let inst = inst.clone();
-        let handle = std::thread::Builder::new()
-            .name(format!("worker-{}", inst.label))
-            .spawn(move || -> Result<()> {
-                let mut runner = backend.open(&inst)?;
-                let profile = backend.dispatch_profile(&inst)?;
-                let modeled = profile.is_some();
-                while let Some(batch) = next_batch(&rx, inst.batch) {
-                    let outs = arbiter.dispatch(
-                        idx,
-                        batch[0].id,
-                        batch.len(),
-                        profile.as_ref(),
-                        || {
-                            if modeled {
-                                // the arbiter holds the engine for the
-                                // priced duration; don't model time twice
-                                runner.execute_batch_untimed(&batch)
-                            } else {
-                                runner.execute_batch(&batch)
-                            }
-                        },
-                    )?;
-                    if outs.len() != batch.len() {
-                        // a silent mismatch would leak frames out of the
-                        // produced = processed + dropped conservation
-                        return Err(Error::Pipeline(format!(
-                            "instance `{}`: backend returned {} outputs for a batch of {}",
-                            inst.label,
-                            outs.len(),
-                            batch.len()
-                        )));
-                    }
-                    for (frame, out) in batch.iter().zip(outs.iter()) {
-                        let latency = frame.admitted.elapsed().as_secs_f64();
-                        metrics.record_frame(idx, latency);
-                        if inst.score_fidelity && should_score(frame.id) {
-                            match &frame.gt_mri {
-                                Some(gt) => record_fidelity(&metrics, idx, frame, gt, out),
-                                None => metrics.record_fidelity_skipped(idx),
-                            }
-                        }
-                    }
-                }
-                Ok(())
-            })
-            .map_err(|e| Error::Pipeline(format!("spawn worker: {e}")))?;
-        handles.push(handle);
-    }
-
-    // Source + router on the main thread. All sources draw from (and
-    // return to) one plane pool, so frame synthesis recycles the buffers
-    // the workers release. The requested frame count is distributed
-    // exactly: the first `frames % streams` streams carry one extra frame,
-    // so an indivisible count never silently under-produces.
-    let mut router = Router::new(spec.route, spec.instances.len());
-    let scoring: Vec<bool> = spec.instances.iter().map(|i| i.score_fidelity).collect();
+    // Sources on the calling thread. All sources draw from (and return
+    // to) one plane pool, so frame synthesis recycles the buffers the
+    // workers release. The requested frame count is distributed exactly:
+    // the first `frames % streams` streams carry one extra frame, so an
+    // indivisible count never silently under-produces.
     let pool = PlanePool::default();
     let base = spec.frames / spec.streams;
     let extra = spec.frames % spec.streams;
@@ -269,59 +459,15 @@ pub(crate) fn execute(
             .with_pool(pool.clone())
         })
         .collect();
-    // A `true` entry is a live worker queue; a disconnected (crashed)
-    // fanout target is taken out of the rotation instead of being counted
-    // as load shedding — its error surfaces at join.
-    let mut alive = vec![true; spec.instances.len()];
-    let mut total_frames = 0usize;
     'outer: loop {
         let mut all_done = true;
         for src in sources.iter_mut() {
             if let Some(frame) = src.next() {
                 all_done = false;
-                total_frames += 1;
-                metrics.start_serving();
-                let targets = router.route(&frame);
-                let copies = targets.len();
-                let mut frame = Some(frame);
-                for (copy, target) in targets.enumerate() {
-                    // Last copy moves the frame; earlier copies clone it —
-                    // an Arc refcount bump per plane, never a pixel copy.
-                    let mut f = if copy + 1 == copies {
-                        frame.take().expect("one frame per routed copy")
-                    } else {
-                        frame.as_ref().expect("one frame per routed copy").clone()
-                    };
-                    // Ground truth is only consumed by fidelity scoring:
-                    // don't carry the plane through other queues.
-                    if !scoring[target] {
-                        f.gt_mri = None;
-                    }
-                    if copy == 0 {
-                        // The primary copy is lossless: block under
-                        // backpressure (the paper's pipeline drops nothing
-                        // on its main reconstruction path).
-                        if senders[target].send(f).is_err() {
-                            // Primary worker gone — stop producing; its
-                            // error surfaces at join.
-                            break 'outer;
-                        }
-                    } else if alive[target] {
-                        // Fanout copies beyond the primary shed load
-                        // instead of stalling the whole pipeline. Only a
-                        // full queue is genuine shedding — a disconnect is
-                        // a crashed worker, not overload.
-                        match senders[target].try_send(f) {
-                            Ok(()) => {}
-                            Err(TrySendError::Full(_)) => {
-                                dropped_total.fetch_add(1, Ordering::Relaxed);
-                                metrics.record_drop(target);
-                            }
-                            Err(TrySendError::Disconnected(_)) => {
-                                alive[target] = false;
-                            }
-                        }
-                    }
+                if !core.submit(frame) {
+                    // Primary worker gone — stop producing; its error
+                    // surfaces at finish.
+                    break 'outer;
                 }
             }
         }
@@ -329,20 +475,7 @@ pub(crate) fn execute(
             break;
         }
     }
-    drop(senders);
-    for h in handles {
-        h.join()
-            .map_err(|_| Error::Pipeline("worker panicked".into()))??;
-    }
-
-    Ok(PipelineReport {
-        instances: metrics.snapshot(),
-        engines: arbiter.engine_snapshots(),
-        timeline: arbiter.timeline(),
-        wall_seconds: metrics.elapsed(),
-        total_frames,
-        dropped: dropped_total.load(Ordering::Relaxed),
-    })
+    core.finish()
 }
 
 /// Score one sampled frame's reconstruction fidelity. Unscorable samples
@@ -513,6 +646,7 @@ mod tests {
             wall_seconds: m.elapsed(),
             total_frames: 0,
             dropped: 0,
+            shed: 0,
         };
         let txt = rep.to_json().to_compact();
         Json::parse(&txt).unwrap();

@@ -195,8 +195,14 @@ impl EngineArbiter {
     }
 
     /// Serving clock: seconds since arbiter creation (span timebase).
-    fn now(&self) -> f64 {
+    /// Public so the serve front-end can align this core's timeline with
+    /// its own epoch when merging phases across a re-plan handoff.
+    pub fn clock_seconds(&self) -> f64 {
         self.epoch.elapsed().as_secs_f64()
+    }
+
+    fn now(&self) -> f64 {
+        self.clock_seconds()
     }
 
     /// Number of distinct physical engine units under arbitration.
@@ -305,6 +311,16 @@ impl EngineArbiter {
     /// Copy of the serving timeline recorded so far.
     pub fn timeline(&self) -> Timeline {
         self.timeline.lock().unwrap().clone()
+    }
+
+    /// Spans recorded from index `from` on — the serve loop's incremental
+    /// checkpoint read. Spans are pushed at dispatch *completion*, so the
+    /// tail since the last read contains every span overlapping the time
+    /// window since then; re-cloning the whole ever-growing trace per
+    /// checkpoint would make long-running serving quadratic.
+    pub fn spans_from(&self, from: usize) -> Vec<Span> {
+        let tl = self.timeline.lock().unwrap();
+        tl.spans.get(from..).map(|s| s.to_vec()).unwrap_or_default()
     }
 
     /// Per-unit utilization / idle-gap statistics over the serving window

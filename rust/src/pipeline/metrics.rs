@@ -1,6 +1,18 @@
 //! Pipeline metrics aggregation (thread-safe).
+//!
+//! Three loss-like events are deliberately kept distinct, because they
+//! mean different things operationally:
+//!
+//! * **`dropped`** (per instance) — a droppable fanout copy hit a full
+//!   queue and was shed by *backpressure overload* inside the pipeline;
+//! * **`shed`** (run-global) — a frame was refused *before routing* by
+//!   QoS admission control ([`crate::serve::admission`]): it never
+//!   entered any queue, so charging it to an instance would be wrong;
+//! * a **disconnected** worker queue is neither: the target leaves the
+//!   routing rotation and the worker's own error surfaces at join.
 
 use crate::util::stats::Summary;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
@@ -27,6 +39,10 @@ pub struct Metrics {
     serving_start: OnceLock<Instant>,
     instances: Vec<Mutex<InstanceCounters>>,
     labels: Vec<String>,
+    /// Frames refused by admission control before routing (run-global —
+    /// a shed frame never reached an instance). Distinct from the
+    /// per-instance overload `dropped` counter; see the module docs.
+    shed: AtomicUsize,
 }
 
 /// Immutable snapshot for reporting.
@@ -50,6 +66,7 @@ impl Metrics {
             serving_start: OnceLock::new(),
             instances: labels.iter().map(|_| Mutex::new(Default::default())).collect(),
             labels: labels.to_vec(),
+            shed: AtomicUsize::new(0),
         }
     }
 
@@ -74,14 +91,36 @@ impl Metrics {
         c.ssim_pct.add(ssim_pct);
     }
 
+    /// A droppable fanout copy shed by *overload* (full queue) inside the
+    /// pipeline — charged to the instance whose queue was full.
     pub fn record_drop(&self, instance: usize) {
         self.instances[instance].lock().unwrap().dropped += 1;
+    }
+
+    /// A frame refused by *admission control* before routing — counted
+    /// globally, never against an instance (it reached none).
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total admission-shed frames (see [`Self::record_shed`]).
+    pub fn shed_total(&self) -> usize {
+        self.shed.load(Ordering::Relaxed)
     }
 
     /// A fidelity sample that could not be scored (mismatched shapes,
     /// missing ground truth, degenerate images).
     pub fn record_fidelity_skipped(&self, instance: usize) {
         self.instances[instance].lock().unwrap().fidelity_skipped += 1;
+    }
+
+    /// Per-instance completed-frame counts — the cheap live read the
+    /// serve loop polls at checkpoints (no summary buffers are cloned).
+    pub fn frames_completed(&self) -> Vec<usize> {
+        self.instances
+            .iter()
+            .map(|c| c.lock().unwrap().frames)
+            .collect()
     }
 
     /// Serving seconds since first frame admission (`0.0` before any
@@ -169,6 +208,25 @@ mod tests {
         // of pre-serving setup
         assert!(m.elapsed() < 0.045, "elapsed {} includes setup", m.elapsed());
         assert!(snap[0].fps > 10.0 / 0.045, "fps {} deflated by setup", snap[0].fps);
+    }
+
+    #[test]
+    fn shed_overload_and_disconnect_counters_are_distinct() {
+        // Three loss-like events, three distinct fates: admission shed is
+        // global, overload drop is per-instance, and a disconnected worker
+        // increments NEITHER (its error surfaces at join instead).
+        let m = Metrics::new(&["gan".to_string(), "yolo".to_string()]);
+        m.record_shed(); // admission control refused a frame pre-routing
+        m.record_shed();
+        m.record_drop(1); // yolo's queue was full: overload shed
+        // a disconnect has no recording call at all — nothing to assert in
+        // but the absence: totals must not move beyond the two above
+        assert_eq!(m.shed_total(), 2);
+        let snap = m.snapshot();
+        assert_eq!(snap[0].dropped, 0);
+        assert_eq!(snap[1].dropped, 1);
+        let dropped_total: usize = snap.iter().map(|s| s.dropped).sum();
+        assert_eq!(dropped_total, 1, "shed must not leak into dropped");
     }
 
     #[test]

@@ -36,7 +36,8 @@ pub mod spec;
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
 pub use backend::{InferenceBackend, ModelRunner, Output, SimBackend};
-pub use driver::{run_pipeline, PipelineReport};
+pub use batcher::BatchEnd;
+pub use driver::{run_pipeline, CompletionSink, PipelineReport};
 pub use engines::{DispatchProfile, EngineArbiter, EngineSnapshot};
 pub use frame::Frame;
 pub use plane::{FramePlane, PlanePool};

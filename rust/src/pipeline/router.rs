@@ -55,6 +55,24 @@ impl RoutePolicy {
             RoutePolicy::RrFanoutLast => "rr+fanout",
         }
     }
+
+    /// Copies of each frame this policy materialises across `instances`
+    /// targets — the single source of truth for fan-out arity (the serve
+    /// loop's completions-to-unique-frames conversion reads this; it must
+    /// agree with what [`Router::route`] yields).
+    pub fn copies_per_frame(&self, instances: usize) -> usize {
+        match self {
+            RoutePolicy::Fanout => instances.max(1),
+            RoutePolicy::RoundRobin | RoutePolicy::ByStream => 1,
+            RoutePolicy::RrFanoutLast => {
+                if instances > 1 {
+                    2
+                } else {
+                    1
+                }
+            }
+        }
+    }
 }
 
 /// Allocation-free set of instance indices one frame routes to. The first
@@ -203,6 +221,26 @@ mod tests {
         let mut r2 = Router::new(RoutePolicy::RrFanoutLast, 2);
         assert_eq!(targets(&mut r2, &frame(0)), vec![0, 1]);
         assert_eq!(targets(&mut r2, &frame(0)), vec![0, 1]);
+    }
+
+    #[test]
+    fn copies_per_frame_agrees_with_route() {
+        // the declared arity must match what the router actually yields
+        for policy in [
+            RoutePolicy::Fanout,
+            RoutePolicy::RoundRobin,
+            RoutePolicy::ByStream,
+            RoutePolicy::RrFanoutLast,
+        ] {
+            for n in 1..=4 {
+                let mut r = Router::new(policy, n);
+                assert_eq!(
+                    r.route(&frame(0)).len(),
+                    policy.copies_per_frame(n),
+                    "{policy:?} x {n}"
+                );
+            }
+        }
     }
 
     #[test]

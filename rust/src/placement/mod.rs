@@ -110,6 +110,44 @@ impl PlacementRequest {
         self.gan_engines = vec![EngineKind::Dla];
         self
     }
+
+    /// Derive a request matching the workload shape of a *running* spec —
+    /// the serve front-end's online re-planning entry point: the search
+    /// keeps what the deployment is committed to (GAN count, detector
+    /// presence, the surgery variants already compiled/served) and
+    /// re-opens everything that can change at a frame boundary (engine
+    /// units, batching, route). Returns `None` when the spec carries no
+    /// GAN instance (nothing for the planner to place).
+    pub fn for_spec(
+        spec: &PipelineSpec,
+        soc: SocSpec,
+        dla_version: DlaVersion,
+    ) -> Option<PlacementRequest> {
+        let mut variants: Vec<GanVariant> = Vec::new();
+        let mut gans = 0usize;
+        let mut with_yolo = false;
+        for inst in &spec.instances {
+            if let Some(name) = inst.artifact.strip_prefix("gen_") {
+                gans += 1;
+                if let Ok(v) = GanVariant::parse(name) {
+                    if !variants.contains(&v) {
+                        variants.push(v);
+                    }
+                }
+            } else {
+                with_yolo = true;
+            }
+        }
+        if gans == 0 || variants.is_empty() {
+            return None;
+        }
+        let mut req = PlacementRequest::new(soc, dla_version);
+        req.gans = gans;
+        req.with_yolo = with_yolo;
+        req.variants = variants;
+        req.seed = spec.seed;
+        Some(req)
+    }
 }
 
 /// The planner's answer: the winning spec, its predicted statistics, the
@@ -183,4 +221,28 @@ impl PlacementOutcome {
 /// ⇒ identical outcome (and byte-identical emitted spec JSON).
 pub fn plan(req: &PlacementRequest) -> Result<PlacementOutcome> {
     search::search(req)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Workload;
+    use crate::pipeline::spec::InstanceSpec;
+
+    #[test]
+    fn for_spec_mirrors_the_running_workload_shape() {
+        let spec = Workload::DualGan.spec(GanVariant::Cropping);
+        let req = PlacementRequest::for_spec(&spec, crate::hw::orin(), DlaVersion::V2).unwrap();
+        assert_eq!(req.gans, 2);
+        assert!(req.with_yolo);
+        assert_eq!(req.variants, vec![GanVariant::Cropping]);
+        assert_eq!(req.seed, spec.seed);
+        // a detector-only spec has nothing for the planner to place
+        let yolo_only = PipelineSpec {
+            instances: vec![InstanceSpec::new("y", "yolo_lite")],
+            ..PipelineSpec::default()
+        };
+        assert!(PlacementRequest::for_spec(&yolo_only, crate::hw::orin(), DlaVersion::V2)
+            .is_none());
+    }
 }

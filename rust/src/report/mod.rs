@@ -580,6 +580,79 @@ pub fn placement_report(soc: &SocSpec) -> Json {
     ])
 }
 
+/// `report serve` — the long-running front-end under a shifting load: a
+/// deliberately naive initial placement (both GANs on DLA0) serves a
+/// ramping multi-client profile on the sim backend; the online
+/// re-planner watches the windowed idle/backlog signals, re-invokes the
+/// placement search, and the drain-and-switch handoff swaps the better
+/// allocation in mid-run. The section reports the switch events and the
+/// windowed-FPS trajectory around them.
+pub fn serve_report(soc: &SocSpec) -> Json {
+    use crate::pipeline::{InstanceSpec, SimBackend};
+    use crate::serve::{self, ArrivalProcess, ClientSpec, ReplanPolicy, ServeOptions};
+    use crate::session::Session;
+    use std::sync::Arc;
+
+    let time_scale = 0.02;
+    let session = Session::builder()
+        .instance(InstanceSpec::new("g0", "gen_cropping").on_engine_unit(EngineKind::Dla, 0))
+        .instance(InstanceSpec::new("g1", "gen_cropping").on_engine_unit(EngineKind::Dla, 0))
+        .route(crate::pipeline::router::RoutePolicy::RoundRobin)
+        .streams(2)
+        .backend(Arc::new(SimBackend::new(soc.clone()).with_time_scale(time_scale)))
+        .build()
+        .expect("serve-report session builds");
+    let version = if soc.name.contains("xavier") {
+        DlaVersion::V1
+    } else {
+        DlaVersion::V2
+    };
+    let mut opts = ServeOptions::new(soc.clone(), version);
+    opts.time_scale = time_scale;
+    opts.replan = ReplanPolicy {
+        check_every_frames: 128,
+        ..ReplanPolicy::default()
+    };
+    for i in 0..2 {
+        opts.clients.push(ClientSpec::new(
+            format!("hospital-{i}"),
+            256,
+            ArrivalProcess::Ramp {
+                start_fps: 30.0,
+                end_fps: 250.0,
+            },
+        ));
+    }
+    let rep = serve::serve(session, opts).expect("serve-report run");
+
+    println!("Serve: ramp load over a naive same-DLA placement ({})", soc.name);
+    println!(
+        "  {} offered, {} completed, {} shed; p99 {:.2} ms; {} re-plan(s)",
+        rep.offered,
+        rep.completed,
+        rep.shed,
+        rep.latency_ms_p99,
+        rep.replans.len()
+    );
+    for ev in &rep.replans {
+        println!(
+            "  re-plan @frame {}: {} -> {} [{}]",
+            ev.at_frame, ev.from_key, ev.to_key, ev.reason
+        );
+    }
+    for w in &rep.windows {
+        println!(
+            "  window [{:>6.2}s, {:>6.2}s]  {:>7.1} fps  p99 {:>8.2} ms  idle {:>4.0}%",
+            w.t0,
+            w.t1,
+            w.fps,
+            w.latency_ms_p99,
+            w.idle_frac() * 100.0
+        );
+    }
+    rep.to_json()
+}
+
 /// Everything at once (the `report all` subcommand).
 pub fn all_reports(artifact_dir: &str) -> Json {
     let soc = hw::orin();
@@ -592,6 +665,7 @@ pub fn all_reports(artifact_dir: &str) -> Json {
         ("table5_table6_fig14", table5_table6_fig14(&soc)),
         ("pipeline", pipeline_report(&soc)),
         ("placement", placement_report(&soc)),
+        ("serve", serve_report(&soc)),
     ])
 }
 

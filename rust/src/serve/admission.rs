@@ -1,0 +1,297 @@
+//! Per-class QoS admission control for the serve loop.
+//!
+//! Every offered frame passes [`AdmissionController::decide`] *before*
+//! routing. A frame is shed for one of two reasons, both counted per
+//! class and both surfaced as `shed` in the metrics/report — never as
+//! `dropped_overload` (that counter belongs to full worker queues inside
+//! the pipeline; see [`crate::pipeline::metrics`]):
+//!
+//! * **rate limit** — the class's token bucket is empty. Buckets refill
+//!   in *model time* (the arrival schedule's clock), so the same load
+//!   profile sheds the same frames regardless of the serve time scale;
+//! * **deadline** — the class has a latency deadline and the current
+//!   backlog-estimated wait exceeds it (deadline-aware shedding: work
+//!   that would miss its deadline anyway is refused while it is still
+//!   cheap, reusing the droppable-fanout philosophy of the driver's
+//!   non-primary copies). Deadlines are **model-time** milliseconds:
+//!   the serve loop converts its wall-clock wait estimate by the time
+//!   scale, so a fast-forwarded sim run sheds the same frames a
+//!   real-time run would.
+//!
+//! Priority is the class's rank (0 = highest, e.g. the lossless
+//! reconstruction stream). Priority-0 classes are exempt from deadline
+//! shedding — under pressure the best-effort classes thin out first,
+//! which is exactly the paper's "reconstruction never drops" contract.
+
+use crate::config::json::{arr, num, obj, s, Json};
+use crate::error::{Error, Result};
+
+/// Why admission refused a frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Token bucket empty: the client exceeded its class's rate.
+    RateLimit,
+    /// Estimated queueing delay exceeds the class deadline.
+    Deadline,
+}
+
+/// One QoS class.
+#[derive(Debug, Clone)]
+pub struct QosClass {
+    pub name: String,
+    /// Rank, 0 = highest. Priority-0 classes are never deadline-shed.
+    pub priority: usize,
+    /// Sustained admission rate in frames/s of model time (`None` =
+    /// unlimited).
+    pub rate_fps: Option<f64>,
+    /// Token-bucket capacity in frames (how much burst the class may
+    /// carry above its sustained rate).
+    pub burst: f64,
+    /// Latency deadline in milliseconds of **model time** (`None` =
+    /// none) — scale-invariant under the serve loop's time scale.
+    pub deadline_ms: Option<f64>,
+}
+
+impl QosClass {
+    /// An unlimited class (no rate cap, no deadline).
+    pub fn unlimited(name: impl Into<String>, priority: usize) -> Self {
+        QosClass {
+            name: name.into(),
+            priority,
+            rate_fps: None,
+            burst: 1.0,
+            deadline_ms: None,
+        }
+    }
+
+    /// Cap the sustained admission rate (token bucket of `burst` frames).
+    pub fn rate_limited(mut self, rate_fps: f64, burst: f64) -> Self {
+        self.rate_fps = Some(rate_fps);
+        self.burst = burst.max(1.0);
+        self
+    }
+
+    /// Shed when the estimated wait exceeds `deadline_ms` (ignored for
+    /// priority 0).
+    pub fn with_deadline_ms(mut self, deadline_ms: f64) -> Self {
+        self.deadline_ms = Some(deadline_ms);
+        self
+    }
+
+    /// Parse the CLI form `name:priority[:rate_fps[:deadline_ms]]` —
+    /// `-` for "unset" in either numeric slot.
+    pub fn parse(spec: &str) -> Result<QosClass> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        if parts.len() < 2 || parts.len() > 4 || parts[0].is_empty() {
+            return Err(Error::Config(format!(
+                "bad QoS class `{spec}` (want name:priority[:rate_fps[:deadline_ms]])"
+            )));
+        }
+        let priority: usize = parts[1]
+            .parse()
+            .map_err(|_| Error::Config(format!("bad QoS priority in `{spec}`")))?;
+        let mut class = QosClass::unlimited(parts[0], priority);
+        if let Some(r) = parts.get(2).filter(|r| **r != "-") {
+            let rate: f64 = r
+                .parse()
+                .map_err(|_| Error::Config(format!("bad QoS rate_fps in `{spec}`")))?;
+            class = class.rate_limited(rate, (rate * 0.25).max(4.0));
+        }
+        if let Some(d) = parts.get(3).filter(|d| **d != "-") {
+            let deadline: f64 = d
+                .parse()
+                .map_err(|_| Error::Config(format!("bad QoS deadline_ms in `{spec}`")))?;
+            class = class.with_deadline_ms(deadline);
+        }
+        Ok(class)
+    }
+}
+
+/// Per-class running counters.
+#[derive(Debug, Clone, Default)]
+pub struct ClassStats {
+    pub admitted: usize,
+    pub shed_rate_limit: usize,
+    pub shed_deadline: usize,
+}
+
+#[derive(Debug)]
+struct Bucket {
+    tokens: f64,
+    last_t: f64,
+}
+
+/// Stateful admission controller over a class table.
+#[derive(Debug)]
+pub struct AdmissionController {
+    classes: Vec<QosClass>,
+    buckets: Vec<Bucket>,
+    stats: Vec<ClassStats>,
+}
+
+impl AdmissionController {
+    pub fn new(classes: Vec<QosClass>) -> Result<AdmissionController> {
+        if classes.is_empty() {
+            return Err(Error::Config("admission needs at least one QoS class".into()));
+        }
+        let buckets = classes
+            .iter()
+            .map(|c| Bucket {
+                tokens: c.burst,
+                last_t: 0.0,
+            })
+            .collect();
+        let stats = classes.iter().map(|_| ClassStats::default()).collect();
+        Ok(AdmissionController {
+            classes,
+            buckets,
+            stats,
+        })
+    }
+
+    pub fn classes(&self) -> &[QosClass] {
+        &self.classes
+    }
+
+    /// Admit or shed one frame of `class` arriving at model time `now`,
+    /// with the caller's current backlog-estimated wait. `None` = admit.
+    pub fn decide(&mut self, class: usize, now: f64, est_wait_ms: f64) -> Option<ShedReason> {
+        let c = &self.classes[class];
+        // Deadline first: a frame that would miss its deadline should not
+        // spend a token either.
+        if c.priority > 0 {
+            if let Some(deadline) = c.deadline_ms {
+                if est_wait_ms > deadline {
+                    self.stats[class].shed_deadline += 1;
+                    return Some(ShedReason::Deadline);
+                }
+            }
+        }
+        if let Some(rate) = c.rate_fps {
+            let b = &mut self.buckets[class];
+            b.tokens = (b.tokens + (now - b.last_t).max(0.0) * rate).min(c.burst);
+            b.last_t = now;
+            if b.tokens < 1.0 {
+                self.stats[class].shed_rate_limit += 1;
+                return Some(ShedReason::RateLimit);
+            }
+            b.tokens -= 1.0;
+        }
+        self.stats[class].admitted += 1;
+        None
+    }
+
+    pub fn stats(&self) -> &[ClassStats] {
+        &self.stats
+    }
+
+    pub fn shed_total(&self) -> usize {
+        self.stats
+            .iter()
+            .map(|s| s.shed_rate_limit + s.shed_deadline)
+            .sum()
+    }
+
+    /// Per-class JSON rows for the serve report.
+    pub fn to_json(&self) -> Json {
+        arr(self
+            .classes
+            .iter()
+            .zip(self.stats.iter())
+            .map(|(c, st)| class_row(c, st))
+            .collect())
+    }
+}
+
+/// One class's JSON row — the single writer shared by
+/// [`AdmissionController::to_json`] and the serve report, so the two
+/// cannot drift.
+pub fn class_row(class: &QosClass, stats: &ClassStats) -> Json {
+    obj(vec![
+        ("name", s(&class.name)),
+        ("priority", num(class.priority as f64)),
+        ("admitted", num(stats.admitted as f64)),
+        ("shed_rate_limit", num(stats.shed_rate_limit as f64)),
+        ("shed_deadline", num(stats.shed_deadline as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_bucket_sheds_above_rate_and_recovers() {
+        // 10 fps, burst of 2: a 20-frame blast at t=0 admits 2, sheds 18;
+        // one second later two more tokens have accrued.
+        let mut ac = AdmissionController::new(vec![
+            QosClass::unlimited("rt", 1).rate_limited(10.0, 2.0)
+        ])
+        .unwrap();
+        let mut admitted = 0;
+        for _ in 0..20 {
+            if ac.decide(0, 0.0, 0.0).is_none() {
+                admitted += 1;
+            }
+        }
+        assert_eq!(admitted, 2);
+        assert_eq!(ac.stats()[0].shed_rate_limit, 18);
+        assert!(ac.decide(0, 1.0, 0.0).is_none(), "bucket must refill over time");
+        // sustained pacing at the configured rate admits everything
+        let mut ac = AdmissionController::new(vec![
+            QosClass::unlimited("rt", 1).rate_limited(10.0, 2.0)
+        ])
+        .unwrap();
+        for i in 0..50 {
+            assert!(ac.decide(0, 10.0 + i as f64 * 0.1, 0.0).is_none(), "frame {i}");
+        }
+    }
+
+    #[test]
+    fn deadline_sheds_best_effort_but_never_priority_zero() {
+        let mut ac = AdmissionController::new(vec![
+            QosClass::unlimited("recon", 0).with_deadline_ms(100.0),
+            QosClass::unlimited("bulk", 2).with_deadline_ms(100.0),
+        ])
+        .unwrap();
+        // backlog estimate way past the deadline
+        assert!(ac.decide(0, 0.0, 500.0).is_none(), "priority 0 is lossless");
+        assert_eq!(ac.decide(1, 0.0, 500.0), Some(ShedReason::Deadline));
+        assert!(ac.decide(1, 0.0, 50.0).is_none(), "under deadline admits");
+        assert_eq!(ac.stats()[1].shed_deadline, 1);
+        assert_eq!(ac.shed_total(), 1);
+    }
+
+    #[test]
+    fn parse_cli_forms() {
+        let c = QosClass::parse("recon:0").unwrap();
+        assert_eq!(c.name, "recon");
+        assert_eq!(c.priority, 0);
+        assert!(c.rate_fps.is_none() && c.deadline_ms.is_none());
+        let c = QosClass::parse("bulk:2:120:250").unwrap();
+        assert_eq!(c.rate_fps, Some(120.0));
+        assert_eq!(c.deadline_ms, Some(250.0));
+        let c = QosClass::parse("mid:1:-:300").unwrap();
+        assert!(c.rate_fps.is_none());
+        assert_eq!(c.deadline_ms, Some(300.0));
+        assert!(QosClass::parse("oops").is_err());
+        assert!(QosClass::parse(":1").is_err());
+        assert!(QosClass::parse("x:notanumber").is_err());
+    }
+
+    #[test]
+    fn stats_json_is_parseable() {
+        let mut ac = AdmissionController::new(vec![
+            QosClass::unlimited("a", 0),
+            QosClass::unlimited("b", 1).rate_limited(1.0, 1.0),
+        ])
+        .unwrap();
+        ac.decide(0, 0.0, 0.0);
+        ac.decide(1, 0.0, 0.0);
+        ac.decide(1, 0.0, 0.0);
+        let txt = ac.to_json().to_compact();
+        crate::config::json::Json::parse(&txt).unwrap();
+        assert_eq!(ac.stats()[0].admitted, 1);
+        assert_eq!(ac.stats()[1].shed_rate_limit, 1);
+    }
+}

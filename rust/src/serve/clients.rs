@@ -1,0 +1,248 @@
+//! Synthetic client streams for the serve loop.
+//!
+//! Each [`ClientSpec`] describes one hospital-style client: a frame
+//! budget, a QoS class, and an [`ArrivalProcess`] shaping *when* its
+//! frames show up. [`schedule`] expands every client deterministically
+//! (seeded) and merges the arrivals into one time-ordered sequence, which
+//! the serve loop replays — paced by its time scale — against admission
+//! control and the streaming core. Times are in **model seconds** (the
+//! load profile's own clock); the serve loop multiplies by its
+//! `time_scale` when pacing real threads, so the same profile runs at
+//! full speed on hardware and in fast-forward under the sim backend.
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// When a client's frames arrive.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at `rate_fps` (exponential inter-arrival
+    /// gaps) — steady hospital load.
+    Poisson { rate_fps: f64 },
+    /// `burst_len` back-to-back frames at `burst_fps`, then
+    /// `idle_seconds` of silence — scanner batches landing at once.
+    Burst {
+        burst_fps: f64,
+        burst_len: usize,
+        idle_seconds: f64,
+    },
+    /// Rate ramps linearly from `start_fps` to `end_fps` across the
+    /// client's frame budget — the load shift that makes online
+    /// re-planning earn its keep.
+    Ramp { start_fps: f64, end_fps: f64 },
+}
+
+impl ArrivalProcess {
+    fn validate(&self) -> Result<()> {
+        let bad = |what: &str| Err(Error::Config(format!("arrival process: {what}")));
+        match self {
+            ArrivalProcess::Poisson { rate_fps } if *rate_fps <= 0.0 => {
+                bad("poisson rate_fps must be > 0")
+            }
+            ArrivalProcess::Burst {
+                burst_fps,
+                burst_len,
+                idle_seconds,
+            } if *burst_fps <= 0.0 || *burst_len == 0 || *idle_seconds < 0.0 => {
+                bad("burst needs burst_fps > 0, burst_len > 0, idle_seconds >= 0")
+            }
+            ArrivalProcess::Ramp { start_fps, end_fps }
+                if *start_fps <= 0.0 || *end_fps <= 0.0 =>
+            {
+                bad("ramp rates must be > 0")
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+/// One synthetic client stream.
+#[derive(Debug, Clone)]
+pub struct ClientSpec {
+    /// Display name (reports).
+    pub name: String,
+    /// Index into the serve options' QoS class table.
+    pub class: usize,
+    /// Total frames this client will offer (its budget).
+    pub frames: usize,
+    pub arrivals: ArrivalProcess,
+}
+
+impl ClientSpec {
+    pub fn new(name: impl Into<String>, frames: usize, arrivals: ArrivalProcess) -> Self {
+        ClientSpec {
+            name: name.into(),
+            class: 0,
+            frames,
+            arrivals,
+        }
+    }
+
+    /// Assign the QoS class (index into [`crate::serve::ServeOptions`]'s
+    /// class table).
+    pub fn qos_class(mut self, class: usize) -> Self {
+        self.class = class;
+        self
+    }
+}
+
+/// One offered frame: model-time arrival, owning client, and the frame's
+/// sequence number within that client.
+#[derive(Debug, Clone, Copy)]
+pub struct Arrival {
+    /// Model seconds since serve start.
+    pub t: f64,
+    /// Index into the client table.
+    pub client: usize,
+    /// 0-based sequence within the client's budget.
+    pub seq: u64,
+}
+
+/// Expand every client's arrival process and merge into one time-ordered
+/// schedule. Deterministic: same clients + seed ⇒ identical schedule.
+pub fn schedule(clients: &[ClientSpec], seed: u64) -> Result<Vec<Arrival>> {
+    if clients.is_empty() {
+        return Err(Error::Config("serve needs at least one client stream".into()));
+    }
+    let mut all = Vec::new();
+    for (ci, c) in clients.iter().enumerate() {
+        c.arrivals.validate()?;
+        if c.frames == 0 {
+            return Err(Error::Config(format!(
+                "client `{}` has a zero frame budget",
+                c.name
+            )));
+        }
+        let mut rng = Rng::new(seed ^ (ci as u64).wrapping_mul(0xA076_1D64_78BD_642F));
+        let mut t = 0.0f64;
+        for seq in 0..c.frames {
+            match &c.arrivals {
+                ArrivalProcess::Poisson { rate_fps } => {
+                    // exponential gap; max() guards ln(0)
+                    let u = rng.next_f64().max(f64::MIN_POSITIVE);
+                    t += -u.ln() / rate_fps;
+                }
+                ArrivalProcess::Burst {
+                    burst_fps,
+                    burst_len,
+                    idle_seconds,
+                } => {
+                    if seq > 0 && seq % burst_len == 0 {
+                        t += idle_seconds;
+                    } else if seq > 0 {
+                        t += 1.0 / burst_fps;
+                    }
+                }
+                ArrivalProcess::Ramp { start_fps, end_fps } => {
+                    let frac = seq as f64 / c.frames.max(1) as f64;
+                    let rate = start_fps + (end_fps - start_fps) * frac;
+                    t += 1.0 / rate;
+                }
+            }
+            all.push(Arrival {
+                t,
+                client: ci,
+                seq: seq as u64,
+            });
+        }
+    }
+    // Stable order: time, then client index for simultaneous arrivals.
+    all.sort_by(|a, b| {
+        a.t.partial_cmp(&b.t)
+            .unwrap()
+            .then(a.client.cmp(&b.client))
+            .then(a.seq.cmp(&b.seq))
+    });
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_and_merged_in_time_order() {
+        let clients = vec![
+            ClientSpec::new("a", 50, ArrivalProcess::Poisson { rate_fps: 100.0 }),
+            ClientSpec::new("b", 30, ArrivalProcess::Poisson { rate_fps: 60.0 }),
+        ];
+        let s1 = schedule(&clients, 7).unwrap();
+        let s2 = schedule(&clients, 7).unwrap();
+        assert_eq!(s1.len(), 80);
+        for (x, y) in s1.iter().zip(s2.iter()) {
+            assert_eq!((x.t, x.client, x.seq), (y.t, y.client, y.seq));
+        }
+        for w in s1.windows(2) {
+            assert!(w[1].t >= w[0].t);
+        }
+        // per-client sequence numbers stay ordered after the merge
+        let a_seqs: Vec<u64> = s1.iter().filter(|a| a.client == 0).map(|a| a.seq).collect();
+        assert_eq!(a_seqs, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn poisson_mean_rate_is_approximately_nominal() {
+        let clients = vec![ClientSpec::new(
+            "p",
+            2000,
+            ArrivalProcess::Poisson { rate_fps: 200.0 },
+        )];
+        let s = schedule(&clients, 11).unwrap();
+        let span = s.last().unwrap().t;
+        let rate = 2000.0 / span;
+        assert!((120.0..320.0).contains(&rate), "observed rate {rate}");
+    }
+
+    #[test]
+    fn burst_inserts_idle_gaps() {
+        let clients = vec![ClientSpec::new(
+            "b",
+            64,
+            ArrivalProcess::Burst {
+                burst_fps: 1000.0,
+                burst_len: 16,
+                idle_seconds: 0.5,
+            },
+        )];
+        let s = schedule(&clients, 1).unwrap();
+        let gaps: Vec<f64> = s.windows(2).map(|w| w[1].t - w[0].t).collect();
+        let idles = gaps.iter().filter(|&&g| g > 0.4).count();
+        assert_eq!(idles, 3, "64 frames in 16-bursts have 3 inter-burst idles");
+    }
+
+    #[test]
+    fn ramp_intervals_shrink_toward_the_end() {
+        let clients = vec![ClientSpec::new(
+            "r",
+            100,
+            ArrivalProcess::Ramp {
+                start_fps: 50.0,
+                end_fps: 500.0,
+            },
+        )];
+        let s = schedule(&clients, 1).unwrap();
+        let first_gap = s[1].t - s[0].t;
+        let last_gap = s[99].t - s[98].t;
+        assert!(
+            last_gap < first_gap / 4.0,
+            "ramp must accelerate: first {first_gap}, last {last_gap}"
+        );
+    }
+
+    #[test]
+    fn invalid_shapes_rejected() {
+        assert!(schedule(&[], 0).is_err());
+        let zero_rate = vec![ClientSpec::new(
+            "z",
+            4,
+            ArrivalProcess::Poisson { rate_fps: 0.0 },
+        )];
+        assert!(schedule(&zero_rate, 0).is_err());
+        let zero_budget = vec![ClientSpec::new(
+            "z",
+            0,
+            ArrivalProcess::Poisson { rate_fps: 10.0 },
+        )];
+        assert!(schedule(&zero_budget, 0).is_err());
+    }
+}

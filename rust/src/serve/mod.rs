@@ -1,0 +1,564 @@
+//! The long-running serving front-end.
+//!
+//! [`crate::session::Session::run`] is a *batch* run: stream a fixed
+//! frame count, drain, exit. This module is the paper's actual
+//! deployment shape — an open-ended loop fed by concurrent synthetic
+//! client streams ([`clients`]), guarded by per-class QoS admission
+//! control ([`admission`]), observed through rolling telemetry windows
+//! ([`telemetry`]), and **re-planned online** ([`replan`]): when the
+//! windows show engines idling while load builds, the placement search
+//! runs against the observed workload and the pipeline switches to the
+//! winning spec at a frame boundary via a drain-and-switch handoff —
+//! the old [`StreamCore`](crate::pipeline::driver::StreamCore) completes
+//! every admitted frame before the new one takes over, so nothing is
+//! lost and per-client frame order is preserved.
+//!
+//! ```no_run
+//! use edgepipe::dla::DlaVersion;
+//! use edgepipe::hw;
+//! use edgepipe::pipeline::SimBackend;
+//! use edgepipe::serve::{self, ArrivalProcess, ClientSpec, ServeOptions};
+//! use edgepipe::session::Session;
+//! use std::sync::Arc;
+//!
+//! let session = Session::builder()
+//!     .workload(edgepipe::config::Workload::TwoGans, edgepipe::config::GanVariant::Cropping)
+//!     .backend(Arc::new(SimBackend::new(hw::orin()).with_time_scale(0.05)))
+//!     .build()?;
+//! let mut opts = ServeOptions::new(hw::orin(), DlaVersion::V2);
+//! opts.time_scale = 0.05;
+//! opts.clients = vec![ClientSpec::new(
+//!     "hospital-a",
+//!     512,
+//!     ArrivalProcess::Ramp { start_fps: 60.0, end_fps: 400.0 },
+//! )];
+//! let report = serve::serve(session, opts)?;
+//! println!("{} re-plan(s), p99 {:.1} ms", report.replans.len(), report.latency_ms_p99);
+//! # Ok::<(), edgepipe::Error>(())
+//! ```
+
+pub mod admission;
+pub mod clients;
+pub mod replan;
+pub mod telemetry;
+
+pub use admission::{AdmissionController, ClassStats, QosClass, ShedReason};
+pub use clients::{Arrival, ArrivalProcess, ClientSpec};
+pub use replan::{ReplanEvent, ReplanPolicy, Replanner};
+pub use telemetry::{Completion, Telemetry, WindowStats};
+
+use crate::config::json::{arr, num, obj, s, Json};
+use crate::dla::DlaVersion;
+use crate::error::{Error, Result};
+use crate::hw::SocSpec;
+use crate::pipeline::driver::{CompletionSink, PipelineReport, StreamCore};
+use crate::pipeline::plane::PlanePool;
+use crate::pipeline::source::PhantomSource;
+use crate::pipeline::spec::PipelineSpec;
+use crate::placement::score::primary_instances;
+use crate::session::Session;
+use crate::sim::timeline::{Span, Timeline};
+use replan::spec_key;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Everything the serve loop needs beyond the session's spec + backend.
+#[derive(Clone)]
+pub struct ServeOptions {
+    /// Device model used by the re-planner's virtual-time scoring (match
+    /// the backend's SoC).
+    pub soc: SocSpec,
+    pub dla_version: DlaVersion,
+    /// Client streams (at least one).
+    pub clients: Vec<ClientSpec>,
+    /// QoS class table; each client's `class` indexes into it.
+    pub qos: Vec<QosClass>,
+    pub replan: ReplanPolicy,
+    /// Wall seconds per model second of the arrival schedule. Match the
+    /// sim backend's `time_scale` to fast-forward a load profile; `0.0`
+    /// disables pacing (arrivals bound only by backpressure).
+    pub time_scale: f64,
+    pub seed: u64,
+    /// Retained completion-event tail (windows + optional record).
+    pub telemetry_capacity: usize,
+    /// Span cap on the merged serving timeline in the report. An
+    /// open-ended serve records spans per dispatch per unit; beyond this
+    /// many, further phase spans are dropped (switch markers are always
+    /// kept) and the report flags the truncation.
+    pub timeline_capacity: usize,
+}
+
+impl ServeOptions {
+    pub fn new(soc: SocSpec, dla_version: DlaVersion) -> ServeOptions {
+        ServeOptions {
+            soc,
+            dla_version,
+            clients: Vec::new(),
+            qos: vec![QosClass::unlimited("default", 0)],
+            replan: ReplanPolicy::default(),
+            time_scale: 1.0,
+            seed: 0xED6E,
+            telemetry_capacity: 1 << 16,
+            timeline_capacity: 100_000,
+        }
+    }
+}
+
+/// One spec's tenure between drain-and-switch boundaries.
+#[derive(Debug, Clone)]
+pub struct PhaseReport {
+    pub spec_key: String,
+    /// Serve-clock second the phase's core came up.
+    pub start_seconds: f64,
+    /// Unique frames completed in this phase (primary-path count).
+    pub completed: usize,
+    pub report: PipelineReport,
+}
+
+/// The serve loop's full account.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Frames presented to admission (every scheduled arrival).
+    pub offered: usize,
+    /// Frames accepted into the pipeline (`offered - shed`).
+    pub accepted: usize,
+    /// Unique frames completed on lossless paths. Conservation:
+    /// `offered == completed + shed` (and `accepted == completed`) —
+    /// drain-and-switch loses nothing.
+    pub completed: usize,
+    /// Frames refused by admission control.
+    pub shed: usize,
+    pub shed_rate_limit: usize,
+    pub shed_deadline: usize,
+    /// Whole-run latency percentiles, milliseconds.
+    pub latency_ms_p50: f64,
+    pub latency_ms_p95: f64,
+    pub latency_ms_p99: f64,
+    pub wall_seconds: f64,
+    pub windows: Vec<WindowStats>,
+    pub replans: Vec<ReplanEvent>,
+    pub phases: Vec<PhaseReport>,
+    /// Merged serving timeline on the serve clock: every phase's engine
+    /// spans plus one zero-width transition marker per unit at each
+    /// drain-and-switch boundary. Bounded by
+    /// [`ServeOptions::timeline_capacity`].
+    pub timeline: Timeline,
+    /// Phase spans were dropped because the merged timeline hit its cap
+    /// (markers are always kept).
+    pub timeline_truncated: bool,
+    /// Per-class admission outcomes.
+    pub classes: Vec<(QosClass, ClassStats)>,
+    /// Completion event tail (bounded by `telemetry_capacity`) — what the
+    /// ordering/conservation property tests inspect.
+    pub completions: Vec<Completion>,
+}
+
+impl ServeReport {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("offered", num(self.offered as f64)),
+            ("accepted", num(self.accepted as f64)),
+            ("completed", num(self.completed as f64)),
+            ("shed", num(self.shed as f64)),
+            ("shed_rate_limit", num(self.shed_rate_limit as f64)),
+            ("shed_deadline", num(self.shed_deadline as f64)),
+            ("latency_ms_p50", num(self.latency_ms_p50)),
+            ("latency_ms_p95", num(self.latency_ms_p95)),
+            ("latency_ms_p99", num(self.latency_ms_p99)),
+            ("wall_seconds", num(self.wall_seconds)),
+            ("replans", arr(self.replans.iter().map(|r| r.to_json()).collect())),
+            ("windows", arr(self.windows.iter().map(|w| w.to_json()).collect())),
+            (
+                "classes",
+                arr(self
+                    .classes
+                    .iter()
+                    .map(|(c, st)| admission::class_row(c, st))
+                    .collect()),
+            ),
+            (
+                "phases",
+                arr(self
+                    .phases
+                    .iter()
+                    .map(|p| {
+                        obj(vec![
+                            ("spec", s(&p.spec_key)),
+                            ("start_seconds", num(p.start_seconds)),
+                            ("completed", num(p.completed as f64)),
+                            ("report", p.report.to_json()),
+                        ])
+                    })
+                    .collect()),
+            ),
+            ("timeline_spans", num(self.timeline.spans.len() as f64)),
+            ("timeline_truncated", Json::Bool(self.timeline_truncated)),
+            (
+                "switch_markers",
+                num(self
+                    .timeline
+                    .spans
+                    .iter()
+                    .filter(|sp| sp.t0 == sp.t1 && sp.is_transition)
+                    .count() as f64),
+            ),
+        ])
+    }
+}
+
+/// Unique frames completed by a core so far (its primary-path count).
+fn primary_completed(completed: &[usize], spec: &PipelineSpec) -> usize {
+    let primary = primary_instances(spec.route, spec.instances.len());
+    completed
+        .iter()
+        .zip(primary.iter())
+        .filter(|(_, p)| **p)
+        .map(|(n, _)| n)
+        .sum()
+}
+
+/// Run the serve loop to the end of every client's budget. The session
+/// provides the initial spec and the backend; `opts` provides the load,
+/// the QoS policy, and the re-planning policy.
+pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
+    let (mut spec, backend) = session.into_parts();
+    let schedule = clients::schedule(&opts.clients, opts.seed)?;
+    for c in &opts.clients {
+        if c.class >= opts.qos.len() {
+            return Err(Error::Config(format!(
+                "client `{}` names QoS class {} but only {} class(es) are defined",
+                c.name,
+                c.class,
+                opts.qos.len()
+            )));
+        }
+    }
+    let mut admission = AdmissionController::new(opts.qos.clone())?;
+    let mut replanner = Replanner::new(opts.replan.clone(), opts.soc.clone(), opts.dla_version);
+    let telemetry = Arc::new(Telemetry::new(opts.telemetry_capacity));
+    let sink: Arc<dyn CompletionSink> = Arc::clone(&telemetry);
+
+    // One plane pool across all clients and all phases: drained frames
+    // park their buffers for the next arrivals regardless of spec swaps.
+    let pool = PlanePool::default();
+    let mut sources: Vec<PhantomSource> = opts
+        .clients
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            PhantomSource::new(
+                crate::imaging::phantom::PhantomConfig::default(),
+                opts.seed,
+                i,
+                c.frames,
+            )
+            .with_pool(pool.clone())
+        })
+        .collect();
+
+    let check_every = replanner.policy().check_every_frames.max(1);
+    let mut core = StreamCore::new(&spec, &backend, Some(Arc::clone(&sink)))?;
+    let mut phase_started = telemetry.now();
+    let mut phase_offset = phase_started - core.arbiter().clock_seconds();
+    // Incremental checkpoint reads: spans already inspected are never
+    // re-cloned (an open-ended serve would otherwise go quadratic).
+    let mut span_cursor = 0usize;
+
+    let mut timeline = Timeline::default();
+    let mut timeline_truncated = false;
+    // Append a drained phase's spans to the merged serve-clock timeline,
+    // bounded by the configured cap.
+    let merge_phase_timeline = |timeline: &mut Timeline,
+                                    truncated: &mut bool,
+                                    phase: &Timeline,
+                                    offset: f64| {
+        for sp in &phase.spans {
+            if timeline.spans.len() >= opts.timeline_capacity {
+                *truncated = true;
+                break;
+            }
+            timeline.push(Span {
+                t0: sp.t0 + offset,
+                t1: sp.t1 + offset,
+                ..sp.clone()
+            });
+        }
+    };
+    let mut phases: Vec<PhaseReport> = Vec::new();
+    let mut replans: Vec<ReplanEvent> = Vec::new();
+    let mut windows: Vec<WindowStats> = Vec::new();
+    let mut offered = 0usize;
+    let mut accepted = 0usize;
+    let mut completed_prev_phases = 0usize;
+    // Window bookkeeping (serve clock + model clock).
+    let mut win_t0 = telemetry.now();
+    let mut win_offered = 0usize;
+    let mut win_shed_base = 0usize;
+    let mut win_arrival_t0 = 0.0f64;
+    // Deadline-aware shedding input: max(recent p95 latency, backlog /
+    // served rate), refreshed at every checkpoint.
+    let mut est_wait_ms = 0.0f64;
+
+    // Closes the current window; returns the stats (also pushed).
+    let close_window = |windows: &mut Vec<WindowStats>,
+                        telemetry: &Telemetry,
+                        tl_busy: Vec<(String, f64)>,
+                        t0: f64,
+                        t1: f64,
+                        offered_in: usize,
+                        shed_in: usize,
+                        arrival_span: f64|
+     -> WindowStats {
+        let (completed_w, lat) = telemetry.window(t0, t1);
+        let width = (t1 - t0).max(f64::MIN_POSITIVE);
+        let ws = WindowStats {
+            t0,
+            t1,
+            completed: completed_w,
+            fps: completed_w as f64 / width,
+            latency_ms_p50: lat.p50() * 1e3,
+            latency_ms_p95: lat.percentile(95.0) * 1e3,
+            latency_ms_p99: lat.p99() * 1e3,
+            offered: offered_in,
+            shed: shed_in,
+            arrival_fps: offered_in as f64 / arrival_span.max(f64::MIN_POSITIVE),
+            engine_busy: tl_busy,
+        };
+        windows.push(ws.clone());
+        ws
+    };
+
+    let mut primary_died = false;
+    'serve: for a in &schedule {
+        // Pace to the (time-scaled) arrival schedule.
+        if opts.time_scale > 0.0 {
+            let target = a.t * opts.time_scale;
+            let now = telemetry.now();
+            if target > now {
+                std::thread::sleep(Duration::from_secs_f64(target - now));
+            }
+        }
+        offered += 1;
+        win_offered += 1;
+
+        let class = opts.clients[a.client].class;
+        match admission.decide(class, a.t, est_wait_ms) {
+            Some(_reason) => core.record_shed(),
+            None => {
+                let frame = sources[a.client]
+                    .next()
+                    .expect("schedule never exceeds a client's budget");
+                accepted += 1;
+                if !core.submit(frame) {
+                    primary_died = true;
+                    break 'serve;
+                }
+            }
+        }
+
+        // Checkpoint: close the telemetry window, maybe re-plan.
+        if offered % check_every == 0 {
+            let now = telemetry.now();
+            // Spans land at dispatch completion, so the tail since the
+            // last read covers everything overlapping this window.
+            let tail = Timeline {
+                spans: core.arbiter().spans_from(span_cursor),
+            };
+            span_cursor += tail.spans.len();
+            let busy = telemetry::engine_busy_in_window(&tail, phase_offset, win_t0, now);
+            let shed_now = admission.shed_total();
+            let ws = close_window(
+                &mut windows,
+                &telemetry,
+                busy,
+                win_t0,
+                now,
+                win_offered,
+                shed_now - win_shed_base,
+                a.t - win_arrival_t0,
+            );
+            win_t0 = now;
+            win_offered = 0;
+            win_shed_base = shed_now;
+            win_arrival_t0 = a.t;
+
+            // Backlog (unique frames) + wait estimate for deadline sheds.
+            let phase_primary = primary_completed(&core.completed_frames(), &spec);
+            let backlog = core.submitted().saturating_sub(phase_primary);
+            let copies = spec.route.copies_per_frame(spec.instances.len());
+            let unique_fps = ws.fps / copies as f64;
+            let backlog_wait_ms = if unique_fps > 0.0 {
+                backlog as f64 / unique_fps * 1e3
+            } else {
+                0.0
+            };
+            // Deadlines are *model-time* milliseconds: convert the
+            // wall-clock estimate so a fast-forwarded sim run sheds the
+            // same frames a real-time run would.
+            let wall_to_model = if opts.time_scale > 0.0 {
+                1.0 / opts.time_scale
+            } else {
+                1.0
+            };
+            est_wait_ms = if ws.completed > 0 {
+                ws.latency_ms_p95.max(backlog_wait_ms) * wall_to_model
+            } else {
+                backlog_wait_ms * wall_to_model
+            };
+
+            if let Some(prop) = replanner.consider(&spec, &ws, backlog)? {
+                // ---- drain-and-switch ----
+                let mut report = core.finish()?; // every admitted frame lands
+                merge_phase_timeline(
+                    &mut timeline,
+                    &mut timeline_truncated,
+                    &report.timeline,
+                    phase_offset,
+                );
+                // The drain itself can take a while under backlog; those
+                // completions belong to the OLD spec and must not fall in
+                // a window gap — close a drain window over [checkpoint,
+                // drain end] when anything completed in it.
+                let t_drained = telemetry.now();
+                if telemetry.window(win_t0, t_drained).0 > 0 {
+                    let drain_busy = telemetry::engine_busy_in_window(
+                        &report.timeline,
+                        phase_offset,
+                        win_t0,
+                        t_drained,
+                    );
+                    close_window(
+                        &mut windows,
+                        &telemetry,
+                        drain_busy,
+                        win_t0,
+                        t_drained,
+                        0,
+                        0,
+                        0.0,
+                    );
+                }
+                let phase_completed = primary_completed(
+                    &report.instances.iter().map(|i| i.frames).collect::<Vec<_>>(),
+                    &spec,
+                );
+                completed_prev_phases += phase_completed;
+                // The phase's spans now live (bounded) in the merged
+                // timeline; retaining them twice would double memory.
+                report.timeline = Timeline::default();
+                phases.push(PhaseReport {
+                    spec_key: spec_key(&spec),
+                    start_seconds: phase_started,
+                    completed: phase_completed,
+                    report,
+                });
+
+                let t_switch = telemetry.now();
+                // Zero-width transition markers record the handoff on
+                // every unit's timeline row.
+                for (kind, unit) in telemetry::soc_units() {
+                    timeline.push(Span {
+                        engine: kind,
+                        unit,
+                        instance: 0,
+                        frame: offered,
+                        t0: t_switch,
+                        t1: t_switch,
+                        is_transition: true,
+                    });
+                }
+                // Graft the serve's stream shape onto the planned spec.
+                let mut next = prop.spec;
+                next.frames = spec.frames;
+                next.streams = spec.streams;
+                next.queue_depth = spec.queue_depth;
+                next.seed = spec.seed;
+                replans.push(ReplanEvent {
+                    at_frame: offered,
+                    at_seconds: t_switch,
+                    from_key: spec_key(&spec),
+                    to_key: spec_key(&next),
+                    predicted_fps_before: prop.predicted_fps_before,
+                    predicted_fps_after: prop.predicted_fps_after,
+                    reason: prop.reason,
+                });
+                spec = next;
+                core = StreamCore::new(&spec, &backend, Some(Arc::clone(&sink)))?;
+                phase_started = telemetry.now();
+                phase_offset = phase_started - core.arbiter().clock_seconds();
+                span_cursor = 0;
+                win_t0 = phase_started;
+            }
+        }
+    }
+
+    // Final drain (also where a dead primary worker's error surfaces).
+    let final_report = core.finish();
+    if primary_died {
+        // The worker's own error is the interesting one; a clean join
+        // despite a dead primary would be a coordinator bug.
+        return Err(final_report.err().unwrap_or_else(|| {
+            Error::Pipeline("primary worker queue closed without a worker error".into())
+        }));
+    }
+    let mut report = final_report?;
+    merge_phase_timeline(
+        &mut timeline,
+        &mut timeline_truncated,
+        &report.timeline,
+        phase_offset,
+    );
+    let phase_completed = primary_completed(
+        &report.instances.iter().map(|i| i.frames).collect::<Vec<_>>(),
+        &spec,
+    );
+    let completed = completed_prev_phases + phase_completed;
+    report.timeline = Timeline::default();
+    phases.push(PhaseReport {
+        spec_key: spec_key(&spec),
+        start_seconds: phase_started,
+        completed: phase_completed,
+        report,
+    });
+
+    // Tail window over the drain (merged timeline is already serve-clock).
+    let end = telemetry.now();
+    let shed_total = admission.shed_total();
+    let busy = telemetry::engine_busy_in_window(&timeline, 0.0, win_t0, end);
+    close_window(
+        &mut windows,
+        &telemetry,
+        busy,
+        win_t0,
+        end,
+        win_offered,
+        shed_total - win_shed_base,
+        schedule.last().map(|a| a.t - win_arrival_t0).unwrap_or(0.0),
+    );
+
+    debug_assert_eq!(offered, accepted + shed_total);
+    Ok(ServeReport {
+        offered,
+        accepted,
+        completed,
+        shed: shed_total,
+        shed_rate_limit: admission.stats().iter().map(|s| s.shed_rate_limit).sum(),
+        shed_deadline: admission.stats().iter().map(|s| s.shed_deadline).sum(),
+        latency_ms_p50: telemetry.latency_ms_percentile(50.0),
+        latency_ms_p95: telemetry.latency_ms_percentile(95.0),
+        latency_ms_p99: telemetry.latency_ms_percentile(99.0),
+        wall_seconds: end,
+        windows,
+        replans,
+        phases,
+        timeline,
+        timeline_truncated,
+        classes: opts
+            .qos
+            .iter()
+            .cloned()
+            .zip(admission.stats().iter().cloned())
+            .collect(),
+        completions: telemetry.completions(),
+    })
+}

@@ -1,0 +1,398 @@
+//! Online re-planning: make the placement planner load-bearing at
+//! *runtime*, not just at plan time.
+//!
+//! A [`Replanner`] is consulted at frame-boundary checkpoints with the
+//! latest telemetry window. When the window shows exploitable slack or
+//! distress — engines sitting idle while a backlog builds, or offered
+//! load outrunning served throughput — it re-invokes the
+//! [`crate::placement`] search *against the observed load profile*
+//! ([`PlacementRequest::for_spec`] keeps the workload shape, widening the
+//! batch axis under backlog) and proposes a switch when the best
+//! candidate's predicted FPS beats the current spec's by at least
+//! `min_gain`. The serve loop then performs the drain-and-switch handoff:
+//! the old core drains every admitted frame, the new core takes over at
+//! the next frame boundary, and the [`ReplanEvent`] is recorded in both
+//! the report and the merged serving timeline.
+
+use crate::config::json::{num, obj, s, Json};
+use crate::dla::DlaVersion;
+use crate::error::Result;
+use crate::hw::SocSpec;
+use crate::pipeline::spec::PipelineSpec;
+use crate::placement::{self, PlacementRequest};
+
+use super::telemetry::WindowStats;
+
+/// When and how eagerly to re-plan.
+#[derive(Debug, Clone)]
+pub struct ReplanPolicy {
+    pub enabled: bool,
+    /// Offered frames between checkpoints (also the telemetry window).
+    pub check_every_frames: usize,
+    /// Fractional predicted-FPS gain required to switch (0.10 = 10%).
+    pub min_gain: f64,
+    /// Mean unit idle fraction above which the search is (re)triggered.
+    pub idle_frac_threshold: f64,
+    /// Checkpoints to sit out after a switch (let the new spec settle).
+    pub cooldown_checks: usize,
+    /// Test/bench hook: unconditionally drain-and-switch every N
+    /// checkpoints (to the *same* spec when planning finds nothing
+    /// better), exercising the handoff machinery without load shaping.
+    pub force_every_checks: Option<usize>,
+}
+
+impl Default for ReplanPolicy {
+    fn default() -> Self {
+        ReplanPolicy {
+            enabled: true,
+            check_every_frames: 256,
+            min_gain: 0.10,
+            idle_frac_threshold: 0.30,
+            cooldown_checks: 1,
+            force_every_checks: None,
+        }
+    }
+}
+
+impl ReplanPolicy {
+    pub fn disabled() -> Self {
+        ReplanPolicy {
+            enabled: false,
+            ..ReplanPolicy::default()
+        }
+    }
+}
+
+/// One executed drain-and-switch, for the report and the timeline.
+#[derive(Debug, Clone)]
+pub struct ReplanEvent {
+    /// Offered-frame count at the switch boundary.
+    pub at_frame: usize,
+    /// Serve-clock seconds at the switch.
+    pub at_seconds: f64,
+    pub from_key: String,
+    pub to_key: String,
+    /// Virtual-time predicted FPS of the outgoing spec.
+    pub predicted_fps_before: f64,
+    /// Predicted FPS of the incoming spec.
+    pub predicted_fps_after: f64,
+    /// Trigger description (`idle 0.62 >= 0.30`, `forced`, ...).
+    pub reason: String,
+}
+
+impl ReplanEvent {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("at_frame", num(self.at_frame as f64)),
+            ("at_seconds", num(self.at_seconds)),
+            ("from", s(&self.from_key)),
+            ("to", s(&self.to_key)),
+            ("predicted_fps_before", num(self.predicted_fps_before)),
+            ("predicted_fps_after", num(self.predicted_fps_after)),
+            ("reason", s(&self.reason)),
+        ])
+    }
+}
+
+/// Identity of a spec's *placement-relevant* shape: what runs where with
+/// what batching under which route. Stream shape (frames/seed/depth) is
+/// excluded — the serve loop carries it across switches unchanged.
+pub fn spec_key(spec: &PipelineSpec) -> String {
+    let mut parts: Vec<String> = spec
+        .instances
+        .iter()
+        .map(|i| {
+            format!(
+                "{}@{}x{}",
+                i.artifact,
+                i.engine.unit_label(i.engine_index),
+                i.batch.max_batch
+            )
+        })
+        .collect();
+    parts.sort();
+    format!("{}|{}", spec.route.name(), parts.join("+"))
+}
+
+/// A proposed switch: the new spec (stream shape NOT yet grafted) plus
+/// the event skeleton.
+pub struct Proposal {
+    pub spec: PipelineSpec,
+    pub predicted_fps_before: f64,
+    pub predicted_fps_after: f64,
+    pub reason: String,
+}
+
+/// The controller. One per serve; consulted at checkpoints.
+pub struct Replanner {
+    policy: ReplanPolicy,
+    soc: SocSpec,
+    dla_version: DlaVersion,
+    checks: usize,
+    cooldown: usize,
+    /// Spec key a search already failed to improve on. Structural idle
+    /// (a GAN-only spec always leaves the GPU cold) would otherwise pay
+    /// a full placement search every checkpoint forever; while the spec
+    /// is settled, only a materially *worse* backlog re-opens the search.
+    settled_key: Option<String>,
+    /// Backlog observed when the spec settled — sustained overload at a
+    /// steady backlog (backpressure plateaus it) must not re-run the
+    /// search every checkpoint on the admission thread.
+    settled_backlog: usize,
+}
+
+impl Replanner {
+    pub fn new(policy: ReplanPolicy, soc: SocSpec, dla_version: DlaVersion) -> Replanner {
+        Replanner {
+            policy,
+            soc,
+            dla_version,
+            checks: 0,
+            cooldown: 0,
+            settled_key: None,
+            settled_backlog: 0,
+        }
+    }
+
+    pub fn policy(&self) -> &ReplanPolicy {
+        &self.policy
+    }
+
+    /// Consult at a checkpoint. `backlog` is admitted-but-uncompleted
+    /// frames. Returns a proposal when the serve loop should switch.
+    pub fn consider(
+        &mut self,
+        spec: &PipelineSpec,
+        window: &WindowStats,
+        backlog: usize,
+    ) -> Result<Option<Proposal>> {
+        if !self.policy.enabled {
+            return Ok(None);
+        }
+        self.checks += 1;
+
+        if let Some(every) = self.policy.force_every_checks {
+            if every > 0 && self.checks % every == 0 {
+                // Forced handoff: re-plan if possible, otherwise switch to
+                // an identical spec — the drain-and-switch path runs
+                // either way (what the property tests exercise).
+                let next = self.plan_for(spec, backlog)?.unwrap_or_else(|| spec.clone());
+                return Ok(Some(Proposal {
+                    spec: next,
+                    predicted_fps_before: 0.0,
+                    predicted_fps_after: 0.0,
+                    reason: "forced".into(),
+                }));
+            }
+        }
+
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return Ok(None);
+        }
+
+        // Trigger: engines idling, or offered load outrunning service.
+        let idle = window.idle_frac();
+        let backlogged = backlog > self.policy.check_every_frames / 2;
+        let key = spec_key(spec);
+        let settled = self.settled_key.as_deref() == Some(key.as_str());
+        // A settled spec re-opens only when the backlog has materially
+        // worsened since the search last came up empty — a steady
+        // overload plateau must not pay the search every checkpoint.
+        let distress = backlogged
+            && (!settled
+                || backlog > (self.settled_backlog.saturating_mul(2))
+                    .max(self.policy.check_every_frames));
+        let reason = if distress {
+            format!("backlog {backlog} frames")
+        } else if idle >= self.policy.idle_frac_threshold && !settled {
+            format!("idle {:.2} >= {:.2}", idle, self.policy.idle_frac_threshold)
+        } else {
+            return Ok(None);
+        };
+
+        let Some(planned) = self.plan_for(spec, backlog)? else {
+            // Nothing plannable in this spec: never search it again.
+            self.settled_key = Some(key);
+            self.settled_backlog = backlog;
+            return Ok(None);
+        };
+        // Price both sides with the same virtual-time scorer.
+        if spec_key(&planned) != key {
+            let window_frames = self.policy.check_every_frames.clamp(16, 128);
+            let current = placement::evaluate(spec, &self.soc, window_frames)?;
+            let next = placement::evaluate(&planned, &self.soc, window_frames)?;
+            if next.predicted_fps > current.predicted_fps * (1.0 + self.policy.min_gain) {
+                self.cooldown = self.policy.cooldown_checks;
+                self.settled_key = None;
+                return Ok(Some(Proposal {
+                    spec: planned,
+                    predicted_fps_before: current.predicted_fps,
+                    predicted_fps_after: next.predicted_fps,
+                    reason,
+                }));
+            }
+        }
+        // The search found nothing better: the spec is settled until it
+        // changes or the backlog materially worsens.
+        self.settled_key = Some(key);
+        self.settled_backlog = backlog;
+        Ok(None)
+    }
+
+    /// Run the placement search for the observed workload shape; `None`
+    /// when the spec has nothing plannable (no GAN instances).
+    fn plan_for(&self, spec: &PipelineSpec, backlog: usize) -> Result<Option<PipelineSpec>> {
+        let Some(mut req) =
+            PlacementRequest::for_spec(spec, self.soc.clone(), self.dla_version)
+        else {
+            return Ok(None);
+        };
+        req.frames = self.policy.check_every_frames.clamp(16, 128);
+        if backlog > self.policy.check_every_frames {
+            // Deep backlog: open the batching axis — amortized dispatch is
+            // how a saturated engine claws throughput back.
+            if !req.max_batches.contains(&8) {
+                req.max_batches.push(8);
+            }
+        }
+        Ok(Some(placement::plan(&req)?.spec))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{orin, EngineKind};
+    use crate::pipeline::router::RoutePolicy;
+    use crate::pipeline::spec::InstanceSpec;
+
+    fn window(idle_busy: &[(&str, f64)]) -> WindowStats {
+        WindowStats {
+            t0: 0.0,
+            t1: 1.0,
+            completed: 100,
+            fps: 100.0,
+            latency_ms_p50: 5.0,
+            latency_ms_p95: 9.0,
+            latency_ms_p99: 10.0,
+            offered: 100,
+            shed: 0,
+            arrival_fps: 100.0,
+            engine_busy: idle_busy
+                .iter()
+                .map(|(l, b)| (l.to_string(), *b))
+                .collect(),
+        }
+    }
+
+    fn same_dla0_pair() -> PipelineSpec {
+        PipelineSpec {
+            instances: vec![
+                InstanceSpec::new("g0", "gen_cropping").on_engine_unit(EngineKind::Dla, 0),
+                InstanceSpec::new("g1", "gen_cropping").on_engine_unit(EngineKind::Dla, 0),
+            ],
+            route: RoutePolicy::RoundRobin,
+            ..PipelineSpec::default()
+        }
+    }
+
+    #[test]
+    fn spec_key_ignores_stream_shape_but_sees_placement() {
+        let a = same_dla0_pair();
+        let mut b = same_dla0_pair();
+        b.frames = 9999;
+        b.seed = 1;
+        assert_eq!(spec_key(&a), spec_key(&b));
+        let mut c = same_dla0_pair();
+        c.instances[1].engine_index = 1;
+        assert_ne!(spec_key(&a), spec_key(&c));
+        let mut d = same_dla0_pair();
+        d.instances[0].batch.max_batch = 4;
+        assert_ne!(spec_key(&a), spec_key(&d));
+    }
+
+    #[test]
+    fn idle_engines_trigger_a_better_placement() {
+        // Both GANs pinned to DLA0: GPU and DLA1 sit idle. The planner
+        // must find a split placement with a large predicted gain.
+        let mut rp = Replanner::new(ReplanPolicy::default(), orin(), DlaVersion::V2);
+        let spec = same_dla0_pair();
+        let w = window(&[("GPU", 0.0), ("DLA0", 0.95), ("DLA1", 0.0)]);
+        let prop = rp
+            .consider(&spec, &w, 0)
+            .unwrap()
+            .expect("idle units with a plannable gain must propose a switch");
+        assert!(prop.predicted_fps_after > prop.predicted_fps_before * 1.5);
+        assert_ne!(spec_key(&prop.spec), spec_key(&spec));
+        assert!(prop.reason.contains("idle"));
+        // cooldown: the very next checkpoint stays quiet
+        assert!(rp.consider(&spec, &w, 0).unwrap().is_none());
+    }
+
+    #[test]
+    fn planner_optimal_spec_settles_under_structural_idle() {
+        // A GAN-only spec always leaves the GPU cold, so idle_frac stays
+        // above the threshold forever. Once a search confirms there is
+        // nothing better, idle-only checkpoints must stop proposing (and
+        // stop burning placement searches) until a backlog reappears.
+        let req = PlacementRequest::for_spec(
+            &same_dla0_pair(),
+            orin(),
+            DlaVersion::V2,
+        )
+        .unwrap();
+        let best = placement::plan(&req).unwrap().spec;
+        let mut rp = Replanner::new(
+            ReplanPolicy {
+                cooldown_checks: 0,
+                ..ReplanPolicy::default()
+            },
+            orin(),
+            DlaVersion::V2,
+        );
+        let idle = window(&[("GPU", 0.0), ("DLA0", 0.9), ("DLA1", 0.9)]);
+        for _ in 0..4 {
+            assert!(
+                rp.consider(&best, &idle, 0).unwrap().is_none(),
+                "the already-optimal spec must not thrash"
+            );
+        }
+    }
+
+    #[test]
+    fn busy_balanced_serving_does_not_thrash() {
+        let mut rp = Replanner::new(ReplanPolicy::default(), orin(), DlaVersion::V2);
+        let spec = same_dla0_pair();
+        let w = window(&[("GPU", 0.9), ("DLA0", 0.9), ("DLA1", 0.9)]);
+        assert!(rp.consider(&spec, &w, 0).unwrap().is_none(), "no idle, no backlog");
+    }
+
+    #[test]
+    fn disabled_and_unplannable_specs_stay_put() {
+        let mut rp = Replanner::new(ReplanPolicy::disabled(), orin(), DlaVersion::V2);
+        let w = window(&[("GPU", 0.0), ("DLA0", 0.0), ("DLA1", 0.0)]);
+        assert!(rp.consider(&same_dla0_pair(), &w, 10_000).unwrap().is_none());
+        // detector-only spec: nothing for the planner to place
+        let mut rp = Replanner::new(ReplanPolicy::default(), orin(), DlaVersion::V2);
+        let yolo_only = PipelineSpec {
+            instances: vec![InstanceSpec::new("y", "yolo_lite")],
+            ..PipelineSpec::default()
+        };
+        assert!(rp.consider(&yolo_only, &w, 10_000).unwrap().is_none());
+    }
+
+    #[test]
+    fn forced_switch_fires_even_without_pressure() {
+        let policy = ReplanPolicy {
+            force_every_checks: Some(2),
+            ..ReplanPolicy::default()
+        };
+        let mut rp = Replanner::new(policy, orin(), DlaVersion::V2);
+        let spec = same_dla0_pair();
+        let quiet = window(&[("GPU", 1.0), ("DLA0", 1.0), ("DLA1", 1.0)]);
+        assert!(rp.consider(&spec, &quiet, 0).unwrap().is_none());
+        let prop = rp.consider(&spec, &quiet, 0).unwrap().expect("every 2nd check forces");
+        assert_eq!(prop.reason, "forced");
+    }
+}

@@ -1,0 +1,319 @@
+//! Rolling serve telemetry.
+//!
+//! A [`Telemetry`] hub implements the driver's
+//! [`CompletionSink`](crate::pipeline::CompletionSink): every worker
+//! reports each finished frame, and the serve loop derives *windowed*
+//! statistics from the retained event tail — FPS, latency percentiles
+//! (p50/p95/p99), and per-engine busy fractions cut from the
+//! [`EngineArbiter`](crate::pipeline::engines::EngineArbiter)'s live
+//! timeline. Windows are what the online re-planner watches: full-run
+//! aggregates would smear a load shift into invisibility.
+
+use crate::config::json::{arr, num, obj, s, Json};
+use crate::hw::EngineKind;
+use crate::pipeline::driver::CompletionSink;
+use crate::sim::timeline::Timeline;
+use crate::util::stats::Summary;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One completed frame, on the telemetry clock.
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    /// Instance index within the then-active spec.
+    pub instance: usize,
+    /// Source client stream.
+    pub stream: usize,
+    /// Frame id within its stream.
+    pub frame_id: u64,
+    /// Completion time, seconds since telemetry epoch (wall clock).
+    pub t: f64,
+    /// Admission-to-completion latency, seconds.
+    pub latency_s: f64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    /// Retained completion tail (ring, capped).
+    events: VecDeque<Completion>,
+    /// Monotonic completion count (never truncated).
+    completed: usize,
+    /// Full-run latency accumulator (exact percentiles at report time).
+    latency: Summary,
+}
+
+/// Thread-safe completion hub shared by every worker across every
+/// drain-and-switch phase — counters and latency aggregates survive spec
+/// swaps, which is what makes cross-phase conservation checkable.
+#[derive(Debug)]
+pub struct Telemetry {
+    epoch: Instant,
+    cap: usize,
+    inner: Mutex<Inner>,
+}
+
+impl Telemetry {
+    /// `cap` bounds the retained event tail (windowed queries and the
+    /// optional completion record); counters and the latency summary are
+    /// unaffected by the cap.
+    pub fn new(cap: usize) -> Telemetry {
+        Telemetry {
+            epoch: Instant::now(),
+            cap: cap.max(1),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// Seconds since telemetry epoch (the serve clock).
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    pub fn total_completed(&self) -> usize {
+        self.inner.lock().unwrap().completed
+    }
+
+    /// Full-run latency percentile in milliseconds.
+    pub fn latency_ms_percentile(&self, q: f64) -> f64 {
+        self.inner.lock().unwrap().latency.percentile(q) * 1e3
+    }
+
+    /// Copy of the retained completion tail (oldest first).
+    pub fn completions(&self) -> Vec<Completion> {
+        self.inner.lock().unwrap().events.iter().copied().collect()
+    }
+
+    /// Completion statistics over the wall-time window `(t0, t1]`.
+    pub fn window(&self, t0: f64, t1: f64) -> (usize, Summary) {
+        let inner = self.inner.lock().unwrap();
+        let mut lat = Summary::new();
+        let mut completed = 0;
+        // events are time-ordered; scan the tail backwards
+        for ev in inner.events.iter().rev() {
+            if ev.t <= t0 {
+                break;
+            }
+            if ev.t <= t1 {
+                completed += 1;
+                lat.add(ev.latency_s);
+            }
+        }
+        (completed, lat)
+    }
+}
+
+impl CompletionSink for Telemetry {
+    fn completed(&self, instance: usize, stream: usize, frame_id: u64, latency_s: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        // Stamp *inside* the lock: stamping before it would let a
+        // preempted worker append a stale timestamp after a newer one,
+        // breaking the time-ordering `window()`'s reverse scan relies on.
+        let t = self.now();
+        inner.completed += 1;
+        inner.latency.add(latency_s);
+        if inner.events.len() == self.cap {
+            inner.events.pop_front();
+        }
+        inner.events.push_back(Completion {
+            instance,
+            stream,
+            frame_id,
+            t,
+            latency_s,
+        });
+    }
+}
+
+/// One telemetry window snapshot — the serve report's time series and the
+/// re-planner's input.
+#[derive(Debug, Clone)]
+pub struct WindowStats {
+    /// Window bounds, seconds on the serve clock.
+    pub t0: f64,
+    pub t1: f64,
+    /// Frames completed in the window (all instances).
+    pub completed: usize,
+    /// Completions per wall second.
+    pub fps: f64,
+    pub latency_ms_p50: f64,
+    pub latency_ms_p95: f64,
+    pub latency_ms_p99: f64,
+    /// Frames offered to admission in the window.
+    pub offered: usize,
+    /// Frames admission-shed in the window.
+    pub shed: usize,
+    /// Offered arrival rate in *model* fps (the load profile's clock).
+    pub arrival_fps: f64,
+    /// Busy fraction per physical unit over the window, **all SoC units**
+    /// — units the current spec leaves unused report `0.0`, which is
+    /// precisely the idle capacity the re-planner hunts for.
+    pub engine_busy: Vec<(String, f64)>,
+}
+
+impl WindowStats {
+    /// Mean idle fraction across the SoC's units (1 − mean busy): the
+    /// re-planner's primary trigger signal.
+    pub fn idle_frac(&self) -> f64 {
+        if self.engine_busy.is_empty() {
+            return 0.0;
+        }
+        let busy: f64 = self.engine_busy.iter().map(|(_, b)| b).sum();
+        (1.0 - busy / self.engine_busy.len() as f64).max(0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("t0", num(self.t0)),
+            ("t1", num(self.t1)),
+            ("completed", num(self.completed as f64)),
+            ("fps", num(self.fps)),
+            ("latency_ms_p50", num(self.latency_ms_p50)),
+            ("latency_ms_p95", num(self.latency_ms_p95)),
+            ("latency_ms_p99", num(self.latency_ms_p99)),
+            ("offered", num(self.offered as f64)),
+            ("shed", num(self.shed as f64)),
+            ("arrival_fps", num(self.arrival_fps)),
+            ("idle_frac", num(self.idle_frac())),
+            (
+                "engines",
+                arr(self
+                    .engine_busy
+                    .iter()
+                    .map(|(label, busy)| {
+                        obj(vec![("unit", s(label)), ("busy_frac", num(*busy))])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+/// The SoC's schedulable units (GPU + both DLA cores) — the full set a
+/// windowed utilization must cover so unused engines show up as idle.
+pub fn soc_units() -> Vec<(EngineKind, usize)> {
+    let mut units = Vec::new();
+    for kind in [EngineKind::Gpu, EngineKind::Dla] {
+        for u in 0..kind.units() {
+            units.push((kind, u));
+        }
+    }
+    units
+}
+
+/// Per-unit busy fraction over the serve-clock window `(t0, t1)`, from an
+/// arbiter timeline whose spans are offset by `offset` seconds relative
+/// to the serve clock. Transitions count as busy (the unit is occupied).
+pub fn engine_busy_in_window(
+    tl: &Timeline,
+    offset: f64,
+    t0: f64,
+    t1: f64,
+) -> Vec<(String, f64)> {
+    let width = (t1 - t0).max(f64::MIN_POSITIVE);
+    soc_units()
+        .into_iter()
+        .map(|(kind, unit)| {
+            let busy: f64 = tl
+                .spans
+                .iter()
+                .filter(|sp| sp.engine == kind && sp.unit == unit)
+                .map(|sp| {
+                    let a = (sp.t0 + offset).max(t0);
+                    let b = (sp.t1 + offset).min(t1);
+                    (b - a).max(0.0)
+                })
+                .sum();
+            (kind.unit_label(unit), (busy / width).min(1.0))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::timeline::Span;
+
+    fn span(kind: EngineKind, unit: usize, t0: f64, t1: f64) -> Span {
+        Span {
+            engine: kind,
+            unit,
+            instance: 0,
+            frame: 0,
+            t0,
+            t1,
+            is_transition: false,
+        }
+    }
+
+    #[test]
+    fn completions_feed_windows_and_totals() {
+        let t = Telemetry::new(1024);
+        for i in 0..10u64 {
+            t.completed(0, 0, i, 0.004);
+        }
+        assert_eq!(t.total_completed(), 10);
+        let (n, lat) = t.window(0.0, t.now() + 1.0);
+        assert_eq!(n, 10);
+        assert!((lat.p50() - 0.004).abs() < 1e-9);
+        assert!(t.latency_ms_percentile(99.0) > 0.0);
+        // a window strictly in the future is empty
+        let (n, _) = t.window(t.now() + 10.0, t.now() + 20.0);
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn event_tail_is_capped_but_counters_are_not() {
+        let t = Telemetry::new(4);
+        for i in 0..10u64 {
+            t.completed(0, 0, i, 0.001);
+        }
+        assert_eq!(t.completions().len(), 4);
+        assert_eq!(t.completions()[0].frame_id, 6);
+        assert_eq!(t.total_completed(), 10);
+    }
+
+    #[test]
+    fn unused_units_report_zero_busy() {
+        let mut tl = Timeline::default();
+        tl.push(span(EngineKind::Dla, 0, 0.0, 1.0));
+        let busy = engine_busy_in_window(&tl, 0.0, 0.0, 1.0);
+        assert_eq!(busy.len(), 3, "GPU + both DLA cores");
+        let get = |label: &str| {
+            busy.iter()
+                .find(|(l, _)| l == label)
+                .map(|(_, b)| *b)
+                .unwrap()
+        };
+        assert!((get("DLA0") - 1.0).abs() < 1e-9);
+        assert_eq!(get("DLA1"), 0.0);
+        assert_eq!(get("GPU"), 0.0);
+        let ws = WindowStats {
+            t0: 0.0,
+            t1: 1.0,
+            completed: 1,
+            fps: 1.0,
+            latency_ms_p50: 1.0,
+            latency_ms_p95: 1.0,
+            latency_ms_p99: 1.0,
+            offered: 1,
+            shed: 0,
+            arrival_fps: 1.0,
+            engine_busy: busy,
+        };
+        // 2 of 3 units idle -> idle fraction 2/3
+        assert!((ws.idle_frac() - 2.0 / 3.0).abs() < 1e-9);
+        crate::config::json::Json::parse(&ws.to_json().to_compact()).unwrap();
+    }
+
+    #[test]
+    fn window_clips_spans_and_applies_offset() {
+        let mut tl = Timeline::default();
+        // span [0, 2] on the core clock; phase offset +1 -> [1, 3] serve
+        tl.push(span(EngineKind::Gpu, 0, 0.0, 2.0));
+        let busy = engine_busy_in_window(&tl, 1.0, 2.0, 4.0);
+        let gpu = busy.iter().find(|(l, _)| l == "GPU").unwrap().1;
+        // overlap of [1,3] with (2,4) is 1 of 2 seconds
+        assert!((gpu - 0.5).abs() < 1e-9);
+    }
+}

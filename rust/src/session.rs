@@ -76,6 +76,14 @@ impl Session {
     pub fn run(&self) -> Result<PipelineReport> {
         driver::execute(&self.spec, &self.backend)
     }
+
+    /// Decompose into the validated spec and the bound backend — the
+    /// handoff the long-running [`crate::serve`] front-end uses: it keeps
+    /// the backend for the whole serve and swaps *specs* across
+    /// drain-and-switch re-plans.
+    pub fn into_parts(self) -> (PipelineSpec, Arc<dyn InferenceBackend>) {
+        (self.spec, self.backend)
+    }
 }
 
 /// Composable builder for [`Session`]s.

@@ -1,0 +1,205 @@
+//! Integration: the long-running serve front-end on the `SimBackend` —
+//! QoS admission, rolling telemetry windows, and **online re-planning**
+//! with drain-and-switch spec handoff. No artifacts on disk; runs in CI
+//! after a bare checkout.
+
+use edgepipe::dla::DlaVersion;
+use edgepipe::hw::{self, EngineKind};
+use edgepipe::pipeline::router::RoutePolicy;
+use edgepipe::pipeline::{InstanceSpec, SimBackend};
+use edgepipe::serve::{self, ArrivalProcess, ClientSpec, QosClass, ReplanPolicy, ServeOptions};
+use edgepipe::session::Session;
+use std::sync::Arc;
+
+/// A deliberately naive placement: both reconstruction GANs pinned to
+/// DLA0 (serialized), the GPU and DLA1 idle — the allocation the online
+/// re-planner exists to fix.
+fn naive_same_dla_session(time_scale: f64) -> Session {
+    Session::builder()
+        .instance(InstanceSpec::new("g0", "gen_cropping").on_engine_unit(EngineKind::Dla, 0))
+        .instance(InstanceSpec::new("g1", "gen_cropping").on_engine_unit(EngineKind::Dla, 0))
+        .route(RoutePolicy::RoundRobin)
+        .streams(2)
+        .backend(Arc::new(SimBackend::new(hw::orin()).with_time_scale(time_scale)))
+        .build()
+        .unwrap()
+}
+
+/// The acceptance scenario: a ramp load profile over the naive placement
+/// must trigger at least one online re-plan, and the windowed FPS after
+/// the switch must beat the windows served on the initial spec.
+#[test]
+fn ramp_load_triggers_replan_that_lifts_windowed_fps() {
+    let time_scale = 0.05;
+    let session = naive_same_dla_session(time_scale);
+    let mut opts = ServeOptions::new(hw::orin(), DlaVersion::V2);
+    opts.time_scale = time_scale;
+    opts.replan = ReplanPolicy {
+        check_every_frames: 128,
+        ..ReplanPolicy::default()
+    };
+    for i in 0..2 {
+        opts.clients.push(ClientSpec::new(
+            format!("hospital-{i}"),
+            320,
+            ArrivalProcess::Ramp {
+                start_fps: 30.0,
+                end_fps: 250.0,
+            },
+        ));
+    }
+    let rep = serve::serve(session, opts).unwrap();
+
+    assert!(
+        !rep.replans.is_empty(),
+        "idle GPU/DLA1 under a ramp must trigger at least one re-plan"
+    );
+    let first = &rep.replans[0];
+    assert_ne!(first.from_key, first.to_key, "a real switch changes the spec");
+    assert!(
+        first.predicted_fps_after > first.predicted_fps_before,
+        "the planner only switches for a predicted gain ({} -> {})",
+        first.predicted_fps_before,
+        first.predicted_fps_after
+    );
+
+    // Windowed FPS: post-switch windows must beat pre-switch windows.
+    let pre: Vec<f64> = rep
+        .windows
+        .iter()
+        .filter(|w| w.t1 <= first.at_seconds && w.completed > 0)
+        .map(|w| w.fps)
+        .collect();
+    let post: Vec<f64> = rep
+        .windows
+        .iter()
+        .filter(|w| w.t0 >= first.at_seconds && w.completed > 0)
+        .map(|w| w.fps)
+        .collect();
+    assert!(
+        !pre.is_empty() && !post.is_empty(),
+        "need windows on both sides of the switch: {} pre, {} post",
+        pre.len(),
+        post.len()
+    );
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    assert!(
+        mean(&post) > mean(&pre) * 1.2,
+        "re-planned windows must serve faster: pre {:.1} fps, post {:.1} fps",
+        mean(&pre),
+        mean(&post)
+    );
+
+    // Conservation across the handoff: nothing lost, nothing doubled.
+    assert_eq!(rep.offered, 640);
+    assert_eq!(rep.shed, 0, "unlimited class never sheds");
+    assert_eq!(rep.completed, 640, "drain-and-switch must not lose frames");
+    assert!(rep.phases.len() >= 2, "a switch opens a new phase");
+
+    // Switch events are recorded in the merged serving timeline as
+    // zero-width transition markers on every unit.
+    let markers = rep
+        .timeline
+        .spans
+        .iter()
+        .filter(|sp| sp.is_transition && sp.t0 == sp.t1)
+        .count();
+    assert_eq!(
+        markers,
+        rep.replans.len() * 3,
+        "one marker per SoC unit (GPU, DLA0, DLA1) per switch"
+    );
+}
+
+/// QoS admission: a rate-limited bursty class sheds, the lossless class
+/// does not, and offered == completed + shed holds exactly.
+#[test]
+fn burst_overload_sheds_by_class_and_conserves_frames() {
+    let time_scale = 0.02;
+    let session = naive_same_dla_session(time_scale);
+    let mut opts = ServeOptions::new(hw::orin(), DlaVersion::V2);
+    opts.time_scale = time_scale;
+    opts.replan = ReplanPolicy::disabled();
+    opts.qos = vec![
+        QosClass::unlimited("recon", 0),
+        QosClass::unlimited("bulk", 1).rate_limited(40.0, 4.0),
+    ];
+    opts.clients = vec![
+        ClientSpec::new("steady", 200, ArrivalProcess::Poisson { rate_fps: 80.0 }),
+        ClientSpec::new(
+            "blaster",
+            200,
+            ArrivalProcess::Burst {
+                burst_fps: 2000.0,
+                burst_len: 50,
+                idle_seconds: 0.2,
+            },
+        )
+        .qos_class(1),
+    ];
+    let rep = serve::serve(session, opts).unwrap();
+
+    assert_eq!(rep.offered, 400);
+    assert_eq!(
+        rep.offered,
+        rep.completed + rep.shed,
+        "admission sheds + completions must account for every offered frame"
+    );
+    assert!(rep.shed > 0, "a 2000 fps burst into a 40 fps bucket must shed");
+    assert_eq!(rep.shed, rep.shed_rate_limit + rep.shed_deadline);
+    // shed is attributed to the bulk class only
+    let (_, recon_stats) = &rep.classes[0];
+    let (_, bulk_stats) = &rep.classes[1];
+    assert_eq!(recon_stats.shed_rate_limit + recon_stats.shed_deadline, 0);
+    assert!(bulk_stats.shed_rate_limit > 0);
+    // the pipeline's own overload counter is a different ledger entirely
+    for phase in &rep.phases {
+        assert_eq!(
+            phase.report.shed,
+            rep.shed,
+            "admission sheds surface on the phase report's shed field"
+        );
+        // round-robin routes have no droppable fanout copies: overload
+        // drops stay zero even while admission sheds hundreds
+        assert_eq!(phase.report.dropped, 0);
+    }
+    // serialized JSON is parseable and finite
+    let txt = rep.to_json().to_compact();
+    let doc = edgepipe::config::json::Json::parse(&txt).unwrap();
+    assert!(doc.get("latency_ms_p99").unwrap().as_f64().unwrap().is_finite());
+}
+
+/// The serve report's JSON carries the fields the CI smoke job asserts
+/// on (replans, conservation counters, finite latency percentiles).
+#[test]
+fn serve_report_json_has_smoke_contract_fields() {
+    let session = naive_same_dla_session(0.0);
+    let mut opts = ServeOptions::new(hw::orin(), DlaVersion::V2);
+    opts.time_scale = 0.0;
+    opts.replan = ReplanPolicy {
+        check_every_frames: 64,
+        force_every_checks: Some(1),
+        ..ReplanPolicy::default()
+    };
+    opts.clients = vec![ClientSpec::new(
+        "c",
+        200,
+        ArrivalProcess::Poisson { rate_fps: 500.0 },
+    )];
+    let rep = serve::serve(session, opts).unwrap();
+    let doc = edgepipe::config::json::Json::parse(&rep.to_json().to_compact()).unwrap();
+    for key in [
+        "offered",
+        "accepted",
+        "completed",
+        "shed",
+        "latency_ms_p99",
+        "wall_seconds",
+    ] {
+        assert!(doc.get(key).is_some(), "missing `{key}`");
+    }
+    let replans = doc.get("replans").unwrap().as_arr().unwrap();
+    assert!(!replans.is_empty(), "forced switches must be reported");
+    assert!(doc.get("windows").unwrap().as_arr().is_some());
+    assert!(doc.get("switch_markers").unwrap().as_f64().unwrap() >= 3.0);
+}
