@@ -81,6 +81,28 @@ fn main() {
     }
     println!("route checksum: {route_sink}");
 
+    // Fleet front door: consistent-hash placement of 4096 streams across
+    // 8 nodes (64 ring points each) — one ring binary-search per lookup,
+    // with a handful of migration overrides in place so the override map
+    // probe is inside the measurement.
+    let mut fleet_router = edgepipe::fleet::StreamRouter::new(8, 64);
+    for s in 0..16 {
+        let to = (fleet_router.home(s) + 1) % 8;
+        fleet_router.migrate(s, to);
+    }
+    let mut hash_sink = 0usize;
+    let ms = b.measure("fleet_router_hash_4096_streams", 500, || {
+        for s in 0..4096 {
+            hash_sink = hash_sink.wrapping_add(fleet_router.node_for(s));
+        }
+    });
+    b.rate(
+        "fleet_router_hash_4096_streams",
+        "lookups_per_s",
+        4096.0 / (ms / 1e3),
+    );
+    println!("fleet router checksum: {hash_sink}");
+
     // Block DCT throughput: the 8x8 basis table is memoized (was 64 `cos`
     // calls per block); 10k forward + inverse transforms per iteration.
     let mut rng = Rng::new(7);

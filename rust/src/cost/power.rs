@@ -46,6 +46,37 @@ impl PowerModel {
         }
     }
 
+    /// Xavier-class rails (30 W mode): older process node — higher idle
+    /// floors and lower peak headroom than Orin at the same budget.
+    pub fn xavier() -> Self {
+        PowerModel {
+            gpu: PowerRail {
+                idle_w: 1.6,
+                peak_w: 14.0,
+            },
+            dla: PowerRail {
+                idle_w: 0.4,
+                peak_w: 2.8,
+            },
+            cpu: PowerRail {
+                idle_w: 1.1,
+                peak_w: 8.0,
+            },
+            soc_static_w: 3.2,
+        }
+    }
+
+    /// Rails matching a SoC profile by name (`jetson-agx-xavier` → the
+    /// Xavier rails, everything else → Orin). Keeps fleet nodes from
+    /// hand-pairing a SoC spec with the wrong power table.
+    pub fn for_soc(soc: &crate::hw::SocSpec) -> Self {
+        if soc.name.contains("xavier") {
+            PowerModel::xavier()
+        } else {
+            PowerModel::orin()
+        }
+    }
+
     fn rail(&self, e: EngineKind) -> PowerRail {
         match e {
             EngineKind::Gpu => self.gpu,
@@ -114,6 +145,17 @@ mod tests {
     fn energy_per_frame_math() {
         assert!((PowerModel::energy_per_frame(15.0, 150.0) - 0.1).abs() < 1e-12);
         assert!(PowerModel::energy_per_frame(15.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn soc_name_selects_the_rail_table() {
+        let x = PowerModel::for_soc(&crate::hw::xavier());
+        let o = PowerModel::for_soc(&crate::hw::orin());
+        assert_eq!(x.soc_static_w, PowerModel::xavier().soc_static_w);
+        assert_eq!(o.soc_static_w, PowerModel::orin().soc_static_w);
+        // same 30 W class, different curves: Xavier idles hotter and
+        // peaks lower than Orin on every rail
+        assert!(x.gpu.idle_w > o.gpu.idle_w && x.gpu.peak_w < o.gpu.peak_w);
     }
 
     #[test]

@@ -1,0 +1,322 @@
+//! Fleet-level re-planning: decide *which streams move where* when a
+//! node saturates or degrades.
+//!
+//! This is the cluster analogue of the single-node
+//! [`Replanner`](crate::serve::replan::Replanner): the serve re-planner
+//! swaps the *spec under* a node's streams, the migration controller
+//! moves *streams between* nodes. Both fire at checkpoints and both hand
+//! off with drain-and-switch semantics — the mechanics of the handoff
+//! itself (flush, barrier, adopt) live in the virtual core
+//! ([`crate::fleet::vclock::VirtualCore::retire_stream`] /
+//! [`adopt_stream`](crate::fleet::vclock::VirtualCore::adopt_stream));
+//! this module only picks the moves.
+
+use crate::config::json::{num, obj, s, Json};
+use crate::fleet::router::StreamRouter;
+
+/// When and how aggressively the fleet rebalances.
+#[derive(Debug, Clone)]
+pub struct MigrationPolicy {
+    /// Master switch — `false` freezes streams on their ring homes (the
+    /// no-migration baseline the integration test compares against).
+    pub enabled: bool,
+    /// A node whose backlog reaches this many frames is saturated and
+    /// becomes a migration source.
+    pub backlog_threshold: usize,
+    /// Upper bound on streams moved per checkpoint (a full evacuation in
+    /// one step would dogpile the target).
+    pub max_moves_per_check: usize,
+    /// Checkpoints to sit out after any move (lets the moved load land
+    /// before re-measuring).
+    pub cooldown_checks: usize,
+    /// Testing hook: force a move attempt every N checkpoints even when
+    /// no node is saturated.
+    pub force_every_checks: Option<usize>,
+}
+
+impl Default for MigrationPolicy {
+    fn default() -> Self {
+        MigrationPolicy {
+            enabled: true,
+            backlog_threshold: 64,
+            max_moves_per_check: 4,
+            cooldown_checks: 2,
+            force_every_checks: None,
+        }
+    }
+}
+
+impl MigrationPolicy {
+    /// Baseline: never migrate.
+    pub fn disabled() -> MigrationPolicy {
+        MigrationPolicy {
+            enabled: false,
+            ..MigrationPolicy::default()
+        }
+    }
+}
+
+/// One recorded stream migration.
+#[derive(Debug, Clone)]
+pub struct MigrationEvent {
+    /// Virtual time of the checkpoint that decided the move.
+    pub at_seconds: f64,
+    pub stream: usize,
+    pub from_node: usize,
+    pub to_node: usize,
+    /// Why the source was drained ("saturated", "degraded", "forced").
+    pub reason: String,
+}
+
+impl MigrationEvent {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("at_seconds", num(self.at_seconds)),
+            ("stream", num(self.stream as f64)),
+            ("from_node", num(self.from_node as f64)),
+            ("to_node", num(self.to_node as f64)),
+            ("reason", s(&self.reason)),
+        ])
+    }
+}
+
+/// A checkpoint snapshot of one node, as the controller sees it.
+#[derive(Debug, Clone)]
+pub struct NodeLoad {
+    pub node: usize,
+    /// Frames admitted but not yet released.
+    pub backlog: usize,
+    /// Planned capacity (the placement eval's predicted fps) — converts
+    /// backlog frames into seconds of queued work.
+    pub capacity_fps: f64,
+    /// Degradation injected (health != healthy).
+    pub degraded: bool,
+    /// Streams currently on this node with their recent offered-frame
+    /// counts (the movable load shares).
+    pub streams: Vec<(usize, usize)>,
+}
+
+impl NodeLoad {
+    /// Seconds of queued work at planned capacity.
+    pub fn load_seconds(&self) -> f64 {
+        self.backlog as f64 / self.capacity_fps.max(1e-9)
+    }
+}
+
+/// A move the fleet loop should execute.
+#[derive(Debug, Clone, Copy)]
+pub struct Move {
+    pub stream: usize,
+    pub from: usize,
+    pub to: usize,
+    pub forced: bool,
+    pub degraded_source: bool,
+}
+
+/// Stateful migration decision-maker (cooldown + forced cadence).
+pub struct MigrationController {
+    policy: MigrationPolicy,
+    checks: usize,
+    cooldown: usize,
+}
+
+impl MigrationController {
+    pub fn new(policy: MigrationPolicy) -> MigrationController {
+        MigrationController {
+            policy,
+            checks: 0,
+            cooldown: 0,
+        }
+    }
+
+    pub fn policy(&self) -> &MigrationPolicy {
+        &self.policy
+    }
+
+    /// Decide this checkpoint's moves. `loads` must cover every node;
+    /// the router supplies capacity-aware target selection.
+    pub fn consider(&mut self, loads: &[NodeLoad], router: &StreamRouter) -> Vec<Move> {
+        if !self.policy.enabled || loads.len() < 2 {
+            return Vec::new();
+        }
+        self.checks += 1;
+        let forced = match self.policy.force_every_checks {
+            Some(n) if n > 0 => self.checks % n == 0,
+            _ => false,
+        };
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            if !forced {
+                return Vec::new();
+            }
+        }
+
+        // Source: the most loaded node (seconds of queued work), required
+        // to be saturated or degraded unless this is a forced check.
+        let mut source: Option<&NodeLoad> = None;
+        for l in loads {
+            let hot = l.backlog >= self.policy.backlog_threshold || l.degraded;
+            if !hot && !forced {
+                continue;
+            }
+            if l.streams.is_empty() {
+                continue;
+            }
+            let better = match source {
+                None => true,
+                Some(s) => l.load_seconds() > s.load_seconds(),
+            };
+            if better {
+                source = Some(l);
+            }
+        }
+        let src = match source {
+            Some(s) => s,
+            None => return Vec::new(),
+        };
+
+        let load_by_node: Vec<(f64, bool)> =
+            loads.iter().map(|l| (l.load_seconds(), l.degraded)).collect();
+        let total_offered: usize = src.streams.iter().map(|(_, n)| n).sum();
+
+        // Move the busiest streams first: each carries the biggest slice
+        // of the source's queued work to the target.
+        let mut ranked = src.streams.clone();
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let cap = if forced && self.policy.max_moves_per_check == 0 {
+            1
+        } else {
+            self.policy.max_moves_per_check.max(1)
+        };
+
+        let mut moves = Vec::new();
+        for &(stream, offered) in ranked.iter().take(cap) {
+            let share = if total_offered > 0 {
+                offered as f64 / total_offered as f64
+            } else {
+                1.0 / src.streams.len() as f64
+            };
+            let moved_load = src.load_seconds() * share;
+            match router.pick_target(src.node, &load_by_node, moved_load) {
+                Some(to) if to != src.node => moves.push(Move {
+                    stream,
+                    from: src.node,
+                    to,
+                    forced,
+                    degraded_source: src.degraded,
+                }),
+                _ => break,
+            }
+        }
+        if !moves.is_empty() {
+            self.cooldown = self.policy.cooldown_checks;
+        }
+        moves
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(node: usize, backlog: usize, degraded: bool, streams: Vec<(usize, usize)>) -> NodeLoad {
+        NodeLoad {
+            node,
+            backlog,
+            capacity_fps: 100.0,
+            degraded,
+            streams,
+        }
+    }
+
+    #[test]
+    fn idle_fleet_never_moves() {
+        let router = StreamRouter::new(2, 16);
+        let mut c = MigrationController::new(MigrationPolicy::default());
+        let loads = vec![
+            load(0, 3, false, vec![(0, 3)]),
+            load(1, 2, false, vec![(1, 2)]),
+        ];
+        for _ in 0..10 {
+            assert!(c.consider(&loads, &router).is_empty());
+        }
+    }
+
+    #[test]
+    fn saturated_node_evacuates_busiest_streams_first() {
+        let router = StreamRouter::new(3, 16);
+        let mut c = MigrationController::new(MigrationPolicy {
+            backlog_threshold: 50,
+            max_moves_per_check: 2,
+            ..MigrationPolicy::default()
+        });
+        let loads = vec![
+            load(0, 200, false, vec![(10, 5), (11, 90), (12, 40)]),
+            load(1, 5, false, vec![(1, 5)]),
+            load(2, 1, false, vec![(2, 1)]),
+        ];
+        let moves = c.consider(&loads, &router);
+        assert_eq!(moves.len(), 2);
+        assert_eq!(moves[0].stream, 11, "busiest stream moves first");
+        assert_eq!(moves[1].stream, 12);
+        assert!(moves.iter().all(|m| m.from == 0 && m.to != 0));
+    }
+
+    #[test]
+    fn cooldown_suppresses_back_to_back_moves_but_not_forced() {
+        let router = StreamRouter::new(2, 16);
+        let mut c = MigrationController::new(MigrationPolicy {
+            backlog_threshold: 10,
+            cooldown_checks: 3,
+            force_every_checks: Some(4),
+            ..MigrationPolicy::default()
+        });
+        let loads = vec![
+            load(0, 100, false, vec![(0, 50), (1, 50)]),
+            load(1, 0, false, vec![]),
+        ];
+        assert!(!c.consider(&loads, &router).is_empty(), "check 1 moves");
+        assert!(c.consider(&loads, &router).is_empty(), "check 2 cools down");
+        assert!(c.consider(&loads, &router).is_empty(), "check 3 cools down");
+        // check 4 is forced (4 % 4 == 0): fires despite remaining cooldown
+        let forced = c.consider(&loads, &router);
+        assert!(!forced.is_empty());
+        assert!(forced[0].forced);
+    }
+
+    #[test]
+    fn degraded_node_is_a_source_even_with_small_backlog() {
+        let router = StreamRouter::new(2, 16);
+        let mut c = MigrationController::new(MigrationPolicy {
+            backlog_threshold: 1000,
+            ..MigrationPolicy::default()
+        });
+        let loads = vec![
+            load(0, 8, true, vec![(0, 8)]),
+            load(1, 8, false, vec![(1, 8)]),
+        ];
+        let moves = c.consider(&loads, &router);
+        assert_eq!(moves.len(), 1);
+        assert!(moves[0].degraded_source);
+        assert_eq!(moves[0].to, 1);
+    }
+
+    #[test]
+    fn disabled_policy_is_inert_and_event_json_parses() {
+        let router = StreamRouter::new(2, 16);
+        let mut c = MigrationController::new(MigrationPolicy::disabled());
+        let loads = vec![
+            load(0, 10_000, true, vec![(0, 100)]),
+            load(1, 0, false, vec![]),
+        ];
+        assert!(c.consider(&loads, &router).is_empty());
+        let ev = MigrationEvent {
+            at_seconds: 1.5,
+            stream: 7,
+            from_node: 0,
+            to_node: 1,
+            reason: "saturated".into(),
+        };
+        crate::config::json::Json::parse(&ev.to_json().to_compact()).unwrap();
+    }
+}

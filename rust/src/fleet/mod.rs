@@ -1,0 +1,504 @@
+//! Fleet layer: many simulated Jetson nodes behind one front door.
+//!
+//! Everything below `fleet/` answers ROADMAP open item 1 — what a
+//! *deployment* of the paper's single-SoC pipeline looks like. N nodes
+//! (mixed Xavier/Orin profiles) each plan-on-boot with the placement
+//! planner and serve on the event-driven virtual-clock executor
+//! ([`vclock::VirtualCore`]); a consistent-hash front door
+//! ([`router::StreamRouter`]) pins client streams to nodes; a migration
+//! controller ([`migrate::MigrationController`]) drains streams off
+//! saturated or degraded nodes with the same drain-and-switch handoff
+//! guarantee the single-node re-planner gives (no frame lost, duplicated,
+//! or reordered across a move); and [`report::FleetReport`] rolls
+//! per-node telemetry — including power draw and FPS-per-watt — into one
+//! cluster summary.
+//!
+//! The whole fleet runs on *virtual time* in a single thread:
+//! [`run_fleet`] replays the client arrival schedule, advances each
+//! node's virtual core at checkpoints, and never sleeps — which is what
+//! makes thousands of concurrent streams per process cheap. The threaded
+//! `StreamCore` path remains the engine for single-node `run`/`serve`.
+
+pub mod migrate;
+pub mod node;
+pub mod report;
+pub mod router;
+pub mod vclock;
+
+pub use migrate::{MigrationEvent, MigrationPolicy};
+pub use node::{FleetNode, NodeHealth, NodeProfile};
+pub use report::{ClassLatency, FleetReport, FleetWindow, NodeReport};
+pub use router::StreamRouter;
+pub use vclock::{Delivery, VirtualCore};
+
+use crate::error::{Error, Result};
+use crate::fleet::migrate::{MigrationController, NodeLoad};
+use crate::serve::clients::{schedule, ClientSpec};
+use crate::util::stats::Summary;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Injected node degradation (thermal throttle / clock cap) at a virtual
+/// instant — the chaos knob the property tests and the CI smoke turn.
+#[derive(Debug, Clone, Copy)]
+pub struct DegradationEvent {
+    /// Virtual time the throttle lands.
+    pub at_seconds: f64,
+    /// Target node id.
+    pub node: usize,
+    /// Duration multiplier on every dispatch priced afterwards (≥ 1;
+    /// exactly 1 restores full speed).
+    pub slowdown: f64,
+}
+
+/// Everything a fleet run needs.
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// One SoC profile per node; the vector's length is the fleet size.
+    pub profiles: Vec<NodeProfile>,
+    /// Client load (stream index = position in this vector).
+    pub clients: Vec<ClientSpec>,
+    /// Display names per QoS class index (missing ⇒ `class<N>`).
+    pub class_names: Vec<String>,
+    /// Arrival-schedule seed (same seed ⇒ identical run).
+    pub seed: u64,
+    /// Offered frames between fleet checkpoints (flush, health, window,
+    /// migration decision). 0 ⇒ the default cadence.
+    pub check_every: usize,
+    /// Per-node admission cap in backlog frames (0 = unlimited; admitted
+    /// frames are never dropped, so sheds are the only loss).
+    pub max_backlog: usize,
+    pub migration: MigrationPolicy,
+    pub degradations: Vec<DegradationEvent>,
+    /// Frame window the plan-on-boot placement search replays.
+    pub plan_frames: usize,
+    /// Cap on the retained delivery log (counters are exact regardless).
+    pub delivery_capacity: usize,
+    /// Ring points per node in the consistent-hash front door.
+    pub router_replicas: usize,
+}
+
+impl FleetOptions {
+    pub fn new(profiles: Vec<NodeProfile>) -> FleetOptions {
+        FleetOptions {
+            profiles,
+            clients: Vec::new(),
+            class_names: Vec::new(),
+            seed: 7,
+            check_every: 256,
+            max_backlog: 0,
+            migration: MigrationPolicy::default(),
+            degradations: Vec::new(),
+            plan_frames: 24,
+            delivery_capacity: 1 << 20,
+            router_replicas: 64,
+        }
+    }
+}
+
+/// Run a fleet to completion on the virtual clock and roll up the report.
+pub fn run_fleet(opts: &FleetOptions) -> Result<FleetReport> {
+    let wall_start = Instant::now();
+    if opts.profiles.is_empty() {
+        return Err(Error::Pipeline("fleet needs at least one node".into()));
+    }
+    if opts.clients.is_empty() {
+        return Err(Error::Pipeline("fleet needs at least one client".into()));
+    }
+
+    // Plan-on-boot, one planner run per distinct profile — nodes sharing
+    // a SoC generation share a placement.
+    let mut planned: HashMap<&'static str, (crate::pipeline::spec::PipelineSpec, f64)> =
+        HashMap::new();
+    let mut nodes: Vec<FleetNode> = Vec::with_capacity(opts.profiles.len());
+    for (id, &profile) in opts.profiles.iter().enumerate() {
+        let (spec, capacity) = match planned.get(profile.name()) {
+            Some(hit) => hit.clone(),
+            None => {
+                let booted = FleetNode::boot(id, profile, opts.plan_frames)?;
+                let entry = (booted.spec.clone(), booted.capacity_fps);
+                planned.insert(profile.name(), entry.clone());
+                nodes.push(booted);
+                continue;
+            }
+        };
+        nodes.push(FleetNode::from_spec(id, profile, spec, capacity)?);
+    }
+    let n_nodes = nodes.len();
+
+    let mut router = StreamRouter::new(n_nodes, opts.router_replicas);
+    let mut controller = MigrationController::new(opts.migration.clone());
+    let arrivals = schedule(&opts.clients, opts.seed)?;
+    let check_every = if opts.check_every == 0 { 256 } else { opts.check_every };
+
+    let mut degradations = opts.degradations.clone();
+    degradations.sort_by(|a, b| {
+        a.at_seconds
+            .partial_cmp(&b.at_seconds)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut next_degradation = 0usize;
+
+    // Rolling state.
+    let mut deliveries: Vec<Delivery> = Vec::new();
+    let mut log_truncated = 0usize;
+    let mut windows: Vec<FleetWindow> = Vec::new();
+    let mut migrations: Vec<MigrationEvent> = Vec::new();
+    let mut latency_all = Summary::new();
+    let mut latency_class: HashMap<usize, (usize, Summary)> = HashMap::new();
+    let mut recent_offered: HashMap<usize, usize> = HashMap::new();
+    let mut window_t0 = 0.0f64;
+    let mut window_offered = 0usize;
+    let mut since_check = 0usize;
+    let mut offered_total = 0usize;
+    let mut shed_prev = 0usize;
+    let mut last_t = 0.0f64;
+    let mut virtual_end = 0.0f64;
+
+    let checkpoint = |t: f64,
+                          nodes: &mut Vec<FleetNode>,
+                          router: &mut StreamRouter,
+                          controller: &mut MigrationController,
+                          recent_offered: &mut HashMap<usize, usize>,
+                          window_t0: &mut f64,
+                          window_offered: &mut usize,
+                          shed_prev: &mut usize,
+                          deliveries: &mut Vec<Delivery>,
+                          log_truncated: &mut usize,
+                          windows: &mut Vec<FleetWindow>,
+                          migrations: &mut Vec<MigrationEvent>,
+                          latency_all: &mut Summary,
+                          latency_class: &mut HashMap<usize, (usize, Summary)>,
+                          virtual_end: &mut f64,
+                          drain: bool| {
+        // 1. Advance every node to t (flush partial batches, pop
+        //    releases due by t); attribute releases per node.
+        let mut popped: Vec<Delivery> = Vec::new();
+        let mut node_completed = vec![0usize; nodes.len()];
+        for node in nodes.iter_mut() {
+            let before = popped.len();
+            if drain {
+                node.drain(t, &mut popped);
+            } else {
+                node.advance_to(t, &mut popped);
+            }
+            node_completed[node.id] += popped.len() - before;
+        }
+        let mut win_lat = Summary::new();
+        let mut t1 = t;
+        for d in &popped {
+            win_lat.add(d.latency_s);
+            latency_all.add(d.latency_s);
+            let entry = latency_class.entry(d.class).or_insert_with(|| (0, Summary::new()));
+            entry.0 += 1;
+            entry.1.add(d.latency_s);
+            if d.t > t1 {
+                t1 = d.t;
+            }
+        }
+        if t1 > *virtual_end {
+            *virtual_end = t1;
+        }
+
+        // 2. Window rollup (shed attributed to the window it happened in).
+        let shed_now: usize = nodes.iter().map(|n| n.shed).sum();
+        let span = (t1 - *window_t0).max(f64::MIN_POSITIVE);
+        windows.push(FleetWindow {
+            t0: *window_t0,
+            t1,
+            offered: *window_offered,
+            completed: popped.len(),
+            shed: shed_now - *shed_prev,
+            fps: popped.len() as f64 / span,
+            latency_ms_p99: win_lat.percentile(99.0) * 1e3,
+            node_completed,
+        });
+        *window_t0 = t1;
+        *window_offered = 0;
+        *shed_prev = shed_now;
+
+        // 3. Retain the delivery log (capped).
+        for d in popped {
+            if deliveries.len() < opts.delivery_capacity {
+                deliveries.push(d);
+            } else {
+                *log_truncated += 1;
+            }
+        }
+
+        if drain {
+            return;
+        }
+
+        // 4. Health + migration decisions on the post-flush state.
+        for node in nodes.iter_mut() {
+            node.observe_backlog(controller.policy().backlog_threshold);
+        }
+        let loads: Vec<NodeLoad> = nodes
+            .iter()
+            .map(|node| NodeLoad {
+                node: node.id,
+                backlog: node.core.backlog(),
+                capacity_fps: node.capacity_fps,
+                degraded: node.health() == NodeHealth::Degraded,
+                streams: recent_offered
+                    .iter()
+                    .filter(|(s, _)| router.node_for(**s) == node.id)
+                    .map(|(&s, &n)| (s, n))
+                    .collect(),
+            })
+            .collect();
+        for mv in controller.consider(&loads, router) {
+            // Drain-and-switch handoff: the source already flushed at
+            // this checkpoint, so the stream's admitted frames all have
+            // release times; the barrier carries its last release to the
+            // target so cross-node order is preserved.
+            let barrier = nodes[mv.from].core.retire_stream(mv.stream);
+            nodes[mv.to].core.adopt_stream(mv.stream, barrier);
+            nodes[mv.from].migrations_out += 1;
+            nodes[mv.to].migrations_in += 1;
+            router.migrate(mv.stream, mv.to);
+            migrations.push(MigrationEvent {
+                at_seconds: t,
+                stream: mv.stream,
+                from_node: mv.from,
+                to_node: mv.to,
+                reason: if mv.degraded_source {
+                    "degraded".into()
+                } else if mv.forced {
+                    "forced".into()
+                } else {
+                    "saturated".into()
+                },
+            });
+        }
+        recent_offered.clear();
+    };
+
+    // Replay the arrival schedule on the virtual clock.
+    for a in &arrivals {
+        while next_degradation < degradations.len()
+            && degradations[next_degradation].at_seconds <= a.t
+        {
+            let d = degradations[next_degradation];
+            if d.node < n_nodes {
+                nodes[d.node].degrade(d.slowdown);
+            }
+            next_degradation += 1;
+        }
+        let stream = a.client;
+        let class = opts.clients[stream].class;
+        let node = router.node_for(stream);
+        nodes[node].offer(stream, a.seq, class, a.t, opts.max_backlog);
+        *recent_offered.entry(stream).or_insert(0) += 1;
+        offered_total += 1;
+        window_offered += 1;
+        since_check += 1;
+        last_t = a.t;
+        if since_check >= check_every {
+            since_check = 0;
+            checkpoint(
+                a.t,
+                &mut nodes,
+                &mut router,
+                &mut controller,
+                &mut recent_offered,
+                &mut window_t0,
+                &mut window_offered,
+                &mut shed_prev,
+                &mut deliveries,
+                &mut log_truncated,
+                &mut windows,
+                &mut migrations,
+                &mut latency_all,
+                &mut latency_class,
+                &mut virtual_end,
+                false,
+            );
+        }
+    }
+    // Final drain: everything still in flight releases (floor = last
+    // arrival so stragglers cannot start in the past).
+    checkpoint(
+        last_t,
+        &mut nodes,
+        &mut router,
+        &mut controller,
+        &mut recent_offered,
+        &mut window_t0,
+        &mut window_offered,
+        &mut shed_prev,
+        &mut deliveries,
+        &mut log_truncated,
+        &mut windows,
+        &mut migrations,
+        &mut latency_all,
+        &mut latency_class,
+        &mut virtual_end,
+        true,
+    );
+
+    // Rollup.
+    let virtual_seconds = virtual_end.max(f64::MIN_POSITIVE);
+    let completed_total: usize = nodes.iter().map(|n| n.completed).sum();
+    let shed_total: usize = nodes.iter().map(|n| n.shed).sum();
+    debug_assert_eq!(offered_total, completed_total + shed_total);
+    let node_reports: Vec<NodeReport> = nodes
+        .iter()
+        .map(|node| {
+            let busy: Vec<(String, f64)> = node
+                .unit_stats()
+                .iter()
+                .map(|u| (u.label.clone(), (u.busy_seconds / virtual_seconds).min(1.0)))
+                .collect();
+            let power_w = node.power_w(virtual_seconds);
+            let fps = node.completed as f64 / virtual_seconds;
+            NodeReport {
+                node: node.id,
+                profile: node.profile.name().into(),
+                capacity_fps: node.capacity_fps,
+                health: node.health().name().into(),
+                offered: node.offered,
+                completed: node.completed,
+                shed: node.shed,
+                fps,
+                engine_busy: busy,
+                power_w,
+                fps_per_watt: fps / power_w.max(f64::MIN_POSITIVE),
+                energy_per_frame_j: crate::cost::power::PowerModel::energy_per_frame(
+                    power_w, fps,
+                ),
+                migrations_in: node.migrations_in,
+                migrations_out: node.migrations_out,
+            }
+        })
+        .collect();
+    let class_name = |c: usize| {
+        opts.class_names
+            .get(c)
+            .cloned()
+            .unwrap_or_else(|| format!("class{c}"))
+    };
+    let mut class_ids: Vec<usize> = latency_class.keys().copied().collect();
+    class_ids.sort_unstable();
+    let classes: Vec<ClassLatency> = class_ids
+        .into_iter()
+        .map(|c| {
+            let (completed, lat) = &latency_class[&c];
+            ClassLatency {
+                name: class_name(c),
+                completed: *completed,
+                latency_ms_p50: lat.percentile(50.0) * 1e3,
+                latency_ms_p95: lat.percentile(95.0) * 1e3,
+                latency_ms_p99: lat.percentile(99.0) * 1e3,
+            }
+        })
+        .collect();
+
+    Ok(FleetReport {
+        nodes: node_reports,
+        windows,
+        classes,
+        migrations,
+        offered: offered_total,
+        completed: completed_total,
+        shed: shed_total,
+        streams: opts.clients.len(),
+        fps: completed_total as f64 / virtual_seconds,
+        latency_ms_p50: latency_all.percentile(50.0) * 1e3,
+        latency_ms_p95: latency_all.percentile(95.0) * 1e3,
+        latency_ms_p99: latency_all.percentile(99.0) * 1e3,
+        virtual_seconds,
+        wall_seconds: wall_start.elapsed().as_secs_f64(),
+        deliveries,
+        deliveries_truncated: log_truncated,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::clients::ArrivalProcess;
+
+    fn small_opts() -> FleetOptions {
+        let mut opts = FleetOptions::new(vec![NodeProfile::Orin, NodeProfile::Xavier]);
+        opts.check_every = 32;
+        opts.plan_frames = 16;
+        for i in 0..4 {
+            opts.clients.push(ClientSpec::new(
+                format!("c{i}"),
+                40,
+                ArrivalProcess::Poisson { rate_fps: 200.0 },
+            ));
+        }
+        opts
+    }
+
+    #[test]
+    fn fleet_conserves_frames_end_to_end() {
+        let rep = run_fleet(&small_opts()).unwrap();
+        assert_eq!(rep.offered, 160);
+        assert_eq!(rep.offered, rep.completed + rep.shed);
+        assert_eq!(rep.shed, 0, "unlimited backlog never sheds");
+        assert_eq!(rep.nodes.len(), 2);
+        assert_eq!(rep.streams, 4);
+        assert!(rep.fps > 0.0 && rep.latency_ms_p99.is_finite());
+        // windowed ledger sums to the run ledger
+        let w_off: usize = rep.windows.iter().map(|w| w.offered).sum();
+        let w_done: usize = rep.windows.iter().map(|w| w.completed).sum();
+        let w_shed: usize = rep.windows.iter().map(|w| w.shed).sum();
+        assert_eq!(w_off, rep.offered);
+        assert_eq!(w_done, rep.completed);
+        assert_eq!(w_shed, rep.shed);
+        // power satellite: every node reports a positive draw and a
+        // finite efficiency
+        for n in &rep.nodes {
+            assert!(n.power_w > 0.0);
+            assert!(n.fps_per_watt >= 0.0 && n.fps_per_watt.is_finite());
+        }
+        crate::config::json::Json::parse(&rep.to_json().to_compact()).unwrap();
+    }
+
+    #[test]
+    fn degradation_and_forced_migration_keep_conservation() {
+        let mut opts = small_opts();
+        opts.migration.force_every_checks = Some(1);
+        opts.degradations.push(DegradationEvent {
+            at_seconds: 0.02,
+            node: 0,
+            slowdown: 10.0,
+        });
+        let rep = run_fleet(&opts).unwrap();
+        assert_eq!(rep.offered, rep.completed + rep.shed);
+        assert!(!rep.migrations.is_empty(), "forced cadence must move streams");
+        let moved_in: usize = rep.nodes.iter().map(|n| n.migrations_in).sum();
+        let moved_out: usize = rep.nodes.iter().map(|n| n.migrations_out).sum();
+        assert_eq!(moved_in, moved_out);
+        assert_eq!(moved_in, rep.migrations.len());
+    }
+
+    #[test]
+    fn backlog_cap_sheds_but_ledger_balances() {
+        let mut opts = small_opts();
+        opts.max_backlog = 8;
+        opts.clients = vec![ClientSpec::new(
+            "burst",
+            300,
+            ArrivalProcess::Burst {
+                burst_fps: 5000.0,
+                burst_len: 100,
+                idle_seconds: 0.001,
+            },
+        )];
+        let rep = run_fleet(&opts).unwrap();
+        assert!(rep.shed > 0, "a 5000 fps burst into an 8-frame cap must shed");
+        assert_eq!(rep.offered, rep.completed + rep.shed);
+    }
+
+    #[test]
+    fn empty_fleet_or_load_is_rejected() {
+        assert!(run_fleet(&FleetOptions::new(vec![])).is_err());
+        let opts = FleetOptions::new(vec![NodeProfile::Orin]);
+        assert!(run_fleet(&opts).is_err(), "no clients is an error");
+    }
+}

@@ -1,0 +1,291 @@
+//! One simulated Jetson node: SoC profile, plan-on-boot placement, a
+//! virtual-clock core, and health.
+//!
+//! A [`FleetNode`] is the fleet's unit of capacity. Booting a node runs
+//! the auto-placement planner ([`crate::placement::plan`]) against its
+//! SoC profile — exactly what a real node would do on startup — and
+//! serves the planned spec on a [`VirtualCore`]. Health is derived, not
+//! declared: a node whose backlog exceeds its planned per-checkpoint
+//! capacity is `Saturated`; injected degradation (thermal throttle,
+//! clock cap) makes it `Degraded` and stretches every subsequent
+//! dispatch on its virtual clock.
+
+use crate::cost::power::PowerModel;
+use crate::dla::DlaVersion;
+use crate::error::Result;
+use crate::fleet::vclock::{Delivery, UnitBusy, VirtualCore};
+use crate::hw::{self, SocSpec};
+use crate::pipeline::spec::PipelineSpec;
+use crate::placement::{plan, PlacementRequest};
+
+/// SoC generation a fleet node boots as.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeProfile {
+    /// Jetson AGX Orin (DLA v2).
+    Orin,
+    /// Jetson AGX Xavier (DLA v1) — slower tables, hotter idle rails.
+    Xavier,
+}
+
+impl NodeProfile {
+    pub fn parse(s: &str) -> Option<NodeProfile> {
+        match s.to_ascii_lowercase().as_str() {
+            "orin" => Some(NodeProfile::Orin),
+            "xavier" => Some(NodeProfile::Xavier),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NodeProfile::Orin => "orin",
+            NodeProfile::Xavier => "xavier",
+        }
+    }
+
+    pub fn soc(&self) -> SocSpec {
+        match self {
+            NodeProfile::Orin => hw::orin(),
+            NodeProfile::Xavier => hw::xavier(),
+        }
+    }
+
+    pub fn dla_version(&self) -> DlaVersion {
+        match self {
+            NodeProfile::Orin => DlaVersion::V2,
+            NodeProfile::Xavier => DlaVersion::V1,
+        }
+    }
+
+    pub fn power_model(&self) -> PowerModel {
+        PowerModel::for_soc(&self.soc())
+    }
+}
+
+/// Derived node health, reported per checkpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeHealth {
+    Healthy,
+    /// Backlog beyond planned capacity — a migration source.
+    Saturated,
+    /// Degradation injected — serves, but slower.
+    Degraded,
+}
+
+impl NodeHealth {
+    pub fn name(&self) -> &'static str {
+        match self {
+            NodeHealth::Healthy => "healthy",
+            NodeHealth::Saturated => "saturated",
+            NodeHealth::Degraded => "degraded",
+        }
+    }
+}
+
+/// One booted node: planned spec + virtual core + rolling counters.
+pub struct FleetNode {
+    pub id: usize,
+    pub profile: NodeProfile,
+    /// The plan-on-boot placement this node serves.
+    pub spec: PipelineSpec,
+    /// The planner's throughput prediction — the node's capacity unit.
+    pub capacity_fps: f64,
+    pub core: VirtualCore,
+    health: NodeHealth,
+    /// Frames offered to this node (includes sheds), whole run.
+    pub offered: usize,
+    /// Frames admission-shed at this node, whole run.
+    pub shed: usize,
+    /// Deliveries completed on this node, whole run.
+    pub completed: usize,
+    /// Migration arrivals/departures, whole run.
+    pub migrations_in: usize,
+    pub migrations_out: usize,
+}
+
+impl FleetNode {
+    /// Boot from an already-planned spec (nodes sharing a profile share
+    /// one planner run — see [`boot`]).
+    pub fn from_spec(
+        id: usize,
+        profile: NodeProfile,
+        spec: PipelineSpec,
+        capacity_fps: f64,
+    ) -> Result<FleetNode> {
+        let core = VirtualCore::new(&spec, &profile.soc())?;
+        Ok(FleetNode {
+            id,
+            profile,
+            spec,
+            capacity_fps,
+            core,
+            health: NodeHealth::Healthy,
+            offered: 0,
+            shed: 0,
+            completed: 0,
+            migrations_in: 0,
+            migrations_out: 0,
+        })
+    }
+
+    /// Plan-on-boot: run the placement planner for this node's SoC and
+    /// serve the winning spec. `plan_frames` sizes the planner's dry-run
+    /// window (smaller = faster boot, coarser prediction).
+    pub fn boot(id: usize, profile: NodeProfile, plan_frames: usize) -> Result<FleetNode> {
+        let mut req = PlacementRequest::new(profile.soc(), profile.dla_version());
+        req.frames = plan_frames.max(8);
+        let outcome = plan(&req)?;
+        FleetNode::from_spec(id, profile, outcome.spec, outcome.eval.predicted_fps)
+    }
+
+    pub fn health(&self) -> NodeHealth {
+        self.health
+    }
+
+    /// Inject degradation: every dispatch priced from now on stretches by
+    /// `slowdown` (≥ 1). The node's health pins to `Degraded` until the
+    /// factor returns to 1.
+    pub fn degrade(&mut self, slowdown: f64) {
+        self.core.set_slowdown(slowdown);
+        if self.core.slowdown() > 1.0 {
+            self.health = NodeHealth::Degraded;
+        }
+    }
+
+    /// Health transition driven by the fleet checkpoint loop: injected
+    /// degradation outranks saturation, saturation outranks healthy.
+    /// `saturation_backlog` is the frame count that counts as saturated
+    /// (typically the migration policy's threshold; 0 disables).
+    pub fn observe_backlog(&mut self, saturation_backlog: usize) {
+        self.health = if self.core.slowdown() > 1.0 {
+            NodeHealth::Degraded
+        } else if saturation_backlog > 0 && self.core.backlog() >= saturation_backlog {
+            NodeHealth::Saturated
+        } else {
+            NodeHealth::Healthy
+        };
+    }
+
+    /// Offer one frame. Sheds (returns `false`) when the node's backlog
+    /// is at `max_backlog` (0 = unlimited); admitted frames are conserved.
+    pub fn offer(
+        &mut self,
+        stream: usize,
+        frame_id: u64,
+        class: usize,
+        t: f64,
+        max_backlog: usize,
+    ) -> bool {
+        self.offered += 1;
+        if max_backlog > 0 && self.core.backlog() >= max_backlog {
+            self.shed += 1;
+            return false;
+        }
+        self.core.admit(stream, frame_id, class, t);
+        true
+    }
+
+    /// Checkpoint: flush partial batches (floor `t`) and collect every
+    /// delivery released by virtual time `t`.
+    pub fn advance_to(&mut self, t: f64, out: &mut Vec<Delivery>) {
+        let before = out.len();
+        self.core.flush(t);
+        self.core.pop_ready(t, out);
+        self.completed += out.len() - before;
+    }
+
+    /// End of run: release everything still in flight.
+    pub fn drain(&mut self, floor: f64, out: &mut Vec<Delivery>) {
+        let before = out.len();
+        self.core.drain(floor, out);
+        self.completed += out.len() - before;
+    }
+
+    /// Per-unit busy accounting (power rollups divide by wall span).
+    pub fn unit_stats(&self) -> Vec<UnitBusy> {
+        self.core.unit_stats()
+    }
+
+    /// Estimated average power draw over `span_seconds` of serving:
+    /// per-unit busy fractions through this profile's rail model.
+    pub fn power_w(&self, span_seconds: f64) -> f64 {
+        let span = span_seconds.max(f64::MIN_POSITIVE);
+        let utils: Vec<_> = self
+            .unit_stats()
+            .iter()
+            .map(|u| (u.kind, (u.busy_seconds / span).min(1.0)))
+            .collect();
+        self.profile.power_model().total_power(&utils)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_parse_and_map_to_hardware() {
+        assert_eq!(NodeProfile::parse("orin"), Some(NodeProfile::Orin));
+        assert_eq!(NodeProfile::parse("Xavier"), Some(NodeProfile::Xavier));
+        assert_eq!(NodeProfile::parse("tx2"), None);
+        assert_eq!(NodeProfile::Orin.dla_version(), DlaVersion::V2);
+        assert_eq!(NodeProfile::Xavier.dla_version(), DlaVersion::V1);
+        assert!(NodeProfile::Xavier.soc().name.contains("xavier"));
+    }
+
+    #[test]
+    fn boot_plans_and_serves() {
+        let mut node = FleetNode::boot(0, NodeProfile::Orin, 16).unwrap();
+        assert!(node.capacity_fps > 0.0, "planner must predict throughput");
+        assert_eq!(node.health(), NodeHealth::Healthy);
+        for f in 0..32u64 {
+            assert!(node.offer(0, f, 0, 0.0, 0));
+        }
+        let mut out = Vec::new();
+        node.drain(0.0, &mut out);
+        assert_eq!(out.len(), 32);
+        assert_eq!(node.completed, 32);
+        assert_eq!(node.offered, 32);
+        assert_eq!(node.shed, 0);
+    }
+
+    #[test]
+    fn backlog_cap_sheds_and_health_tracks_state() {
+        let mut node = FleetNode::boot(1, NodeProfile::Xavier, 16).unwrap();
+        // cap 4: the 5th+ un-drained offer sheds
+        let mut admitted = 0;
+        for f in 0..16u64 {
+            if node.offer(0, f, 0, 0.0, 4) {
+                admitted += 1;
+            }
+        }
+        assert_eq!(admitted, 4);
+        assert_eq!(node.shed, 12);
+        assert_eq!(node.offered, 16);
+        node.observe_backlog(2);
+        assert_eq!(node.health(), NodeHealth::Saturated);
+        node.degrade(4.0);
+        assert_eq!(node.health(), NodeHealth::Degraded, "degradation outranks");
+        let mut out = Vec::new();
+        node.drain(0.0, &mut out);
+        assert_eq!(out.len() + node.shed, 16, "offered == completed + shed");
+        node.observe_backlog(2);
+        assert_eq!(node.health(), NodeHealth::Degraded, "still throttled");
+    }
+
+    #[test]
+    fn power_reflects_profile_and_utilization() {
+        let mut node = FleetNode::boot(0, NodeProfile::Orin, 16).unwrap();
+        let idle_w = node.power_w(1.0);
+        for f in 0..64u64 {
+            node.offer(0, f, 0, 0.0, 0);
+        }
+        let mut out = Vec::new();
+        node.drain(0.0, &mut out);
+        let span = node.core.makespan().max(1e-6);
+        assert!(
+            node.power_w(span) > idle_w,
+            "busy units must draw above the idle floor"
+        );
+    }
+}

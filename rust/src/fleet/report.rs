@@ -1,0 +1,259 @@
+//! Fleet rollup: per-node serve telemetry aggregated into one report.
+//!
+//! The single-node serve report answers "how is this SoC doing"; the
+//! fleet report answers "how is the *deployment* doing" — aggregate FPS
+//! across nodes, per-QoS-class latency percentiles over every delivery,
+//! per-node engine busy fractions fed through each profile's power rails
+//! (so rankings can be FPS-per-watt, the metric that actually sizes an
+//! edge fleet), and the migration event log that explains any step
+//! changes in the windowed series.
+
+use crate::config::json::{arr, num, obj, s, Json};
+use crate::fleet::migrate::MigrationEvent;
+use crate::fleet::vclock::Delivery;
+
+/// One node's end-of-run summary.
+#[derive(Debug, Clone)]
+pub struct NodeReport {
+    pub node: usize,
+    /// SoC profile name ("orin" / "xavier").
+    pub profile: String,
+    /// Planner-predicted capacity at boot, fps.
+    pub capacity_fps: f64,
+    /// Final health ("healthy" / "saturated" / "degraded").
+    pub health: String,
+    pub offered: usize,
+    pub completed: usize,
+    pub shed: usize,
+    /// Completions per virtual second of fleet run.
+    pub fps: f64,
+    /// Busy fraction per physical unit over the run.
+    pub engine_busy: Vec<(String, f64)>,
+    /// Estimated average draw (busy fractions × profile rails), watts.
+    pub power_w: f64,
+    /// Delivered throughput per watt — the fleet ranking metric.
+    pub fps_per_watt: f64,
+    /// Joules per delivered frame.
+    pub energy_per_frame_j: f64,
+    pub migrations_in: usize,
+    pub migrations_out: usize,
+}
+
+impl NodeReport {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("node", num(self.node as f64)),
+            ("profile", s(&self.profile)),
+            ("capacity_fps", num(self.capacity_fps)),
+            ("health", s(&self.health)),
+            ("offered", num(self.offered as f64)),
+            ("completed", num(self.completed as f64)),
+            ("shed", num(self.shed as f64)),
+            ("fps", num(self.fps)),
+            ("power_w", num(self.power_w)),
+            ("fps_per_watt", num(self.fps_per_watt)),
+            ("energy_per_frame_j", num(self.energy_per_frame_j)),
+            ("migrations_in", num(self.migrations_in as f64)),
+            ("migrations_out", num(self.migrations_out as f64)),
+            (
+                "engines",
+                arr(self
+                    .engine_busy
+                    .iter()
+                    .map(|(label, busy)| {
+                        obj(vec![("unit", s(label)), ("busy_frac", num(*busy))])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+/// One fleet-wide checkpoint window on the virtual clock.
+#[derive(Debug, Clone)]
+pub struct FleetWindow {
+    pub t0: f64,
+    pub t1: f64,
+    pub offered: usize,
+    pub completed: usize,
+    pub shed: usize,
+    /// Fleet deliveries per virtual second in this window.
+    pub fps: f64,
+    pub latency_ms_p99: f64,
+    /// Deliveries per node in this window (indexed by node id).
+    pub node_completed: Vec<usize>,
+}
+
+impl FleetWindow {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("t0", num(self.t0)),
+            ("t1", num(self.t1)),
+            ("offered", num(self.offered as f64)),
+            ("completed", num(self.completed as f64)),
+            ("shed", num(self.shed as f64)),
+            ("fps", num(self.fps)),
+            ("latency_ms_p99", num(self.latency_ms_p99)),
+            (
+                "node_completed",
+                arr(self.node_completed.iter().map(|&n| num(n as f64)).collect()),
+            ),
+        ])
+    }
+}
+
+/// Latency rollup for one QoS class over the whole run.
+#[derive(Debug, Clone)]
+pub struct ClassLatency {
+    pub name: String,
+    pub completed: usize,
+    pub latency_ms_p50: f64,
+    pub latency_ms_p95: f64,
+    pub latency_ms_p99: f64,
+}
+
+impl ClassLatency {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("class", s(&self.name)),
+            ("completed", num(self.completed as f64)),
+            ("latency_ms_p50", num(self.latency_ms_p50)),
+            ("latency_ms_p95", num(self.latency_ms_p95)),
+            ("latency_ms_p99", num(self.latency_ms_p99)),
+        ])
+    }
+}
+
+/// The full fleet run summary.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub nodes: Vec<NodeReport>,
+    pub windows: Vec<FleetWindow>,
+    pub classes: Vec<ClassLatency>,
+    pub migrations: Vec<MigrationEvent>,
+    /// Whole-run conservation ledger: `offered == completed + shed`.
+    pub offered: usize,
+    pub completed: usize,
+    pub shed: usize,
+    /// Client streams served.
+    pub streams: usize,
+    /// Aggregate fleet throughput over the serving span, virtual fps.
+    pub fps: f64,
+    pub latency_ms_p50: f64,
+    pub latency_ms_p95: f64,
+    pub latency_ms_p99: f64,
+    /// Virtual span of the run (last release time).
+    pub virtual_seconds: f64,
+    /// Host wall time spent simulating (the executor's own cost).
+    pub wall_seconds: f64,
+    /// Retained delivery log (oldest first, capped by the run options).
+    pub deliveries: Vec<Delivery>,
+    /// Deliveries dropped from the log by the cap (counters unaffected).
+    pub deliveries_truncated: usize,
+}
+
+impl FleetReport {
+    /// Nodes ranked by FPS-per-watt, best first (ties by node id).
+    pub fn ranking(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.nodes.len()).collect();
+        order.sort_by(|&a, &b| {
+            self.nodes[b]
+                .fps_per_watt
+                .partial_cmp(&self.nodes[a].fps_per_watt)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(self.nodes[a].node.cmp(&self.nodes[b].node))
+        });
+        order
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("offered", num(self.offered as f64)),
+            ("completed", num(self.completed as f64)),
+            ("shed", num(self.shed as f64)),
+            ("streams", num(self.streams as f64)),
+            ("fps", num(self.fps)),
+            ("latency_ms_p50", num(self.latency_ms_p50)),
+            ("latency_ms_p95", num(self.latency_ms_p95)),
+            ("latency_ms_p99", num(self.latency_ms_p99)),
+            ("virtual_seconds", num(self.virtual_seconds)),
+            ("wall_seconds", num(self.wall_seconds)),
+            ("migration_count", num(self.migrations.len() as f64)),
+            (
+                "ranking",
+                arr(self.ranking().iter().map(|&i| num(i as f64)).collect()),
+            ),
+            (
+                "nodes",
+                arr(self.nodes.iter().map(|n| n.to_json()).collect()),
+            ),
+            (
+                "windows",
+                arr(self.windows.iter().map(|w| w.to_json()).collect()),
+            ),
+            (
+                "classes",
+                arr(self.classes.iter().map(|c| c.to_json()).collect()),
+            ),
+            (
+                "migrations",
+                arr(self.migrations.iter().map(|m| m.to_json()).collect()),
+            ),
+            (
+                "deliveries_truncated",
+                num(self.deliveries_truncated as f64),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node(id: usize, fpw: f64) -> NodeReport {
+        NodeReport {
+            node: id,
+            profile: "orin".into(),
+            capacity_fps: 150.0,
+            health: "healthy".into(),
+            offered: 100,
+            completed: 100,
+            shed: 0,
+            fps: 90.0,
+            engine_busy: vec![("GPU".into(), 0.5)],
+            power_w: 10.0,
+            fps_per_watt: fpw,
+            energy_per_frame_j: 0.11,
+            migrations_in: 0,
+            migrations_out: 0,
+        }
+    }
+
+    #[test]
+    fn ranking_orders_by_fps_per_watt() {
+        let rep = FleetReport {
+            nodes: vec![node(0, 5.0), node(1, 9.0), node(2, 7.0)],
+            windows: vec![],
+            classes: vec![],
+            migrations: vec![],
+            offered: 300,
+            completed: 300,
+            shed: 0,
+            streams: 3,
+            fps: 270.0,
+            latency_ms_p50: 5.0,
+            latency_ms_p95: 9.0,
+            latency_ms_p99: 11.0,
+            virtual_seconds: 1.1,
+            wall_seconds: 0.01,
+            deliveries: vec![],
+            deliveries_truncated: 0,
+        };
+        assert_eq!(rep.ranking(), vec![1, 2, 0]);
+        let txt = rep.to_json().to_compact();
+        let doc = crate::config::json::Json::parse(&txt).unwrap();
+        assert_eq!(doc.get("migration_count").unwrap().as_f64(), Some(0.0));
+        assert!(doc.get("nodes").unwrap().as_arr().is_some());
+    }
+}

@@ -1,0 +1,194 @@
+//! Cluster front door: consistent-hash placement of client streams onto
+//! fleet nodes.
+//!
+//! Each node contributes `replicas` points to a hash ring; a stream's
+//! home node is the first ring point at or after the stream's own hash.
+//! Consistent hashing keeps assignments stable as the fleet grows — a
+//! node added or removed remaps only the streams adjacent to its points,
+//! not the whole population — which matters because remapping a live
+//! stream costs a drain-and-switch migration.
+//!
+//! Migrations are *overrides* layered on the ring: the ring stays the
+//! durable home map, and [`StreamRouter::migrate`] records the exception.
+//! Capacity-aware target selection ([`StreamRouter::pick_target`]) picks
+//! the node whose projected load (backlog over planned capacity) stays
+//! lowest after absorbing the moved share, preferring healthy nodes.
+
+use std::collections::HashMap;
+
+/// SplitMix64 finalizer: cheap, well-mixed 64-bit hash for ring points
+/// and stream keys. Deterministic across runs and platforms.
+pub fn hash64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Consistent-hash stream→node map with a migration override layer.
+pub struct StreamRouter {
+    /// Sorted ring points: (point hash, node).
+    ring: Vec<(u64, usize)>,
+    nodes: usize,
+    /// Streams moved off their ring home by a migration.
+    overrides: HashMap<usize, usize>,
+}
+
+impl StreamRouter {
+    /// Ring over `nodes` nodes with `replicas` points each. More replicas
+    /// smooth the per-node share at the cost of a bigger binary search.
+    pub fn new(nodes: usize, replicas: usize) -> StreamRouter {
+        let nodes = nodes.max(1);
+        let replicas = replicas.max(1);
+        let mut ring = Vec::with_capacity(nodes * replicas);
+        for node in 0..nodes {
+            for r in 0..replicas {
+                ring.push((hash64((node as u64) << 32 | r as u64), node));
+            }
+        }
+        ring.sort_unstable();
+        StreamRouter {
+            ring,
+            nodes,
+            overrides: HashMap::new(),
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// The stream's ring home, ignoring overrides.
+    pub fn home(&self, stream: usize) -> usize {
+        let h = hash64(stream as u64 ^ 0xfeed_beef_cafe_f00d);
+        let i = match self.ring.binary_search(&(h, usize::MAX)) {
+            Ok(i) => i,
+            Err(i) => i,
+        };
+        self.ring[i % self.ring.len()].1
+    }
+
+    /// Where the stream is served right now (override wins over home).
+    pub fn node_for(&self, stream: usize) -> usize {
+        match self.overrides.get(&stream) {
+            Some(&n) => n,
+            None => self.home(stream),
+        }
+    }
+
+    /// Record a migration. Moving a stream back to its ring home clears
+    /// the override (the ring is already right).
+    pub fn migrate(&mut self, stream: usize, to: usize) {
+        if self.home(stream) == to {
+            self.overrides.remove(&stream);
+        } else {
+            self.overrides.insert(stream, to);
+        }
+    }
+
+    /// Number of streams currently routed away from their ring home.
+    pub fn overridden(&self) -> usize {
+        self.overrides.len()
+    }
+
+    /// Current node of every stream in `streams`.
+    pub fn assignments(&self, streams: usize) -> Vec<usize> {
+        (0..streams).map(|s| self.node_for(s)).collect()
+    }
+
+    /// Capacity-aware rebalancing target: among nodes other than `from`,
+    /// pick the one with the lowest projected load after absorbing
+    /// `moved_load` (load = backlog frames / planned capacity fps, i.e.
+    /// seconds of queued work). Healthy nodes are preferred over degraded
+    /// ones; returns `None` for a single-node fleet.
+    ///
+    /// `loads[i]` = (current load seconds, degraded) for node `i`.
+    pub fn pick_target(&self, from: usize, loads: &[(f64, bool)], moved_load: f64) -> Option<usize> {
+        let mut best: Option<(bool, f64, usize)> = None;
+        for (i, &(load, degraded)) in loads.iter().enumerate() {
+            if i == from {
+                continue;
+            }
+            let cand = (degraded, load + moved_load, i);
+            let better = match &best {
+                None => true,
+                // healthy beats degraded; then lowest projected load;
+                // then lowest index for determinism
+                Some(b) => cand.0 < b.0 || (cand.0 == b.0 && cand.1 < b.1),
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+        best.map(|(_, _, i)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assignment_is_deterministic_and_total() {
+        let r1 = StreamRouter::new(8, 64);
+        let r2 = StreamRouter::new(8, 64);
+        for s in 0..4096 {
+            let n = r1.node_for(s);
+            assert!(n < 8);
+            assert_eq!(n, r2.node_for(s));
+        }
+    }
+
+    #[test]
+    fn load_spreads_across_nodes() {
+        let r = StreamRouter::new(8, 64);
+        let mut counts = vec![0usize; 8];
+        for s in 0..4096 {
+            counts[r.node_for(s)] += 1;
+        }
+        for (n, &c) in counts.iter().enumerate() {
+            // perfect would be 512; consistent hashing with 64 replicas
+            // stays within a loose factor
+            assert!(c > 128 && c < 1536, "node {n} got {c} of 4096 streams");
+        }
+    }
+
+    #[test]
+    fn growing_the_fleet_remaps_only_a_slice() {
+        let small = StreamRouter::new(4, 64);
+        let big = StreamRouter::new(5, 64);
+        let moved = (0..4096)
+            .filter(|&s| small.node_for(s) != big.node_for(s))
+            .count();
+        // adding 1 of 5 nodes should move roughly 1/5 of streams, and
+        // certainly not reshuffle everything
+        assert!(moved > 0, "a new node must take some streams");
+        assert!(moved < 2048, "consistent hashing must not reshuffle half: {moved}");
+    }
+
+    #[test]
+    fn overrides_layer_over_the_ring_and_cancel_at_home() {
+        let mut r = StreamRouter::new(4, 16);
+        let s = 42;
+        let home = r.home(s);
+        let away = (home + 1) % 4;
+        r.migrate(s, away);
+        assert_eq!(r.node_for(s), away);
+        assert_eq!(r.overridden(), 1);
+        r.migrate(s, home);
+        assert_eq!(r.node_for(s), home);
+        assert_eq!(r.overridden(), 0, "moving home clears the override");
+    }
+
+    #[test]
+    fn pick_target_prefers_healthy_then_least_loaded() {
+        let r = StreamRouter::new(4, 16);
+        let loads = [(9.0, false), (0.5, true), (0.2, false), (0.4, false)];
+        // node 1 has least load but is degraded; node 2 wins
+        assert_eq!(r.pick_target(0, &loads, 0.1), Some(2));
+        // moving off node 2: node 3 (healthy, 0.4) beats degraded node 1
+        assert_eq!(r.pick_target(2, &loads, 0.1), Some(3));
+        // single-node fleet has nowhere to go
+        assert_eq!(r.pick_target(0, &[(1.0, false)], 0.1), None);
+    }
+}

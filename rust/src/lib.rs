@@ -95,6 +95,31 @@
 //! completes every admitted frame before the new one takes over; switch
 //! events are recorded in the merged serving timeline and the report).
 //!
+//! ## Single node vs fleet
+//!
+//! Everything above is *one* SoC. The [`fleet`] layer scales the same
+//! pieces to a cluster: N simulated Jetson nodes (mixed Xavier/Orin
+//! profiles), each running plan-on-boot placement and serving its
+//! planned spec, behind a consistent-hash front door that pins client
+//! streams to nodes ([`fleet::router::StreamRouter`]). Because a real
+//! thread-per-worker core caps a process at a few dozen streams, fleet
+//! nodes serve on an **event-driven virtual-clock executor**
+//! ([`fleet::vclock::VirtualCore`]): the same pricing tables and
+//! replay rules as the placement scorer's dry run (exclusive units,
+//! PCCS contention, occupant-switch reformat costs, route fan-out with
+//! lossless primaries), but advanced by events instead of sleeps — so
+//! thousands of concurrent streams cost a heap push each and the whole
+//! cluster runs single-threaded in virtual time. The threaded
+//! `StreamCore` path remains the engine for single-node `run`/`serve`;
+//! the two paths read one hardware model and predict the same
+//! throughput. On top of that executor, [`fleet::migrate`] lifts the
+//! serve loop's drain-and-switch handoff to *cross-node stream
+//! migration* (flush the source, carry a release barrier to the
+//! target — no frame lost, duplicated, or reordered), and
+//! [`fleet::report`] rolls per-node telemetry, power draw from
+//! [`cost::power`], and FPS-per-watt rankings into one cluster report
+//! (the `fleet` CLI subcommand and `report fleet` section).
+//!
 //! ## Planning vs serving
 //!
 //! Placement does not have to be hand-written: the [`placement`] planner
@@ -138,6 +163,9 @@
 //! * [`serve`] — the long-running serving front-end: synthetic client
 //!   load generation, QoS admission control, rolling telemetry windows,
 //!   and online re-planning with drain-and-switch spec handoff;
+//! * [`fleet`] — the multi-node cluster layer: virtual-clock node
+//!   executors, consistent-hash stream routing, cross-node stream
+//!   migration, and the FPS-per-watt fleet rollup;
 //! * [`imaging`], [`postproc`] — phantoms, PSNR/SSIM/MSE, the Table I
 //!   classical algorithms, YOLO decode + NMS;
 //! * [`report`] — regenerates every table and figure of the paper.
@@ -146,6 +174,7 @@ pub mod config;
 pub mod cost;
 pub mod dla;
 pub mod error;
+pub mod fleet;
 pub mod graph;
 pub mod hw;
 pub mod imaging;

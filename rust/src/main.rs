@@ -15,6 +15,7 @@ use edgepipe::config::json::{num, obj, s, Json};
 use edgepipe::config::{DeviceKind, GanVariant, PipelineConfig, SchedulerKind, Workload};
 use edgepipe::dla::{planner, DlaVersion};
 use edgepipe::error::Result;
+use edgepipe::fleet::{run_fleet, FleetOptions, MigrationPolicy, NodeProfile};
 use edgepipe::hw::{self, EngineKind};
 use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
 use edgepipe::models::yolov8::{yolov8, YoloConfig};
@@ -76,7 +77,7 @@ fn usage() -> ! {
         "edgepipe — edge GPU aware multi-model MRI pipeline (paper reproduction)
 
 USAGE:
-  edgepipe report <table1|table2|fig9|fig11|table4|table6|pipeline|placement|serve|all>
+  edgepipe report <table1|table2|fig9|fig11|table4|table6|pipeline|placement|serve|fleet|all>
                   [--artifacts DIR] [--json FILE]
   edgepipe timeline [--variant original|cropping|convolution] [--with-yolo]
   edgepipe run [--config FILE] [--variant V] [--workload W] [--frames N]
@@ -87,6 +88,12 @@ USAGE:
                  [--qos name:prio[:rate_fps[:deadline_ms]],...]
                  [--no-replan] [--replan-every N] [--min-gain X]
                  [--time-scale X] [--seed N] [--json FILE]
+  edgepipe fleet [--nodes N] [--mix orin,xavier,...] [--clients N]
+                 [--duration-frames N] [--profile poisson|burst|ramp]
+                 [--rate-fps X] [--check-every N] [--max-backlog N]
+                 [--backlog-threshold N] [--no-migrate]
+                 [--force-migrate-every N] [--degrade node:at:factor[,...]]
+                 [--plan-frames N] [--seed N] [--json FILE]
   edgepipe plan [--device orin|xavier] [--gans N] [--no-yolo]
                 [--gan-engines gpu,dla|dla] [--frames N] [--seed N]
                 [--latency-budget-ms X] [--top K] [--emit-spec FILE]
@@ -114,6 +121,19 @@ controller watches windowed idle/backlog and swaps to a better searched
 placement at a frame boundary (drain-and-switch; disable with
 --no-replan). With --sim the arrival schedule is paced by --time-scale
 to match the modeled latencies, so long profiles replay in seconds.
+
+`fleet` runs a multi-node cluster entirely on a virtual clock: --nodes
+simulated Jetsons (profile per node from --mix, cycled; default
+alternating orin/xavier) each plan-on-boot and serve on the event-driven
+virtual-clock executor (no threads, no sleeps — thousands of streams per
+process), behind a consistent-hash front door. --clients streams (total
+--duration-frames shaped by --profile at --rate-fps) hash onto nodes;
+every --check-every offered frames the fleet flushes, rolls a window,
+and may migrate streams off saturated/degraded nodes (drain-and-switch:
+no frame lost, duplicated, or reordered; disable with --no-migrate,
+force with --force-migrate-every). --degrade node:at:factor injects a
+throttle (e.g. `0:0.5:8` slows node 0 by 8x at t=0.5s). The report
+ranks nodes by FPS-per-watt via the cost/power rail model.
 
 `plan` searches placements (variant x engine units x max_batch x route)
 instead of hand-writing one: candidates with DLA fallback are rejected
@@ -173,6 +193,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 "pipeline" => report::pipeline_report(&soc),
                 "placement" => report::placement_report(&soc),
                 "serve" => report::serve_report(&soc),
+                "fleet" => report::fleet_report(),
                 "all" => report::all_reports(dir),
                 other => {
                     return Err(Error::Config(format!("unknown report `{other}`")));
@@ -420,6 +441,190 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 for (unit, busy) in &last.engine_busy {
                     println!("  {:<5} final-window busy {:>5.1}%", unit, busy * 100.0);
                 }
+            }
+            if let Some(path) = args.opt("json") {
+                std::fs::write(path, rep.to_json().to_pretty())?;
+                eprintln!("wrote {path}");
+            }
+            Ok(())
+        }
+        "fleet" => {
+            // Fleet shape: --nodes sized, profiles cycled from --mix.
+            let n_nodes: usize = args
+                .opt("nodes")
+                .map(|v| v.parse().map_err(|_| Error::Config("bad --nodes".into())))
+                .unwrap_or(Ok(4))?;
+            let n_nodes = n_nodes.max(1);
+            let mix: Vec<NodeProfile> = match args.opt("mix") {
+                Some(list) => list
+                    .split(',')
+                    .map(|p| {
+                        NodeProfile::parse(p.trim()).ok_or_else(|| {
+                            Error::Config(format!(
+                                "unknown profile `{p}` in --mix (known: orin, xavier)"
+                            ))
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                None => vec![NodeProfile::Orin, NodeProfile::Xavier],
+            };
+            if mix.is_empty() {
+                return Err(Error::Config("--mix needs at least one profile".into()));
+            }
+            let profiles: Vec<NodeProfile> =
+                (0..n_nodes).map(|i| mix[i % mix.len()]).collect();
+            let mut opts = FleetOptions::new(profiles);
+
+            if let Some(seed) = args.opt("seed") {
+                opts.seed = seed.parse().map_err(|_| Error::Config("bad --seed".into()))?;
+            }
+            if let Some(n) = args.opt("check-every") {
+                opts.check_every = n
+                    .parse()
+                    .map_err(|_| Error::Config("bad --check-every".into()))?;
+            }
+            if let Some(n) = args.opt("max-backlog") {
+                opts.max_backlog = n
+                    .parse()
+                    .map_err(|_| Error::Config("bad --max-backlog".into()))?;
+            }
+            if let Some(n) = args.opt("plan-frames") {
+                opts.plan_frames = n
+                    .parse()
+                    .map_err(|_| Error::Config("bad --plan-frames".into()))?;
+            }
+            opts.migration = if args.flag("no-migrate") {
+                MigrationPolicy::disabled()
+            } else {
+                let mut p = MigrationPolicy::default();
+                if let Some(n) = args.opt("backlog-threshold") {
+                    p.backlog_threshold = n
+                        .parse()
+                        .map_err(|_| Error::Config("bad --backlog-threshold".into()))?;
+                }
+                if let Some(n) = args.opt("force-migrate-every") {
+                    p.force_every_checks = Some(
+                        n.parse()
+                            .map_err(|_| Error::Config("bad --force-migrate-every".into()))?,
+                    );
+                }
+                p
+            };
+            // --degrade node:at_seconds:factor[,...]
+            if let Some(list) = args.opt("degrade") {
+                for part in list.split(',') {
+                    let fields: Vec<&str> = part.split(':').collect();
+                    if fields.len() != 3 {
+                        return Err(Error::Config(format!(
+                            "bad --degrade entry `{part}` (want node:at:factor)"
+                        )));
+                    }
+                    opts.degradations.push(edgepipe::fleet::DegradationEvent {
+                        node: fields[0]
+                            .parse()
+                            .map_err(|_| Error::Config("bad --degrade node".into()))?,
+                        at_seconds: fields[1]
+                            .parse()
+                            .map_err(|_| Error::Config("bad --degrade at".into()))?,
+                        slowdown: fields[2]
+                            .parse()
+                            .map_err(|_| Error::Config("bad --degrade factor".into()))?,
+                    });
+                }
+            }
+
+            // Client load, shaped like `serve`'s.
+            let duration: usize = args
+                .opt("duration-frames")
+                .map(|v| v.parse().map_err(|_| Error::Config("bad --duration-frames".into())))
+                .unwrap_or(Ok(4096))?;
+            let n_clients: usize = args
+                .opt("clients")
+                .map(|v| v.parse().map_err(|_| Error::Config("bad --clients".into())))
+                .unwrap_or(Ok(32))?;
+            let n_clients = n_clients.max(1);
+            let rate_fps: f64 = args
+                .opt("rate-fps")
+                .map(|v| v.parse().map_err(|_| Error::Config("bad --rate-fps".into())))
+                .unwrap_or(Ok(600.0))?;
+            let profile = args.opt("profile").unwrap_or("poisson");
+            let per_rate = rate_fps / n_clients as f64;
+            let base = duration / n_clients;
+            let extra = duration % n_clients;
+            for i in 0..n_clients {
+                let frames = base + usize::from(i < extra);
+                if frames == 0 {
+                    continue;
+                }
+                let arrivals = match profile {
+                    "poisson" => ArrivalProcess::Poisson { rate_fps: per_rate },
+                    "burst" => ArrivalProcess::Burst {
+                        burst_fps: per_rate * 4.0,
+                        burst_len: 32,
+                        idle_seconds: 0.75 * 32.0 / per_rate,
+                    },
+                    "ramp" => ArrivalProcess::Ramp {
+                        start_fps: per_rate * 0.25,
+                        end_fps: per_rate * 2.5,
+                    },
+                    other => {
+                        return Err(Error::Config(format!(
+                            "unknown profile `{other}` (known: poisson, burst, ramp)"
+                        )));
+                    }
+                };
+                opts.clients
+                    .push(ClientSpec::new(format!("client-{i}"), frames, arrivals));
+            }
+            opts.class_names = vec!["default".into()];
+
+            let rep = run_fleet(&opts)?;
+            println!(
+                "fleet: {} node(s), {} stream(s) — {} offered / {} completed / {} shed, \
+                 {} migration(s), {:.1} virtual fps in {:.2} virtual s ({:.2}s wall)",
+                rep.nodes.len(),
+                rep.streams,
+                rep.offered,
+                rep.completed,
+                rep.shed,
+                rep.migrations.len(),
+                rep.fps,
+                rep.virtual_seconds,
+                rep.wall_seconds
+            );
+            println!(
+                "latency p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  ({} window(s))",
+                rep.latency_ms_p50,
+                rep.latency_ms_p95,
+                rep.latency_ms_p99,
+                rep.windows.len()
+            );
+            println!(
+                "{:<5} {:<7} {:>9} {:>9} {:>7} {:>8} {:>9} {:>11} {:>6} {:>6}  health",
+                "node", "profile", "offered", "completed", "shed", "fps", "power W", "fps/W", "in", "out"
+            );
+            for &i in &rep.ranking() {
+                let n = &rep.nodes[i];
+                println!(
+                    "{:<5} {:<7} {:>9} {:>9} {:>7} {:>8.1} {:>9.2} {:>11.2} {:>6} {:>6}  {}",
+                    n.node,
+                    n.profile,
+                    n.offered,
+                    n.completed,
+                    n.shed,
+                    n.fps,
+                    n.power_w,
+                    n.fps_per_watt,
+                    n.migrations_in,
+                    n.migrations_out,
+                    n.health
+                );
+            }
+            for ev in &rep.migrations {
+                println!(
+                    "  migrate @{:.3}s: stream {} node {} -> {} [{}]",
+                    ev.at_seconds, ev.stream, ev.from_node, ev.to_node, ev.reason
+                );
             }
             if let Some(path) = args.opt("json") {
                 std::fs::write(path, rep.to_json().to_pretty())?;

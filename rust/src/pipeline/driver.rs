@@ -389,6 +389,13 @@ impl StreamCore {
         self.submitted
     }
 
+    /// Overload drops (full-queue copy discards) so far — the live
+    /// counterpart of [`PipelineReport::dropped`], read at serve
+    /// checkpoints to attribute drops to telemetry windows.
+    pub fn dropped_so_far(&self) -> usize {
+        self.dropped_total.load(Ordering::Relaxed)
+    }
+
     /// Live per-instance completed-frame counts (serve checkpoint read).
     pub fn completed_frames(&self) -> Vec<usize> {
         self.metrics.frames_completed()

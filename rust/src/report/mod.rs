@@ -653,6 +653,65 @@ pub fn serve_report(soc: &SocSpec) -> Json {
     rep.to_json()
 }
 
+/// The `report fleet` section: a 4-node mixed Orin/Xavier cluster on the
+/// virtual clock — ramp load saturates one node, a degradation is
+/// injected, and migrations rebalance. Prints the FPS-per-watt ranking
+/// and returns the fleet report JSON.
+pub fn fleet_report() -> Json {
+    use crate::fleet::{run_fleet, DegradationEvent, FleetOptions, NodeProfile};
+    use crate::serve::{ArrivalProcess, ClientSpec};
+
+    let mut opts = FleetOptions::new(vec![
+        NodeProfile::Orin,
+        NodeProfile::Xavier,
+        NodeProfile::Orin,
+        NodeProfile::Xavier,
+    ]);
+    opts.check_every = 128;
+    opts.plan_frames = 16;
+    for i in 0..12 {
+        opts.clients.push(ClientSpec::new(
+            format!("hospital-{i}"),
+            128,
+            ArrivalProcess::Ramp {
+                start_fps: 10.0,
+                end_fps: 80.0,
+            },
+        ));
+    }
+    opts.degradations.push(DegradationEvent {
+        at_seconds: 1.0,
+        node: 0,
+        slowdown: 8.0,
+    });
+    let rep = run_fleet(&opts).expect("fleet-report run");
+
+    println!("Fleet: 4 mixed Orin/Xavier nodes, ramp load, node 0 degraded @1.0s");
+    println!(
+        "  {} offered, {} completed, {} shed; {} migration(s); fleet {:.1} fps; p99 {:.2} ms",
+        rep.offered,
+        rep.completed,
+        rep.shed,
+        rep.migrations.len(),
+        rep.fps,
+        rep.latency_ms_p99
+    );
+    for &i in &rep.ranking() {
+        let n = &rep.nodes[i];
+        println!(
+            "  node {} ({:<6}) {:>5} completed  {:>6.1} fps  {:>5.2} W  {:>6.2} fps/W  {}",
+            n.node, n.profile, n.completed, n.fps, n.power_w, n.fps_per_watt, n.health
+        );
+    }
+    for ev in &rep.migrations {
+        println!(
+            "  migrate @{:.3}s: stream {} node {} -> {} [{}]",
+            ev.at_seconds, ev.stream, ev.from_node, ev.to_node, ev.reason
+        );
+    }
+    rep.to_json()
+}
+
 /// Everything at once (the `report all` subcommand).
 pub fn all_reports(artifact_dir: &str) -> Json {
     let soc = hw::orin();
@@ -666,6 +725,7 @@ pub fn all_reports(artifact_dir: &str) -> Json {
         ("pipeline", pipeline_report(&soc)),
         ("placement", placement_report(&soc)),
         ("serve", serve_report(&soc)),
+        ("fleet", fleet_report()),
     ])
 }
 

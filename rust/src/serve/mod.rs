@@ -130,6 +130,10 @@ pub struct ServeReport {
     pub shed: usize,
     pub shed_rate_limit: usize,
     pub shed_deadline: usize,
+    /// Droppable fanout copies discarded on overload across every phase
+    /// (the pipelines' `dropped` ledger — distinct from `shed`; unique
+    /// lossless frames are unaffected).
+    pub dropped: usize,
     /// Whole-run latency percentiles, milliseconds.
     pub latency_ms_p50: f64,
     pub latency_ms_p95: f64,
@@ -162,6 +166,7 @@ impl ServeReport {
             ("shed", num(self.shed as f64)),
             ("shed_rate_limit", num(self.shed_rate_limit as f64)),
             ("shed_deadline", num(self.shed_deadline as f64)),
+            ("dropped", num(self.dropped as f64)),
             ("latency_ms_p50", num(self.latency_ms_p50)),
             ("latency_ms_p95", num(self.latency_ms_p95)),
             ("latency_ms_p99", num(self.latency_ms_p99)),
@@ -294,6 +299,8 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
     let mut win_t0 = telemetry.now();
     let mut win_offered = 0usize;
     let mut win_shed_base = 0usize;
+    let mut win_dropped_base = 0usize;
+    let mut dropped_prev_phases = 0usize;
     let mut win_arrival_t0 = 0.0f64;
     // Deadline-aware shedding input: max(recent p95 latency, backlog /
     // served rate), refreshed at every checkpoint.
@@ -307,6 +314,7 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
                         t1: f64,
                         offered_in: usize,
                         shed_in: usize,
+                        dropped_in: usize,
                         arrival_span: f64|
      -> WindowStats {
         let (completed_w, lat) = telemetry.window(t0, t1);
@@ -321,6 +329,7 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
             latency_ms_p99: lat.p99() * 1e3,
             offered: offered_in,
             shed: shed_in,
+            dropped: dropped_in,
             arrival_fps: offered_in as f64 / arrival_span.max(f64::MIN_POSITIVE),
             engine_busy: tl_busy,
         };
@@ -367,6 +376,7 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
             span_cursor += tail.spans.len();
             let busy = telemetry::engine_busy_in_window(&tail, phase_offset, win_t0, now);
             let shed_now = admission.shed_total();
+            let dropped_now = dropped_prev_phases + core.dropped_so_far();
             let ws = close_window(
                 &mut windows,
                 &telemetry,
@@ -375,11 +385,13 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
                 now,
                 win_offered,
                 shed_now - win_shed_base,
+                dropped_now - win_dropped_base,
                 a.t - win_arrival_t0,
             );
             win_t0 = now;
             win_offered = 0;
             win_shed_base = shed_now;
+            win_dropped_base = dropped_now;
             win_arrival_t0 = a.t;
 
             // Backlog (unique frames) + wait estimate for deadline sheds.
@@ -435,6 +447,9 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
                         t_drained,
                         0,
                         0,
+                        // copies discarded while the old core drained
+                        (dropped_prev_phases + report.dropped)
+                            .saturating_sub(win_dropped_base),
                         0.0,
                     );
                 }
@@ -443,6 +458,10 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
                     &spec,
                 );
                 completed_prev_phases += phase_completed;
+                dropped_prev_phases += report.dropped;
+                // the new core's counter starts at zero; windows resume
+                // from the cumulative phase total
+                win_dropped_base = dropped_prev_phases;
                 // The phase's spans now live (bounded) in the merged
                 // timeline; retaining them twice would double memory.
                 report.timeline = Timeline::default();
@@ -524,6 +543,7 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
     // Tail window over the drain (merged timeline is already serve-clock).
     let end = telemetry.now();
     let shed_total = admission.shed_total();
+    let dropped_total = dropped_prev_phases + phases.last().map(|p| p.report.dropped).unwrap_or(0);
     let busy = telemetry::engine_busy_in_window(&timeline, 0.0, win_t0, end);
     close_window(
         &mut windows,
@@ -533,6 +553,7 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
         end,
         win_offered,
         shed_total - win_shed_base,
+        dropped_total.saturating_sub(win_dropped_base),
         schedule.last().map(|a| a.t - win_arrival_t0).unwrap_or(0.0),
     );
 
@@ -544,6 +565,7 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
         shed: shed_total,
         shed_rate_limit: admission.stats().iter().map(|s| s.shed_rate_limit).sum(),
         shed_deadline: admission.stats().iter().map(|s| s.shed_deadline).sum(),
+        dropped: dropped_total,
         latency_ms_p50: telemetry.latency_ms_percentile(50.0),
         latency_ms_p95: telemetry.latency_ms_percentile(95.0),
         latency_ms_p99: telemetry.latency_ms_percentile(99.0),

@@ -278,6 +278,7 @@ mod tests {
             latency_ms_p99: 10.0,
             offered: 100,
             shed: 0,
+            dropped: 0,
             arrival_fps: 100.0,
             engine_busy: idle_busy
                 .iter()

@@ -141,8 +141,13 @@ pub struct WindowStats {
     pub latency_ms_p99: f64,
     /// Frames offered to admission in the window.
     pub offered: usize,
-    /// Frames admission-shed in the window.
+    /// Frames admission-shed in the window (not cumulative — each shed
+    /// is attributed to exactly one window, so fleet rollups can place
+    /// loss in time).
     pub shed: usize,
+    /// Droppable fanout copies discarded on overload in the window
+    /// (the pipeline's `dropped` ledger, windowed the same way).
+    pub dropped: usize,
     /// Offered arrival rate in *model* fps (the load profile's clock).
     pub arrival_fps: f64,
     /// Busy fraction per physical unit over the window, **all SoC units**
@@ -173,6 +178,7 @@ impl WindowStats {
             ("latency_ms_p99", num(self.latency_ms_p99)),
             ("offered", num(self.offered as f64)),
             ("shed", num(self.shed as f64)),
+            ("dropped", num(self.dropped as f64)),
             ("arrival_fps", num(self.arrival_fps)),
             ("idle_frac", num(self.idle_frac())),
             (
@@ -298,6 +304,7 @@ mod tests {
             latency_ms_p99: 1.0,
             offered: 1,
             shed: 0,
+            dropped: 0,
             arrival_fps: 1.0,
             engine_busy: busy,
         };

@@ -1,0 +1,212 @@
+//! Integration: the fleet layer end to end on the virtual clock — a
+//! mixed Xavier/Orin cluster under ramp load migrates streams off a
+//! degraded node and beats the no-migration baseline, conserving every
+//! frame; and the event-driven executor carries >1000 concurrent
+//! streams in one process. No threads, no artifacts, CI-safe.
+
+use edgepipe::fleet::{
+    run_fleet, DegradationEvent, FleetOptions, MigrationPolicy, NodeProfile, StreamRouter,
+};
+use edgepipe::serve::{ArrivalProcess, ClientSpec};
+use std::collections::HashSet;
+
+/// The acceptance scenario: 4 mixed nodes, 12 ramping clients, one node
+/// throttled 12x mid-run. With migration on, streams drain off the
+/// degraded node and post-migration windowed FPS beats the frozen
+/// baseline; nothing is lost or duplicated either way.
+fn scenario(migrate: bool, degraded_node: usize) -> FleetOptions {
+    let mut opts = FleetOptions::new(vec![
+        NodeProfile::Orin,
+        NodeProfile::Xavier,
+        NodeProfile::Orin,
+        NodeProfile::Xavier,
+    ]);
+    opts.seed = 11;
+    opts.check_every = 256;
+    opts.plan_frames = 16;
+    opts.migration = if migrate {
+        MigrationPolicy {
+            backlog_threshold: 64,
+            ..MigrationPolicy::default()
+        }
+    } else {
+        MigrationPolicy::disabled()
+    };
+    opts.degradations.push(DegradationEvent {
+        at_seconds: 0.8,
+        node: degraded_node,
+        slowdown: 12.0,
+    });
+    for i in 0..12 {
+        opts.clients.push(ClientSpec::new(
+            format!("hospital-{i}"),
+            200,
+            ArrivalProcess::Ramp {
+                start_fps: 20.0,
+                end_fps: 120.0,
+            },
+        ));
+    }
+    opts
+}
+
+#[test]
+fn migration_off_a_degraded_node_beats_the_frozen_baseline() {
+    // Degrade the node the front door loads most heavily, so the
+    // throttle actually bites (assignment is deterministic).
+    let router = StreamRouter::new(4, 64);
+    let mut counts = [0usize; 4];
+    for s in 0..12 {
+        counts[router.node_for(s)] += 1;
+    }
+    let degraded = (0..4).max_by_key(|&n| counts[n]).unwrap();
+
+    let with = run_fleet(&scenario(true, degraded)).unwrap();
+    let without = run_fleet(&scenario(false, degraded)).unwrap();
+
+    // Conservation + uniqueness in BOTH runs: zero frames lost or
+    // duplicated across every migration.
+    for (name, rep) in [("migrating", &with), ("frozen", &without)] {
+        assert_eq!(rep.offered, 2400, "{name}: every scheduled frame offered");
+        assert_eq!(rep.shed, 0, "{name}: unlimited backlog never sheds");
+        assert_eq!(rep.completed, 2400, "{name}: every frame delivered");
+        assert_eq!(rep.deliveries.len(), 2400);
+        assert_eq!(rep.deliveries_truncated, 0);
+        let unique: HashSet<(usize, u64)> = rep
+            .deliveries
+            .iter()
+            .map(|d| (d.stream, d.frame_id))
+            .collect();
+        assert_eq!(unique.len(), 2400, "{name}: a frame was duplicated");
+    }
+
+    assert!(
+        !with.migrations.is_empty(),
+        "a 12x-degraded node under ramp load must shed streams to peers"
+    );
+    assert!(without.migrations.is_empty(), "disabled policy must not move");
+    let moved_off: usize = with.nodes[degraded].migrations_out;
+    assert!(moved_off >= 1, "the degraded node must be the source");
+    let t_mig = with.migrations[0].at_seconds;
+
+    // Windowed FPS after the first migration: checkpoints are pinned to
+    // the (identical) arrival schedule in both runs, so every non-drain
+    // window aligns exactly; compare completions in the post-migration
+    // windows. The final (drain) window is excluded — the frozen run
+    // parks the degraded node's frames there.
+    let post = |rep: &edgepipe::fleet::FleetReport| -> (usize, f64) {
+        let mut completed = 0usize;
+        let mut span = 0.0f64;
+        for w in &rep.windows[..rep.windows.len() - 1] {
+            if w.t0 >= t_mig {
+                completed += w.completed;
+                span += w.t1 - w.t0;
+            }
+        }
+        (completed, span)
+    };
+    let (done_with, span_with) = post(&with);
+    let (done_without, span_without) = post(&without);
+    assert!(span_with > 0.0, "need post-migration windows to compare");
+    assert!(
+        (span_with - span_without).abs() < 1e-9,
+        "windows must align across runs: {span_with} vs {span_without}"
+    );
+    let fps_with = done_with as f64 / span_with;
+    let fps_without = done_without as f64 / span_without;
+    assert!(
+        fps_with > fps_without,
+        "post-migration windowed FPS must beat the frozen baseline: \
+         {fps_with:.1} vs {fps_without:.1}"
+    );
+    // And the whole run finishes sooner when the fleet rebalances.
+    assert!(
+        with.virtual_seconds < without.virtual_seconds,
+        "migrating run must drain earlier: {:.3}s vs {:.3}s",
+        with.virtual_seconds,
+        without.virtual_seconds
+    );
+}
+
+/// The virtual-clock executor's scale contract: >1000 concurrent client
+/// streams served by one process, one thread, inside the test budget.
+#[test]
+fn virtual_clock_serves_over_1000_concurrent_streams() {
+    let t0 = std::time::Instant::now();
+    let mut opts = FleetOptions::new(vec![
+        NodeProfile::Orin,
+        NodeProfile::Xavier,
+        NodeProfile::Orin,
+        NodeProfile::Xavier,
+        NodeProfile::Orin,
+        NodeProfile::Xavier,
+        NodeProfile::Orin,
+        NodeProfile::Xavier,
+    ]);
+    opts.check_every = 512;
+    opts.plan_frames = 16;
+    for i in 0..1200 {
+        opts.clients.push(ClientSpec::new(
+            format!("s{i}"),
+            3,
+            ArrivalProcess::Poisson { rate_fps: 30.0 },
+        ));
+    }
+    let rep = run_fleet(&opts).unwrap();
+    assert_eq!(rep.streams, 1200);
+    assert_eq!(rep.offered, 3600);
+    assert_eq!(rep.offered, rep.completed + rep.shed);
+    assert_eq!(rep.shed, 0);
+    assert!(rep.latency_ms_p99.is_finite() && rep.latency_ms_p99 > 0.0);
+    // every stream got service
+    let served: HashSet<usize> = rep.deliveries.iter().map(|d| d.stream).collect();
+    assert_eq!(served.len(), 1200);
+    // the point of the executor: this is cheap (no thread-per-worker,
+    // no sleeps) — generous debug-build budget, typically milliseconds
+    // past the two plan-on-boot searches
+    assert!(
+        t0.elapsed().as_secs_f64() < 60.0,
+        "1200 virtual streams must fit the time budget, took {:.1}s",
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+/// JSON contract the fleet-smoke CI job asserts on.
+#[test]
+fn fleet_report_json_has_smoke_contract_fields() {
+    let mut opts = FleetOptions::new(vec![NodeProfile::Orin, NodeProfile::Xavier]);
+    opts.check_every = 64;
+    opts.plan_frames = 16;
+    opts.migration.force_every_checks = Some(1);
+    for i in 0..4 {
+        opts.clients.push(ClientSpec::new(
+            format!("c{i}"),
+            80,
+            ArrivalProcess::Poisson { rate_fps: 400.0 },
+        ));
+    }
+    let rep = run_fleet(&opts).unwrap();
+    let doc = edgepipe::config::json::Json::parse(&rep.to_json().to_compact()).unwrap();
+    for key in [
+        "offered",
+        "completed",
+        "shed",
+        "streams",
+        "fps",
+        "latency_ms_p99",
+        "virtual_seconds",
+        "migration_count",
+    ] {
+        assert!(doc.get(key).is_some(), "missing `{key}`");
+    }
+    assert!(doc.get("migration_count").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(doc.get("latency_ms_p99").unwrap().as_f64().unwrap().is_finite());
+    let nodes = doc.get("nodes").unwrap().as_arr().unwrap();
+    assert_eq!(nodes.len(), 2);
+    for n in nodes {
+        assert!(n.get("power_w").unwrap().as_f64().unwrap() > 0.0);
+        assert!(n.get("fps_per_watt").unwrap().as_f64().is_some());
+    }
+    assert!(doc.get("windows").unwrap().as_arr().is_some());
+    assert!(doc.get("migrations").unwrap().as_arr().is_some());
+}
