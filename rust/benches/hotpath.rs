@@ -13,6 +13,7 @@ use edgepipe::config::json::Json;
 use edgepipe::config::GanVariant;
 use edgepipe::hw::{orin, xavier, EngineKind};
 use edgepipe::imaging::dct::{dct8_block, idct8_block};
+use edgepipe::imaging::{reference, Image};
 use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
 use edgepipe::models::yolov8::{yolov8, YoloConfig};
 use edgepipe::pipeline::batcher::BatchPolicy;
@@ -120,6 +121,104 @@ fn main() {
     });
     b.rate("dct8_block_10k_blocks", "blocks_per_s", 10_000.0 / (ms / 1e3));
     println!("dct checksum: {dct_sink}");
+
+    // Whole-image kernels, optimized vs the scalar reference oracles kept
+    // in `imaging::reference`: 512x512 frames, per-megapixel throughput,
+    // and the speedup the row-parallel + border-split restructuring buys
+    // (`speedup_vs_scalar` = scalar ms / optimized ms). The `_scalar`
+    // cases are single-threaded by construction, so they are core-count
+    // independent and double as stable regression anchors for CI; the
+    // optimized cases scale with the runner and get a looser gate.
+    fn kernel_case(b: &Bench, label: &str, mpix: f64, opt: impl FnMut(), scalar: impl FnMut()) {
+        let scalar_label = format!("{label}_scalar");
+        let ms_opt = b.measure(label, 300, opt);
+        let ms_ref = b.measure(&scalar_label, 300, scalar);
+        b.rate(label, "mpix_per_s", mpix / (ms_opt / 1e3));
+        b.rate(&scalar_label, "mpix_per_s", mpix / (ms_ref / 1e3));
+        b.rate(label, "speedup_vs_scalar", ms_ref / ms_opt);
+    }
+    use std::hint::black_box;
+    let (iw, ih) = (512usize, 512usize);
+    let mpix = (iw * ih) as f64 / 1e6;
+    let mut rng = Rng::new(11);
+    // 8-bit-quantized pixels: representative of decoded frame data, and
+    // what engages `median_k`'s sliding-histogram fast path.
+    let bytes: Vec<u8> = (0..iw * ih).map(|_| rng.below(256) as u8).collect();
+    let img = Image::from_u8(iw, ih, &bytes).unwrap();
+    // A correlated second image for SSIM so window statistics stay
+    // non-degenerate (noise against an affine remap of itself).
+    let img2 = Image::from_data(
+        iw,
+        ih,
+        img.data.iter().map(|v| (v * 0.9 + 0.05).min(1.0)).collect(),
+    )
+    .unwrap();
+    kernel_case(
+        &b,
+        "img_dct_512",
+        mpix,
+        || {
+            black_box(edgepipe::imaging::dct::dct_image(&img));
+        },
+        || {
+            black_box(reference::dct_image(&img));
+        },
+    );
+    kernel_case(
+        &b,
+        "img_sobel_512",
+        mpix,
+        || {
+            black_box(edgepipe::imaging::sobel::sobel(&img));
+        },
+        || {
+            black_box(reference::sobel(&img));
+        },
+    );
+    kernel_case(
+        &b,
+        "img_median5_512",
+        mpix,
+        || {
+            black_box(edgepipe::imaging::median::median_k(&img, 5));
+        },
+        || {
+            black_box(reference::median_k(&img, 5));
+        },
+    );
+    kernel_case(
+        &b,
+        "img_ssim_512",
+        mpix,
+        || {
+            black_box(edgepipe::imaging::metrics::ssim(&img, &img2).unwrap());
+        },
+        || {
+            black_box(reference::ssim(&img, &img2).unwrap());
+        },
+    );
+    kernel_case(
+        &b,
+        "img_histeq_512",
+        mpix,
+        || {
+            black_box(edgepipe::imaging::histeq::equalize(&img));
+        },
+        || {
+            black_box(reference::equalize(&img));
+        },
+    );
+    kernel_case(
+        &b,
+        "img_lzw_512",
+        mpix,
+        || {
+            black_box(edgepipe::imaging::lzw::compress(&bytes));
+        },
+        || {
+            black_box(reference::lzw_compress(&bytes));
+        },
+    );
 
     // Batched vs unbatched dispatch through the sim backend's roofline
     // pricing: execute_batch(4) is ONE dispatch that amortizes launch

@@ -14,24 +14,30 @@
 //! the node whose projected load (backlog over planned capacity) stays
 //! lowest after absorbing the moved share, preferring healthy nodes.
 
+use crate::util::hash::{mix64, BuildMix64};
 use std::collections::HashMap;
 
 /// SplitMix64 finalizer: cheap, well-mixed 64-bit hash for ring points
 /// and stream keys. Deterministic across runs and platforms.
-pub fn hash64(mut x: u64) -> u64 {
-    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
-    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
-    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
-    x ^ (x >> 31)
+#[inline]
+pub fn hash64(x: u64) -> u64 {
+    mix64(x)
 }
 
 /// Consistent-hash stream→node map with a migration override layer.
+///
+/// The ring is stored as two flat arrays (point hashes, point owners)
+/// rather than a `Vec<(u64, usize)>`: `node_for` runs once per frame
+/// arrival in the fleet executor, and the binary search over a dense
+/// `&[u64]` touches half the cache lines of the tupled layout.
 pub struct StreamRouter {
-    /// Sorted ring points: (point hash, node).
-    ring: Vec<(u64, usize)>,
+    /// Sorted ring point hashes.
+    points: Vec<u64>,
+    /// Owning node of each ring point, parallel to `points`.
+    owners: Vec<u32>,
     nodes: usize,
     /// Streams moved off their ring home by a migration.
-    overrides: HashMap<usize, usize>,
+    overrides: HashMap<usize, usize, BuildMix64>,
 }
 
 impl StreamRouter {
@@ -43,14 +49,16 @@ impl StreamRouter {
         let mut ring = Vec::with_capacity(nodes * replicas);
         for node in 0..nodes {
             for r in 0..replicas {
-                ring.push((hash64((node as u64) << 32 | r as u64), node));
+                ring.push((hash64((node as u64) << 32 | r as u64), node as u32));
             }
         }
         ring.sort_unstable();
+        let (points, owners) = ring.into_iter().unzip();
         StreamRouter {
-            ring,
+            points,
+            owners,
             nodes,
-            overrides: HashMap::new(),
+            overrides: HashMap::default(),
         }
     }
 
@@ -58,18 +66,31 @@ impl StreamRouter {
         self.nodes
     }
 
+    #[inline]
+    fn stream_hash(stream: usize) -> u64 {
+        hash64(stream as u64 ^ 0xfeed_beef_cafe_f00d)
+    }
+
     /// The stream's ring home, ignoring overrides.
+    #[inline]
     pub fn home(&self, stream: usize) -> usize {
-        let h = hash64(stream as u64 ^ 0xfeed_beef_cafe_f00d);
-        let i = match self.ring.binary_search(&(h, usize::MAX)) {
-            Ok(i) => i,
-            Err(i) => i,
-        };
-        self.ring[i % self.ring.len()].1
+        let h = Self::stream_hash(stream);
+        // First ring point strictly after the stream hash, wrapping.
+        let mut i = self.points.partition_point(|&p| p <= h);
+        if i == self.points.len() {
+            i = 0;
+        }
+        self.owners[i] as usize
     }
 
     /// Where the stream is served right now (override wins over home).
+    /// Per-arrival hot path: skips the override map entirely while no
+    /// migrations are in force (the common steady state).
+    #[inline]
     pub fn node_for(&self, stream: usize) -> usize {
+        if self.overrides.is_empty() {
+            return self.home(stream);
+        }
         match self.overrides.get(&stream) {
             Some(&n) => n,
             None => self.home(stream),

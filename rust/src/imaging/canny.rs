@@ -2,35 +2,83 @@
 //!
 //! Full classical pipeline: Gaussian smoothing → Sobel gradients →
 //! non-maximum suppression → double threshold → hysteresis by BFS.
+//!
+//! The smoothing, gradient, NMS, and threshold stages are row-independent
+//! and run in parallel under the `parallel` feature, each with the clamped
+//! border split out of the flat interior loop. Only the hysteresis BFS
+//! (a global flood fill) stays serial; its result is a reachable set and
+//! therefore independent of seed order, so the whole detector is
+//! bit-identical to the scalar reference
+//! ([`crate::imaging::reference::canny`]).
 
 use super::image::Image;
 use super::sobel::sobel;
+use crate::util::parallel::par_chunks_mut;
 
 /// 5×5 Gaussian blur (sigma ≈ 1.0), separable implementation.
 pub fn gaussian5(img: &Image) -> Image {
     const K: [f32; 5] = [1.0, 4.0, 6.0, 4.0, 1.0]; // binomial, sum 16
     let (w, h) = (img.width, img.height);
     let mut tmp = Image::zeros(w, h);
-    for y in 0..h {
-        for x in 0..w {
-            let mut s = 0.0;
-            for (i, &k) in K.iter().enumerate() {
-                s += k * img.get_clamped(x as isize + i as isize - 2, y as isize);
-            }
-            tmp.set(x, y, s / 16.0);
-        }
+    if w == 0 || h == 0 {
+        return tmp;
     }
+    // Horizontal pass: clamped only within 2 columns of the sides.
+    let src = &img.data;
+    par_chunks_mut(&mut tmp.data, w, |y, row| {
+        let cur = &src[y * w..(y + 1) * w];
+        let border = 2.min(w);
+        for x in 0..border {
+            row[x] = h5_clamped(cur, x);
+        }
+        for x in 2..w.saturating_sub(2) {
+            row[x] =
+                (cur[x - 2] + 4.0 * cur[x - 1] + 6.0 * cur[x] + 4.0 * cur[x + 1] + cur[x + 2])
+                    / 16.0;
+        }
+        for x in w.saturating_sub(2).max(border)..w {
+            row[x] = h5_clamped(cur, x);
+        }
+    });
+    // Vertical pass: rows 2..h-2 read five whole rows; edge rows clamp.
     let mut out = Image::zeros(w, h);
-    for y in 0..h {
-        for x in 0..w {
-            let mut s = 0.0;
-            for (i, &k) in K.iter().enumerate() {
-                s += k * tmp.get_clamped(x as isize, y as isize + i as isize - 2);
+    let smoothed = &tmp;
+    let src = &tmp.data;
+    par_chunks_mut(&mut out.data, w, |y, row| {
+        if y < 2 || y + 2 >= h {
+            for (x, o) in row.iter_mut().enumerate() {
+                let mut s = 0.0;
+                for (i, &k) in K.iter().enumerate() {
+                    s += k * smoothed.get_clamped(x as isize, y as isize + i as isize - 2);
+                }
+                *o = s / 16.0;
             }
-            out.set(x, y, s / 16.0);
+            return;
         }
-    }
+        let r0 = &src[(y - 2) * w..(y - 1) * w];
+        let r1 = &src[(y - 1) * w..y * w];
+        let r2 = &src[y * w..(y + 1) * w];
+        let r3 = &src[(y + 1) * w..(y + 2) * w];
+        let r4 = &src[(y + 2) * w..(y + 3) * w];
+        for (x, o) in row.iter_mut().enumerate() {
+            *o = (r0[x] + 4.0 * r1[x] + 6.0 * r2[x] + 4.0 * r3[x] + r4[x]) / 16.0;
+        }
+    });
     out
+}
+
+/// Horizontal 5-tap with replicate clamping, summed in kernel order so the
+/// border matches the reference bit-for-bit.
+#[inline]
+fn h5_clamped(row: &[f32], x: usize) -> f32 {
+    const K: [f32; 5] = [1.0, 4.0, 6.0, 4.0, 1.0];
+    let n = row.len() as isize;
+    let mut s = 0.0;
+    for (i, &k) in K.iter().enumerate() {
+        let xx = (x as isize + i as isize - 2).clamp(0, n - 1) as usize;
+        s += k * row[xx];
+    }
+    s / 16.0
 }
 
 /// Canny edges: binary image with 1.0 at edge pixels.
@@ -42,46 +90,69 @@ pub fn canny(img: &Image, low: f32, high: f32) -> Image {
 
     // Non-maximum suppression along the quantized gradient direction.
     let mut nms = Image::zeros(w, h);
-    for y in 0..h {
-        for x in 0..w {
-            let m = g.magnitude.get(x, y);
-            if m == 0.0 {
-                continue;
+    if w > 0 && h > 0 {
+        let mag = &g.magnitude;
+        let mag_data = &g.magnitude.data;
+        let dir = &g.direction;
+        par_chunks_mut(&mut nms.data, w, |y, row| {
+            let interior_y = y > 0 && y + 1 < h;
+            for (x, o) in row.iter_mut().enumerate() {
+                let m = mag_data[y * w + x];
+                if m == 0.0 {
+                    continue;
+                }
+                let angle = dir[y * w + x];
+                // Quantize direction to 0/45/90/135 degrees.
+                let deg = angle.to_degrees();
+                let deg = if deg < 0.0 { deg + 180.0 } else { deg };
+                let (dx, dy): (isize, isize) = if !(22.5..157.5).contains(&deg) {
+                    (1, 0)
+                } else if deg < 67.5 {
+                    (1, 1)
+                } else if deg < 112.5 {
+                    (0, 1)
+                } else {
+                    (-1, 1)
+                };
+                let (a, b) = if interior_y && x > 0 && x + 1 < w {
+                    let fwd = (y as isize + dy) as usize * w + (x as isize + dx) as usize;
+                    let back = (y as isize - dy) as usize * w + (x as isize - dx) as usize;
+                    (mag_data[fwd], mag_data[back])
+                } else {
+                    (
+                        mag.get_clamped(x as isize + dx, y as isize + dy),
+                        mag.get_clamped(x as isize - dx, y as isize - dy),
+                    )
+                };
+                if m >= a && m >= b {
+                    *o = m;
+                }
             }
-            let angle = g.direction[y * w + x];
-            // Quantize direction to 0/45/90/135 degrees.
-            let deg = angle.to_degrees();
-            let deg = if deg < 0.0 { deg + 180.0 } else { deg };
-            let (dx, dy): (isize, isize) = if !(22.5..157.5).contains(&deg) {
-                (1, 0)
-            } else if deg < 67.5 {
-                (1, 1)
-            } else if deg < 112.5 {
-                (0, 1)
-            } else {
-                (-1, 1)
-            };
-            let a = g.magnitude.get_clamped(x as isize + dx, y as isize + dy);
-            let b = g.magnitude.get_clamped(x as isize - dx, y as isize - dy);
-            if m >= a && m >= b {
-                nms.set(x, y, m);
-            }
-        }
+        });
     }
 
-    // Double threshold + hysteresis.
+    // Double threshold + hysteresis. Marks are written row-parallel; seeds
+    // are collected serially afterwards (the BFS reachable set does not
+    // depend on seed order).
     const WEAK: f32 = 0.5;
     const STRONG: f32 = 1.0;
     let mut marks = Image::zeros(w, h);
-    let mut stack = Vec::new();
+    let nms_data = &nms.data;
+    par_chunks_mut(&mut marks.data, w, |y, row| {
+        for (x, o) in row.iter_mut().enumerate() {
+            let m = nms_data[y * w + x];
+            if m >= high {
+                *o = STRONG;
+            } else if m >= low {
+                *o = WEAK;
+            }
+        }
+    });
+    let mut stack: Vec<(usize, usize)> = Vec::new();
     for y in 0..h {
         for x in 0..w {
-            let m = nms.get(x, y);
-            if m >= high {
-                marks.set(x, y, STRONG);
+            if marks.get(x, y) == STRONG {
                 stack.push((x, y));
-            } else if m >= low {
-                marks.set(x, y, WEAK);
             }
         }
     }

@@ -4,6 +4,7 @@
 //! JPEG-style transform used in medical image compression pipelines.
 
 use super::image::Image;
+use crate::util::parallel::par_chunks_mut;
 use std::sync::OnceLock;
 
 const N: usize = 8;
@@ -89,48 +90,43 @@ pub fn idct8_block(coeffs: &[f32; 64]) -> [f32; 64] {
 }
 
 /// Whole-image blockwise 8×8 DCT. Image dimensions must be multiples of 8.
+///
+/// Blocks are independent, so 8-row block bands run in parallel under the
+/// `parallel` feature and each block is moved with flat row-slice copies
+/// instead of per-pixel `get`/`set`. Per-block math is unchanged — output
+/// is bit-identical to the scalar reference.
 pub fn dct_image(img: &Image) -> Image {
-    assert!(img.width % N == 0 && img.height % N == 0, "dims must be 8-aligned");
-    let mut out = Image::zeros(img.width, img.height);
-    for by in (0..img.height).step_by(N) {
-        for bx in (0..img.width).step_by(N) {
-            let mut block = [0f32; 64];
-            for y in 0..N {
-                for x in 0..N {
-                    block[y * N + x] = img.get(bx + x, by + y);
-                }
-            }
-            let coeffs = dct8_block(&block);
-            for y in 0..N {
-                for x in 0..N {
-                    out.set(bx + x, by + y, coeffs[y * N + x]);
-                }
-            }
-        }
-    }
-    out
+    blockwise(img, dct8_block)
 }
 
 /// Whole-image blockwise inverse DCT.
 pub fn idct_image(img: &Image) -> Image {
-    assert!(img.width % N == 0 && img.height % N == 0, "dims must be 8-aligned");
-    let mut out = Image::zeros(img.width, img.height);
-    for by in (0..img.height).step_by(N) {
-        for bx in (0..img.width).step_by(N) {
-            let mut block = [0f32; 64];
+    blockwise(img, idct8_block)
+}
+
+fn blockwise(img: &Image, transform: fn(&[f32; 64]) -> [f32; 64]) -> Image {
+    assert!(
+        img.width % N == 0 && img.height % N == 0,
+        "dims must be 8-aligned"
+    );
+    let w = img.width;
+    let mut out = Image::zeros(w, img.height);
+    let src = &img.data;
+    // One chunk = one band of 8 image rows = one row of 8×8 blocks.
+    par_chunks_mut(&mut out.data, w * N, |band, rows| {
+        let top = band * N;
+        let mut block = [0f32; 64];
+        for bx in (0..w).step_by(N) {
             for y in 0..N {
-                for x in 0..N {
-                    block[y * N + x] = img.get(bx + x, by + y);
-                }
+                let o = (top + y) * w + bx;
+                block[y * N..(y + 1) * N].copy_from_slice(&src[o..o + N]);
             }
-            let px = idct8_block(&block);
+            let coeffs = transform(&block);
             for y in 0..N {
-                for x in 0..N {
-                    out.set(bx + x, by + y, px[y * N + x]);
-                }
+                rows[y * w + bx..y * w + bx + N].copy_from_slice(&coeffs[y * N..(y + 1) * N]);
             }
         }
-    }
+    });
     out
 }
 

@@ -4,18 +4,43 @@
 //! the standard CDF remap `v' = (cdf(v) - cdf_min) / (N - cdf_min)`.
 
 use super::image::Image;
+use crate::util::parallel::{par_chunks_mut, par_fold};
 
 /// Number of histogram bins (8-bit intensity resolution).
 pub const BINS: usize = 256;
 
-/// Compute the 256-bin histogram of an image.
+#[inline]
+fn bin_of(v: f32) -> usize {
+    ((v.clamp(0.0, 1.0) * 255.0).round() as usize).min(BINS - 1)
+}
+
+/// Compute the 256-bin histogram of an image. Counted per band in parallel
+/// and merged; integer adds commute, so the result is exact regardless of
+/// thread count.
 pub fn histogram(img: &Image) -> [u32; BINS] {
-    let mut h = [0u32; BINS];
-    for &v in &img.data {
-        let b = ((v.clamp(0.0, 1.0) * 255.0).round() as usize).min(BINS - 1);
-        h[b] += 1;
-    }
-    h
+    let data = &img.data;
+    const BAND: usize = 32 * 1024;
+    let n_bands = data.len().div_ceil(BAND);
+    par_fold(
+        n_bands,
+        2,
+        |band| {
+            let mut h = [0u32; BINS];
+            let lo = band.start * BAND;
+            let hi = (band.end * BAND).min(data.len());
+            for &v in &data[lo..hi] {
+                h[bin_of(v)] += 1;
+            }
+            h
+        },
+        |mut a, b| {
+            for (x, y) in a.iter_mut().zip(b.iter()) {
+                *x += y;
+            }
+            a
+        },
+    )
+    .unwrap_or([0u32; BINS])
 }
 
 /// Globally equalize the histogram.
@@ -36,11 +61,17 @@ pub fn equalize(img: &Image) -> Image {
     for i in 0..BINS {
         lut[i] = ((cdf[i].saturating_sub(cdf_min)) as f32 / denom).clamp(0.0, 1.0);
     }
-    let mut out = img.clone();
-    for v in &mut out.data {
-        let b = ((v.clamp(0.0, 1.0) * 255.0).round() as usize).min(BINS - 1);
-        *v = lut[b];
-    }
+    // Write into a fresh buffer — the source is only read through the LUT,
+    // so cloning it first (as the original did) was a wasted full-image copy.
+    let mut out = Image::zeros(img.width, img.height);
+    let src = &img.data;
+    const CHUNK: usize = 4096;
+    par_chunks_mut(&mut out.data, CHUNK, |i, chunk| {
+        let base = i * CHUNK;
+        for (o, &v) in chunk.iter_mut().zip(&src[base..base + chunk.len()]) {
+            *o = lut[bin_of(v)];
+        }
+    });
     out
 }
 

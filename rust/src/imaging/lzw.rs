@@ -5,20 +5,21 @@
 //! archival in the Table I latency comparison.
 
 use crate::error::{Error, Result};
+use crate::util::hash::BuildMix64;
 use std::collections::HashMap;
 
 const MAX_CODE_BITS: u32 = 16;
-const DICT_LIMIT: usize = 1 << MAX_CODE_BITS;
+pub(crate) const DICT_LIMIT: usize = 1 << MAX_CODE_BITS;
 
 /// Pack variable-width codes into bytes (LSB-first).
-struct BitWriter {
+pub(crate) struct BitWriter {
     out: Vec<u8>,
     acc: u64,
     nbits: u32,
 }
 
 impl BitWriter {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         BitWriter {
             out: Vec::new(),
             acc: 0,
@@ -26,7 +27,7 @@ impl BitWriter {
         }
     }
 
-    fn push(&mut self, code: u32, width: u32) {
+    pub(crate) fn push(&mut self, code: u32, width: u32) {
         self.acc |= (code as u64) << self.nbits;
         self.nbits += width;
         while self.nbits >= 8 {
@@ -36,7 +37,7 @@ impl BitWriter {
         }
     }
 
-    fn finish(mut self) -> Vec<u8> {
+    pub(crate) fn finish(mut self) -> Vec<u8> {
         if self.nbits > 0 {
             self.out.push((self.acc & 0xFF) as u8);
         }
@@ -78,7 +79,7 @@ impl<'a> BitReader<'a> {
     }
 }
 
-fn width_for(next_code: usize) -> u32 {
+pub(crate) fn width_for(next_code: usize) -> u32 {
     let mut w = 9;
     while (1usize << w) < next_code + 1 && w < MAX_CODE_BITS {
         w += 1;
@@ -87,31 +88,40 @@ fn width_for(next_code: usize) -> u32 {
 }
 
 /// LZW-compress a byte stream.
+///
+/// Every dictionary string is a known prefix string extended by one byte,
+/// so instead of owning byte vectors (the original cloned the running
+/// sequence on *every* input byte) the dictionary keys
+/// `(prefix_code << 8) | byte` packed into a `u32` — one integer probe per
+/// symbol, zero allocations after the initial table reserve. Emits the
+/// exact code sequence of the original, so output is bit-identical
+/// (asserted against [`crate::imaging::reference::lzw_compress`]).
 pub fn compress(input: &[u8]) -> Vec<u8> {
     if input.is_empty() {
         return Vec::new();
     }
-    let mut dict: HashMap<Vec<u8>, u32> = (0..256u32).map(|b| (vec![b as u8], b)).collect();
+    // Single-byte strings are implicit (code == byte value); only extended
+    // strings live in the map.
+    let mut dict: HashMap<u32, u32, BuildMix64> =
+        HashMap::with_capacity_and_hasher(4096, BuildMix64::default());
     let mut next_code = 256u32;
     let mut writer = BitWriter::new();
-    let mut current = vec![input[0]];
+    let mut current = input[0] as u32;
     for &b in &input[1..] {
-        let mut candidate = current.clone();
-        candidate.push(b);
-        if dict.contains_key(&candidate) {
-            current = candidate;
-        } else {
-            let code = dict[&current];
-            writer.push(code, width_for(next_code as usize));
-            if (next_code as usize) < DICT_LIMIT {
-                dict.insert(candidate, next_code);
-                next_code += 1;
+        let key = (current << 8) | b as u32;
+        match dict.get(&key) {
+            Some(&code) => current = code,
+            None => {
+                writer.push(current, width_for(next_code as usize));
+                if (next_code as usize) < DICT_LIMIT {
+                    dict.insert(key, next_code);
+                    next_code += 1;
+                }
+                current = b as u32;
             }
-            current = vec![b];
         }
     }
-    let code = dict[&current];
-    writer.push(code, width_for(next_code as usize));
+    writer.push(current, width_for(next_code as usize));
     writer.finish()
 }
 
@@ -224,6 +234,23 @@ mod tests {
         assert_eq!(back, bytes);
         // Phantoms have large flat regions -> should compress well.
         assert!(compressed.len() < bytes.len());
+    }
+
+    #[test]
+    fn compress_is_bit_identical_to_reference() {
+        use crate::imaging::reference;
+        let mut rng = Rng::new(99);
+        for len in [1usize, 17, 500, 4000] {
+            // Small alphabet exercises deep dictionary growth.
+            let data: Vec<u8> = (0..len).map(|_| rng.below(64) as u8).collect();
+            assert_eq!(compress(&data), reference::lzw_compress(&data));
+        }
+        let rep: Vec<u8> = std::iter::repeat(b"medimg".as_slice())
+            .take(400)
+            .flatten()
+            .copied()
+            .collect();
+        assert_eq!(compress(&rep), reference::lzw_compress(&rep));
     }
 
     #[test]

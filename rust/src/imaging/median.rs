@@ -2,10 +2,18 @@
 //!
 //! 3×3 and general k×k median with replicate borders. The 3×3 path uses a
 //! branchless sorting network (19 compare-exchange ops — the classic
-//! Smith 1996 network) because this filter is also used on the pipeline's
-//! preprocessing hot path.
+//! Smith 1996 network) over flat row slices with the clamped border split
+//! out of the per-pixel path. The general `median_k` slides a window along
+//! each row instead of re-sorting k² samples per pixel: Huang's 256-bin
+//! running histogram when the image is exactly 8-bit-quantized (the common
+//! case — anything produced by [`Image::from_u8`]), or an incrementally
+//! maintained sorted window for arbitrary float data. Rows are independent,
+//! so both filters parallelize across rows under the `parallel` feature;
+//! all paths are bit-identical to the scalar reference
+//! ([`crate::imaging::reference::median_k`]).
 
 use super::image::Image;
+use crate::util::parallel::par_chunks_mut;
 
 #[inline(always)]
 fn cswap(a: &mut f32, b: &mut f32) {
@@ -14,71 +22,217 @@ fn cswap(a: &mut f32, b: &mut f32) {
     }
 }
 
+/// Median of 9 via the 19-exchange sorting network.
+#[inline]
+fn median9(v: [f32; 9]) -> f32 {
+    let [mut v0, mut v1, mut v2, mut v3, mut v4, mut v5, mut v6, mut v7, mut v8] = v;
+    cswap(&mut v1, &mut v2);
+    cswap(&mut v4, &mut v5);
+    cswap(&mut v7, &mut v8);
+    cswap(&mut v0, &mut v1);
+    cswap(&mut v3, &mut v4);
+    cswap(&mut v6, &mut v7);
+    cswap(&mut v1, &mut v2);
+    cswap(&mut v4, &mut v5);
+    cswap(&mut v7, &mut v8);
+    cswap(&mut v0, &mut v3);
+    cswap(&mut v5, &mut v8);
+    cswap(&mut v4, &mut v7);
+    cswap(&mut v3, &mut v6);
+    cswap(&mut v1, &mut v4);
+    cswap(&mut v2, &mut v5);
+    cswap(&mut v4, &mut v7);
+    cswap(&mut v4, &mut v2);
+    cswap(&mut v6, &mut v4);
+    cswap(&mut v4, &mut v2);
+    v4
+}
+
 /// 3×3 median via sorting network.
 pub fn median3(img: &Image) -> Image {
-    let mut out = Image::zeros(img.width, img.height);
-    for y in 0..img.height {
-        for x in 0..img.width {
-            let mut v = [0f32; 9];
-            let mut k = 0;
-            for dy in -1isize..=1 {
-                for dx in -1isize..=1 {
-                    v[k] = img.get_clamped(x as isize + dx, y as isize + dy);
-                    k += 1;
-                }
-            }
-            // 19-exchange median-of-9 network.
-            let [mut v0, mut v1, mut v2, mut v3, mut v4, mut v5, mut v6, mut v7, mut v8] = v;
-            cswap(&mut v1, &mut v2);
-            cswap(&mut v4, &mut v5);
-            cswap(&mut v7, &mut v8);
-            cswap(&mut v0, &mut v1);
-            cswap(&mut v3, &mut v4);
-            cswap(&mut v6, &mut v7);
-            cswap(&mut v1, &mut v2);
-            cswap(&mut v4, &mut v5);
-            cswap(&mut v7, &mut v8);
-            cswap(&mut v0, &mut v3);
-            cswap(&mut v5, &mut v8);
-            cswap(&mut v4, &mut v7);
-            cswap(&mut v3, &mut v6);
-            cswap(&mut v1, &mut v4);
-            cswap(&mut v2, &mut v5);
-            cswap(&mut v4, &mut v7);
-            cswap(&mut v4, &mut v2);
-            cswap(&mut v6, &mut v4);
-            cswap(&mut v4, &mut v2);
-            out.set(x, y, v4);
-        }
+    let (w, h) = (img.width, img.height);
+    let mut out = Image::zeros(w, h);
+    if w == 0 || h == 0 {
+        return out;
     }
+    let src = &img.data;
+    par_chunks_mut(&mut out.data, w, |y, row| {
+        median3_row(img, src, w, h, y, row);
+    });
     out
 }
 
-/// General k×k median (k odd) — selection by partial sort.
-pub fn median_k(img: &Image, k: usize) -> Image {
-    assert!(k % 2 == 1 && k >= 1, "kernel must be odd");
-    let r = (k / 2) as isize;
-    let mut out = Image::zeros(img.width, img.height);
-    let mut buf = Vec::with_capacity(k * k);
-    for y in 0..img.height {
-        for x in 0..img.width {
-            buf.clear();
-            for dy in -r..=r {
-                for dx in -r..=r {
-                    buf.push(img.get_clamped(x as isize + dx, y as isize + dy));
-                }
-            }
-            let mid = buf.len() / 2;
-            buf.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
-            out.set(x, y, buf[mid]);
+fn median3_row(img: &Image, src: &[f32], w: usize, h: usize, y: usize, row: &mut [f32]) {
+    if y == 0 || y + 1 >= h || w < 3 {
+        for (x, o) in row.iter_mut().enumerate() {
+            *o = median9(gather3_clamped(img, x, y));
+        }
+        return;
+    }
+    let above = &src[(y - 1) * w..y * w];
+    let cur = &src[y * w..(y + 1) * w];
+    let below = &src[(y + 1) * w..(y + 2) * w];
+    row[0] = median9(gather3_clamped(img, 0, y));
+    row[w - 1] = median9(gather3_clamped(img, w - 1, y));
+    for x in 1..w - 1 {
+        row[x] = median9([
+            above[x - 1],
+            above[x],
+            above[x + 1],
+            cur[x - 1],
+            cur[x],
+            cur[x + 1],
+            below[x - 1],
+            below[x],
+            below[x + 1],
+        ]);
+    }
+}
+
+#[inline]
+fn gather3_clamped(img: &Image, x: usize, y: usize) -> [f32; 9] {
+    let mut v = [0f32; 9];
+    let mut k = 0;
+    for dy in -1isize..=1 {
+        for dx in -1isize..=1 {
+            v[k] = img.get_clamped(x as isize + dx, y as isize + dy);
+            k += 1;
         }
     }
+    v
+}
+
+/// General k×k median (k odd) — sliding window per row instead of a
+/// per-pixel partial sort.
+pub fn median_k(img: &Image, k: usize) -> Image {
+    assert!(k % 2 == 1 && k >= 1, "kernel must be odd");
+    if k == 1 {
+        return img.clone();
+    }
+    if k == 3 {
+        return median3(img);
+    }
+    let (w, h) = (img.width, img.height);
+    let mut out = Image::zeros(w, h);
+    if w == 0 || h == 0 {
+        return out;
+    }
+    let quantized = is_u8_quantized(&img.data);
+    let src = &img.data;
+    par_chunks_mut(&mut out.data, w, |y, row| {
+        if quantized {
+            median_row_hist(src, w, h, y, k, row);
+        } else {
+            median_row_sorted(src, w, h, y, k, row);
+        }
+    });
     out
+}
+
+/// True when every pixel round-trips through 8-bit quantization exactly —
+/// then intensities form ≤256 distinct values and a 256-bin histogram
+/// median is bit-exact.
+fn is_u8_quantized(data: &[f32]) -> bool {
+    data.iter()
+        .all(|&v| (0.0..=1.0).contains(&v) && (v * 255.0).round() / 255.0 == v)
+}
+
+#[inline]
+fn bin(v: f32) -> usize {
+    (v * 255.0).round() as usize
+}
+
+#[inline]
+fn clampi(i: isize, n: usize) -> usize {
+    i.clamp(0, n as isize - 1) as usize
+}
+
+/// Huang's running-histogram median: slide the k×k window along the row,
+/// updating a 256-bin histogram by one column in / one column out, and
+/// re-find the median bin incrementally.
+fn median_row_hist(src: &[f32], w: usize, h: usize, y: usize, k: usize, row: &mut [f32]) {
+    let r = (k / 2) as isize;
+    let target = (k * k / 2 + 1) as u32;
+    let mut hist = [0u32; 256];
+    for dy in -r..=r {
+        let yy = clampi(y as isize + dy, h);
+        for dx in -r..=r {
+            let xx = clampi(dx, w);
+            hist[bin(src[yy * w + xx])] += 1;
+        }
+    }
+    // mdn = current median bin, below = count of samples in bins < mdn.
+    let mut mdn = 0usize;
+    let mut below = 0u32;
+    for x in 0..w {
+        if x > 0 {
+            let xl = clampi(x as isize - 1 - r, w);
+            let xr = clampi(x as isize + r, w);
+            for dy in -r..=r {
+                let yy = clampi(y as isize + dy, h);
+                let bl = bin(src[yy * w + xl]);
+                hist[bl] -= 1;
+                if bl < mdn {
+                    below -= 1;
+                }
+                let br = bin(src[yy * w + xr]);
+                hist[br] += 1;
+                if br < mdn {
+                    below += 1;
+                }
+            }
+        }
+        while below >= target {
+            mdn -= 1;
+            below -= hist[mdn];
+        }
+        while below + hist[mdn] < target {
+            below += hist[mdn];
+            mdn += 1;
+        }
+        row[x] = mdn as f32 / 255.0;
+    }
+}
+
+/// Arbitrary-float fallback: keep the window as a sorted vec ordered by
+/// `total_cmp`, sliding by binary-search remove/insert. Still O(k) memmoves
+/// per pixel instead of an O(k² log k) sort.
+fn median_row_sorted(src: &[f32], w: usize, h: usize, y: usize, k: usize, row: &mut [f32]) {
+    let r = (k / 2) as isize;
+    let mid = k * k / 2;
+    let mut win: Vec<f32> = Vec::with_capacity(k * k);
+    for dy in -r..=r {
+        let yy = clampi(y as isize + dy, h);
+        for dx in -r..=r {
+            win.push(src[yy * w + clampi(dx, w)]);
+        }
+    }
+    win.sort_unstable_by(f32::total_cmp);
+    row[0] = win[mid];
+    for x in 1..w {
+        let xl = clampi(x as isize - 1 - r, w);
+        let xr = clampi(x as isize + r, w);
+        for dy in -r..=r {
+            let yy = clampi(y as isize + dy, h);
+            let old = src[yy * w + xl];
+            let pos = win
+                .binary_search_by(|p| p.total_cmp(&old))
+                .expect("sliding window must contain the outgoing sample");
+            win.remove(pos);
+            let new = src[yy * w + xr];
+            let pos = match win.binary_search_by(|p| p.total_cmp(&new)) {
+                Ok(p) | Err(p) => p,
+            };
+            win.insert(pos, new);
+        }
+        row[x] = win[mid];
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::imaging::reference;
     use crate::util::rng::Rng;
 
     #[test]
@@ -110,10 +264,38 @@ mod tests {
             *v = rng.next_f32();
         }
         let a = median3(&img);
-        let b = median_k(&img, 3);
+        let b = reference::median_k(&img, 3);
         for (x, y) in a.data.iter().zip(b.data.iter()) {
             assert_eq!(x, y);
         }
+    }
+
+    #[test]
+    fn sliding_window_matches_reference_float() {
+        // Arbitrary floats take the sorted-window path.
+        let mut rng = Rng::new(7);
+        let mut img = Image::zeros(23, 17);
+        for v in &mut img.data {
+            *v = rng.next_f32();
+        }
+        assert!(!is_u8_quantized(&img.data));
+        let a = median_k(&img, 5);
+        let b = reference::median_k(&img, 5);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn histogram_path_matches_reference_quantized() {
+        let mut rng = Rng::new(8);
+        let bytes: Vec<u8> = (0..29 * 19).map(|_| rng.below(256) as u8).collect();
+        let img = Image::from_u8(29, 19, &bytes).unwrap();
+        assert!(is_u8_quantized(&img.data));
+        let a = median_k(&img, 5);
+        let b = reference::median_k(&img, 5);
+        assert_eq!(a.data, b.data);
+        let a7 = median_k(&img, 7);
+        let b7 = reference::median_k(&img, 7);
+        assert_eq!(a7.data, b7.data);
     }
 
     #[test]

@@ -7,21 +7,40 @@
 
 use super::image::Image;
 use crate::error::{Error, Result};
+use crate::util::parallel::par_fold;
 
-/// Mean squared error in 8-bit intensity units (Eq. 1).
+/// Mean squared error in 8-bit intensity units (Eq. 1). Accumulated per
+/// row band in parallel; band partials fold in band order, so a given
+/// thread count is deterministic.
 pub fn mse(original: &Image, generated: &Image) -> Result<f64> {
     check_dims(original, generated)?;
-    let n = original.data.len() as f64;
-    let sum: f64 = original
-        .data
-        .iter()
-        .zip(generated.data.iter())
-        .map(|(&o, &g)| {
-            let d = (o as f64 - g as f64) * 255.0;
-            d * d
-        })
-        .sum();
-    Ok(sum / n)
+    let n = original.data.len();
+    if n == 0 {
+        return Ok(0.0);
+    }
+    const BAND: usize = 16 * 1024;
+    let n_bands = n.div_ceil(BAND);
+    let o = &original.data;
+    let g = &generated.data;
+    let sum = par_fold(
+        n_bands,
+        2,
+        |band| {
+            let lo = band.start * BAND;
+            let hi = (band.end * BAND).min(n);
+            o[lo..hi]
+                .iter()
+                .zip(&g[lo..hi])
+                .map(|(&o, &g)| {
+                    let d = (o as f64 - g as f64) * 255.0;
+                    d * d
+                })
+                .sum::<f64>()
+        },
+        |a, b| a + b,
+    )
+    .unwrap_or(0.0);
+    Ok(sum / n as f64)
 }
 
 /// Peak signal-to-noise ratio in dB (Eq. 2), `L = 256` intensity levels.
@@ -35,6 +54,15 @@ pub fn psnr(original: &Image, generated: &Image) -> Result<f64> {
 
 /// Mean structural similarity (Eq. 3) over 8×8 windows with stride 4,
 /// reported in `[0, 1]` (multiply by 100 for the paper's Table II scale).
+///
+/// One fused pass builds five summed-area tables (Σo, Σg, Σo², Σg², Σog in
+/// `f64`), then every window's mean/variance/covariance comes from four
+/// table lookups instead of re-reading 64 pixels — overlapping windows
+/// (stride 4 < window 8) stop paying for their overlap. The row-prefix
+/// build and the window reduction are row-parallel under the `parallel`
+/// feature. Matches the scalar reference within float tolerance (~1e-5 for
+/// the image sizes used here; the SAT differences cancel more digits on
+/// very large images).
 pub fn ssim(original: &Image, generated: &Image) -> Result<f64> {
     check_dims(original, generated)?;
     const WIN: usize = 8;
@@ -48,39 +76,76 @@ pub fn ssim(original: &Image, generated: &Image) -> Result<f64> {
             "image {w}x{h} smaller than ssim window {WIN}"
         )));
     }
-    let mut total = 0.0;
-    let mut count = 0usize;
-    let mut y = 0;
-    while y + WIN <= h {
-        let mut x = 0;
-        while x + WIN <= w {
-            let (mut so, mut sg, mut soo, mut sgg, mut sog) = (0.0, 0.0, 0.0, 0.0, 0.0);
-            for dy in 0..WIN {
-                for dx in 0..WIN {
-                    let o = original.get(x + dx, y + dy) as f64 * 255.0;
-                    let g = generated.get(x + dx, y + dy) as f64 * 255.0;
-                    so += o;
-                    sg += g;
-                    soo += o * o;
-                    sgg += g * g;
-                    sog += o * g;
+
+    // Pass 1 (row-parallel): per-row running sums into row y+1 of the SAT.
+    // Cell layout is [Σo, Σg, Σo², Σg², Σog] so one window probe reads
+    // contiguous memory.
+    let stride = w + 1;
+    let mut sat = vec![[0f64; 5]; stride * (h + 1)];
+    {
+        let o = &original.data;
+        let g = &generated.data;
+        crate::util::parallel::par_chunks_mut(&mut sat[stride..], stride, |y, row| {
+            let mut run = [0f64; 5];
+            for x in 0..w {
+                let ov = o[y * w + x] as f64 * 255.0;
+                let gv = g[y * w + x] as f64 * 255.0;
+                run[0] += ov;
+                run[1] += gv;
+                run[2] += ov * ov;
+                run[3] += gv * gv;
+                run[4] += ov * gv;
+                row[x + 1] = run;
+            }
+        });
+    }
+    // Pass 2 (serial, vectorizable adds): accumulate rows downward.
+    for y in 2..=h {
+        let (prev, cur) = sat.split_at_mut(y * stride);
+        let prev = &prev[(y - 1) * stride..];
+        for (c, p) in cur[..stride].iter_mut().zip(prev) {
+            for j in 0..5 {
+                c[j] += p[j];
+            }
+        }
+    }
+
+    // Window reduction, parallel across window rows.
+    let wins_x = (w - WIN) / STRIDE + 1;
+    let wins_y = (h - WIN) / STRIDE + 1;
+    let n = (WIN * WIN) as f64;
+    let sat = &sat;
+    let total = par_fold(
+        wins_y,
+        4,
+        |band| {
+            let mut t = 0.0f64;
+            for wy in band {
+                let y0 = wy * STRIDE;
+                let y1 = y0 + WIN;
+                for wx in 0..wins_x {
+                    let x0 = wx * STRIDE;
+                    let x1 = x0 + WIN;
+                    let a = &sat[y0 * stride + x0];
+                    let b = &sat[y0 * stride + x1];
+                    let c = &sat[y1 * stride + x0];
+                    let d = &sat[y1 * stride + x1];
+                    let sum = |j: usize| d[j] - b[j] - c[j] + a[j];
+                    let mo = sum(0) / n;
+                    let mg = sum(1) / n;
+                    let vo = (sum(2) / n - mo * mo).max(0.0);
+                    let vg = (sum(3) / n - mg * mg).max(0.0);
+                    let cov = sum(4) / n - mo * mg;
+                    t += ((2.0 * mo * mg + c1) * (2.0 * cov + c2))
+                        / ((mo * mo + mg * mg + c1) * (vo + vg + c2));
                 }
             }
-            let n = (WIN * WIN) as f64;
-            let mo = so / n;
-            let mg = sg / n;
-            let vo = (soo / n - mo * mo).max(0.0);
-            let vg = (sgg / n - mg * mg).max(0.0);
-            let cov = sog / n - mo * mg;
-            let s = ((2.0 * mo * mg + c1) * (2.0 * cov + c2))
-                / ((mo * mo + mg * mg + c1) * (vo + vg + c2));
-            total += s;
-            count += 1;
-            x += STRIDE;
-        }
-        y += STRIDE;
-    }
-    Ok(total / count as f64)
+            t
+        },
+        |a, b| a + b,
+    )
+    .unwrap_or(0.0);
+    Ok(total / (wins_x * wins_y) as f64)
 }
 
 /// All three metrics at once (the Table II row for one model).

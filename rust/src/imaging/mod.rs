@@ -6,6 +6,10 @@
 //! ([`phantom`]) that substitutes for the paper's private paired dataset,
 //! and the classical medical-imaging algorithms of Table I
 //! ([`median`], [`histeq`], [`sobel`], [`canny`], [`lzw`], [`dct`]).
+//!
+//! The kernels are the optimized (row-parallel, border-split) versions;
+//! [`reference`] keeps the original scalar loops as equivalence oracles
+//! for the property tests and as bench baselines.
 
 pub mod canny;
 pub mod dct;
@@ -15,6 +19,7 @@ pub mod lzw;
 pub mod median;
 pub mod metrics;
 pub mod phantom;
+pub mod reference;
 pub mod sobel;
 
 pub use image::Image;

@@ -1,0 +1,301 @@
+//! Scalar reference implementations of the imaging kernels.
+//!
+//! These are the original single-threaded, per-pixel clamped-border loops
+//! the optimized kernels replaced. They stay in-tree for two jobs:
+//!
+//! 1. **Equivalence oracles** — `tests/prop_imaging.rs` asserts the
+//!    optimized kernels match these on random images (bit-exact for
+//!    median/histeq/LZW/DCT, within tolerance for the float reductions).
+//! 2. **Bench baselines** — `benches/hotpath.rs` times each optimized
+//!    kernel against its scalar counterpart here, so the recorded
+//!    `speedup_vs_scalar` rates are measured, not estimated.
+//!
+//! Keep these slow-and-obvious: clarity is the point. Any behavioral
+//! change to an optimized kernel must land here too, or the property
+//! tests will (correctly) fail.
+
+use super::image::Image;
+use super::sobel::Gradient;
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Scalar 3×3 Sobel: per-pixel clamped gathers, no interior split.
+pub fn sobel(img: &Image) -> Gradient {
+    let (w, h) = (img.width, img.height);
+    let mut magnitude = Image::zeros(w, h);
+    let mut direction = vec![0f32; w * h];
+    for y in 0..h {
+        for x in 0..w {
+            let p = |dx: isize, dy: isize| img.get_clamped(x as isize + dx, y as isize + dy);
+            let gx = -p(-1, -1) - 2.0 * p(-1, 0) - p(-1, 1) + p(1, -1) + 2.0 * p(1, 0) + p(1, 1);
+            let gy = -p(-1, -1) - 2.0 * p(0, -1) - p(1, -1) + p(-1, 1) + 2.0 * p(0, 1) + p(1, 1);
+            magnitude.set(x, y, (gx * gx + gy * gy).sqrt());
+            direction[y * w + x] = gy.atan2(gx);
+        }
+    }
+    Gradient {
+        magnitude,
+        direction,
+    }
+}
+
+/// Scalar 5×5 Gaussian blur (sigma ≈ 1.0), separable, clamped everywhere.
+pub fn gaussian5(img: &Image) -> Image {
+    const K: [f32; 5] = [1.0, 4.0, 6.0, 4.0, 1.0]; // binomial, sum 16
+    let (w, h) = (img.width, img.height);
+    let mut tmp = Image::zeros(w, h);
+    for y in 0..h {
+        for x in 0..w {
+            let mut s = 0.0;
+            for (i, &k) in K.iter().enumerate() {
+                s += k * img.get_clamped(x as isize + i as isize - 2, y as isize);
+            }
+            tmp.set(x, y, s / 16.0);
+        }
+    }
+    let mut out = Image::zeros(w, h);
+    for y in 0..h {
+        for x in 0..w {
+            let mut s = 0.0;
+            for (i, &k) in K.iter().enumerate() {
+                s += k * tmp.get_clamped(x as isize, y as isize + i as isize - 2);
+            }
+            out.set(x, y, s / 16.0);
+        }
+    }
+    out
+}
+
+/// Scalar Canny: smooth → sobel → NMS → double threshold → BFS hysteresis.
+pub fn canny(img: &Image, low: f32, high: f32) -> Image {
+    assert!(low <= high, "low threshold must be <= high");
+    let smoothed = gaussian5(img);
+    let g = sobel(&smoothed);
+    let (w, h) = (img.width, img.height);
+
+    let mut nms = Image::zeros(w, h);
+    for y in 0..h {
+        for x in 0..w {
+            let m = g.magnitude.get(x, y);
+            if m == 0.0 {
+                continue;
+            }
+            let angle = g.direction[y * w + x];
+            let deg = angle.to_degrees();
+            let deg = if deg < 0.0 { deg + 180.0 } else { deg };
+            let (dx, dy): (isize, isize) = if !(22.5..157.5).contains(&deg) {
+                (1, 0)
+            } else if deg < 67.5 {
+                (1, 1)
+            } else if deg < 112.5 {
+                (0, 1)
+            } else {
+                (-1, 1)
+            };
+            let a = g.magnitude.get_clamped(x as isize + dx, y as isize + dy);
+            let b = g.magnitude.get_clamped(x as isize - dx, y as isize - dy);
+            if m >= a && m >= b {
+                nms.set(x, y, m);
+            }
+        }
+    }
+
+    const WEAK: f32 = 0.5;
+    const STRONG: f32 = 1.0;
+    let mut marks = Image::zeros(w, h);
+    let mut stack = Vec::new();
+    for y in 0..h {
+        for x in 0..w {
+            let m = nms.get(x, y);
+            if m >= high {
+                marks.set(x, y, STRONG);
+                stack.push((x, y));
+            } else if m >= low {
+                marks.set(x, y, WEAK);
+            }
+        }
+    }
+    while let Some((x, y)) = stack.pop() {
+        for dy in -1isize..=1 {
+            for dx in -1isize..=1 {
+                let nx = x as isize + dx;
+                let ny = y as isize + dy;
+                if nx < 0 || ny < 0 || nx >= w as isize || ny >= h as isize {
+                    continue;
+                }
+                let (nx, ny) = (nx as usize, ny as usize);
+                if marks.get(nx, ny) == WEAK {
+                    marks.set(nx, ny, STRONG);
+                    stack.push((nx, ny));
+                }
+            }
+        }
+    }
+    for v in &mut marks.data {
+        *v = if *v == STRONG { 1.0 } else { 0.0 };
+    }
+    marks
+}
+
+/// Scalar k×k median — per-pixel window gather + partial sort.
+pub fn median_k(img: &Image, k: usize) -> Image {
+    assert!(k % 2 == 1 && k >= 1, "kernel must be odd");
+    let r = (k / 2) as isize;
+    let mut out = Image::zeros(img.width, img.height);
+    let mut buf = Vec::with_capacity(k * k);
+    for y in 0..img.height {
+        for x in 0..img.width {
+            buf.clear();
+            for dy in -r..=r {
+                for dx in -r..=r {
+                    buf.push(img.get_clamped(x as isize + dx, y as isize + dy));
+                }
+            }
+            let mid = buf.len() / 2;
+            buf.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+            out.set(x, y, buf[mid]);
+        }
+    }
+    out
+}
+
+/// Scalar histogram equalization (clones the LUT application loop of the
+/// original, including its full-image copy).
+pub fn equalize(img: &Image) -> Image {
+    use super::histeq::{histogram, BINS};
+    let hist = histogram(img);
+    let n = img.data.len() as u64;
+    let mut cdf = [0u64; BINS];
+    let mut acc = 0u64;
+    for (i, &c) in hist.iter().enumerate() {
+        acc += c as u64;
+        cdf[i] = acc;
+    }
+    let cdf_min = cdf.iter().copied().find(|&c| c > 0).unwrap_or(0);
+    let denom = (n - cdf_min).max(1) as f32;
+
+    let mut lut = [0f32; BINS];
+    for i in 0..BINS {
+        lut[i] = ((cdf[i].saturating_sub(cdf_min)) as f32 / denom).clamp(0.0, 1.0);
+    }
+    let mut out = img.clone();
+    for v in &mut out.data {
+        let b = ((v.clamp(0.0, 1.0) * 255.0).round() as usize).min(BINS - 1);
+        *v = lut[b];
+    }
+    out
+}
+
+/// Scalar SSIM: per-window 5-accumulator loop (8×8 windows, stride 4).
+pub fn ssim(original: &Image, generated: &Image) -> Result<f64> {
+    if original.width != generated.width || original.height != generated.height {
+        return Err(Error::Imaging(format!(
+            "dimension mismatch: {}x{} vs {}x{}",
+            original.width, original.height, generated.width, generated.height
+        )));
+    }
+    const WIN: usize = 8;
+    const STRIDE: usize = 4;
+    let l = 255.0f64;
+    let c1 = (0.01 * l) * (0.01 * l);
+    let c2 = (0.03 * l) * (0.03 * l);
+    let (w, h) = (original.width, original.height);
+    if w < WIN || h < WIN {
+        return Err(Error::Imaging(format!(
+            "image {w}x{h} smaller than ssim window {WIN}"
+        )));
+    }
+    let mut total = 0.0;
+    let mut count = 0usize;
+    let mut y = 0;
+    while y + WIN <= h {
+        let mut x = 0;
+        while x + WIN <= w {
+            let (mut so, mut sg, mut soo, mut sgg, mut sog) = (0.0, 0.0, 0.0, 0.0, 0.0);
+            for dy in 0..WIN {
+                for dx in 0..WIN {
+                    let o = original.get(x + dx, y + dy) as f64 * 255.0;
+                    let g = generated.get(x + dx, y + dy) as f64 * 255.0;
+                    so += o;
+                    sg += g;
+                    soo += o * o;
+                    sgg += g * g;
+                    sog += o * g;
+                }
+            }
+            let n = (WIN * WIN) as f64;
+            let mo = so / n;
+            let mg = sg / n;
+            let vo = (soo / n - mo * mo).max(0.0);
+            let vg = (sgg / n - mg * mg).max(0.0);
+            let cov = sog / n - mo * mg;
+            let s = ((2.0 * mo * mg + c1) * (2.0 * cov + c2))
+                / ((mo * mo + mg * mg + c1) * (vo + vg + c2));
+            total += s;
+            count += 1;
+            x += STRIDE;
+        }
+        y += STRIDE;
+    }
+    Ok(total / count as f64)
+}
+
+/// Scalar blockwise 8×8 DCT via per-pixel `get`/`set` block copies.
+pub fn dct_image(img: &Image) -> Image {
+    use super::dct::dct8_block;
+    const N: usize = 8;
+    assert!(
+        img.width % N == 0 && img.height % N == 0,
+        "dims must be 8-aligned"
+    );
+    let mut out = Image::zeros(img.width, img.height);
+    for by in (0..img.height).step_by(N) {
+        for bx in (0..img.width).step_by(N) {
+            let mut block = [0f32; 64];
+            for y in 0..N {
+                for x in 0..N {
+                    block[y * N + x] = img.get(bx + x, by + y);
+                }
+            }
+            let coeffs = dct8_block(&block);
+            for y in 0..N {
+                for x in 0..N {
+                    out.set(bx + x, by + y, coeffs[y * N + x]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Scalar LZW compress — dictionary keyed by owned byte strings, cloning
+/// the current sequence on every input byte (the allocation the optimized
+/// path removes; output must stay bit-identical).
+pub fn lzw_compress(input: &[u8]) -> Vec<u8> {
+    use super::lzw::{width_for, BitWriter, DICT_LIMIT};
+    if input.is_empty() {
+        return Vec::new();
+    }
+    let mut dict: HashMap<Vec<u8>, u32> = (0..256u32).map(|b| (vec![b as u8], b)).collect();
+    let mut next_code = 256u32;
+    let mut writer = BitWriter::new();
+    let mut current = vec![input[0]];
+    for &b in &input[1..] {
+        let mut candidate = current.clone();
+        candidate.push(b);
+        if dict.contains_key(&candidate) {
+            current = candidate;
+        } else {
+            let code = dict[&current];
+            writer.push(code, width_for(next_code as usize));
+            if (next_code as usize) < DICT_LIMIT {
+                dict.insert(candidate, next_code);
+                next_code += 1;
+            }
+            current = vec![b];
+        }
+    }
+    let code = dict[&current];
+    writer.push(code, width_for(next_code as usize));
+    writer.finish()
+}

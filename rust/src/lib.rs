@@ -136,6 +136,36 @@
 //! what planning predicted. Planning is prediction, serving is
 //! enforcement; both read one hardware model, so they cannot drift.
 //!
+//! ## Performance: parallel kernels and the bench baseline
+//!
+//! The imaging kernels (sobel, gaussian/canny, median, histogram
+//! equalization, DCT, SSIM/MSE) are restructured for data parallelism
+//! and autovectorization: flat row slices with the clamped-border
+//! handling hoisted out of the interior loop, Huang's sliding-histogram
+//! median instead of a per-pixel partial sort, and a fused summed-area
+//! table for SSIM. Row/band iteration runs across threads under the
+//! default-on **`parallel`** feature via the dependency-free scoped-thread
+//! helpers in [`util::parallel`] (`EDGEPIPE_THREADS=N` pins the thread
+//! count; the feature disabled, or `EDGEPIPE_THREADS=1`, degenerates the
+//! same code path to pure serial loops). Outputs are deterministic either
+//! way: per-pixel kernels write disjoint bands and preserve the scalar
+//! reference's exact f32 accumulation order (bit-identical), and the
+//! SSIM/MSE reductions fold band partials in band order. The original
+//! scalar loops live on in [`imaging::reference`] as equivalence oracles
+//! (`tests/prop_imaging.rs`) and bench baselines.
+//!
+//! The `hotpath` bench times each optimized kernel against its scalar
+//! reference on 512×512 frames (`img_*` cases: per-megapixel throughput
+//! plus a recorded `speedup_vs_scalar`) alongside the routing/dispatch/
+//! serve cases, and writes `BENCH_hotpath.json`. CI's `bench-smoke` job
+//! re-runs it in short mode and **fails on regression** against the
+//! committed baseline (normalized by single-threaded anchor cases so
+//! runner speed cancels out; parallel-dependent cases get a looser
+//! bound). To refresh the baseline after an intentional perf change, run
+//! `EDGEPIPE_BENCH_SMOKE=1 cargo bench --no-default-features --features
+//! parallel --bench hotpath` on the CI runner class (or take the job's
+//! artifact) and commit the regenerated `rust/BENCH_hotpath.json`.
+//!
 //! ## Layers
 //!
 //! * [`graph`] — layer-graph IR with shape inference and the paper's

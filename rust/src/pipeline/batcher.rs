@@ -54,12 +54,24 @@ pub enum BatchEnd {
 /// immediately instead of waiting out the window; the disconnect itself
 /// surfaces as `None` on the next call, once the channel is drained.
 pub fn collect_batch(rx: &Receiver<Frame>, policy: BatchPolicy) -> Option<(Vec<Frame>, BatchEnd)> {
+    let mut batch = Vec::with_capacity(policy.max_batch.max(1));
+    collect_batch_into(rx, policy, &mut batch).map(|end| (batch, end))
+}
+
+/// [`collect_batch`] into a caller-owned buffer: the worker loop keeps one
+/// `Vec` alive for its whole life instead of allocating per batch (the
+/// buffer is cleared first, so any frames still in it are dropped here).
+pub fn collect_batch_into(
+    rx: &Receiver<Frame>,
+    policy: BatchPolicy,
+    batch: &mut Vec<Frame>,
+) -> Option<BatchEnd> {
+    batch.clear();
     // Block for the first frame.
     let first = rx.recv().ok()?;
-    let mut batch = Vec::with_capacity(policy.max_batch.max(1));
     batch.push(first);
     if policy.max_batch <= 1 {
-        return Some((batch, BatchEnd::Filled));
+        return Some(BatchEnd::Filled);
     }
     let deadline = Instant::now() + policy.timeout;
     let mut end = BatchEnd::Filled;
@@ -81,7 +93,7 @@ pub fn collect_batch(rx: &Receiver<Frame>, policy: BatchPolicy) -> Option<(Vec<F
             }
         }
     }
-    Some((batch, end))
+    Some(end)
 }
 
 /// [`collect_batch`] without the close reason (the worker hot path only

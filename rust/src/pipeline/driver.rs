@@ -64,7 +64,7 @@
 //! derives per-engine utilization and idle-gap statistics.
 
 use super::backend::InferenceBackend;
-use super::batcher::{collect_batch, BatchEnd};
+use super::batcher::{collect_batch_into, BatchEnd};
 use super::engines::{EngineArbiter, EngineSnapshot};
 use super::frame::Frame;
 use super::metrics::{InstanceSnapshot, Metrics};
@@ -260,7 +260,11 @@ impl StreamCore {
                     let mut runner = backend.open(&inst)?;
                     let profile = backend.dispatch_profile(&inst)?;
                     let modeled = profile.is_some();
-                    while let Some((batch, end)) = collect_batch(&rx, inst.batch) {
+                    // One batch buffer for the worker's whole life: the
+                    // batcher clears and refills it, so the steady-state
+                    // loop allocates nothing per batch.
+                    let mut batch: Vec<Frame> = Vec::with_capacity(inst.batch.max_batch.max(1));
+                    while let Some(end) = collect_batch_into(&rx, inst.batch, &mut batch) {
                         let outs = arbiter.dispatch(
                             idx,
                             batch[0].id,
@@ -301,6 +305,10 @@ impl StreamCore {
                                 }
                             }
                         }
+                        // Release the frames now (their planes park back
+                        // on the pool) rather than when the next batch
+                        // arrives.
+                        batch.clear();
                         if end == BatchEnd::Disconnected {
                             // A disconnect is end-of-stream (the channel
                             // was drained before it was reported), NOT a
@@ -399,6 +407,13 @@ impl StreamCore {
     /// Live per-instance completed-frame counts (serve checkpoint read).
     pub fn completed_frames(&self) -> Vec<usize> {
         self.metrics.frames_completed()
+    }
+
+    /// Unique (primary-path) frames completed so far, given the spec's
+    /// precomputed primary mask — the serve checkpoint read, with no
+    /// per-checkpoint `Vec`s.
+    pub fn primary_completed(&self, primary_mask: &[bool]) -> usize {
+        self.metrics.frames_completed_masked(primary_mask)
     }
 
     /// The core's engine arbiter (live timeline access for windowed

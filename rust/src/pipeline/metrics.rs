@@ -123,6 +123,19 @@ impl Metrics {
             .collect()
     }
 
+    /// Sum of completed frames over the instances selected by `mask` —
+    /// the allocation-free form of [`Self::frames_completed`] for the
+    /// serve checkpoint loop (which only ever wants the primary-path
+    /// total). Extra mask entries beyond the instance count are ignored.
+    pub fn frames_completed_masked(&self, mask: &[bool]) -> usize {
+        self.instances
+            .iter()
+            .zip(mask)
+            .filter(|(_, &m)| m)
+            .map(|(c, _)| c.lock().unwrap().frames)
+            .sum()
+    }
+
     /// Serving seconds since first frame admission (`0.0` before any
     /// frame was admitted).
     pub fn elapsed(&self) -> f64 {

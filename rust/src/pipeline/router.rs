@@ -133,12 +133,22 @@ impl Router {
         match self.policy {
             RoutePolicy::Fanout => RouteTargets::All(0..self.instances),
             RoutePolicy::RoundRobin => {
+                // Conditional wrap instead of `%`: integer division is the
+                // single most expensive op left on this per-frame path.
                 let i = self.rr_next;
-                self.rr_next = (self.rr_next + 1) % self.instances;
+                self.rr_next = i + 1;
+                if self.rr_next == self.instances {
+                    self.rr_next = 0;
+                }
                 RouteTargets::One(std::iter::once(i))
             }
             RoutePolicy::ByStream => {
-                RouteTargets::One(std::iter::once(frame.stream % self.instances))
+                let i = if frame.stream < self.instances {
+                    frame.stream
+                } else {
+                    frame.stream % self.instances
+                };
+                RouteTargets::One(std::iter::once(i))
             }
             RoutePolicy::RrFanoutLast => {
                 if self.instances == 1 {
@@ -146,7 +156,10 @@ impl Router {
                 }
                 let shards = self.instances - 1;
                 let i = self.rr_next;
-                self.rr_next = (self.rr_next + 1) % shards;
+                self.rr_next = i + 1;
+                if self.rr_next == shards {
+                    self.rr_next = 0;
+                }
                 RouteTargets::Two([i, self.instances - 1].into_iter())
             }
         }

@@ -263,6 +263,9 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
 
     let check_every = replanner.policy().check_every_frames.max(1);
     let mut core = StreamCore::new(&spec, &backend, Some(Arc::clone(&sink)))?;
+    // The primary-instance mask only changes on a spec swap; caching it
+    // keeps the per-checkpoint backlog read allocation-free.
+    let mut primary_mask = primary_instances(spec.route, spec.instances.len());
     let mut phase_started = telemetry.now();
     let mut phase_offset = phase_started - core.arbiter().clock_seconds();
     // Incremental checkpoint reads: spans already inspected are never
@@ -395,7 +398,7 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
             win_arrival_t0 = a.t;
 
             // Backlog (unique frames) + wait estimate for deadline sheds.
-            let phase_primary = primary_completed(&core.completed_frames(), &spec);
+            let phase_primary = core.primary_completed(&primary_mask);
             let backlog = core.submitted().saturating_sub(phase_primary);
             let copies = spec.route.copies_per_frame(spec.instances.len());
             let unique_fps = ws.fps / copies as f64;
@@ -503,6 +506,7 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
                 });
                 spec = next;
                 core = StreamCore::new(&spec, &backend, Some(Arc::clone(&sink)))?;
+                primary_mask = primary_instances(spec.route, spec.instances.len());
                 phase_started = telemetry.now();
                 phase_offset = phase_started - core.arbiter().clock_seconds();
                 span_cursor = 0;

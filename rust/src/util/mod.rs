@@ -3,9 +3,12 @@
 //! The build environment is offline and the vendored crate set does not
 //! include `rand`, `proptest` or a stats crate, so this module provides the
 //! minimal substrates the rest of the library needs: a deterministic PRNG
-//! ([`rng::Rng`]), summary statistics ([`stats`]), and a tiny
-//! property-testing harness ([`prop`]) used by the test suite.
+//! ([`rng::Rng`]), summary statistics ([`stats`]), a tiny property-testing
+//! harness ([`prop`]) used by the test suite, scoped-thread data-parallel
+//! helpers ([`parallel`]), and a fast deterministic hasher ([`hash`]).
 
+pub mod hash;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod stats;

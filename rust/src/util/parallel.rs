@@ -1,0 +1,259 @@
+//! Minimal data-parallel helpers over scoped std threads.
+//!
+//! The vendored crate set has no `rayon`, so the imaging kernels get their
+//! row/band parallelism from this module instead: disjoint `&mut` bands are
+//! handed to `std::thread::scope` workers. With the `parallel` feature
+//! disabled (or `EDGEPIPE_THREADS=1`) every helper degenerates to the plain
+//! serial loop, so single-threaded determinism is preserved exactly.
+//!
+//! Guarantees:
+//! - [`par_chunks_mut`] / [`par_chunks2_mut`] write each chunk exactly once
+//!   from exactly one thread; per-chunk outputs are bit-identical to the
+//!   serial order regardless of thread count.
+//! - [`par_fold`] folds band partials **in band-index order**, so a given
+//!   thread count always produces the same result; only the band split
+//!   (thread count) can move floating-point rounding around.
+
+use std::ops::Range;
+
+/// Elements below this threshold are not worth a thread spawn.
+const PAR_MIN_ELEMS: usize = 16 * 1024;
+
+/// Worker-thread budget: `EDGEPIPE_THREADS` if set, else the machine's
+/// available parallelism. Always 1 when the `parallel` feature is off.
+pub fn max_threads() -> usize {
+    #[cfg(not(feature = "parallel"))]
+    {
+        1
+    }
+    #[cfg(feature = "parallel")]
+    {
+        static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+        *THREADS.get_or_init(|| {
+            std::env::var("EDGEPIPE_THREADS")
+                .ok()
+                .and_then(|s| s.trim().parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism()
+                        .map(std::num::NonZeroUsize::get)
+                        .unwrap_or(1)
+                })
+        })
+    }
+}
+
+/// Split `0..n_chunks` into at most `threads` contiguous bands, each a whole
+/// number of chunks.
+fn band_len(n_chunks: usize, threads: usize) -> usize {
+    n_chunks.div_ceil(threads)
+}
+
+/// Apply `f(chunk_index, chunk)` to every `chunk_len`-sized chunk of `data`
+/// (the last chunk may be shorter), fanning bands of chunks out across
+/// threads. Falls back to the serial loop for small inputs or one thread.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let threads = max_threads().min(n_chunks);
+    if threads <= 1 || data.len() < PAR_MIN_ELEMS {
+        for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let per_band = band_len(n_chunks, threads) * chunk_len;
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = data;
+        let mut first_chunk = 0usize;
+        while !rest.is_empty() {
+            let take = per_band.min(rest.len());
+            let (band, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let base = first_chunk;
+            s.spawn(move || {
+                for (i, c) in band.chunks_mut(chunk_len).enumerate() {
+                    f(base + i, c);
+                }
+            });
+            first_chunk += take / chunk_len + usize::from(take % chunk_len != 0);
+        }
+    });
+}
+
+/// Two-slice variant of [`par_chunks_mut`]: `a` and `b` are chunked in
+/// lockstep (`a` by `chunk_a`, `b` by `chunk_b`; both must yield the same
+/// number of chunks) and `f(chunk_index, a_chunk, b_chunk)` runs once per
+/// pair. Used where a kernel fills two parallel outputs (e.g. Sobel
+/// magnitude + direction).
+pub fn par_chunks2_mut<A, B, F>(a: &mut [A], b: &mut [B], chunk_a: usize, chunk_b: usize, f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    assert!(chunk_a > 0 && chunk_b > 0, "chunk lengths must be positive");
+    let n_chunks = a.len().div_ceil(chunk_a);
+    assert_eq!(
+        n_chunks,
+        b.len().div_ceil(chunk_b),
+        "slices must split into the same number of chunks"
+    );
+    let threads = max_threads().min(n_chunks);
+    if threads <= 1 || a.len() + b.len() < PAR_MIN_ELEMS {
+        for (i, (ca, cb)) in a.chunks_mut(chunk_a).zip(b.chunks_mut(chunk_b)).enumerate() {
+            f(i, ca, cb);
+        }
+        return;
+    }
+    let chunks_per_band = band_len(n_chunks, threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        let (mut rest_a, mut rest_b) = (a, b);
+        let mut first_chunk = 0usize;
+        while !rest_a.is_empty() {
+            let take_a = (chunks_per_band * chunk_a).min(rest_a.len());
+            let take_b = (chunks_per_band * chunk_b).min(rest_b.len());
+            let (band_a, tail_a) = rest_a.split_at_mut(take_a);
+            let (band_b, tail_b) = rest_b.split_at_mut(take_b);
+            rest_a = tail_a;
+            rest_b = tail_b;
+            let base = first_chunk;
+            s.spawn(move || {
+                for (i, (ca, cb)) in band_a
+                    .chunks_mut(chunk_a)
+                    .zip(band_b.chunks_mut(chunk_b))
+                    .enumerate()
+                {
+                    f(base + i, ca, cb);
+                }
+            });
+            first_chunk += take_a / chunk_a + usize::from(take_a % chunk_a != 0);
+        }
+    });
+}
+
+/// Map contiguous index bands of `0..n` to partial results and fold them in
+/// band order. `map_band` sees a whole `Range` so it can keep one local
+/// accumulator (e.g. a histogram) per band; `min_items` gates the spawn so
+/// trivial inputs stay serial (where the result is `map_band(0..n)` exactly).
+pub fn par_fold<R, M, FD>(n: usize, min_items: usize, map_band: M, fold: FD) -> Option<R>
+where
+    R: Send,
+    M: Fn(Range<usize>) -> R + Sync,
+    FD: Fn(R, R) -> R,
+{
+    if n == 0 {
+        return None;
+    }
+    let threads = max_threads().min(n);
+    if threads <= 1 || n < min_items {
+        return Some(map_band(0..n));
+    }
+    let per = band_len(n, threads);
+    let mut partials: Vec<R> = Vec::with_capacity(threads);
+    std::thread::scope(|s| {
+        let map_band = &map_band;
+        let mut handles = Vec::with_capacity(threads);
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + per).min(n);
+            handles.push(s.spawn(move || map_band(start..end)));
+            start = end;
+        }
+        for h in handles {
+            partials.push(h.join().expect("parallel fold worker panicked"));
+        }
+    });
+    let mut it = partials.into_iter();
+    let mut acc = it.next()?;
+    for p in it {
+        acc = fold(acc, p);
+    }
+    Some(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_all_indices() {
+        // Large enough to actually spawn when the feature is on.
+        let mut data = vec![0u32; 64 * 1024 + 7];
+        par_chunks_mut(&mut data, 100, |i, c| {
+            for (j, v) in c.iter_mut().enumerate() {
+                *v = (i * 100 + j) as u32;
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v as usize, i);
+        }
+    }
+
+    #[test]
+    fn chunks_small_input_serial() {
+        let mut data = vec![0u8; 10];
+        par_chunks_mut(&mut data, 3, |i, c| c.iter_mut().for_each(|v| *v = i as u8));
+        assert_eq!(data, [0, 0, 0, 1, 1, 1, 2, 2, 2, 3]);
+    }
+
+    #[test]
+    fn two_slice_lockstep() {
+        let w = 512;
+        let h = 64;
+        let mut a = vec![0u32; w * h];
+        let mut b = vec![0u32; w * h / 2];
+        par_chunks2_mut(&mut a, &mut b, w, w / 2, |row, ca, cb| {
+            ca.iter_mut().for_each(|v| *v = row as u32);
+            cb.iter_mut().for_each(|v| *v = row as u32 * 10);
+        });
+        for row in 0..h {
+            assert!(a[row * w..(row + 1) * w].iter().all(|&v| v == row as u32));
+            assert!(b[row * w / 2..(row + 1) * w / 2]
+                .iter()
+                .all(|&v| v == row as u32 * 10));
+        }
+    }
+
+    #[test]
+    fn fold_sums_exactly() {
+        let n = 100_000usize;
+        let got = par_fold(
+            n,
+            1,
+            |band: Range<usize>| band.map(|i| i as u64).sum::<u64>(),
+            |a, b| a + b,
+        )
+        .unwrap();
+        assert_eq!(got, (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn fold_empty_is_none() {
+        assert_eq!(par_fold(0, 1, |_b| 0u64, |a, b| a + b), None);
+    }
+
+    #[test]
+    fn fold_band_order_is_deterministic() {
+        // Non-commutative fold: concatenation order must match band order.
+        let got = par_fold(
+            40_000,
+            1,
+            |band: Range<usize>| vec![band.start],
+            |mut a, b| {
+                a.extend(b);
+                a
+            },
+        )
+        .unwrap();
+        let mut sorted = got.clone();
+        sorted.sort_unstable();
+        assert_eq!(got, sorted, "band partials must fold in band order");
+    }
+}

@@ -1,0 +1,226 @@
+//! Property-based equivalence tests: the optimized (row-parallel,
+//! border-split, histogram/SAT-restructured) imaging kernels against the
+//! scalar reference oracles kept in `edgepipe::imaging::reference`.
+//!
+//! The restructured kernels preserve the reference's exact f32
+//! accumulation order in their interior fast paths, so most comparisons
+//! are **bit-exact**, not tolerance-based; only the SSIM/MSE reductions
+//! (which legitimately reassociate sums) get a 1e-5 bound. The same suite
+//! runs with the `parallel` feature on (CI `rust` job), pinned to one
+//! thread (`EDGEPIPE_THREADS=1` step), and compiled without the feature
+//! (CI `rust-scalar` job) — band-partitioned writes are disjoint, so the
+//! outputs must be identical in all three configurations.
+
+use edgepipe::imaging::{canny, dct, histeq, lzw, median, metrics, reference, sobel, Image};
+use edgepipe::prop_assert;
+use edgepipe::util::prop::{check, check_with, default_cases};
+use edgepipe::util::rng::Rng;
+
+/// Random float image with arbitrary (non-quantized) pixel values.
+fn random_image(rng: &mut Rng, max_dim: u64) -> Image {
+    let w = 1 + rng.below(max_dim) as usize;
+    let h = 1 + rng.below(max_dim) as usize;
+    let data = (0..w * h).map(|_| rng.next_f32()).collect();
+    Image::from_data(w, h, data).unwrap()
+}
+
+/// Random 8-bit-quantized image (every pixel is `b / 255.0`), the form
+/// that engages `median_k`'s sliding-histogram fast path.
+fn random_u8_image(rng: &mut Rng, max_dim: u64) -> Image {
+    let w = 1 + rng.below(max_dim) as usize;
+    let h = 1 + rng.below(max_dim) as usize;
+    let bytes: Vec<u8> = (0..w * h).map(|_| rng.below(256) as u8).collect();
+    Image::from_u8(w, h, &bytes).unwrap()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn prop_sobel_matches_reference_bitexact() {
+    check("sobel == reference", |rng: &mut Rng| {
+        let img = random_image(rng, 24);
+        let opt = sobel::sobel(&img);
+        let refr = reference::sobel(&img);
+        prop_assert!(
+            bits(&opt.magnitude.data) == bits(&refr.magnitude.data),
+            "magnitude diverged on {}x{}",
+            img.width,
+            img.height
+        );
+        prop_assert!(
+            bits(&opt.direction) == bits(&refr.direction),
+            "direction diverged on {}x{}",
+            img.width,
+            img.height
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gaussian5_matches_reference_bitexact() {
+    check("gaussian5 == reference", |rng: &mut Rng| {
+        let img = random_image(rng, 24);
+        let opt = canny::gaussian5(&img);
+        let refr = reference::gaussian5(&img);
+        prop_assert!(
+            bits(&opt.data) == bits(&refr.data),
+            "gaussian5 diverged on {}x{}",
+            img.width,
+            img.height
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_canny_matches_reference_bitexact() {
+    check("canny == reference", |rng: &mut Rng| {
+        let img = random_image(rng, 24);
+        // thresholds spanning degenerate (low==high) and ordinary cases
+        let low = rng.next_f32() * 0.3;
+        let high = if rng.chance(0.2) { low } else { low + rng.next_f32() * 0.4 };
+        let opt = canny::canny(&img, low, high);
+        let refr = reference::canny(&img, low, high);
+        prop_assert!(
+            bits(&opt.data) == bits(&refr.data),
+            "canny diverged on {}x{} (low {low}, high {high})",
+            img.width,
+            img.height
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_median_float_matches_reference_bitexact() {
+    // Arbitrary f32 pixels: the sorted-sliding-window path (and the k=3
+    // exchange network) against the per-pixel partial-sort oracle.
+    check("median_k float == reference", |rng: &mut Rng| {
+        let img = random_image(rng, 20);
+        for k in [1usize, 3, 5, 7] {
+            let opt = median::median_k(&img, k);
+            let refr = reference::median_k(&img, k);
+            prop_assert!(
+                bits(&opt.data) == bits(&refr.data),
+                "median_k({k}) diverged on {}x{}",
+                img.width,
+                img.height
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_median_quantized_matches_reference_bitexact() {
+    // 8-bit-quantized pixels: the Huang sliding-histogram path must still
+    // reproduce the oracle bit-for-bit (bin -> f32 round-trips exactly).
+    check("median_k u8 == reference", |rng: &mut Rng| {
+        let img = random_u8_image(rng, 20);
+        for k in [3usize, 5, 7, 9] {
+            let opt = median::median_k(&img, k);
+            let refr = reference::median_k(&img, k);
+            prop_assert!(
+                bits(&opt.data) == bits(&refr.data),
+                "median_k({k}) diverged on quantized {}x{}",
+                img.width,
+                img.height
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histeq_matches_reference_bitexact() {
+    check("equalize == reference", |rng: &mut Rng| {
+        let img = if rng.chance(0.5) {
+            random_image(rng, 24)
+        } else {
+            random_u8_image(rng, 24)
+        };
+        let opt = histeq::equalize(&img);
+        let refr = reference::equalize(&img);
+        prop_assert!(
+            bits(&opt.data) == bits(&refr.data),
+            "equalize diverged on {}x{}",
+            img.width,
+            img.height
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dct_matches_reference_bitexact() {
+    // Block transform requires 8-aligned dimensions.
+    check("dct_image == reference", |rng: &mut Rng| {
+        let w = 8 * (1 + rng.below(4) as usize);
+        let h = 8 * (1 + rng.below(4) as usize);
+        let data = (0..w * h).map(|_| rng.next_f32() - 0.5).collect();
+        let img = Image::from_data(w, h, data).unwrap();
+        let opt = dct::dct_image(&img);
+        let refr = reference::dct_image(&img);
+        prop_assert!(
+            bits(&opt.data) == bits(&refr.data),
+            "dct_image diverged on {w}x{h}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ssim_matches_reference_within_1e5() {
+    // The summed-area-table SSIM reassociates the window sums, so the
+    // comparison is tolerance-based: 1e-5 on a [0,1]-bounded score.
+    check("ssim ~= reference", |rng: &mut Rng| {
+        let w = 8 + rng.below(24) as usize;
+        let h = 8 + rng.below(24) as usize;
+        let a: Vec<f32> = (0..w * h).map(|_| rng.next_f32()).collect();
+        // correlated pair: an affine remap plus small noise, so window
+        // statistics are non-degenerate
+        let b: Vec<f32> = a
+            .iter()
+            .map(|v| (v * 0.85 + 0.05 + 0.1 * rng.next_f32()).clamp(0.0, 1.0))
+            .collect();
+        let ia = Image::from_data(w, h, a).unwrap();
+        let ib = Image::from_data(w, h, b).unwrap();
+        let opt = metrics::ssim(&ia, &ib).map_err(|e| e.to_string())?;
+        let refr = reference::ssim(&ia, &ib).map_err(|e| e.to_string())?;
+        prop_assert!(
+            (opt - refr).abs() < 1e-5,
+            "ssim diverged on {w}x{h}: {opt} vs {refr}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lzw_matches_reference_bitexact_and_roundtrips() {
+    // Reduced case count: each case compresses three payloads twice.
+    check_with("lzw == reference", default_cases().min(32), |rng: &mut Rng| {
+        let len = rng.below(6000) as usize;
+        // mixed entropy: runs (dictionary-friendly) + random bytes
+        let mut data = Vec::with_capacity(len);
+        while data.len() < len {
+            if rng.chance(0.6) {
+                let b = rng.below(256) as u8;
+                for _ in 0..rng.below(24) + 1 {
+                    data.push(b);
+                }
+            } else {
+                data.push(rng.below(256) as u8);
+            }
+        }
+        data.truncate(len);
+        let opt = lzw::compress(&data);
+        let refr = reference::lzw_compress(&data);
+        prop_assert!(opt == refr, "compressed stream diverged at len {len}");
+        let back = lzw::decompress(&opt, data.len()).map_err(|e| e.to_string())?;
+        prop_assert!(back == data, "roundtrip mismatch at len {len}");
+        Ok(())
+    });
+}
