@@ -34,8 +34,14 @@
 //! simply holds the unit around the real dispatch, so placement serializes
 //! identically in both modes.
 
+// The dispatch path runs once per batched inference: it must neither
+// allocate nor panic (a panic in Lease::drop would abort the process).
+#![deny(clippy::unwrap_used)]
+
+use crate::error::Error;
 use crate::hw::EngineKind;
 use crate::sim::timeline::{Span, Timeline};
+use crate::util::lock::{cv_wait, relock};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -145,7 +151,11 @@ struct Lease<'a> {
 
 impl Drop for Lease<'_> {
     fn drop(&mut self) {
-        let mut st = self.unit.state.lock().unwrap();
+        // relock: if a worker panicked while holding this unit's state,
+        // the queue must still advance — a second panic here would turn
+        // one dead worker into a process abort (panic-in-drop) and wedge
+        // every co-pinned worker behind a never-served ticket.
+        let mut st = relock(&self.unit.state);
         st.serving += 1;
         st.busy_bw = 0.0;
         self.unit.cv.notify_all();
@@ -228,15 +238,19 @@ impl EngineArbiter {
         profile: Option<&DispatchProfile>,
         run: impl FnOnce() -> crate::error::Result<T>,
     ) -> crate::error::Result<T> {
-        let unit = &self.units[self.unit_of[instance]];
+        let unit = self
+            .unit_of
+            .get(instance)
+            .and_then(|&u| self.units.get(u))
+            .ok_or_else(|| Error::Pipeline(String::from("dispatch for an unplaced instance")))?;
 
         // ---- acquire (FIFO ticket) ----
         let switched = {
-            let mut st = unit.state.lock().unwrap();
+            let mut st = relock(&unit.state);
             let ticket = st.next_ticket;
             st.next_ticket += 1;
             while st.serving != ticket {
-                st = unit.cv.wait(st).unwrap();
+                st = cv_wait(&unit.cv, st);
             }
             let switched = st.occupant.is_some() && st.occupant != Some(instance);
             st.occupant = Some(instance);
@@ -251,7 +265,11 @@ impl EngineArbiter {
         // ---- occupy ----
         let t0 = self.now();
         let result = run();
-        let mut spans: Vec<Span> = Vec::new();
+        // At most two spans per dispatch (optional reformat transition +
+        // the execution) — tracked in two locals so the per-frame path
+        // never touches the heap.
+        let mut trans_span: Option<Span> = None;
+        let mut exec_span: Option<Span> = None;
         if result.is_ok() {
             let trans_s = match profile {
                 Some(p) => {
@@ -261,7 +279,7 @@ impl EngineArbiter {
                         .units
                         .iter()
                         .filter(|u| !std::ptr::eq(*u, unit))
-                        .map(|u| u.state.lock().unwrap().busy_bw)
+                        .map(|u| relock(&u.state).busy_bw)
                         .sum();
                     let trans = if switched { p.transition } else { Duration::ZERO };
                     let exec = p.dispatch_duration(batch).mul_f64(p.slowdown(corunner_bw));
@@ -276,7 +294,7 @@ impl EngineArbiter {
             let t1 = self.now();
             let exec_start = (t0 + trans_s).min(t1);
             if trans_s > 0.0 {
-                spans.push(Span {
+                trans_span = Some(Span {
                     engine: unit.kind,
                     unit: unit.index,
                     instance,
@@ -286,7 +304,7 @@ impl EngineArbiter {
                     is_transition: true,
                 });
             }
-            spans.push(Span {
+            exec_span = Some(Span {
                 engine: unit.kind,
                 unit: unit.index,
                 instance,
@@ -299,9 +317,12 @@ impl EngineArbiter {
 
         // ---- release ----
         drop(lease);
-        if !spans.is_empty() {
-            let mut tl = self.timeline.lock().unwrap();
-            for sp in spans {
+        if trans_span.is_some() || exec_span.is_some() {
+            let mut tl = relock(&self.timeline);
+            if let Some(sp) = trans_span {
+                tl.push(sp);
+            }
+            if let Some(sp) = exec_span {
                 tl.push(sp);
             }
         }
@@ -310,7 +331,7 @@ impl EngineArbiter {
 
     /// Copy of the serving timeline recorded so far.
     pub fn timeline(&self) -> Timeline {
-        self.timeline.lock().unwrap().clone()
+        relock(&self.timeline).clone()
     }
 
     /// Spans recorded from index `from` on — the serve loop's incremental
@@ -319,7 +340,7 @@ impl EngineArbiter {
     /// window since then; re-cloning the whole ever-growing trace per
     /// checkpoint would make long-running serving quadratic.
     pub fn spans_from(&self, from: usize) -> Vec<Span> {
-        let tl = self.timeline.lock().unwrap();
+        let tl = relock(&self.timeline);
         tl.spans.get(from..).map(|s| s.to_vec()).unwrap_or_default()
     }
 
@@ -327,7 +348,7 @@ impl EngineArbiter {
     /// (first span start to last span end — backend open/compile time
     /// before the first dispatch does not dilute utilization).
     pub fn engine_snapshots(&self) -> Vec<EngineSnapshot> {
-        let tl = self.timeline.lock().unwrap();
+        let tl = relock(&self.timeline);
         let window = tl.span_window().map(|(a, b)| (b - a).max(f64::MIN_POSITIVE));
         self.units
             .iter()
@@ -352,6 +373,7 @@ impl EngineArbiter {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 
@@ -517,6 +539,21 @@ mod tests {
         // the ticket queue must have advanced: the unit is serviceable,
         // not wedged (a co-pinned worker would otherwise hang forever)
         arb.dispatch(0, 1, 1, Some(&p), || Ok(())).unwrap();
+        assert_eq!(arb.timeline().spans.len(), 1);
+    }
+
+    #[test]
+    fn unplaced_instance_dispatch_is_an_error_not_a_panic() {
+        // Regression: this used to index `units[unit_of[instance]]` and
+        // panic the worker thread on an out-of-range instance; the driver
+        // then hung at join behind the dead worker's queue.
+        let arb = EngineArbiter::new(&[spec("a", EngineKind::Gpu, 0)]);
+        let p = profile(1, 0);
+        let err = arb.dispatch(7, 0, 1, Some(&p), || Ok(())).unwrap_err();
+        assert!(err.to_string().contains("unplaced"), "got: {err}");
+        assert!(arb.timeline().spans.is_empty());
+        // the arbiter stays serviceable after the refused dispatch
+        arb.dispatch(0, 0, 1, Some(&p), || Ok(())).unwrap();
         assert_eq!(arb.timeline().spans.len(), 1);
     }
 

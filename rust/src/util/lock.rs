@@ -1,0 +1,86 @@
+//! Poison-tolerant mutex helpers for the serving hot path.
+//!
+//! A poisoned `Mutex` means some thread panicked while holding the
+//! guard. For the serving stack the right response is to keep serving
+//! with whatever state the lock protects — counters may under-count one
+//! frame, a telemetry ring may hold a torn entry — rather than to
+//! cascade the panic into every worker that touches the same lock
+//! (`lock().unwrap()` turns one panicked worker into a dead pipeline,
+//! and inside a `Drop` impl it aborts the whole process). All counter
+//! and telemetry state here is monotonic or ring-buffered, so a torn
+//! write degrades one sample, never the serving loop.
+//!
+//! `edgepipe-lint`'s `panic-freedom` rule bans bare `lock().unwrap()`
+//! in `pipeline/`, `serve/` and `fleet/`; these helpers are the
+//! sanctioned replacement.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Acquire `m`, recovering the guard if the mutex is poisoned.
+///
+/// Equivalent to `m.lock().unwrap()` on the happy path; on poison it
+/// takes the inner guard and keeps going instead of panicking.
+#[inline]
+pub fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// `Condvar::wait` with the same poison-recovery policy as [`relock`].
+#[inline]
+pub fn cv_wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    match cv.wait(guard) {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn relock_happy_path() {
+        let m = Mutex::new(7);
+        *relock(&m) += 1;
+        assert_eq!(*relock(&m), 8);
+    }
+
+    #[test]
+    fn relock_recovers_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(41));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        *relock(&m) += 1;
+        assert_eq!(*relock(&m), 42, "state survives the poisoning thread");
+    }
+
+    #[test]
+    fn cv_wait_roundtrip() {
+        use std::sync::Condvar;
+        use std::time::Duration;
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            let (m, cv) = &*p2;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        });
+        let (m, cv) = &*pair;
+        let mut done = relock(m);
+        while !*done {
+            done = cv_wait(cv, done);
+        }
+        t.join().unwrap();
+        assert!(*done);
+    }
+}

@@ -5,9 +5,11 @@
 //! minimal substrates the rest of the library needs: a deterministic PRNG
 //! ([`rng::Rng`]), summary statistics ([`stats`]), a tiny property-testing
 //! harness ([`prop`]) used by the test suite, scoped-thread data-parallel
-//! helpers ([`parallel`]), and a fast deterministic hasher ([`hash`]).
+//! helpers ([`parallel`]), a fast deterministic hasher ([`hash`]), and
+//! poison-tolerant mutex helpers for the serving path ([`lock`]).
 
 pub mod hash;
+pub mod lock;
 pub mod parallel;
 pub mod prop;
 pub mod rng;
