@@ -1,0 +1,166 @@
+//! The checked-in invariant manifests the lint rules read.
+//!
+//! Everything the analyzer treats as project policy lives here as plain
+//! `const` tables (no config files, no new deps): which modules are
+//! hot-path, which functions run per frame, the global lock-acquisition
+//! order, and the counter-conservation contracts. Changing policy is a
+//! reviewed code change to this file, not an analyzer edit.
+
+/// Files (suffix-matched) that are hot-path as a whole: the per-frame
+/// serving loop runs through them, so `panic-freedom` and
+/// `lock-discipline` apply to all their non-test code.
+pub const HOT_MODULES: &[&str] = &[
+    "pipeline/driver.rs",
+    "pipeline/batcher.rs",
+    "pipeline/router.rs",
+    "pipeline/engines.rs",
+    "pipeline/metrics.rs",
+    "pipeline/plane.rs",
+];
+
+/// Directory prefixes that are hot-path wholesale.
+pub const HOT_PREFIXES: &[&str] = &["serve/", "fleet/", "imaging/"];
+
+/// Exemptions from [`HOT_PREFIXES`]: the scalar reference kernels are
+/// equivalence oracles for tests/benches, never on the serving path.
+pub const HOT_EXEMPT: &[&str] = &["imaging/reference.rs"];
+
+/// Is this (repo-relative, suffix-matched) file subject to the hot-path
+/// rules?
+pub fn is_hot(rel: &str) -> bool {
+    if HOT_EXEMPT.iter().any(|e| rel.ends_with(e)) {
+        return false;
+    }
+    if HOT_MODULES.iter().any(|m| rel.ends_with(m)) {
+        return true;
+    }
+    HOT_PREFIXES
+        .iter()
+        .any(|p| rel.starts_with(p) || rel.contains(&format!("/{p}")))
+}
+
+/// A function on the per-frame path: called once (or more) per served
+/// frame, so heap allocation and unchecked indexing are banned inside
+/// its body (`hot-path-alloc` and the indexing half of `panic-freedom`).
+#[derive(Debug, Clone, Copy)]
+pub struct HotFn {
+    /// File suffix the function lives in.
+    pub file: &'static str,
+    pub func: &'static str,
+}
+
+/// The per-frame function manifest. A function listed here but missing
+/// from its file is itself a finding (the manifest must not rot).
+pub const HOT_FNS: &[HotFn] = &[
+    HotFn { file: "pipeline/driver.rs", func: "submit" },
+    HotFn { file: "pipeline/batcher.rs", func: "collect_batch_into" },
+    HotFn { file: "pipeline/router.rs", func: "route" },
+    HotFn { file: "pipeline/engines.rs", func: "dispatch" },
+    HotFn { file: "pipeline/metrics.rs", func: "record_frame" },
+    HotFn { file: "pipeline/metrics.rs", func: "record_drop" },
+    HotFn { file: "pipeline/plane.rs", func: "acquire" },
+    HotFn { file: "serve/telemetry.rs", func: "completed" },
+    HotFn { file: "fleet/router.rs", func: "node_for" },
+    HotFn { file: "fleet/vclock.rs", func: "pop_ready" },
+];
+
+/// One lock class in the global acquisition order. `field` is the name
+/// of the `Mutex` struct field; the rule classifies an acquisition by
+/// the receiver ident of `.lock()` / the field ident inside `relock(…)`.
+#[derive(Debug, Clone, Copy)]
+pub struct LockClass {
+    pub field: &'static str,
+    /// Position in the global order; acquire strictly increasing.
+    pub rank: u8,
+    pub owner: &'static str,
+}
+
+/// The declared lock order: arbiter unit state → arbiter timeline →
+/// metrics counters → plane-pool shelf → telemetry sink. Holding a
+/// higher-rank lock while acquiring a lower-or-equal one is a
+/// `lock-discipline` finding.
+pub const LOCK_ORDER: &[LockClass] = &[
+    LockClass { field: "state", rank: 0, owner: "pipeline::engines::Unit" },
+    LockClass { field: "timeline", rank: 1, owner: "pipeline::engines::EngineArbiter" },
+    LockClass { field: "instances", rank: 2, owner: "pipeline::metrics::Metrics" },
+    LockClass { field: "free", rank: 3, owner: "pipeline::plane::Shelf" },
+    LockClass { field: "inner", rank: 4, owner: "serve::telemetry::Telemetry" },
+];
+
+/// Rank of a lock-field ident, if declared.
+pub fn lock_rank(ident: &str) -> Option<u8> {
+    LOCK_ORDER
+        .iter()
+        .find(|c| c.field == ident)
+        .map(|c| c.rank)
+}
+
+/// A counter-conservation contract: every numeric field of `strukt`
+/// (declared in `file`) must be mentioned inside each listed writer
+/// function (`(impl type, fn name)`, same file) — so a counter added to
+/// the struct cannot silently vanish from the JSON report or the
+/// telemetry snapshot.
+#[derive(Debug, Clone, Copy)]
+pub struct CounterContract {
+    pub file: &'static str,
+    pub strukt: &'static str,
+    pub writers: &'static [(&'static str, &'static str)],
+}
+
+pub const COUNTER_CONTRACTS: &[CounterContract] = &[
+    CounterContract {
+        file: "pipeline/metrics.rs",
+        strukt: "InstanceCounters",
+        writers: &[("Metrics", "snapshot")],
+    },
+    CounterContract {
+        file: "serve/telemetry.rs",
+        strukt: "WindowStats",
+        writers: &[("WindowStats", "to_json")],
+    },
+    CounterContract {
+        file: "serve/mod.rs",
+        strukt: "ServeReport",
+        writers: &[("ServeReport", "to_json")],
+    },
+    CounterContract {
+        file: "fleet/report.rs",
+        strukt: "FleetWindow",
+        writers: &[("FleetWindow", "to_json")],
+    },
+    CounterContract {
+        file: "fleet/report.rs",
+        strukt: "NodeReport",
+        writers: &[("NodeReport", "to_json")],
+    },
+];
+
+/// Field types the conservation contract considers counters.
+pub const COUNTER_TYPES: &[&str] = &["usize", "u32", "u64", "i32", "i64", "f32", "f64"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hot_scope_matches_policy() {
+        assert!(is_hot("pipeline/driver.rs"));
+        assert!(is_hot("serve/mod.rs"));
+        assert!(is_hot("rust/src/fleet/vclock.rs"));
+        assert!(is_hot("imaging/median.rs"));
+        assert!(!is_hot("imaging/reference.rs"), "scalar oracle is exempt");
+        assert!(!is_hot("placement/score.rs"));
+        assert!(!is_hot("analysis/rules.rs"));
+    }
+
+    #[test]
+    fn lock_order_is_strictly_ranked_and_unique() {
+        for (i, c) in LOCK_ORDER.iter().enumerate() {
+            assert_eq!(c.rank as usize, i, "ranks are dense and ordered");
+        }
+        for c in LOCK_ORDER {
+            assert_eq!(lock_rank(c.field), Some(c.rank));
+        }
+        assert_eq!(lock_rank("not_a_lock"), None);
+    }
+}

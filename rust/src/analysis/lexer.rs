@@ -1,0 +1,364 @@
+//! A minimal Rust token scanner for [`crate::analysis`].
+//!
+//! This is not a parser: the lint rules work on flat token streams with
+//! line numbers, which is enough to recognize `ident . lock (` shapes,
+//! `struct` field lists, and `fn` body ranges. The scanner's one real
+//! job is to never misclassify source: comments (line and nested block),
+//! string literals (escaped and raw, `r#"…"#`), char literals and
+//! lifetimes are consumed so that a `panic!` inside a doc string or a
+//! `.lock()` in a comment never produces a token.
+//!
+//! `// lint:allow(rule-a, rule-b)` comments are collected during the
+//! scan and suppress those rules on the comment's own line and the line
+//! below it (so the directive can sit above the offending statement).
+
+/// Token classes the rules distinguish.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Num,
+    Str,
+    CharLit,
+    Lifetime,
+}
+
+/// One source token with its 1-based line number.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Token {
+    /// Exact-text match (any kind).
+    pub fn is(&self, text: &str) -> bool {
+        self.text == text
+    }
+
+    pub fn is_ident(&self, text: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == text
+    }
+}
+
+/// Scan output: the token stream plus every `lint:allow` directive as
+/// `(line, rule-name)` pairs.
+#[derive(Debug, Default)]
+pub struct LexOut {
+    pub tokens: Vec<Token>,
+    pub allows: Vec<(u32, String)>,
+}
+
+impl LexOut {
+    /// Is `rule` allowed at `line` (directive on this line or the one
+    /// above)?
+    pub fn allowed(&self, rule: &str, line: u32) -> bool {
+        self.allows
+            .iter()
+            .any(|(l, r)| r == rule && (*l == line || *l + 1 == line))
+    }
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Parse `lint:allow(a, b)` directives out of one comment body.
+fn collect_allows(body: &str, line: u32, allows: &mut Vec<(u32, String)>) {
+    let Some(pos) = body.find("lint:allow(") else {
+        return;
+    };
+    let rest = &body[pos + "lint:allow(".len()..];
+    let Some(end) = rest.find(')') else {
+        return;
+    };
+    for rule in rest[..end].split(',') {
+        let rule = rule.trim();
+        if !rule.is_empty() {
+            allows.push((line, rule.to_string()));
+        }
+    }
+}
+
+/// Tokenize `src`. Never fails: unterminated constructs consume to EOF.
+pub fn lex(src: &str) -> LexOut {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut out = LexOut::default();
+
+    while i < n {
+        let c = b[i];
+        // whitespace
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            collect_allows(&src[i..j], line, &mut out.allows);
+            i = j;
+            continue;
+        }
+        // block comment (nested)
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if b[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // raw string: r"…", r#"…"#, br#"…"# (byte-raw)
+        if c == b'r' || c == b'b' {
+            let mut j = i;
+            if b[j] == b'b' {
+                j += 1;
+            }
+            if j < n && b[j] == b'r' {
+                j += 1;
+                let hash_start = j;
+                while j < n && b[j] == b'#' {
+                    j += 1;
+                }
+                let hashes = j - hash_start;
+                if j < n && b[j] == b'"' {
+                    j += 1;
+                    let body_start = j;
+                    // find `"` followed by `hashes` hash marks
+                    'scan: while j < n {
+                        if b[j] == b'"' {
+                            let mut k = j + 1;
+                            let mut seen = 0usize;
+                            while k < n && b[k] == b'#' && seen < hashes {
+                                k += 1;
+                                seen += 1;
+                            }
+                            if seen == hashes {
+                                break 'scan;
+                            }
+                        }
+                        j += 1;
+                    }
+                    let body = &src[body_start..j.min(n)];
+                    let start_line = line;
+                    line += body.matches('\n').count() as u32;
+                    out.tokens.push(Token {
+                        kind: TokKind::Str,
+                        text: body.to_string(),
+                        line: start_line,
+                    });
+                    i = (j + 1 + hashes).min(n);
+                    continue;
+                }
+            }
+            // not a raw string: fall through to ident handling below
+        }
+        // string literal
+        if c == b'"' {
+            let start_line = line;
+            let mut j = i + 1;
+            let mut body = String::new();
+            while j < n {
+                if b[j] == b'\\' && j + 1 < n {
+                    body.push(b[j + 1] as char);
+                    j += 2;
+                    continue;
+                }
+                if b[j] == b'"' {
+                    break;
+                }
+                if b[j] == b'\n' {
+                    line += 1;
+                }
+                body.push(b[j] as char);
+                j += 1;
+            }
+            out.tokens.push(Token {
+                kind: TokKind::Str,
+                text: body,
+                line: start_line,
+            });
+            i = j + 1;
+            continue;
+        }
+        // char literal or lifetime
+        if c == b'\'' {
+            let mut j = i + 1;
+            if j < n && is_ident_start(b[j]) {
+                let mut k = j;
+                while k < n && is_ident_cont(b[k]) {
+                    k += 1;
+                }
+                if k >= n || b[k] != b'\'' {
+                    out.tokens.push(Token {
+                        kind: TokKind::Lifetime,
+                        text: src[j..k].to_string(),
+                        line,
+                    });
+                    i = k;
+                    continue;
+                }
+            }
+            // char literal: 'x', '\n', '\'', '\\'
+            if j < n && b[j] == b'\\' {
+                j += 2;
+            } else {
+                j += 1;
+            }
+            while j < n && b[j] != b'\'' {
+                j += 1;
+            }
+            out.tokens.push(Token {
+                kind: TokKind::CharLit,
+                text: src[(i + 1).min(j)..j.min(n)].to_string(),
+                line,
+            });
+            i = j + 1;
+            continue;
+        }
+        // identifier / keyword
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            out.tokens.push(Token {
+                kind: TokKind::Ident,
+                text: src[i..j].to_string(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // number (suffixes and `1.5`/`1e-3` folded into one token)
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut j = i + 1;
+            while j < n {
+                let d = b[j];
+                if is_ident_cont(d) {
+                    j += 1;
+                } else if d == b'.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                    j += 1;
+                } else if (d == b'+' || d == b'-')
+                    && (b[j - 1] == b'e' || b[j - 1] == b'E')
+                    && !src[start..j].starts_with("0x")
+                {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            out.tokens.push(Token {
+                kind: TokKind::Num,
+                text: src[start..j].to_string(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // single-char punctuation
+        out.tokens.push(Token {
+            kind: TokKind::Punct,
+            text: (c as char).to_string(),
+            line,
+        });
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).tokens.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_produce_no_code_tokens() {
+        let src = r##"
+            // a .lock() in a comment
+            /* panic! in /* a nested */ block */
+            let s = "unwrap() in a string";
+            let r = r#"expect() in a raw "string""#;
+        "##;
+        let toks = lex(src);
+        assert!(!toks.tokens.iter().any(|t| t.kind == TokKind::Ident
+            && (t.text == "lock" || t.text == "panic" || t.text == "unwrap" || t.text == "expect")));
+        // but the string bodies are retained as Str tokens
+        assert_eq!(
+            toks.tokens.iter().filter(|t| t.kind == TokKind::Str).count(),
+            2
+        );
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let toks = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let lifetimes: Vec<_> = toks
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .collect();
+        assert_eq!(lifetimes.len(), 2);
+        assert!(toks
+            .tokens
+            .iter()
+            .any(|t| t.kind == TokKind::CharLit && t.text == "x"));
+    }
+
+    #[test]
+    fn line_numbers_track_newlines_everywhere() {
+        let src = "a\n\"two\nline\"\nb";
+        let toks = lex(src);
+        assert_eq!(toks.tokens[0].line, 1);
+        assert_eq!(toks.tokens[1].line, 2); // string starts on line 2
+        assert_eq!(toks.tokens[2].line, 4); // b after the 2-line string
+    }
+
+    #[test]
+    fn allow_directives_are_collected_with_lines() {
+        let src = "// lint:allow(panic-freedom, lock-discipline)\nx.unwrap();\n";
+        let toks = lex(src);
+        assert!(toks.allowed("panic-freedom", 1));
+        assert!(toks.allowed("panic-freedom", 2), "next line is covered");
+        assert!(!toks.allowed("panic-freedom", 3));
+        assert!(toks.allowed("lock-discipline", 2));
+        assert!(!toks.allowed("hot-path-alloc", 2));
+    }
+
+    #[test]
+    fn numbers_keep_exponents_and_suffixes_together() {
+        assert_eq!(texts("1e-3 1.5f64 0x1f 1_000"), vec!["1e-3", "1.5f64", "0x1f", "1_000"]);
+    }
+}

@@ -1,0 +1,168 @@
+//! `edgepipe-lint`: a dependency-free static analyzer enforcing the
+//! project's serving-path invariants over the crate's own source.
+//!
+//! The paper's headline claims (~150 FPS real-time serving, no GPU
+//! fallback) rest on invariants the type system cannot express: the
+//! per-frame loop never panics or allocates, locks are acquired in one
+//! global order, every counter a struct grows reaches the JSON report,
+//! model-time and wall-clock values never mix silently, and every
+//! `parallel` code path has a serial twin. This module machine-checks
+//! them with six lexical rules (see [`Rule`]) over a token scan of
+//! `rust/src` ([`lexer`]), driven by checked-in manifests ([`hotpath`])
+//! and run in CI via `cargo run --bin lint -- rust/src` (exit code 1 on
+//! any finding).
+//!
+//! Intentional exceptions carry an inline escape hatch — a comment
+//! `// lint:allow(rule-name)` on the offending line or the line above,
+//! with a justification — so the clean-run requirement stays meaningful.
+
+pub mod hotpath;
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// The six enforced invariants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// No `unwrap`/`expect`/panicking macros in hot-path modules; no
+    /// unchecked indexing in manifest per-frame functions.
+    PanicFreedom,
+    /// Locks acquired in the declared global order; no guard held
+    /// across `dispatch`/`execute_batch` outside the arbiter.
+    LockDiscipline,
+    /// No heap allocation (`clone`, `to_vec`, `Vec::new`, `format!`,
+    /// `vec!`) in manifest per-frame functions.
+    HotPathAlloc,
+    /// Every numeric counter field of a contracted struct appears in
+    /// its JSON/snapshot writers.
+    CounterConservation,
+    /// No statement mixes `_ms`/`_ns`/`_us`/seconds idents without an
+    /// explicit conversion.
+    UnitSuffix,
+    /// `#[cfg(feature = "parallel")]` requires a serial counterpart in
+    /// the same file.
+    FeatureHygiene,
+}
+
+impl Rule {
+    /// The kebab-case name used in diagnostics and `lint:allow(...)`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rule::PanicFreedom => "panic-freedom",
+            Rule::LockDiscipline => "lock-discipline",
+            Rule::HotPathAlloc => "hot-path-alloc",
+            Rule::CounterConservation => "counter-conservation",
+            Rule::UnitSuffix => "unit-suffix",
+            Rule::FeatureHygiene => "feature-hygiene",
+        }
+    }
+
+    pub fn all() -> &'static [Rule] {
+        &[
+            Rule::PanicFreedom,
+            Rule::LockDiscipline,
+            Rule::HotPathAlloc,
+            Rule::CounterConservation,
+            Rule::UnitSuffix,
+            Rule::FeatureHygiene,
+        ]
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One finding: `file:line: [rule] message`.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: u32,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Run every rule over one file's source. `rel` is the path relative to
+/// the analyzed root; the manifests in [`hotpath`] suffix-match it.
+pub fn analyze_source(rel: &str, src: &str) -> Vec<Diagnostic> {
+    let lexed = lexer::lex(src);
+    rules::run_all(rel, &lexed)
+}
+
+/// Walk `root` (deterministic order), analyze every `.rs` file, and
+/// collect the findings sorted by file, line, then rule name.
+pub fn analyze_tree(root: &Path) -> io::Result<Vec<Diagnostic>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut diags = Vec::new();
+    for path in &files {
+        let src = fs::read_to_string(path)?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        diags.extend(analyze_source(&rel, &src));
+    }
+    diags.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule.name()).cmp(&(b.file.as_str(), b.line, b.rule.name()))
+    });
+    Ok(diags)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> io::Result<()> {
+    if dir.is_file() {
+        if dir.extension().is_some_and(|e| e == "rs") {
+            out.push(dir.to_path_buf());
+        }
+        return Ok(());
+    }
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_names_round_trip_and_are_unique() {
+        let names: Vec<&str> = Rule::all().iter().map(|r| r.name()).collect();
+        let mut deduped = names.clone();
+        deduped.sort();
+        deduped.dedup();
+        assert_eq!(deduped.len(), names.len());
+        assert_eq!(Rule::all().len(), 6);
+    }
+
+    #[test]
+    fn diagnostics_format_as_file_line_rule() {
+        let d = Diagnostic {
+            file: "serve/mod.rs".into(),
+            line: 42,
+            rule: Rule::PanicFreedom,
+            message: "boom".into(),
+        };
+        assert_eq!(d.to_string(), "serve/mod.rs:42: [panic-freedom] boom");
+    }
+}

@@ -1,0 +1,673 @@
+//! The six project-invariant rules.
+//!
+//! Every rule is a lexical pass over one file's token stream — no type
+//! information, no cross-file analysis. That keeps the analyzer
+//! dependency-free and fast, at the price of being *heuristic*: the
+//! lock-discipline tracker, for instance, models guard lifetimes by
+//! brace depth (a let-bound guard lives to the end of its block, a
+//! temporary to the end of its statement) and cannot see a guard passed
+//! across a function boundary. The rules are tuned so that everything
+//! they flag is worth a human look, and anything intentional carries a
+//! `// lint:allow(rule)` with a justification.
+
+use super::hotpath::{
+    self, CounterContract, COUNTER_CONTRACTS, COUNTER_TYPES, HOT_FNS,
+};
+use super::lexer::{LexOut, TokKind, Token};
+use super::{Diagnostic, Rule};
+
+/// Shared per-file context: emits diagnostics with allow-comment and
+/// `#[cfg(test)]`-module filtering applied.
+struct Ctx<'a> {
+    rel: &'a str,
+    lx: &'a LexOut,
+    test_ranges: Vec<(u32, u32)>,
+    diags: Vec<Diagnostic>,
+}
+
+impl Ctx<'_> {
+    fn emit(&mut self, line: u32, rule: Rule, message: String) {
+        if self
+            .test_ranges
+            .iter()
+            .any(|&(a, b)| a <= line && line <= b)
+        {
+            return;
+        }
+        if self.lx.allowed(rule.name(), line) {
+            return;
+        }
+        self.diags.push(Diagnostic {
+            file: self.rel.to_string(),
+            line,
+            rule,
+            message,
+        });
+    }
+}
+
+/// Run every rule over one lexed file. `rel` is the path relative to
+/// the analyzed root (suffix-matched against the manifests).
+pub fn run_all(rel: &str, lx: &LexOut) -> Vec<Diagnostic> {
+    let mut ctx = Ctx {
+        rel,
+        lx,
+        test_ranges: test_mod_ranges(&lx.tokens),
+        diags: Vec::new(),
+    };
+    panic_freedom(&mut ctx);
+    hot_fn_rules(&mut ctx);
+    lock_discipline(&mut ctx);
+    counter_conservation(&mut ctx);
+    unit_suffix(&mut ctx);
+    feature_hygiene(&mut ctx);
+    ctx.diags
+}
+
+// ---------------------------------------------------------------- helpers
+
+fn text<'t>(toks: &'t [Token], i: usize) -> &'t str {
+    toks.get(i).map(|t| t.text.as_str()).unwrap_or("")
+}
+
+/// Line ranges covered by `#[cfg(test)] mod … { … }` blocks.
+fn test_mod_ranges(toks: &[Token]) -> Vec<(u32, u32)> {
+    let mut ranges = Vec::new();
+    let mut i = 0usize;
+    while i + 5 < toks.len() {
+        let is_cfg_test = toks[i].is("#")
+            && toks[i + 1].is("[")
+            && toks[i + 2].is_ident("cfg")
+            && toks[i + 3].is("(")
+            && toks[i + 4].is_ident("test");
+        if is_cfg_test {
+            // close the attribute, skip any further attributes
+            let mut j = i + 5;
+            while j < toks.len() && !toks[j].is("]") {
+                j += 1;
+            }
+            j += 1;
+            while j + 1 < toks.len() && toks[j].is("#") && toks[j + 1].is("[") {
+                while j < toks.len() && !toks[j].is("]") {
+                    j += 1;
+                }
+                j += 1;
+            }
+            if j < toks.len() && toks[j].is_ident("mod") {
+                while j < toks.len() && !toks[j].is("{") {
+                    j += 1;
+                }
+                let start_line = toks.get(j).map(|t| t.line).unwrap_or(u32::MAX);
+                let mut depth = 0i32;
+                while j < toks.len() {
+                    if toks[j].is("{") {
+                        depth += 1;
+                    } else if toks[j].is("}") {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                let end_line = toks.get(j).map(|t| t.line).unwrap_or(u32::MAX);
+                ranges.push((start_line, end_line));
+                i = j;
+            }
+        }
+        i += 1;
+    }
+    ranges
+}
+
+/// Token-index range `(open_brace, close_brace)` of the body of `fn
+/// name`, optionally restricted to an `impl <of> { … }` block.
+fn fn_body_range(toks: &[Token], name: &str, impl_of: Option<&str>) -> Option<(usize, usize)> {
+    let mut i = 0usize;
+    let mut lim = toks.len();
+    if let Some(ty) = impl_of {
+        let mut found = false;
+        while i + 2 < toks.len() {
+            if toks[i].is_ident("impl") {
+                let mut j = i + 1;
+                let mut names_match = false;
+                while j < toks.len() && !toks[j].is("{") {
+                    if toks[j].kind == TokKind::Ident && toks[j].text == ty {
+                        names_match = true;
+                    }
+                    j += 1;
+                }
+                if names_match {
+                    let mut depth = 0i32;
+                    let mut k = j;
+                    while k < toks.len() {
+                        if toks[k].is("{") {
+                            depth += 1;
+                        } else if toks[k].is("}") {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        k += 1;
+                    }
+                    i = j;
+                    lim = k;
+                    found = true;
+                    break;
+                }
+            }
+            i += 1;
+        }
+        if !found {
+            return None;
+        }
+    }
+    while i + 2 < lim {
+        if toks[i].is_ident("fn") && toks[i + 1].text == name {
+            // find the body's `{`: skip params / return type / generics
+            let mut j = i + 2;
+            let mut depth = 0i32;
+            while j < lim {
+                let t = text(toks, j);
+                if t == "(" || t == "[" || t == "<" {
+                    depth += 1;
+                } else if t == ")" || t == "]" || t == ">" {
+                    depth -= 1;
+                } else if t == "{" && depth <= 0 {
+                    break;
+                }
+                j += 1;
+            }
+            let start = j;
+            let mut depth = 0i32;
+            while j < lim {
+                if toks[j].is("{") {
+                    depth += 1;
+                } else if toks[j].is("}") {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            return Some((start, j.min(lim)));
+        }
+        i += 1;
+    }
+    None
+}
+
+/// `(name, first type token, line)` of each field of `struct name`.
+fn struct_fields(toks: &[Token], name: &str) -> Vec<(String, String, u32)> {
+    let mut fields = Vec::new();
+    let mut i = 0usize;
+    while i + 2 < toks.len() {
+        if toks[i].is_ident("struct") && toks[i + 1].text == name {
+            let mut j = i + 2;
+            while j < toks.len() && !toks[j].is("{") && !toks[j].is(";") {
+                j += 1;
+            }
+            if j >= toks.len() || toks[j].is(";") {
+                return fields; // unit/tuple struct: no named fields
+            }
+            let mut depth = 0i32;
+            let mut k = j;
+            while k < toks.len() {
+                let t = text(toks, k);
+                if t == "{" {
+                    depth += 1;
+                } else if t == "}" {
+                    depth -= 1;
+                    if depth == 0 {
+                        return fields;
+                    }
+                } else if depth == 1
+                    && toks[k].kind == TokKind::Ident
+                    && text(toks, k + 1) == ":"
+                    && text(toks, k + 2) != ":"
+                {
+                    let fname = toks[k].text.clone();
+                    if fname != "pub" && fname != "crate" {
+                        fields.push((fname, toks[k + 2].text.clone(), toks[k].line));
+                        // skip the type to the field-separating comma
+                        let mut m = k + 2;
+                        let mut d2 = 0i32;
+                        while m < toks.len() {
+                            let tt = text(toks, m);
+                            if tt == "(" || tt == "[" || tt == "{" || tt == "<" {
+                                d2 += 1;
+                            } else if tt == ")" || tt == "]" || tt == "}" || tt == ">" {
+                                d2 -= 1;
+                            } else if tt == "," && d2 <= 0 {
+                                break;
+                            }
+                            m += 1;
+                        }
+                        k = m;
+                    }
+                }
+                k += 1;
+            }
+            return fields;
+        }
+        i += 1;
+    }
+    fields
+}
+
+// ------------------------------------------------------------------ rules
+
+/// Rule 1 (module half): no `unwrap()` / `expect()` / panicking macros
+/// in hot-path modules.
+fn panic_freedom(ctx: &mut Ctx) {
+    if !hotpath::is_hot(ctx.rel) {
+        return;
+    }
+    let toks = &ctx.lx.tokens;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let prev_dot = i > 0 && toks[i - 1].is(".");
+        let next_paren = text(toks, i + 1) == "(";
+        if (t.text == "unwrap" || t.text == "expect") && prev_dot && next_paren {
+            ctx.emit(
+                t.line,
+                Rule::PanicFreedom,
+                format!("`{}()` in hot-path module (propagate or relock)", t.text),
+            );
+        }
+        let next_bang = text(toks, i + 1) == "!";
+        if next_bang
+            && matches!(t.text.as_str(), "panic" | "unreachable" | "todo" | "unimplemented")
+        {
+            ctx.emit(
+                t.line,
+                Rule::PanicFreedom,
+                format!("`{}!` in hot-path module", t.text),
+            );
+        }
+    }
+}
+
+/// Rules 1 (indexing half) and 3: unchecked indexing and heap
+/// allocation inside manifest per-frame functions.
+fn hot_fn_rules(ctx: &mut Ctx) {
+    let toks = &ctx.lx.tokens;
+    for hf in HOT_FNS {
+        if !ctx.rel.ends_with(hf.file) {
+            continue;
+        }
+        let Some((a, b)) = fn_body_range(toks, hf.func, None) else {
+            ctx.emit(
+                1,
+                Rule::HotPathAlloc,
+                format!("manifest per-frame fn `{}` not found in {}", hf.func, hf.file),
+            );
+            continue;
+        };
+        for i in a..b {
+            let t = &toks[i];
+            let prev = i.checked_sub(1).and_then(|p| toks.get(p));
+            let prev_text = prev.map(|p| p.text.as_str()).unwrap_or("");
+            let prev_indexable = prev.map(|p| {
+                p.kind == TokKind::Ident || p.text == ")" || p.text == "]"
+            });
+            if t.is("[") && prev_indexable == Some(true) {
+                ctx.emit(
+                    t.line,
+                    Rule::PanicFreedom,
+                    format!("indexing without `get()` in per-frame fn `{}`", hf.func),
+                );
+            }
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            let next = text(toks, i + 1);
+            if prev_text == "."
+                && next == "("
+                && matches!(t.text.as_str(), "clone" | "to_vec" | "to_string" | "to_owned")
+            {
+                ctx.emit(
+                    t.line,
+                    Rule::HotPathAlloc,
+                    format!("`.{}()` in per-frame fn `{}`", t.text, hf.func),
+                );
+            }
+            if matches!(t.text.as_str(), "Vec" | "String" | "Box")
+                && next == ":"
+                && text(toks, i + 3) == "new"
+            {
+                ctx.emit(
+                    t.line,
+                    Rule::HotPathAlloc,
+                    format!("`{}::new` in per-frame fn `{}`", t.text, hf.func),
+                );
+            }
+            if matches!(t.text.as_str(), "format" | "vec") && next == "!" {
+                ctx.emit(
+                    t.line,
+                    Rule::HotPathAlloc,
+                    format!("`{}!` allocates in per-frame fn `{}`", t.text, hf.func),
+                );
+            }
+        }
+    }
+}
+
+/// One tracked lock guard for rule 2.
+struct Guard {
+    rank: u8,
+    let_bound: bool,
+    depth: i32,
+    line: u32,
+}
+
+/// Rule 2: declared lock order, no nested acquisition out of rank, and
+/// no guard held across `dispatch` / `execute_batch` outside the
+/// arbiter itself. Guard lifetimes are lexical: a let-bound guard lives
+/// to the end of its enclosing block, a temporary to the end of its
+/// statement.
+fn lock_discipline(ctx: &mut Ctx) {
+    if !hotpath::is_hot(ctx.rel) {
+        return;
+    }
+    let toks = &ctx.lx.tokens;
+    let is_arbiter = ctx.rel.ends_with("pipeline/engines.rs");
+    let mut held: Vec<Guard> = Vec::new();
+    let mut depth = 0i32;
+    let mut stmt_has_let = false;
+
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        match t.text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                held.retain(|h| h.depth <= depth);
+            }
+            ";" => {
+                stmt_has_let = false;
+                held.retain(|h| h.let_bound);
+            }
+            "let" if t.kind == TokKind::Ident => stmt_has_let = true,
+            _ => {}
+        }
+
+        let mut rank: Option<u8> = None;
+        // receiver.lock(…) — classify by the receiver's field ident
+        if t.is_ident("lock") && text(toks, i + 1) == "(" && i > 1 && toks[i - 1].is(".") {
+            let recv = lock_receiver(toks, i - 2);
+            match recv.and_then(|k| hotpath::lock_rank(&toks[k].text)) {
+                Some(r) => rank = Some(r),
+                None => {
+                    let name = recv.map(|k| toks[k].text.clone()).unwrap_or_default();
+                    ctx.emit(
+                        t.line,
+                        Rule::LockDiscipline,
+                        format!(
+                            "`.lock()` on receiver `{name}` not in the declared lock table \
+                             (use util::lock::relock on a declared lock field)"
+                        ),
+                    );
+                }
+            }
+        }
+        // relock(&self.field) / cv_wait — classify by field ident in args
+        if t.is_ident("relock") && text(toks, i + 1) == "(" {
+            let mut j = i + 1;
+            let mut d2 = 0i32;
+            while j < toks.len() {
+                let tt = text(toks, j);
+                if tt == "(" {
+                    d2 += 1;
+                } else if tt == ")" {
+                    d2 -= 1;
+                    if d2 == 0 {
+                        break;
+                    }
+                } else if toks[j].kind == TokKind::Ident {
+                    if let Some(r) = hotpath::lock_rank(&toks[j].text) {
+                        rank = Some(r);
+                    }
+                }
+                j += 1;
+            }
+        }
+
+        if let Some(r) = rank {
+            if let Some(h) = held.iter().find(|h| h.rank >= r) {
+                ctx.emit(
+                    t.line,
+                    Rule::LockDiscipline,
+                    format!(
+                        "acquiring rank-{r} lock while rank-{} guard from line {} is held \
+                         (declared order: arbiter -> metrics -> pool -> telemetry)",
+                        h.rank, h.line
+                    ),
+                );
+            }
+            held.push(Guard {
+                rank: r,
+                let_bound: stmt_has_let,
+                depth,
+                line: t.line,
+            });
+        }
+
+        // no guard held across a dispatch boundary (the arbiter's own
+        // dispatch body manages the unit lease itself)
+        if !is_arbiter
+            && t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "dispatch" | "execute_batch")
+            && text(toks, i + 1) == "("
+            && (i == 0 || !toks[i - 1].is_ident("fn"))
+        {
+            if let Some(h) = held.first() {
+                ctx.emit(
+                    t.line,
+                    Rule::LockDiscipline,
+                    format!(
+                        "`{}()` called while the lock guard from line {} is held",
+                        t.text, h.line
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Walk back from `k` (the token before `.lock`'s dot) over balanced
+/// `[…]` / `(…)` and method chains to the receiver's field ident.
+fn lock_receiver(toks: &[Token], mut k: usize) -> Option<usize> {
+    loop {
+        let t = text(toks, k);
+        if t == "]" || t == ")" {
+            let (close, open) = if t == "]" { ("]", "[") } else { (")", "(") };
+            let mut d = 0i32;
+            loop {
+                let tt = text(toks, k);
+                if tt == close {
+                    d += 1;
+                } else if tt == open {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                if k == 0 {
+                    return None;
+                }
+                k -= 1;
+            }
+            if k == 0 {
+                return None;
+            }
+            k -= 1; // token before the opener (the indexed/called expr)
+            if text(toks, k) == "." && k > 0 {
+                k -= 1; // hop over a method-chain dot
+            }
+        } else {
+            break;
+        }
+    }
+    (toks.get(k).map(|t| t.kind) == Some(TokKind::Ident)).then_some(k)
+}
+
+/// Rule 4: every numeric field of a contracted struct must be mentioned
+/// in each of its declared writer functions.
+fn counter_conservation(ctx: &mut Ctx) {
+    let toks = &ctx.lx.tokens;
+    for c in COUNTER_CONTRACTS {
+        let CounterContract { file, strukt, writers } = c;
+        if !ctx.rel.ends_with(file) {
+            continue;
+        }
+        let fields: Vec<(String, u32)> = struct_fields(toks, strukt)
+            .into_iter()
+            .filter(|(_, ty, _)| COUNTER_TYPES.contains(&ty.as_str()))
+            .map(|(f, _, l)| (f, l))
+            .collect();
+        for (wimpl, wfn) in *writers {
+            let Some((a, b)) = fn_body_range(toks, wfn, Some(wimpl)) else {
+                ctx.emit(
+                    1,
+                    Rule::CounterConservation,
+                    format!("declared counter writer `{wimpl}::{wfn}` not found in {file}"),
+                );
+                continue;
+            };
+            for (f, line) in &fields {
+                let mentioned = toks[a..b].iter().any(|t| {
+                    (t.kind == TokKind::Ident || t.kind == TokKind::Str) && t.text == *f
+                });
+                if !mentioned {
+                    ctx.emit(
+                        *line,
+                        Rule::CounterConservation,
+                        format!("counter `{strukt}.{f}` is never written by `{wimpl}::{wfn}`"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Unit class of an identifier per its `_ms` / `_ns` / `_us` / seconds
+/// suffix segments.
+fn unit_class(ident: &str) -> Option<&'static str> {
+    let segs: Vec<&str> = ident.split('_').collect();
+    if segs.len() < 2 {
+        return None;
+    }
+    if segs.contains(&"ms") {
+        return Some("ms");
+    }
+    if segs.contains(&"ns") {
+        return Some("ns");
+    }
+    if segs.contains(&"us") {
+        return Some("us");
+    }
+    match segs.last() {
+        Some(&"s") | Some(&"secs") | Some(&"seconds") => Some("s"),
+        _ => None,
+    }
+}
+
+/// Rule 5: one statement mixing two unit suffixes without an explicit
+/// conversion (a `*_per_*`/`to_*`/`from_*` call or a power-of-ten
+/// literal) is a finding.
+fn unit_suffix(ctx: &mut Ctx) {
+    let toks = &ctx.lx.tokens;
+    let mut stmt: Vec<usize> = Vec::new();
+    for i in 0..=toks.len() {
+        let boundary = i == toks.len()
+            || matches!(toks[i].text.as_str(), ";" | "{" | "}" | ",");
+        if !boundary {
+            stmt.push(i);
+            continue;
+        }
+        let mut classes: Vec<(&'static str, u32)> = Vec::new();
+        let mut conversion = false;
+        for &k in &stmt {
+            let t = &toks[k];
+            if t.kind == TokKind::Ident {
+                if let Some(c) = unit_class(&t.text) {
+                    if !classes.iter().any(|(cc, _)| *cc == c) {
+                        classes.push((c, t.line));
+                    }
+                }
+                let lower = t.text.to_lowercase();
+                if lower
+                    .split('_')
+                    .any(|s| s == "per" || s == "to" || s == "from")
+                {
+                    conversion = true;
+                }
+            }
+            if t.kind == TokKind::Num {
+                let lit = t.text.to_lowercase().replace('_', "");
+                if ["e3", "e6", "e9", "1000", "0.001", "e-3", "e-6", "e-9"]
+                    .iter()
+                    .any(|p| lit.contains(p))
+                {
+                    conversion = true;
+                }
+            }
+        }
+        if classes.len() > 1 && !conversion {
+            let line = classes.iter().map(|(_, l)| *l).min().unwrap_or(1);
+            let names: Vec<&str> = classes.iter().map(|(c, _)| *c).collect();
+            ctx.emit(
+                line,
+                Rule::UnitSuffix,
+                format!(
+                    "statement mixes units [{}] without an explicit conversion",
+                    names.join(", ")
+                ),
+            );
+        }
+        stmt.clear();
+    }
+}
+
+/// Rule 6: `#[cfg(feature = "parallel")]` code needs a
+/// `#[cfg(not(feature = "parallel"))]` serial counterpart in the same
+/// file.
+fn feature_hygiene(ctx: &mut Ctx) {
+    let toks = &ctx.lx.tokens;
+    let mut first_positive: Option<u32> = None;
+    let mut has_negative = false;
+    for i in 0..toks.len() {
+        if !toks[i].is_ident("cfg") || text(toks, i + 1) != "(" {
+            continue;
+        }
+        let window = &toks[i..toks.len().min(i + 10)];
+        let has_feature = window.iter().any(|t| t.is_ident("feature"));
+        let has_parallel = window
+            .iter()
+            .any(|t| t.kind == TokKind::Str && t.text == "parallel");
+        if has_feature && has_parallel {
+            if window.iter().any(|t| t.is_ident("not")) {
+                has_negative = true;
+            } else if first_positive.is_none() {
+                first_positive = Some(toks[i].line);
+            }
+        }
+    }
+    if let Some(line) = first_positive {
+        if !has_negative {
+            ctx.emit(
+                line,
+                Rule::FeatureHygiene,
+                "#[cfg(feature = \"parallel\")] without a serial \
+                 #[cfg(not(feature = \"parallel\"))] counterpart in this file"
+                    .to_string(),
+            );
+        }
+    }
+}

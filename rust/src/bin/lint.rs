@@ -1,0 +1,53 @@
+//! `edgepipe-lint` CLI: run the project-invariant analyzer over a
+//! source tree.
+//!
+//! ```text
+//! cargo run --bin lint -- rust/src        # CI invocation (repo root)
+//! cargo run --bin lint -- src             # from inside rust/
+//! ```
+//!
+//! Prints one `file:line: [rule] message` per finding and exits 1 when
+//! any finding survives the `// lint:allow(rule)` escape hatches, 2 on
+//! I/O errors, 0 on a clean tree.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use edgepipe::analysis;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let root = args.first().map(String::as_str).unwrap_or("rust/src");
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        eprintln!("usage: lint [PATH]   (default PATH: rust/src)");
+        eprintln!("rules: {}", rule_list());
+        return ExitCode::SUCCESS;
+    }
+    let path = Path::new(root);
+    if !path.exists() {
+        eprintln!("lint: path not found: {root}");
+        return ExitCode::from(2);
+    }
+    match analysis::analyze_tree(path) {
+        Ok(diags) if diags.is_empty() => {
+            println!("lint: clean ({})", rule_list());
+            ExitCode::SUCCESS
+        }
+        Ok(diags) => {
+            for d in &diags {
+                println!("{d}");
+            }
+            println!("lint: {} finding(s)", diags.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("lint: io error walking {root}: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn rule_list() -> String {
+    let names: Vec<&str> = analysis::Rule::all().iter().map(|r| r.name()).collect();
+    names.join(", ")
+}

@@ -11,6 +11,9 @@
 //! [`adopt_stream`](crate::fleet::vclock::VirtualCore::adopt_stream));
 //! this module only picks the moves.
 
+// Cross-node migration choreography.
+#![deny(clippy::unwrap_used)]
+
 use crate::config::json::{num, obj, s, Json};
 use crate::fleet::router::StreamRouter;
 
@@ -216,6 +219,7 @@ impl MigrationController {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

@@ -19,6 +19,9 @@
 //! makes thousands of concurrent streams per process cheap. The threaded
 //! `StreamCore` path remains the engine for single-node `run`/`serve`.
 
+
+// Serving hot path: no unwraps outside tests (see util::lock::relock).
+#![deny(clippy::unwrap_used)]
 pub mod migrate;
 pub mod node;
 pub mod report;
@@ -416,6 +419,7 @@ pub fn run_fleet(opts: &FleetOptions) -> Result<FleetReport> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::serve::clients::ArrivalProcess;

@@ -10,6 +10,9 @@
 //! clock cap) makes it `Degraded` and stretches every subsequent
 //! dispatch on its virtual clock.
 
+// Fleet node serving state.
+#![deny(clippy::unwrap_used)]
+
 use crate::cost::power::PowerModel;
 use crate::dla::DlaVersion;
 use crate::error::Result;
@@ -220,6 +223,7 @@ impl FleetNode {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

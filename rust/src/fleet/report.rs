@@ -8,6 +8,9 @@
 //! edge fleet), and the migration event log that explains any step
 //! changes in the windowed series.
 
+// Fleet report assembly.
+#![deny(clippy::unwrap_used)]
+
 use crate::config::json::{arr, num, obj, s, Json};
 use crate::fleet::migrate::MigrationEvent;
 use crate::fleet::vclock::Delivery;
@@ -208,6 +211,7 @@ impl FleetReport {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

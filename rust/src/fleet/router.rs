@@ -14,6 +14,9 @@
 //! the node whose projected load (backlog over planned capacity) stays
 //! lowest after absorbing the moved share, preferring healthy nodes.
 
+// Per-arrival stream routing.
+#![deny(clippy::unwrap_used)]
+
 use crate::util::hash::{mix64, BuildMix64};
 use std::collections::HashMap;
 
@@ -146,6 +149,7 @@ impl StreamRouter {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

@@ -33,6 +33,9 @@
 //!   (admission sheds happen *before* [`VirtualCore::admit`]), so
 //!   `offered == released + shed` holds fleet-wide.
 
+// Virtual-clock executor hot path.
+#![deny(clippy::unwrap_used)]
+
 use crate::error::{Error, Result};
 use crate::hw::{EngineKind, SocSpec};
 use crate::pipeline::backend::{InferenceBackend, SimBackend};
@@ -430,9 +433,11 @@ impl VirtualCore {
             if q.0.t > t {
                 break;
             }
-            let d = self.ready.pop().expect("peeked entry pops").0;
+            let Some(q) = self.ready.pop() else {
+                break;
+            };
             self.released += 1;
-            out.push(d);
+            out.push(q.0);
         }
     }
 
@@ -477,6 +482,7 @@ impl VirtualCore {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::hw::{orin, EngineKind};

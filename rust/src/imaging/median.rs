@@ -215,8 +215,12 @@ fn median_row_sorted(src: &[f32], w: usize, h: usize, y: usize, k: usize, row: &
         for dy in -r..=r {
             let yy = clampi(y as isize + dy, h);
             let old = src[yy * w + xl];
+            // Huang's invariant: the outgoing sample was inserted into
+            // the window exactly one column earlier, and total_cmp is a
+            // total order, so the search cannot miss.
             let pos = win
                 .binary_search_by(|p| p.total_cmp(&old))
+                // lint:allow(panic-freedom) — unreachable per the window invariant above
                 .expect("sliding window must contain the outgoing sample");
             win.remove(pos);
             let new = src[yy * w + xr];

@@ -166,8 +166,28 @@
 //! parallel --bench hotpath` on the CI runner class (or take the job's
 //! artifact) and commit the regenerated `rust/BENCH_hotpath.json`.
 //!
+//! ## Static analysis & invariants
+//!
+//! The guarantees above — the per-frame loop never panics or allocates,
+//! locks are acquired in one declared global order, every counter a
+//! report struct grows reaches its JSON writer, model-time and
+//! wall-clock units never mix silently, every `parallel` code path has
+//! a serial twin — are invariants the type system cannot express. The
+//! [`analysis`] module is a dependency-free static analyzer
+//! (`edgepipe-lint`, run as `cargo run --bin lint -- rust/src` and in
+//! CI) that machine-checks all six over the crate's own token stream,
+//! driven by the checked-in policy manifests in [`analysis::hotpath`].
+//! Intentional exceptions carry an inline `// lint:allow(rule-name)`
+//! with a justification. The companion [`util::lock`] helpers
+//! (`relock`, `cv_wait`) give the serving path poison-tolerant locking,
+//! so a panicked worker cannot cascade into every thread that later
+//! touches the same mutex, and the hot-path modules deny
+//! `clippy::unwrap_used` outright.
+//!
 //! ## Layers
 //!
+//! * [`analysis`] — the `edgepipe-lint` static analyzer: lexer, rule
+//!   passes, and the invariant manifests they enforce;
 //! * [`graph`] — layer-graph IR with shape inference and the paper's
 //!   model-surgery passes;
 //! * [`models`] — Pix2Pix (all three variants), a YOLOv8-style detector and
@@ -200,6 +220,7 @@
 //!   classical algorithms, YOLO decode + NMS;
 //! * [`report`] — regenerates every table and figure of the paper.
 
+pub mod analysis;
 pub mod config;
 pub mod cost;
 pub mod dla;

@@ -7,6 +7,9 @@
 //! batch to [`super::backend::ModelRunner::execute_batch`] as one
 //! dispatch.
 
+// Per-batch collection loop: runs for every dispatched batch.
+#![deny(clippy::unwrap_used)]
+
 use super::frame::Frame;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
@@ -104,6 +107,7 @@ pub fn next_batch(rx: &Receiver<Frame>, policy: BatchPolicy) -> Option<Vec<Frame
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::pipeline::plane::FramePlane;

@@ -63,6 +63,9 @@
 //! [`crate::sim::timeline::Timeline`], from which [`PipelineReport`]
 //! derives per-engine utilization and idle-gap statistics.
 
+// Per-frame routing/worker hot path: panics here wedge the stream.
+#![deny(clippy::unwrap_used)]
+
 use super::backend::InferenceBackend;
 use super::batcher::{collect_batch_into, BatchEnd};
 use super::engines::{EngineArbiter, EngineSnapshot};
@@ -346,38 +349,56 @@ impl StreamCore {
         let copies = targets.len();
         let mut frame = Some(frame);
         for (copy, target) in targets.enumerate() {
-            // Last copy moves the frame; earlier copies clone it — an Arc
-            // refcount bump per plane, never a pixel copy.
-            let mut f = if copy + 1 == copies {
-                frame.take().expect("one frame per routed copy")
-            } else {
-                frame.as_ref().expect("one frame per routed copy").clone()
+            // The router is sized to the instance count, so every target
+            // is in range; checked access keeps the producer alive even
+            // if that ever breaks, instead of panicking mid-stream.
+            let (Some(sender), Some(&scored), Some(alive)) = (
+                self.senders.get(target),
+                self.scoring.get(target),
+                self.alive.get_mut(target),
+            ) else {
+                continue;
+            };
+            let mut f = match frame.take() {
+                // Last copy moves the frame...
+                Some(cur) if copy + 1 == copies => cur,
+                Some(cur) => {
+                    // ...earlier copies clone it: an Arc refcount bump
+                    // per plane, never a pixel copy.
+                    // lint:allow(hot-path-alloc) — Frame::clone only bumps Arc refcounts
+                    let f = cur.clone();
+                    frame = Some(cur);
+                    f
+                }
+                // One frame per routed copy by construction; end routing
+                // rather than panic if that invariant ever breaks.
+                None => break,
             };
             // Ground truth is only consumed by fidelity scoring: don't
             // carry the plane through other queues.
-            if !self.scoring[target] {
+            if !scored {
                 f.gt_mri = None;
             }
             if copy == 0 {
                 // The primary copy is lossless: block under backpressure
                 // (the paper's pipeline drops nothing on its main
                 // reconstruction path).
-                if self.senders[target].send(f).is_err() {
+                if sender.send(f).is_err() {
                     return false;
                 }
-            } else if self.alive[target] {
+            } else if *alive {
                 // Fanout copies beyond the primary shed load instead of
                 // stalling the whole pipeline. Only a full queue is
                 // genuine shedding — a disconnect is a crashed worker,
                 // not overload.
-                match self.senders[target].try_send(f) {
+                match sender.try_send(f) {
                     Ok(()) => {}
                     Err(TrySendError::Full(_)) => {
                         self.dropped_total.fetch_add(1, Ordering::Relaxed);
                         self.metrics.record_drop(target);
                     }
                     Err(TrySendError::Disconnected(_)) => {
-                        self.alive[target] = false;
+                        *alive = false;
                     }
                 }
             }
@@ -528,6 +549,7 @@ pub(crate) fn record_fidelity(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::pipeline::backend::{ModelRunner, Output};

@@ -11,6 +11,10 @@
 //! * a **disconnected** worker queue is neither: the target leaves the
 //!   routing rotation and the worker's own error surfaces at join.
 
+// Per-frame counter path: a panic here kills a worker and wedges the run.
+#![deny(clippy::unwrap_used)]
+
+use crate::util::lock::relock;
 use crate::util::stats::Summary;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
@@ -78,23 +82,31 @@ impl Metrics {
     }
 
     pub fn record_frame(&self, instance: usize, latency_s: f64) {
-        let mut c = self.instances[instance].lock().unwrap();
-        c.frames += 1;
-        c.latency.add(latency_s);
+        // Out-of-range instance indexes (impossible via the driver, which
+        // sizes the vec from the spec) drop the sample, never the worker.
+        if let Some(slot) = self.instances.get(instance) {
+            let mut c = relock(slot);
+            c.frames += 1;
+            c.latency.add(latency_s);
+        }
     }
 
     pub fn record_fidelity(&self, instance: usize, psnr: f64, ssim_pct: f64) {
-        let mut c = self.instances[instance].lock().unwrap();
-        if psnr.is_finite() {
-            c.psnr.add(psnr);
+        if let Some(slot) = self.instances.get(instance) {
+            let mut c = relock(slot);
+            if psnr.is_finite() {
+                c.psnr.add(psnr);
+            }
+            c.ssim_pct.add(ssim_pct);
         }
-        c.ssim_pct.add(ssim_pct);
     }
 
     /// A droppable fanout copy shed by *overload* (full queue) inside the
     /// pipeline — charged to the instance whose queue was full.
     pub fn record_drop(&self, instance: usize) {
-        self.instances[instance].lock().unwrap().dropped += 1;
+        if let Some(slot) = self.instances.get(instance) {
+            relock(slot).dropped += 1;
+        }
     }
 
     /// A frame refused by *admission control* before routing — counted
@@ -111,16 +123,15 @@ impl Metrics {
     /// A fidelity sample that could not be scored (mismatched shapes,
     /// missing ground truth, degenerate images).
     pub fn record_fidelity_skipped(&self, instance: usize) {
-        self.instances[instance].lock().unwrap().fidelity_skipped += 1;
+        if let Some(slot) = self.instances.get(instance) {
+            relock(slot).fidelity_skipped += 1;
+        }
     }
 
     /// Per-instance completed-frame counts — the cheap live read the
     /// serve loop polls at checkpoints (no summary buffers are cloned).
     pub fn frames_completed(&self) -> Vec<usize> {
-        self.instances
-            .iter()
-            .map(|c| c.lock().unwrap().frames)
-            .collect()
+        self.instances.iter().map(|c| relock(c).frames).collect()
     }
 
     /// Sum of completed frames over the instances selected by `mask` —
@@ -132,7 +143,7 @@ impl Metrics {
             .iter()
             .zip(mask)
             .filter(|(_, &m)| m)
-            .map(|(c, _)| c.lock().unwrap().frames)
+            .map(|(c, _)| relock(c).frames)
             .sum()
     }
 
@@ -151,7 +162,7 @@ impl Metrics {
             .iter()
             .zip(self.labels.iter())
             .map(|(c, label)| {
-                let c = c.lock().unwrap();
+                let c = relock(c);
                 InstanceSnapshot {
                     label: label.clone(),
                     frames: c.frames,
@@ -174,6 +185,7 @@ impl Metrics {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

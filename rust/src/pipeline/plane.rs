@@ -16,6 +16,10 @@
 //! * dropping the pool while planes are in flight is fine — their buffers
 //!   are simply freed instead of parked (the shelf link is a `Weak`).
 
+// Plane recycling runs once per sourced frame on the producer thread.
+#![deny(clippy::unwrap_used)]
+
+use crate::util::lock::relock;
 use std::sync::{Arc, Mutex, Weak};
 
 /// How many free buffers a pool shelf retains before excess buffers are
@@ -72,10 +76,11 @@ impl Drop for FramePlane {
     fn drop(&mut self) {
         if let Some(weak) = self.shelf.take() {
             if let Some(shelf) = weak.upgrade() {
-                if let Ok(mut free) = shelf.free.lock() {
-                    if free.len() < shelf.retain {
-                        free.push(std::mem::take(&mut self.data));
-                    }
+                // relock, not lock().ok(): a poisoned shelf must still
+                // recycle buffers (and never panic inside Drop).
+                let mut free = relock(&shelf.free);
+                if free.len() < shelf.retain {
+                    free.push(std::mem::take(&mut self.data));
                 }
             }
         }
@@ -111,7 +116,7 @@ impl PlanePool {
     /// shelf when one is parked, freshly allocated otherwise. Fill it and
     /// [`seal`](PlanePool::seal) it into a plane.
     pub fn acquire(&self, len: usize) -> Vec<f32> {
-        let recycled = self.shelf.free.lock().unwrap().pop();
+        let recycled = relock(&self.shelf.free).pop();
         let mut buf = recycled.unwrap_or_default();
         buf.clear();
         buf.reserve(len);
@@ -130,11 +135,12 @@ impl PlanePool {
     /// Number of free buffers currently parked (introspection for tests
     /// and benches).
     pub fn parked(&self) -> usize {
-        self.shelf.free.lock().unwrap().len()
+        relock(&self.shelf.free).len()
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

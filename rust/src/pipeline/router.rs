@@ -19,6 +19,9 @@
 //! driver materialises each target's copy with `Frame::clone`, which only
 //! bumps the shared [`super::plane::FramePlane`] refcounts.
 
+// Per-frame route selection: allocation- and panic-free by contract.
+#![deny(clippy::unwrap_used)]
+
 use super::frame::Frame;
 use crate::error::{Error, Result};
 
@@ -167,6 +170,7 @@ impl Router {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use std::time::Instant;

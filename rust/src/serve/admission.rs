@@ -23,6 +23,9 @@
 //! shedding — under pressure the best-effort classes thin out first,
 //! which is exactly the paper's "reconstruction never drops" contract.
 
+// Admission decisions run once per offered frame.
+#![deny(clippy::unwrap_used)]
+
 use crate::config::json::{arr, num, obj, s, Json};
 use crate::error::{Error, Result};
 
@@ -217,6 +220,7 @@ pub fn class_row(class: &QosClass, stats: &ClassStats) -> Json {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

@@ -10,6 +10,9 @@
 //! `time_scale` when pacing real threads, so the same profile runs at
 //! full speed on hardware and in fast-forward under the sim backend.
 
+// Client schedules feed the serve loop's admission path.
+#![deny(clippy::unwrap_used)]
+
 use crate::error::{Error, Result};
 use crate::util::rng::Rng;
 
@@ -148,8 +151,7 @@ pub fn schedule(clients: &[ClientSpec], seed: u64) -> Result<Vec<Arrival>> {
     }
     // Stable order: time, then client index for simultaneous arrivals.
     all.sort_by(|a, b| {
-        a.t.partial_cmp(&b.t)
-            .unwrap()
+        a.t.total_cmp(&b.t)
             .then(a.client.cmp(&b.client))
             .then(a.seq.cmp(&b.seq))
     });
@@ -157,6 +159,7 @@ pub fn schedule(clients: &[ClientSpec], seed: u64) -> Result<Vec<Arrival>> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

@@ -37,6 +37,9 @@
 //! # Ok::<(), edgepipe::Error>(())
 //! ```
 
+
+// Serving hot path: no unwraps outside tests (see util::lock::relock).
+#![deny(clippy::unwrap_used)]
 pub mod admission;
 pub mod clients;
 pub mod replan;
@@ -357,8 +360,13 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
         match admission.decide(class, a.t, est_wait_ms) {
             Some(_reason) => core.record_shed(),
             None => {
+                // The arrival schedule is built from the same per-client
+                // budgets the sources enforce, so a missing frame is
+                // unreachable; an expect beats silently losing an
+                // admitted frame.
                 let frame = sources[a.client]
                     .next()
+                    // lint:allow(panic-freedom) — unreachable by schedule construction
                     .expect("schedule never exceeds a client's budget");
                 accepted += 1;
                 if !core.submit(frame) {

@@ -14,6 +14,9 @@
 //! the next frame boundary, and the [`ReplanEvent`] is recorded in both
 //! the report and the merged serving timeline.
 
+// Checkpoint controller on the serve loop.
+#![deny(clippy::unwrap_used)]
+
 use crate::config::json::{num, obj, s, Json};
 use crate::dla::DlaVersion;
 use crate::error::Result;
@@ -261,6 +264,7 @@ impl Replanner {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::hw::{orin, EngineKind};

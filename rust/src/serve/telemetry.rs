@@ -9,10 +9,15 @@
 //! timeline. Windows are what the online re-planner watches: full-run
 //! aggregates would smear a load shift into invisibility.
 
+// The completion sink runs once per served frame on worker threads: it
+// must degrade on poisoning, never panic (see util::lock).
+#![deny(clippy::unwrap_used)]
+
 use crate::config::json::{arr, num, obj, s, Json};
 use crate::hw::EngineKind;
 use crate::pipeline::driver::CompletionSink;
 use crate::sim::timeline::Timeline;
+use crate::util::lock::relock;
 use crate::util::stats::Summary;
 use std::collections::VecDeque;
 use std::sync::Mutex;
@@ -71,22 +76,22 @@ impl Telemetry {
     }
 
     pub fn total_completed(&self) -> usize {
-        self.inner.lock().unwrap().completed
+        relock(&self.inner).completed
     }
 
     /// Full-run latency percentile in milliseconds.
     pub fn latency_ms_percentile(&self, q: f64) -> f64 {
-        self.inner.lock().unwrap().latency.percentile(q) * 1e3
+        relock(&self.inner).latency.percentile(q) * 1e3
     }
 
     /// Copy of the retained completion tail (oldest first).
     pub fn completions(&self) -> Vec<Completion> {
-        self.inner.lock().unwrap().events.iter().copied().collect()
+        relock(&self.inner).events.iter().copied().collect()
     }
 
     /// Completion statistics over the wall-time window `(t0, t1]`.
     pub fn window(&self, t0: f64, t1: f64) -> (usize, Summary) {
-        let inner = self.inner.lock().unwrap();
+        let inner = relock(&self.inner);
         let mut lat = Summary::new();
         let mut completed = 0;
         // events are time-ordered; scan the tail backwards
@@ -105,7 +110,7 @@ impl Telemetry {
 
 impl CompletionSink for Telemetry {
     fn completed(&self, instance: usize, stream: usize, frame_id: u64, latency_s: f64) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = relock(&self.inner);
         // Stamp *inside* the lock: stamping before it would let a
         // preempted worker append a stale timestamp after a newer one,
         // breaking the time-ordering `window()`'s reverse scan relies on.
@@ -236,6 +241,7 @@ pub fn engine_busy_in_window(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::sim::timeline::Span;

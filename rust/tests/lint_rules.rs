@@ -1,0 +1,247 @@
+//! Fixture tests for the `edgepipe-lint` rules: each rule must fire on
+//! a violating snippet, stay silent on a clean one, and respect the
+//! `// lint:allow(rule)` escape hatch.
+//!
+//! Fixtures are analyzed under hot-path file names (e.g. `serve/mod.rs`)
+//! so the module-scoped rules apply; the same snippet under a cold path
+//! must stay silent, which pins the scoping logic too.
+
+use edgepipe::analysis::{analyze_source, analyze_tree, Rule};
+use std::path::Path;
+
+fn rules_fired(rel: &str, src: &str) -> Vec<Rule> {
+    analyze_source(rel, src).into_iter().map(|d| d.rule).collect()
+}
+
+fn fires(rel: &str, src: &str, rule: Rule) -> bool {
+    rules_fired(rel, src).contains(&rule)
+}
+
+// ---------------------------------------------------------------- rule 1
+
+#[test]
+fn panic_freedom_fires_on_unwrap_in_hot_module() {
+    let bad = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+    assert!(fires("serve/mod.rs", bad, Rule::PanicFreedom));
+    assert!(fires("fleet/vclock.rs", bad, Rule::PanicFreedom));
+    let expect = r#"fn f(x: Option<u32>) -> u32 { x.expect("set") }"#;
+    assert!(fires("pipeline/driver.rs", expect, Rule::PanicFreedom));
+    let macros = r#"fn f() { panic!("boom") }"#;
+    assert!(fires("imaging/sobel.rs", macros, Rule::PanicFreedom));
+}
+
+#[test]
+fn panic_freedom_is_silent_on_clean_and_cold_code() {
+    let clean = "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) }";
+    assert!(!fires("serve/mod.rs", clean, Rule::PanicFreedom));
+    // same violation outside the hot-path scope: not this rule's business
+    let bad = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+    assert!(!fires("placement/score.rs", bad, Rule::PanicFreedom));
+    assert!(
+        !fires("imaging/reference.rs", bad, Rule::PanicFreedom),
+        "the scalar oracle file is exempt"
+    );
+    // violations inside #[cfg(test)] mods are ignored
+    let in_tests = "fn ok() {}\n#[cfg(test)]\nmod tests {\n fn f(x: Option<u32>) -> u32 { x.unwrap() }\n}";
+    assert!(!fires("serve/mod.rs", in_tests, Rule::PanicFreedom));
+}
+
+#[test]
+fn panic_freedom_allow_hatch_suppresses() {
+    let allowed = "fn f(x: Option<u32>) -> u32 {\n // lint:allow(panic-freedom) — justified\n x.unwrap()\n}";
+    assert!(!fires("serve/mod.rs", allowed, Rule::PanicFreedom));
+    // the hatch is rule-specific: allowing another rule changes nothing
+    let wrong_rule = "fn f(x: Option<u32>) -> u32 {\n // lint:allow(hot-path-alloc)\n x.unwrap()\n}";
+    assert!(fires("serve/mod.rs", wrong_rule, Rule::PanicFreedom));
+}
+
+#[test]
+fn panic_freedom_flags_indexing_only_in_manifest_fns() {
+    let indexed = "impl R { pub fn route(&self, i: usize) -> u32 { self.q[i] } }";
+    assert!(fires("pipeline/router.rs", indexed, Rule::PanicFreedom));
+    // same indexing in a non-manifest fn of the same file: allowed
+    let elsewhere = "impl R { pub fn new(&self, i: usize) -> u32 { self.q[i] } }";
+    assert!(!fires("pipeline/router.rs", elsewhere, Rule::PanicFreedom));
+}
+
+// ---------------------------------------------------------------- rule 2
+
+#[test]
+fn lock_discipline_fires_on_rank_inversion() {
+    // telemetry `inner` (rank 4) held while taking arbiter `state` (rank 0)
+    let bad = "fn f(&self) {\n let g = self.inner.lock();\n let h = self.state.lock();\n}";
+    assert!(fires("serve/telemetry.rs", bad, Rule::LockDiscipline));
+    // relock form is classified the same way
+    let bad_relock = "fn f(&self) {\n let g = relock(&self.inner);\n let h = relock(&self.state);\n}";
+    assert!(fires("serve/telemetry.rs", bad_relock, Rule::LockDiscipline));
+}
+
+#[test]
+fn lock_discipline_accepts_declared_order_and_scoped_guards() {
+    // increasing rank is the declared order
+    let ordered = "fn f(&self) {\n let g = relock(&self.state);\n let h = relock(&self.inner);\n}";
+    assert!(!fires("pipeline/engines.rs", ordered, Rule::LockDiscipline));
+    // a guard dropped at block end no longer constrains later code
+    let scoped = "fn f(&self) {\n { let g = relock(&self.inner); }\n let h = relock(&self.state);\n}";
+    assert!(!fires("serve/telemetry.rs", scoped, Rule::LockDiscipline));
+}
+
+#[test]
+fn lock_discipline_fires_on_guard_across_dispatch() {
+    let bad = "fn f(&self) {\n let g = relock(&self.inner);\n self.arbiter.dispatch(0);\n}";
+    assert!(fires("serve/mod.rs", bad, Rule::LockDiscipline));
+    let clean = "fn f(&self) {\n { let g = relock(&self.inner); }\n self.arbiter.dispatch(0);\n}";
+    assert!(!fires("serve/mod.rs", clean, Rule::LockDiscipline));
+}
+
+#[test]
+fn lock_discipline_flags_undeclared_lock_receivers() {
+    let unknown = "fn f(&self) { let g = self.mystery.lock(); }";
+    assert!(fires("fleet/mod.rs", unknown, Rule::LockDiscipline));
+    let allowed = "fn f(&self) {\n // lint:allow(lock-discipline) — local, never nested\n let g = self.mystery.lock();\n}";
+    assert!(!fires("fleet/mod.rs", allowed, Rule::LockDiscipline));
+}
+
+// ---------------------------------------------------------------- rule 3
+
+#[test]
+fn hot_path_alloc_fires_inside_manifest_fns() {
+    let cloning = "impl C { pub fn submit(&mut self, f: Frame) -> bool { let g = f.clone(); true } }";
+    assert!(fires("pipeline/driver.rs", cloning, Rule::HotPathAlloc));
+    let vec_new = "impl A { pub fn dispatch(&self) { let v: Vec<u32> = Vec::new(); } }";
+    assert!(fires("pipeline/engines.rs", vec_new, Rule::HotPathAlloc));
+    let fmt = r#"impl A { pub fn dispatch(&self) { let s = format!("x"); } }"#;
+    assert!(fires("pipeline/engines.rs", fmt, Rule::HotPathAlloc));
+}
+
+#[test]
+fn hot_path_alloc_silent_outside_manifest_fns_and_with_allow() {
+    // allocation in a non-manifest fn of a hot file is fine
+    let in_new =
+        "impl C { pub fn submit(&self) {} pub fn new() -> Self { let v: Vec<u32> = Vec::new(); C { v } } }";
+    assert!(!fires("pipeline/driver.rs", in_new, Rule::HotPathAlloc));
+    // manifest fn in another file entirely: out of scope
+    let other_file = "impl C { pub fn submit(&self) { let v: Vec<u32> = Vec::new(); } }";
+    assert!(!fires("placement/mod.rs", other_file, Rule::HotPathAlloc));
+    let allowed = "impl C { pub fn submit(&mut self, f: Frame) -> bool {\n // lint:allow(hot-path-alloc) — Arc bump\n let g = f.clone(); true } }";
+    assert!(!fires("pipeline/driver.rs", allowed, Rule::HotPathAlloc));
+}
+
+#[test]
+fn hot_path_alloc_reports_rotted_manifest_entries() {
+    // driver.rs without a `submit` fn: the manifest entry itself rots
+    let no_submit = "impl C { pub fn other(&self) {} }";
+    assert!(fires("pipeline/driver.rs", no_submit, Rule::HotPathAlloc));
+}
+
+// ---------------------------------------------------------------- rule 4
+
+#[test]
+fn counter_conservation_fires_on_unreported_counter() {
+    let missing = r#"
+pub struct WindowStats { pub completed: usize, pub shed: usize }
+impl WindowStats {
+    pub fn to_json(&self) -> Json { obj(vec![("completed", num(self.completed as f64))]) }
+}
+"#;
+    assert!(fires("serve/telemetry.rs", missing, Rule::CounterConservation));
+}
+
+#[test]
+fn counter_conservation_accepts_full_coverage_and_non_counters() {
+    let full = r#"
+pub struct WindowStats { pub completed: usize, pub shed: usize, pub tag: String }
+impl WindowStats {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("completed", num(self.completed as f64)),
+            ("shed", num(self.shed as f64)),
+        ])
+    }
+}
+"#;
+    // `tag: String` is not a counter; its absence from to_json is fine
+    assert!(!fires("serve/telemetry.rs", full, Rule::CounterConservation));
+    // an uncontracted struct in an uncontracted file is out of scope
+    let elsewhere = "pub struct WindowStats { pub completed: usize }";
+    assert!(!fires("sched/mod.rs", elsewhere, Rule::CounterConservation));
+}
+
+#[test]
+fn counter_conservation_fires_when_a_declared_writer_vanishes() {
+    let no_writer = "pub struct WindowStats { pub completed: usize }";
+    assert!(fires("serve/telemetry.rs", no_writer, Rule::CounterConservation));
+}
+
+// ---------------------------------------------------------------- rule 5
+
+#[test]
+fn unit_suffix_fires_on_silent_ms_s_mixing() {
+    let bad = "fn f(lat_ms: f64, wall_s: f64) -> f64 { let x = lat_ms + wall_s; x }";
+    assert!(fires("cost/mod.rs", bad, Rule::UnitSuffix));
+}
+
+#[test]
+fn unit_suffix_accepts_explicit_conversions_and_single_units() {
+    let converted = "fn f(lat_ms: f64, wall_s: f64) -> f64 { let x = lat_ms + wall_s * 1e3; x }";
+    assert!(!fires("cost/mod.rs", converted, Rule::UnitSuffix));
+    let named = "fn f(lat_ms: f64, wall_s: f64) -> f64 { let x = lat_ms + s_to_ms(wall_s); x }";
+    assert!(!fires("cost/mod.rs", named, Rule::UnitSuffix));
+    let single = "fn f(a_ms: f64, b_ms: f64) -> f64 { let x = a_ms + b_ms; x }";
+    assert!(!fires("cost/mod.rs", single, Rule::UnitSuffix));
+    let allowed = "fn f(lat_ms: f64, wall_s: f64) -> f64 {\n // lint:allow(unit-suffix)\n let x = lat_ms + wall_s; x\n}";
+    assert!(!fires("cost/mod.rs", allowed, Rule::UnitSuffix));
+}
+
+// ---------------------------------------------------------------- rule 6
+
+#[test]
+fn feature_hygiene_fires_on_parallel_only_code() {
+    let bad = r#"
+#[cfg(feature = "parallel")]
+fn run() { threads() }
+"#;
+    assert!(fires("util/parallel.rs", bad, Rule::FeatureHygiene));
+}
+
+#[test]
+fn feature_hygiene_accepts_paired_cfgs_and_other_features() {
+    let paired = r#"
+#[cfg(feature = "parallel")]
+fn run() { threads() }
+#[cfg(not(feature = "parallel"))]
+fn run() { serial() }
+"#;
+    assert!(!fires("util/parallel.rs", paired, Rule::FeatureHygiene));
+    let other = r#"
+#[cfg(feature = "pjrt")]
+fn run() {}
+"#;
+    assert!(!fires("runtime/mod.rs", other, Rule::FeatureHygiene));
+    let allowed = r#"
+// lint:allow(feature-hygiene)
+#[cfg(feature = "parallel")]
+fn run() { threads() }
+"#;
+    assert!(!fires("util/parallel.rs", allowed, Rule::FeatureHygiene));
+}
+
+// ----------------------------------------------------------- whole tree
+
+#[test]
+fn the_crate_itself_is_lint_clean() {
+    // Mirrors CI's `cargo run --bin lint -- rust/src`: the analyzer must
+    // pass over the very tree it ships in, from either launch directory.
+    let root = if Path::new("src/lib.rs").exists() {
+        Path::new("src")
+    } else {
+        Path::new("rust/src")
+    };
+    let diags = analyze_tree(root).expect("tree walk");
+    let listing: Vec<String> = diags.iter().map(|d| d.to_string()).collect();
+    assert!(
+        diags.is_empty(),
+        "edgepipe-lint found violations in the shipped tree:\n{}",
+        listing.join("\n")
+    );
+}
