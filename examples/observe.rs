@@ -1,0 +1,106 @@
+//! The unified observability layer end to end: frame-lifecycle stage
+//! breakdowns, a Chrome/Perfetto trace of every engine dispatch, and a
+//! metrics registry with Prometheus-style exposition plus a JSONL
+//! snapshot/event stream — all from one serve run.
+//!
+//! A bursty client mix streams into a deliberately naive placement
+//! (both GANs on DLA0) with an [`edgepipe::obs::ObsHub`] attached, so
+//! the run records per-copy stage stamps, bumps the admission counters,
+//! snapshots the registry at every telemetry checkpoint, and logs the
+//! forced drain-and-switch re-plans as structured events. Afterwards the
+//! example writes `observe_trace.json` (load it at
+//! <https://ui.perfetto.dev>) and `observe_metrics.jsonl`, and prints
+//! the exposition text and the per-stage latency summary.
+//!
+//! Runs on the sim backend with no artifacts:
+//!
+//! ```text
+//! cargo run --release --no-default-features --example observe
+//! ```
+
+use edgepipe::dla::DlaVersion;
+use edgepipe::hw::{self, EngineKind};
+use edgepipe::obs::{ChromeTrace, ObsHub};
+use edgepipe::pipeline::router::RoutePolicy;
+use edgepipe::pipeline::{InstanceSpec, SimBackend};
+use edgepipe::serve::{self, ArrivalProcess, ClientSpec, ReplanPolicy, ServeOptions};
+use edgepipe::session::Session;
+use std::sync::Arc;
+
+fn main() -> edgepipe::Result<()> {
+    let time_scale = 0.02;
+    let soc = hw::orin();
+
+    // Naive initial placement the re-planner gets to fix mid-run, so the
+    // trace shows a drain-and-switch boundary and the event log a replan.
+    let session = Session::builder()
+        .instance(InstanceSpec::new("g0", "gen_cropping").on_engine_unit(EngineKind::Dla, 0))
+        .instance(InstanceSpec::new("g1", "gen_cropping").on_engine_unit(EngineKind::Dla, 0))
+        .route(RoutePolicy::RoundRobin)
+        .streams(2)
+        .backend(Arc::new(SimBackend::new(soc.clone()).with_time_scale(time_scale)))
+        .build()?;
+
+    let hub = Arc::new(ObsHub::new());
+    let mut opts = ServeOptions::new(soc, DlaVersion::V2);
+    opts.time_scale = time_scale;
+    opts.obs = Some(Arc::clone(&hub));
+    opts.replan = ReplanPolicy {
+        check_every_frames: 128,
+        force_every_checks: Some(2),
+        ..ReplanPolicy::default()
+    };
+    for i in 0..2 {
+        opts.clients.push(ClientSpec::new(
+            format!("scanner{i}"),
+            256,
+            ArrivalProcess::Burst {
+                burst_fps: 400.0,
+                burst_len: 32,
+                idle_seconds: 0.05,
+            },
+        ));
+    }
+
+    let rep = serve::serve(session, opts)?;
+    assert_eq!(rep.offered, rep.completed + rep.shed);
+
+    // --- 1. Frame-lifecycle stage breakdown (per-copy histograms). ---
+    let stages = rep.stages.as_ref().expect("observed serve reports stages");
+    println!("stage breakdown over {} frame copies:", stages.frames);
+    println!("  {}", stages.summary());
+
+    // --- 2. Chrome trace: engine dispatch slices + replan markers. ---
+    let mut tr = ChromeTrace::new();
+    tr.process(0, "edgepipe observe example");
+    tr.add_timeline(0, &rep.timeline, &[]);
+    for ev in &rep.replans {
+        tr.instant(0, "control", "replan", "replan", ev.at_seconds, ev.to_json());
+    }
+    for c in rep.completions.iter().take(5_000) {
+        let id = ((c.instance as u64) << 56)
+            | ((c.stream as u64) << 40)
+            | (c.frame_id & ((1 << 40) - 1));
+        let t0 = (c.t - c.latency_s).max(0.0);
+        tr.flow(0, id, "frame", t0, c.t, edgepipe::config::json::Json::Null);
+    }
+    std::fs::write("observe_trace.json", tr.to_json().to_compact())?;
+    println!(
+        "wrote observe_trace.json ({} events) — load it at https://ui.perfetto.dev",
+        tr.event_count()
+    );
+
+    // --- 3. Metrics registry: exposition text + JSONL stream (the
+    // serve loop snapshots at every checkpoint and once at the end). ---
+    std::fs::write("observe_metrics.jsonl", hub.to_jsonl())?;
+    println!(
+        "wrote observe_metrics.jsonl ({} events, {} snapshots)",
+        hub.event_count(),
+        hub.snapshot_count()
+    );
+    println!("exposition:");
+    for line in hub.registry.expose().lines() {
+        println!("  {line}");
+    }
+    Ok(())
+}

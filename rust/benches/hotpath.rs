@@ -65,6 +65,7 @@ fn main() {
         height: 0,
         gt_mri: None,
         admitted: Instant::now(),
+        stamps: Default::default(),
     };
     let mut route_sink = 0usize;
     for (policy, label) in [
@@ -240,6 +241,7 @@ fn main() {
             height: 64,
             gt_mri: None,
             admitted: Instant::now(),
+            stamps: Default::default(),
         })
         .collect();
     let ms_single4 = b.measure("sim_dispatch_single_x4", 150, || {
@@ -403,6 +405,56 @@ fn main() {
         serve_frames as f64 / (ms_serve / 1e3),
     );
     b.rate("serve_burst_512_frames", "replans", serve_replans as f64);
+
+    // The same serve loop with the observability hub attached: stage
+    // stamps folded per copy, registry counters bumped per admission
+    // decision, and a checkpoint-aligned snapshot stream. The rate is
+    // the only thing CI gates (`overhead_vs_untraced < 1.05`): tracing
+    // must stay within a few percent of the untraced hot path.
+    use edgepipe::obs::ObsHub;
+    let ms_traced = b.measure("serve_traced_512_frames", 300, || {
+        let session = Session::builder()
+            .instance(InstanceSpec::new("gan", "gen_cropping"))
+            .instance(InstanceSpec::new("yolo", "yolo_lite"))
+            .route(RoutePolicy::Fanout)
+            .frames(16)
+            .backend(Arc::clone(&backend))
+            .build()
+            .unwrap();
+        let mut opts = ServeOptions::new(orin(), edgepipe::dla::DlaVersion::V2);
+        opts.time_scale = 0.0;
+        opts.replan = ReplanPolicy {
+            check_every_frames: 128,
+            force_every_checks: Some(2),
+            ..ReplanPolicy::default()
+        };
+        opts.obs = Some(Arc::new(ObsHub::new()));
+        for i in 0..2 {
+            opts.clients.push(ClientSpec::new(
+                format!("c{i}"),
+                serve_frames / 2,
+                ArrivalProcess::Burst {
+                    burst_fps: 2000.0,
+                    burst_len: 64,
+                    idle_seconds: 0.01,
+                },
+            ));
+        }
+        let rep = serve::serve(session, opts).unwrap();
+        assert_eq!(rep.offered, rep.completed + rep.shed);
+        let st = rep.stages.expect("observed serve reports stages");
+        assert_eq!(st.non_monotone, 0);
+    });
+    b.rate(
+        "serve_traced_512_frames",
+        "frames_per_s",
+        serve_frames as f64 / (ms_traced / 1e3),
+    );
+    b.rate(
+        "serve_traced_512_frames",
+        "overhead_vs_untraced",
+        ms_traced / ms_serve,
+    );
 
     // NMS over 1k random boxes.
     let mut rng = Rng::new(3);

@@ -18,8 +18,9 @@ pub const HOT_MODULES: &[&str] = &[
     "pipeline/plane.rs",
 ];
 
-/// Directory prefixes that are hot-path wholesale.
-pub const HOT_PREFIXES: &[&str] = &["serve/", "fleet/", "imaging/"];
+/// Directory prefixes that are hot-path wholesale. `obs/` is listed
+/// because its recording primitives run once per served frame.
+pub const HOT_PREFIXES: &[&str] = &["serve/", "fleet/", "imaging/", "obs/"];
 
 /// Exemptions from [`HOT_PREFIXES`]: the scalar reference kernels are
 /// equivalence oracles for tests/benches, never on the serving path.
@@ -62,6 +63,8 @@ pub const HOT_FNS: &[HotFn] = &[
     HotFn { file: "serve/telemetry.rs", func: "completed" },
     HotFn { file: "fleet/router.rs", func: "node_for" },
     HotFn { file: "fleet/vclock.rs", func: "pop_ready" },
+    HotFn { file: "obs/registry.rs", func: "record" },
+    HotFn { file: "obs/stages.rs", func: "record" },
 ];
 
 /// One lock class in the global acquisition order. `field` is the name
@@ -76,8 +79,9 @@ pub struct LockClass {
 }
 
 /// The declared lock order: arbiter unit state → arbiter timeline →
-/// metrics counters → plane-pool shelf → telemetry sink. Holding a
-/// higher-rank lock while acquiring a lower-or-equal one is a
+/// metrics counters → plane-pool shelf → telemetry sink → observability
+/// leaves (registered only at setup / checkpoints, never per frame).
+/// Holding a higher-rank lock while acquiring a lower-or-equal one is a
 /// `lock-discipline` finding.
 pub const LOCK_ORDER: &[LockClass] = &[
     LockClass { field: "state", rank: 0, owner: "pipeline::engines::Unit" },
@@ -85,6 +89,9 @@ pub const LOCK_ORDER: &[LockClass] = &[
     LockClass { field: "instances", rank: 2, owner: "pipeline::metrics::Metrics" },
     LockClass { field: "free", rank: 3, owner: "pipeline::plane::Shelf" },
     LockClass { field: "inner", rank: 4, owner: "serve::telemetry::Telemetry" },
+    LockClass { field: "entries", rank: 5, owner: "obs::registry::Registry" },
+    LockClass { field: "events", rank: 6, owner: "obs::ObsHub" },
+    LockClass { field: "snapshots", rank: 7, owner: "obs::ObsHub" },
 ];
 
 /// Rank of a lock-field ident, if declared.
@@ -133,6 +140,21 @@ pub const COUNTER_CONTRACTS: &[CounterContract] = &[
         strukt: "NodeReport",
         writers: &[("NodeReport", "to_json")],
     },
+    CounterContract {
+        file: "obs/registry.rs",
+        strukt: "HistogramSnapshot",
+        writers: &[("HistogramSnapshot", "to_json")],
+    },
+    CounterContract {
+        file: "obs/stages.rs",
+        strukt: "StageBreakdown",
+        writers: &[("StageBreakdown", "to_json")],
+    },
+    CounterContract {
+        file: "obs/events.rs",
+        strukt: "ObsEvent",
+        writers: &[("ObsEvent", "to_json")],
+    },
 ];
 
 /// Field types the conservation contract considers counters.
@@ -148,6 +170,8 @@ mod tests {
         assert!(is_hot("serve/mod.rs"));
         assert!(is_hot("rust/src/fleet/vclock.rs"));
         assert!(is_hot("imaging/median.rs"));
+        assert!(is_hot("rust/src/obs/registry.rs"));
+        assert!(is_hot("obs/stages.rs"));
         assert!(!is_hot("imaging/reference.rs"), "scalar oracle is exempt");
         assert!(!is_hot("placement/score.rs"));
         assert!(!is_hot("analysis/rules.rs"));

@@ -34,11 +34,15 @@ pub use report::{ClassLatency, FleetReport, FleetWindow, NodeReport};
 pub use router::StreamRouter;
 pub use vclock::{Delivery, VirtualCore};
 
+use crate::config::json::{num, obj};
 use crate::error::{Error, Result};
 use crate::fleet::migrate::{MigrationController, NodeLoad};
+use crate::obs::{ObsEvent, ObsHub};
 use crate::serve::clients::{schedule, ClientSpec};
+use crate::sim::timeline::Timeline;
 use crate::util::stats::Summary;
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Injected node degradation (thermal throttle / clock cap) at a virtual
@@ -79,6 +83,15 @@ pub struct FleetOptions {
     pub delivery_capacity: usize,
     /// Ring points per node in the consistent-hash front door.
     pub router_replicas: usize,
+    /// Observability hub: when set, every node's virtual core folds
+    /// frame-lifecycle stage stamps into `hub.stages`, migrations /
+    /// degradations land in the structured event log, and each fleet
+    /// checkpoint appends a metrics snapshot.
+    pub obs: Option<Arc<ObsHub>>,
+    /// Record per-dispatch execution spans on every node's virtual core
+    /// (feeds [`FleetReport::timelines`] / Chrome trace export). Off by
+    /// default: the span log grows with dispatch count.
+    pub record_spans: bool,
 }
 
 impl FleetOptions {
@@ -95,6 +108,8 @@ impl FleetOptions {
             plan_frames: 24,
             delivery_capacity: 1 << 20,
             router_replicas: 64,
+            obs: None,
+            record_spans: false,
         }
     }
 }
@@ -128,6 +143,14 @@ pub fn run_fleet(opts: &FleetOptions) -> Result<FleetReport> {
         nodes.push(FleetNode::from_spec(id, profile, spec, capacity)?);
     }
     let n_nodes = nodes.len();
+
+    let hub = opts.obs.clone();
+    for node in nodes.iter_mut() {
+        node.core.set_observer(
+            hub.as_ref().map(|h| Arc::clone(&h.stages)),
+            opts.record_spans,
+        );
+    }
 
     let mut router = StreamRouter::new(n_nodes, opts.router_replicas);
     let mut controller = MigrationController::new(opts.migration.clone());
@@ -220,6 +243,28 @@ pub fn run_fleet(opts: &FleetOptions) -> Result<FleetReport> {
         *window_offered = 0;
         *shed_prev = shed_now;
 
+        // Checkpoint-aligned metrics snapshot (taken on drain too, so the
+        // final JSONL line reflects the fully drained fleet).
+        if let Some(h) = &hub {
+            let backlog: usize = nodes.iter().map(|n| n.core.backlog()).sum();
+            h.registry
+                .gauge("fleet_backlog_frames", "admitted, not yet released (fleet-wide)")
+                .set(backlog as f64);
+            h.registry
+                .counter("fleet_checkpoints_total", "fleet checkpoints taken")
+                .inc();
+            let shed_win = windows.last().map(|w| w.shed).unwrap_or(0);
+            if shed_win > 0 {
+                h.push_event(ObsEvent::shed_burst(
+                    t,
+                    None,
+                    format!("fleet shed {shed_win} this window"),
+                    obj(vec![("shed", num(shed_win as f64))]),
+                ));
+            }
+            h.snapshot_at(t);
+        }
+
         // 3. Retain the delivery log (capped).
         for d in popped {
             if deliveries.len() < opts.delivery_capacity {
@@ -274,6 +319,17 @@ pub fn run_fleet(opts: &FleetOptions) -> Result<FleetReport> {
                     "saturated".into()
                 },
             });
+            if let (Some(h), Some(ev)) = (&hub, migrations.last()) {
+                h.push_event(ObsEvent::migration(
+                    ev.at_seconds,
+                    ev.from_node,
+                    format!(
+                        "stream {} -> node {} ({})",
+                        ev.stream, ev.to_node, ev.reason
+                    ),
+                    ev.to_json(),
+                ));
+            }
         }
         recent_offered.clear();
     };
@@ -286,6 +342,14 @@ pub fn run_fleet(opts: &FleetOptions) -> Result<FleetReport> {
             let d = degradations[next_degradation];
             if d.node < n_nodes {
                 nodes[d.node].degrade(d.slowdown);
+                if let Some(h) = &hub {
+                    h.push_event(ObsEvent::degradation(
+                        d.at_seconds,
+                        d.node,
+                        format!("slowdown x{}", d.slowdown),
+                        obj(vec![("slowdown", num(d.slowdown))]),
+                    ));
+                }
             }
             next_degradation += 1;
         }
@@ -341,7 +405,19 @@ pub fn run_fleet(opts: &FleetOptions) -> Result<FleetReport> {
         true,
     );
 
-    // Rollup.
+    // Rollup. Drain each node's recorded span log first (needs `&mut`,
+    // before the shared borrows below).
+    let timelines: Vec<(usize, Timeline)> = nodes
+        .iter_mut()
+        .map(|n| {
+            (
+                n.id,
+                Timeline {
+                    spans: n.core.take_spans(),
+                },
+            )
+        })
+        .collect();
     let virtual_seconds = virtual_end.max(f64::MIN_POSITIVE);
     let completed_total: usize = nodes.iter().map(|n| n.completed).sum();
     let shed_total: usize = nodes.iter().map(|n| n.shed).sum();
@@ -415,6 +491,8 @@ pub fn run_fleet(opts: &FleetOptions) -> Result<FleetReport> {
         wall_seconds: wall_start.elapsed().as_secs_f64(),
         deliveries,
         deliveries_truncated: log_truncated,
+        stages: hub.as_ref().map(|h| h.stages.breakdown()),
+        timelines,
     })
 }
 
@@ -497,6 +575,40 @@ mod tests {
         let rep = run_fleet(&opts).unwrap();
         assert!(rep.shed > 0, "a 5000 fps burst into an 8-frame cap must shed");
         assert_eq!(rep.offered, rep.completed + rep.shed);
+    }
+
+    #[test]
+    fn observed_fleet_records_stages_events_and_timelines() {
+        let mut opts = small_opts();
+        opts.migration.force_every_checks = Some(1);
+        opts.degradations.push(DegradationEvent {
+            at_seconds: 0.02,
+            node: 0,
+            slowdown: 10.0,
+        });
+        let hub = Arc::new(ObsHub::new());
+        opts.obs = Some(Arc::clone(&hub));
+        opts.record_spans = true;
+        let rep = run_fleet(&opts).unwrap();
+        assert_eq!(rep.offered, rep.completed + rep.shed);
+        // every delivered frame folded its virtual stage stamps, monotone
+        let st = rep.stages.as_ref().expect("observed run carries stages");
+        assert_eq!(st.frames as usize, rep.completed);
+        assert_eq!(st.non_monotone, 0);
+        // structured event log mirrors the report's own ledgers
+        use crate::obs::EventKind;
+        assert_eq!(hub.events_of(EventKind::Migration), rep.migrations.len());
+        assert_eq!(hub.events_of(EventKind::Degradation), 1);
+        // checkpoint-aligned snapshots: at least one per fleet checkpoint
+        assert!(hub.snapshot_count() > 0);
+        // span log drained into per-node timelines
+        assert_eq!(rep.timelines.len(), rep.nodes.len());
+        let spans: usize = rep.timelines.iter().map(|(_, tl)| tl.spans.len()).sum();
+        assert!(spans > 0, "record_spans must capture dispatches");
+        // unobserved runs stay clean
+        let plain = run_fleet(&small_opts()).unwrap();
+        assert!(plain.stages.is_none());
+        assert!(plain.timelines.iter().all(|(_, tl)| tl.spans.is_empty()));
     }
 
     #[test]

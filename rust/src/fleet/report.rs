@@ -14,6 +14,8 @@
 use crate::config::json::{arr, num, obj, s, Json};
 use crate::fleet::migrate::MigrationEvent;
 use crate::fleet::vclock::Delivery;
+use crate::obs::StageBreakdown;
+use crate::sim::timeline::Timeline;
 
 /// One node's end-of-run summary.
 #[derive(Debug, Clone)]
@@ -153,6 +155,13 @@ pub struct FleetReport {
     pub deliveries: Vec<Delivery>,
     /// Deliveries dropped from the log by the cap (counters unaffected).
     pub deliveries_truncated: usize,
+    /// Fleet-wide frame-lifecycle stage breakdown — present when the run
+    /// carried a [`crate::obs::ObsHub`] (see `FleetOptions::obs`).
+    pub stages: Option<StageBreakdown>,
+    /// Per-node virtual execution spans `(node_id, timeline)` — populated
+    /// when `FleetOptions::record_spans` is on. Not serialized (the span
+    /// log can dwarf the report); the Chrome trace exporter consumes it.
+    pub timelines: Vec<(usize, Timeline)>,
 }
 
 impl FleetReport {
@@ -170,7 +179,7 @@ impl FleetReport {
     }
 
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("offered", num(self.offered as f64)),
             ("completed", num(self.completed as f64)),
             ("shed", num(self.shed as f64)),
@@ -206,7 +215,11 @@ impl FleetReport {
                 "deliveries_truncated",
                 num(self.deliveries_truncated as f64),
             ),
-        ])
+        ];
+        if let Some(st) = &self.stages {
+            pairs.push(("stages", st.to_json()));
+        }
+        obj(pairs)
     }
 }
 
@@ -253,6 +266,8 @@ mod tests {
             wall_seconds: 0.01,
             deliveries: vec![],
             deliveries_truncated: 0,
+            stages: None,
+            timelines: vec![],
         };
         assert_eq!(rep.ranking(), vec![1, 2, 0]);
         let txt = rep.to_json().to_compact();

@@ -38,12 +38,15 @@
 
 use crate::error::{Error, Result};
 use crate::hw::{EngineKind, SocSpec};
+use crate::obs::stages::{StageAccum, StageStamps};
 use crate::pipeline::backend::{InferenceBackend, SimBackend};
 use crate::pipeline::engines::DispatchProfile;
 use crate::pipeline::router::RoutePolicy;
 use crate::pipeline::spec::PipelineSpec;
 use crate::placement::score::primary_instances;
+use crate::sim::timeline::Span;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::sync::Arc;
 
 /// One frame released to its client, on the virtual clock.
 #[derive(Debug, Clone, Copy)]
@@ -156,6 +159,12 @@ pub struct VirtualCore {
     ready: BinaryHeap<Queued>,
     admitted: usize,
     released: usize,
+    /// Record a [`Span`] per dispatch for trace export (off by default —
+    /// an open-ended fleet run would otherwise grow unbounded).
+    record_spans: bool,
+    spans: Vec<Span>,
+    /// Virtual frame-lifecycle stage stamps fold in here when attached.
+    stages: Option<Arc<StageAccum>>,
 }
 
 impl VirtualCore {
@@ -229,7 +238,24 @@ impl VirtualCore {
             ready: BinaryHeap::new(),
             admitted: 0,
             released: 0,
+            record_spans: false,
+            spans: Vec::new(),
+            stages: None,
         })
+    }
+
+    /// Attach observability: a stage accumulator for per-frame lifecycle
+    /// stamps and/or per-dispatch [`Span`] recording for trace export.
+    pub fn set_observer(&mut self, stages: Option<Arc<StageAccum>>, record_spans: bool) {
+        self.stages = stages;
+        self.record_spans = record_spans;
+    }
+
+    /// Take the recorded dispatch spans (empty unless
+    /// [`VirtualCore::set_observer`] enabled recording). Span times are
+    /// virtual seconds; `frame` is the batch's first frame id.
+    pub fn take_spans(&mut self) -> Vec<Span> {
+        std::mem::take(&mut self.spans)
     }
 
     /// Degradation injection: multiply every subsequently priced duration
@@ -382,6 +408,48 @@ impl VirtualCore {
         unit.busy += trans + exec;
         unit.dispatches += 1;
         unit.free_at = end;
+
+        if self.record_spans {
+            let (kind, uidx) = (self.units[u].kind, self.units[u].index);
+            let frame = batch.first().map(|c| c.frame_id as usize).unwrap_or(0);
+            if switched && trans > 0.0 {
+                self.spans.push(Span {
+                    engine: kind,
+                    unit: uidx,
+                    instance: i,
+                    frame,
+                    t0: start,
+                    t1: start + trans,
+                    is_transition: true,
+                });
+            }
+            self.spans.push(Span {
+                engine: kind,
+                unit: uidx,
+                instance: i,
+                frame,
+                t0: start + trans,
+                t1: end,
+                is_transition: false,
+            });
+        }
+
+        // Virtual stage stamps: the same lifecycle schema the threaded
+        // driver records, computed from the priced dispatch — one record
+        // per primary (lossless) frame copy.
+        if let Some(acc) = &self.stages {
+            if self.primary[i] {
+                for c in &batch {
+                    let mut st = StageStamps::default();
+                    st.queue_exit_s = (admitted_t - c.offered_t).max(0.0);
+                    st.engine_start_s = (start - c.offered_t).max(st.queue_exit_s);
+                    st.exec_start_s = (start + trans - c.offered_t).max(st.engine_start_s);
+                    st.exec_end_s = (end - c.offered_t).max(st.exec_start_s);
+                    st.writeout_s = st.exec_end_s;
+                    acc.record(&st);
+                }
+            }
+        }
 
         // Only the lossless primary copy finishes a frame; droppable
         // fanout copies charge busy time and contention above but never
@@ -614,6 +682,46 @@ mod tests {
             .map(|u| u.busy_seconds)
             .sum();
         assert!(gpu_busy > 0.0, "the tail still charges its unit");
+    }
+
+    #[test]
+    fn observer_records_spans_and_virtual_stage_stamps() {
+        let mut core = VirtualCore::new(&rr_pair(), &orin()).unwrap();
+        let acc = Arc::new(StageAccum::default());
+        core.set_observer(Some(Arc::clone(&acc)), true);
+        for f in 0..16u64 {
+            core.admit(0, f, 0, f as f64 * 0.001);
+        }
+        let mut out = Vec::new();
+        core.drain(0.016, &mut out);
+        assert_eq!(out.len(), 16);
+        let spans = core.take_spans();
+        let dispatches: usize = core.unit_stats().iter().map(|u| u.dispatches).sum();
+        assert_eq!(
+            spans.iter().filter(|s| !s.is_transition).count(),
+            dispatches,
+            "span/dispatch conservation"
+        );
+        // exclusive units: spans on one unit never overlap
+        for u in core.unit_stats() {
+            let mut mine: Vec<_> = spans
+                .iter()
+                .filter(|s| s.engine == u.kind && s.unit == u.index)
+                .collect();
+            mine.sort_by(|a, b| a.t0.total_cmp(&b.t0));
+            for w in mine.windows(2) {
+                assert!(w[0].t1 <= w[1].t0 + 1e-9, "{:?} overlaps {:?}", w[0], w[1]);
+            }
+        }
+        // virtual stage stamps: one per released frame, all monotone
+        assert_eq!(acc.frames(), 16);
+        assert_eq!(acc.non_monotone(), 0);
+        assert!(core.take_spans().is_empty(), "take_spans drains");
+        // recording off by default
+        let mut plain = VirtualCore::new(&rr_pair(), &orin()).unwrap();
+        plain.admit(0, 0, 0, 0.0);
+        plain.flush(0.0);
+        assert!(plain.take_spans().is_empty());
     }
 
     #[test]

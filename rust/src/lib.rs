@@ -166,6 +166,30 @@
 //! parallel --bench hotpath` on the CI runner class (or take the job's
 //! artifact) and commit the regenerated `rust/BENCH_hotpath.json`.
 //!
+//! ## Observability: tracing vs telemetry vs reports
+//!
+//! Three observation surfaces, three jobs. **Telemetry**
+//! ([`serve::telemetry`]) is the control input: rolling completion
+//! windows the re-plan controller and fleet health checks consume
+//! online — windowed, ring-buffered, lossy by design. **Reports**
+//! ([`pipeline::driver::PipelineReport`], [`serve::ServeReport`],
+//! [`fleet::report::FleetReport`]) are end-of-run aggregates:
+//! percentiles and utilization tables that summarize but cannot show
+//! *when* anything happened. **Tracing** ([`obs`]) is the artifact
+//! surface: every frame carries cumulative [`obs::StageStamps`]
+//! (source → admission → batcher queue → engine wait → reformat →
+//! dispatch → write-out) folded into lock-free per-stage histograms; a
+//! metrics [`obs::Registry`] (counters/gauges/histograms, O(1) relaxed
+//! atomics on the hot path) renders Prometheus-style text or
+//! checkpoint-aligned JSONL snapshots (`--metrics-out`) interleaved
+//! with a structured event log (replans, migrations, degradations,
+//! shed bursts); and `--trace-out` serializes the engine-unit span
+//! timelines — one [`sim::timeline::Span`] schema shared by the
+//! arbiter, the fleet virtual clock, and the placement scorer — into
+//! Chrome/Perfetto trace JSON via [`obs::ChromeTrace`]. All of it is
+//! opt-in per run (`ObsHub` absent ⇒ zero overhead) and the traced hot
+//! path is bench-gated to stay within a few percent of untraced.
+//!
 //! ## Static analysis & invariants
 //!
 //! The guarantees above — the per-frame loop never panics or allocates,
@@ -201,6 +225,9 @@
 //!   timelines (the hardware substitute — see DESIGN.md);
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
 //!   (HLO text + weights), Python never on the request path;
+//! * [`obs`] — the unified observability layer: frame-stage stamps and
+//!   histograms, the metrics registry with Prometheus/JSONL exposition,
+//!   the structured event log, and Chrome/Perfetto trace export;
 //! * [`pipeline`] — the streaming coordinator (sources → batcher → router →
 //!   instance workers → sinks) plus the declarative [`pipeline::spec`],
 //!   pluggable [`pipeline::backend`], and the exclusive-engine
@@ -230,6 +257,7 @@ pub mod graph;
 pub mod hw;
 pub mod imaging;
 pub mod models;
+pub mod obs;
 pub mod pipeline;
 pub mod placement;
 pub mod postproc;

@@ -19,13 +19,14 @@ use edgepipe::fleet::{run_fleet, FleetOptions, MigrationPolicy, NodeProfile};
 use edgepipe::hw::{self, EngineKind};
 use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
 use edgepipe::models::yolov8::{yolov8, YoloConfig};
+use edgepipe::obs::{ChromeTrace, ObsHub};
 use edgepipe::pipeline::SimBackend;
 use edgepipe::placement::{self, PlacementRequest};
 use edgepipe::sched::haxconn;
 use edgepipe::serve::{self, ArrivalProcess, ClientSpec, QosClass, ReplanPolicy, ServeOptions};
 use edgepipe::session::PipelineBuilder;
 use edgepipe::{report, Error};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
 /// Minimal `--key value` / `--flag` parser.
@@ -82,18 +83,21 @@ USAGE:
   edgepipe timeline [--variant original|cropping|convolution] [--with-yolo]
   edgepipe run [--config FILE] [--variant V] [--workload W] [--frames N]
                [--streams N] [--artifacts DIR] [--seed N] [--backend pjrt|sim]
+               [--trace-out FILE] [--metrics-out FILE]
   edgepipe serve [--config FILE] [--workload W] [--variant V] [--sim]
                  [--duration-frames N] [--clients N]
                  [--profile poisson|burst|ramp] [--rate-fps X]
                  [--qos name:prio[:rate_fps[:deadline_ms]],...]
                  [--no-replan] [--replan-every N] [--min-gain X]
                  [--time-scale X] [--seed N] [--json FILE]
+                 [--trace-out FILE] [--metrics-out FILE]
   edgepipe fleet [--nodes N] [--mix orin,xavier,...] [--clients N]
                  [--duration-frames N] [--profile poisson|burst|ramp]
                  [--rate-fps X] [--check-every N] [--max-backlog N]
                  [--backlog-threshold N] [--no-migrate]
                  [--force-migrate-every N] [--degrade node:at:factor[,...]]
                  [--plan-frames N] [--seed N] [--json FILE]
+                 [--trace-out FILE] [--metrics-out FILE]
   edgepipe plan [--device orin|xavier] [--gans N] [--no-yolo]
                 [--gan-engines gpu,dla|dla] [--frames N] [--seed N]
                 [--latency-budget-ms X] [--top K] [--emit-spec FILE]
@@ -142,6 +146,15 @@ ranked table is printed. `--emit-spec` writes the winning spec as JSON
 that reloads through `run --config`; `--gan-engines dla` reserves the GPU
 for the detector (the paper's dual-GAN deployment constraint).
 
+Observability: `--trace-out FILE` on run/serve/fleet writes a Chrome
+trace-event JSON (load in chrome://tracing or https://ui.perfetto.dev;
+process = node, thread = engine unit, async flows = frame lifecycles,
+instants = replan/migration/shed/degrade markers). `--metrics-out FILE`
+writes checkpoint-aligned JSONL: one `kind=metrics` registry snapshot
+per checkpoint interleaved with `kind=event` lines for the structured
+event log (replans, migrations, degradations, shed bursts). Either flag also attaches frame-lifecycle
+stage stamps, so the report JSON gains a per-stage `stages` breakdown.
+
 CI tracks `rust/BENCH_hotpath.json` as the bench baseline; refresh it by
 running `EDGEPIPE_BENCH_SMOKE=1 cargo bench --no-default-features --bench
 hotpath` and committing the regenerated file (see the bench-smoke job).
@@ -171,6 +184,32 @@ fn variant_of(args: &Args) -> Result<GanVariant> {
     args.opt("variant")
         .map(GanVariant::parse)
         .unwrap_or(Ok(GanVariant::Cropping))
+}
+
+/// One hub serves both observability flags: either `--trace-out` or
+/// `--metrics-out` turns frame-lifecycle stamping on.
+fn obs_hub_for(args: &Args) -> Option<Arc<ObsHub>> {
+    if args.opt("trace-out").is_some() || args.opt("metrics-out").is_some() {
+        Some(Arc::new(ObsHub::new()))
+    } else {
+        None
+    }
+}
+
+fn write_trace(path: &str, tr: &ChromeTrace) -> Result<()> {
+    std::fs::write(path, tr.to_json().to_compact())?;
+    eprintln!("wrote {path} ({} trace event(s))", tr.event_count());
+    Ok(())
+}
+
+fn write_metrics(path: &str, hub: &ObsHub) -> Result<()> {
+    std::fs::write(path, hub.to_jsonl())?;
+    eprintln!(
+        "wrote {path} ({} snapshot(s), {} event(s))",
+        hub.snapshot_count(),
+        hub.event_count()
+    );
+    Ok(())
 }
 
 fn run(cmd: &str, args: &Args) -> Result<()> {
@@ -261,7 +300,11 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 }
             }
             let session = builder.build()?;
-            let rep = session.run()?;
+            let hub = obs_hub_for(args);
+            let rep = match &hub {
+                Some(h) => session.run_observed(Some(Arc::clone(&h.stages)))?,
+                None => session.run()?,
+            };
             println!(
                 "processed {} frames in {:.2}s ({} dropped, {} shed) [{} backend]",
                 rep.total_frames,
@@ -296,6 +339,45 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     e.idle_gap_ms_mean,
                     e.idle_gap_ms_p99
                 );
+            }
+            if let Some(st) = &rep.stages {
+                println!("  stages: {}", st.summary());
+            }
+            if let Some(h) = &hub {
+                h.snapshot_at(rep.wall_seconds);
+                if let Some(path) = args.opt("trace-out") {
+                    let mut tr = ChromeTrace::new();
+                    tr.process(0, &format!("edgepipe run [{}]", session.backend_name()));
+                    let labels: Vec<String> = session
+                        .spec()
+                        .instances
+                        .iter()
+                        .map(|i| i.label.clone())
+                        .collect();
+                    tr.add_timeline(0, &rep.timeline, &labels);
+                    // One async flow per frame: first dispatch start to
+                    // last dispatch end across all instances.
+                    let mut frames: BTreeMap<usize, (f64, f64)> = BTreeMap::new();
+                    for sp in rep.timeline.spans.iter().filter(|sp| !sp.is_transition) {
+                        let e = frames.entry(sp.frame).or_insert((sp.t0, sp.t1));
+                        e.0 = e.0.min(sp.t0);
+                        e.1 = e.1.max(sp.t1);
+                    }
+                    for (frame, (t0, t1)) in &frames {
+                        tr.flow(
+                            0,
+                            *frame as u64,
+                            "frame",
+                            *t0,
+                            *t1,
+                            obj(vec![("frame", num(*frame as f64))]),
+                        );
+                    }
+                    write_trace(path, &tr)?;
+                }
+                if let Some(path) = args.opt("metrics-out") {
+                    write_metrics(path, h)?;
+                }
             }
             Ok(())
         }
@@ -406,6 +488,10 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 }
                 p
             };
+            let hub = obs_hub_for(args);
+            if let Some(h) = &hub {
+                opts.obs = Some(Arc::clone(h));
+            }
 
             let rep = serve::serve(session, opts)?;
             println!(
@@ -440,6 +526,51 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             if let Some(last) = rep.windows.last() {
                 for (unit, busy) in &last.engine_busy {
                     println!("  {:<5} final-window busy {:>5.1}%", unit, busy * 100.0);
+                }
+            }
+            if let Some(st) = &rep.stages {
+                println!("stage breakdown: {}", st.summary());
+            }
+            if let Some(h) = &hub {
+                if let Some(path) = args.opt("trace-out") {
+                    let mut tr = ChromeTrace::new();
+                    tr.process(0, "edgepipe serve");
+                    // Instance labels change across drain-and-switch
+                    // phases, so unit slices keep generic `inst{n}` names.
+                    tr.add_timeline(0, &rep.timeline, &[]);
+                    for ev in &rep.replans {
+                        tr.instant(0, "control", "replan", "replan", ev.at_seconds, ev.to_json());
+                    }
+                    // One async flow per completed frame from the retained
+                    // completion tail (bounded by --telemetry capacity).
+                    const MAX_FLOWS: usize = 20_000;
+                    for c in rep.completions.iter().take(MAX_FLOWS) {
+                        let id = ((c.instance as u64) << 56)
+                            | ((c.stream as u64) << 40)
+                            | (c.frame_id & ((1 << 40) - 1));
+                        tr.flow(
+                            0,
+                            id,
+                            "frame",
+                            (c.t - c.latency_s).max(0.0),
+                            c.t,
+                            obj(vec![
+                                ("stream", num(c.stream as f64)),
+                                ("frame", num(c.frame_id as f64)),
+                                ("instance", num(c.instance as f64)),
+                            ]),
+                        );
+                    }
+                    if rep.completions.len() > MAX_FLOWS {
+                        eprintln!(
+                            "trace: kept {MAX_FLOWS} of {} frame flows",
+                            rep.completions.len()
+                        );
+                    }
+                    write_trace(path, &tr)?;
+                }
+                if let Some(path) = args.opt("metrics-out") {
+                    write_metrics(path, h)?;
                 }
             }
             if let Some(path) = args.opt("json") {
@@ -577,6 +708,9 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     .push(ClientSpec::new(format!("client-{i}"), frames, arrivals));
             }
             opts.class_names = vec!["default".into()];
+            let hub = obs_hub_for(args);
+            opts.obs = hub.clone();
+            opts.record_spans = args.opt("trace-out").is_some();
 
             let rep = run_fleet(&opts)?;
             println!(
@@ -625,6 +759,38 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     "  migrate @{:.3}s: stream {} node {} -> {} [{}]",
                     ev.at_seconds, ev.stream, ev.from_node, ev.to_node, ev.reason
                 );
+            }
+            if let Some(st) = &rep.stages {
+                println!("stage breakdown: {}", st.summary());
+            }
+            if let Some(h) = &hub {
+                if let Some(path) = args.opt("trace-out") {
+                    let mut tr = ChromeTrace::new();
+                    for (node_id, tl) in &rep.timelines {
+                        let profile = rep
+                            .nodes
+                            .iter()
+                            .find(|n| n.node == *node_id)
+                            .map(|n| n.profile.as_str())
+                            .unwrap_or("node");
+                        tr.process(*node_id as u64, &format!("node{node_id} [{profile}]"));
+                        tr.add_timeline(*node_id as u64, tl, &[]);
+                    }
+                    for ev in &rep.migrations {
+                        tr.instant(
+                            ev.from_node as u64,
+                            "control",
+                            "migration",
+                            "migration",
+                            ev.at_seconds,
+                            ev.to_json(),
+                        );
+                    }
+                    write_trace(path, &tr)?;
+                }
+                if let Some(path) = args.opt("metrics-out") {
+                    write_metrics(path, h)?;
+                }
             }
             if let Some(path) = args.opt("json") {
                 std::fs::write(path, rep.to_json().to_pretty())?;

@@ -1,0 +1,141 @@
+//! Structured event log: one schema for the control-plane events that
+//! were previously scattered across report fields (replan switches,
+//! stream migrations, injected degradations, shed bursts).
+//!
+//! Events are appended to the [`crate::obs::ObsHub`] as they happen and
+//! serialized into the `--metrics-out` JSONL stream interleaved with
+//! metrics snapshots in time order (`"kind": "event"` vs `"metrics"`).
+#![deny(clippy::unwrap_used)]
+
+use crate::config::json::{num, obj, s, Json};
+
+/// What happened.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// The serve loop drain-and-switched to a re-planned spec.
+    Replan,
+    /// The fleet moved a stream between nodes.
+    Migration,
+    /// An injected (or modeled) slowdown hit a node.
+    Degradation,
+    /// An admission window shed at least one frame.
+    ShedBurst,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Replan => "replan",
+            EventKind::Migration => "migration",
+            EventKind::Degradation => "degradation",
+            EventKind::ShedBurst => "shed_burst",
+        }
+    }
+}
+
+/// One structured event on the unified log.
+#[derive(Debug, Clone)]
+pub struct ObsEvent {
+    /// Event time, seconds on the run's clock (wall seconds for the
+    /// serve loop, virtual seconds for the fleet).
+    pub t_s: f64,
+    pub kind: EventKind,
+    /// Node id for fleet events; `None` on single-node runs.
+    pub node: Option<usize>,
+    /// Short human-readable label (`"dual_gan → split_dla"`,
+    /// `"stream 3: node 0 → 1"`).
+    pub label: String,
+    /// Kind-specific structured payload (usually the source report
+    /// object, e.g. a `ReplanEvent`/`MigrationEvent` JSON).
+    pub detail: Json,
+}
+
+impl ObsEvent {
+    pub fn replan(t_s: f64, label: String, detail: Json) -> ObsEvent {
+        ObsEvent {
+            t_s,
+            kind: EventKind::Replan,
+            node: None,
+            label,
+            detail,
+        }
+    }
+
+    pub fn migration(t_s: f64, node: usize, label: String, detail: Json) -> ObsEvent {
+        ObsEvent {
+            t_s,
+            kind: EventKind::Migration,
+            node: Some(node),
+            label,
+            detail,
+        }
+    }
+
+    pub fn degradation(t_s: f64, node: usize, label: String, detail: Json) -> ObsEvent {
+        ObsEvent {
+            t_s,
+            kind: EventKind::Degradation,
+            node: Some(node),
+            label,
+            detail,
+        }
+    }
+
+    pub fn shed_burst(t_s: f64, node: Option<usize>, label: String, detail: Json) -> ObsEvent {
+        ObsEvent {
+            t_s,
+            kind: EventKind::ShedBurst,
+            node,
+            label,
+            detail,
+        }
+    }
+
+    /// JSONL line form. `"kind": "event"` discriminates from metrics
+    /// snapshots in the same stream; the event type is under `"event"`.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("t_s", num(self.t_s)),
+            ("kind", s("event")),
+            ("event", s(self.kind.name())),
+            ("label", s(&self.label)),
+            ("detail", self.detail.clone()),
+        ];
+        if let Some(n) = self.node {
+            pairs.push(("node", num(n as f64)));
+        }
+        obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+    use super::*;
+
+    #[test]
+    fn event_json_carries_kind_and_time() {
+        let ev = ObsEvent::migration(
+            2.5,
+            1,
+            "stream 3: node 1 → 0".to_string(),
+            obj(vec![("stream", num(3.0))]),
+        );
+        let doc = ev.to_json();
+        assert_eq!(doc.get("t_s").and_then(|v| v.as_f64()), Some(2.5));
+        assert_eq!(doc.get("kind").and_then(|v| v.as_str()), Some("event"));
+        assert_eq!(doc.get("event").and_then(|v| v.as_str()), Some("migration"));
+        assert_eq!(doc.get("node").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(
+            doc.get("detail").and_then(|d| d.get("stream")).and_then(|v| v.as_f64()),
+            Some(3.0)
+        );
+    }
+
+    #[test]
+    fn kinds_have_stable_names() {
+        assert_eq!(EventKind::Replan.name(), "replan");
+        assert_eq!(EventKind::ShedBurst.name(), "shed_burst");
+        assert_eq!(EventKind::Degradation.name(), "degradation");
+    }
+}

@@ -1,0 +1,474 @@
+//! Metrics registry: counters, gauges, and log-bucketed histograms with
+//! O(1) lock-free hot-path recording.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are `Arc`s handed out
+//! once at registration time (cold path, under the registry lock) and
+//! then recorded into with relaxed atomics only — a worker thread never
+//! touches the registry lock per frame. Two read-side renderings:
+//! Prometheus-style text exposition ([`Registry::expose`]) and a JSON
+//! snapshot ([`Registry::snapshot_json`]) that `--metrics-out` appends
+//! per checkpoint as JSONL.
+#![deny(clippy::unwrap_used)]
+
+use crate::config::json::{num, obj, s, Json};
+use crate::util::lock::relock;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonically increasing event count.
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter {
+            value: AtomicU64::new(0),
+        }
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Last-write-wins instantaneous value (stored as f64 bits).
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge {
+            bits: AtomicU64::new(0.0f64.to_bits()),
+        }
+    }
+
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Power-of-two log buckets over microseconds: bucket 0 holds `0 µs`,
+/// bucket `i >= 1` holds values whose bit length is `i`, i.e.
+/// `[2^(i-1), 2^i)` µs. 40 buckets reach ~2^39 µs (~6 days) — anything
+/// above saturates into the last bucket.
+const BUCKETS: usize = 40;
+
+/// Lock-free latency histogram over seconds-valued samples.
+///
+/// Recording is O(1): one bit-length classification plus four relaxed
+/// atomic ops, no branches on the registry. Percentiles are approximate
+/// (geometric bucket midpoints, ≤ ~41% relative error by construction —
+/// good enough to rank stages and spot regressions, not for SLO math).
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample, given in seconds. Hot-path safe.
+    pub fn record(&self, seconds: f64) {
+        let us = (seconds.max(0.0) * 1e6) as u64;
+        let idx = (64 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        if let Some(b) = self.buckets.get(idx) {
+            b.fetch_add(1, Ordering::Relaxed);
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Consistent-enough point-in-time read of all buckets (relaxed loads;
+    /// concurrent recording may skew the tail by a few samples).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let counts: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let count = counts.iter().sum::<u64>();
+        let sum_ms = self.sum_us.load(Ordering::Relaxed) as f64 / 1e3;
+        let mean_ms = if count > 0 { sum_ms / count as f64 } else { 0.0 };
+        HistogramSnapshot {
+            count,
+            sum_ms,
+            mean_ms,
+            p50_ms: quantile_us(&counts, count, 50.0) / 1e3,
+            p95_ms: quantile_us(&counts, count, 95.0) / 1e3,
+            p99_ms: quantile_us(&counts, count, 99.0) / 1e3,
+            max_ms: self.max_us.load(Ordering::Relaxed) as f64 / 1e3,
+        }
+    }
+
+    /// Raw cumulative bucket counts paired with their upper edges in
+    /// seconds, for text exposition.
+    fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0u64;
+        self.buckets
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                acc += b.load(Ordering::Relaxed);
+                let le = (1u64 << i) as f64 / 1e6;
+                (le, acc)
+            })
+            .collect()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Nearest-rank quantile over log buckets, returned in microseconds
+/// (geometric bucket midpoint).
+fn quantile_us(counts: &[u64], total: u64, q: f64) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let rank = ((q / 100.0) * total as f64).ceil().max(1.0) as u64;
+    let mut seen = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        seen += c;
+        if seen >= rank {
+            if i == 0 {
+                return 0.0;
+            }
+            let lo = 1u64 << (i - 1);
+            let hi = 1u64 << i;
+            return (lo + hi) as f64 / 2.0;
+        }
+    }
+    0.0
+}
+
+/// Point-in-time histogram digest (milliseconds), the JSON-facing form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum_ms: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl HistogramSnapshot {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("count", num(self.count as f64)),
+            ("sum_ms", num(self.sum_ms)),
+            ("mean_ms", num(self.mean_ms)),
+            ("p50_ms", num(self.p50_ms)),
+            ("p95_ms", num(self.p95_ms)),
+            ("p99_ms", num(self.p99_ms)),
+            ("max_ms", num(self.max_ms)),
+        ])
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+struct Entry {
+    name: String,
+    help: String,
+    metric: Metric,
+}
+
+/// Name → metric table. Registration is idempotent by name: asking for
+/// an existing name returns the existing handle (a name registered under
+/// a different metric type returns a fresh detached handle rather than
+/// panicking — the lint keeps serving code panic-free).
+pub struct Registry {
+    // Lock rank 5 (see `analysis::hotpath::LOCK_ORDER`): cold path only,
+    // never held while recording or while another obs lock is held.
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            entries: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        let mut entries = relock(&self.entries);
+        for e in entries.iter() {
+            if e.name == name {
+                if let Metric::Counter(c) = &e.metric {
+                    return Arc::clone(c);
+                }
+                return Arc::new(Counter::new());
+            }
+        }
+        let c = Arc::new(Counter::new());
+        entries.push(Entry {
+            name: name.to_string(),
+            help: help.to_string(),
+            metric: Metric::Counter(Arc::clone(&c)),
+        });
+        c
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        let mut entries = relock(&self.entries);
+        for e in entries.iter() {
+            if e.name == name {
+                if let Metric::Gauge(g) = &e.metric {
+                    return Arc::clone(g);
+                }
+                return Arc::new(Gauge::new());
+            }
+        }
+        let g = Arc::new(Gauge::new());
+        entries.push(Entry {
+            name: name.to_string(),
+            help: help.to_string(),
+            metric: Metric::Gauge(Arc::clone(&g)),
+        });
+        g
+    }
+
+    pub fn histogram(&self, name: &str, help: &str) -> Arc<Histogram> {
+        let mut entries = relock(&self.entries);
+        for e in entries.iter() {
+            if e.name == name {
+                if let Metric::Histogram(h) = &e.metric {
+                    return Arc::clone(h);
+                }
+                return Arc::new(Histogram::new());
+            }
+        }
+        let h = Arc::new(Histogram::new());
+        entries.push(Entry {
+            name: name.to_string(),
+            help: help.to_string(),
+            metric: Metric::Histogram(Arc::clone(&h)),
+        });
+        h
+    }
+
+    pub fn len(&self) -> usize {
+        relock(&self.entries).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Prometheus-style text exposition (`# HELP` / `# TYPE` / samples;
+    /// histograms as cumulative `_bucket{le="..."}` + `_sum`/`_count`).
+    pub fn expose(&self) -> String {
+        let mut out = String::new();
+        let entries = relock(&self.entries);
+        for e in entries.iter() {
+            out.push_str(&format!("# HELP {} {}\n", e.name, e.help));
+            out.push_str(&format!("# TYPE {} {}\n", e.name, e.metric.type_name()));
+            match &e.metric {
+                Metric::Counter(c) => out.push_str(&format!("{} {}\n", e.name, c.get())),
+                Metric::Gauge(g) => out.push_str(&format!("{} {}\n", e.name, g.get())),
+                Metric::Histogram(h) => {
+                    let mut total = 0u64;
+                    for (le, cum) in h.cumulative() {
+                        out.push_str(&format!("{}_bucket{{le=\"{le}\"}} {cum}\n", e.name));
+                        total = cum;
+                    }
+                    out.push_str(&format!("{}_bucket{{le=\"+Inf\"}} {total}\n", e.name));
+                    let snap = h.snapshot();
+                    // exposition convention: _sum in base unit (seconds)
+                    out.push_str(&format!("{}_sum {}\n", e.name, snap.sum_ms / 1e3));
+                    out.push_str(&format!("{}_count {total}\n", e.name));
+                }
+            }
+        }
+        out
+    }
+
+    /// One checkpoint-aligned snapshot of every registered metric, as a
+    /// JSON object suitable for a JSONL metrics stream.
+    pub fn snapshot_json(&self, t_s: f64) -> Json {
+        let mut counters: BTreeMap<String, Json> = BTreeMap::new();
+        let mut gauges: BTreeMap<String, Json> = BTreeMap::new();
+        let mut hists: BTreeMap<String, Json> = BTreeMap::new();
+        let entries = relock(&self.entries);
+        for e in entries.iter() {
+            match &e.metric {
+                Metric::Counter(c) => {
+                    counters.insert(e.name.clone(), num(c.get() as f64));
+                }
+                Metric::Gauge(g) => {
+                    gauges.insert(e.name.clone(), num(g.get()));
+                }
+                Metric::Histogram(h) => {
+                    hists.insert(e.name.clone(), h.snapshot().to_json());
+                }
+            }
+        }
+        obj(vec![
+            ("t_s", num(t_s)),
+            ("kind", s("metrics")),
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(hists)),
+        ])
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let reg = Registry::new();
+        let c = reg.counter("frames_total", "frames");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // idempotent registration returns the same handle
+        let c2 = reg.counter("frames_total", "frames");
+        c2.inc();
+        assert_eq!(c.get(), 6);
+        let g = reg.gauge("backlog", "in-flight");
+        g.set(3.5);
+        assert!((g.get() - 3.5).abs() < 1e-12);
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn histogram_percentiles_are_order_of_magnitude_right() {
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.record(0.001); // 1 ms
+        }
+        for _ in 0..10 {
+            h.record(0.1); // 100 ms
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 100);
+        // log-bucket midpoints: p50 lands in the 1 ms bucket, p99 in the
+        // 100 ms bucket; both within a factor of ~1.5
+        assert!(snap.p50_ms > 0.4 && snap.p50_ms < 2.0, "p50 {}", snap.p50_ms);
+        assert!(snap.p99_ms > 40.0 && snap.p99_ms < 200.0, "p99 {}", snap.p99_ms);
+        assert!((snap.max_ms - 100.0).abs() < 1.0);
+        assert!(snap.mean_ms > 5.0 && snap.mean_ms < 20.0);
+    }
+
+    #[test]
+    fn zero_sample_histogram_is_all_zeroes() {
+        let h = Histogram::new();
+        h.record(0.0);
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 1);
+        assert_eq!(snap.p50_ms, 0.0);
+        assert_eq!(snap.max_ms, 0.0);
+    }
+
+    #[test]
+    fn exposition_and_snapshot_cover_every_metric() {
+        let reg = Registry::new();
+        reg.counter("offered_total", "offered frames").add(7);
+        reg.gauge("backlog", "queued").set(2.0);
+        reg.histogram("latency", "frame latency").record(0.004);
+        let text = reg.expose();
+        assert!(text.contains("# TYPE offered_total counter"));
+        assert!(text.contains("offered_total 7"));
+        assert!(text.contains("# TYPE backlog gauge"));
+        assert!(text.contains("# TYPE latency histogram"));
+        assert!(text.contains("latency_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("latency_count 1"));
+
+        let snap = reg.snapshot_json(1.5);
+        assert_eq!(snap.get("t_s").and_then(|v| v.as_f64()), Some(1.5));
+        let counters = snap.get("counters").unwrap();
+        assert_eq!(
+            counters.get("offered_total").and_then(|v| v.as_f64()),
+            Some(7.0)
+        );
+        let hists = snap.get("histograms").unwrap();
+        assert_eq!(
+            hists
+                .get("latency")
+                .and_then(|h| h.get("count"))
+                .and_then(|v| v.as_u64()),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn type_mismatch_returns_detached_handle() {
+        let reg = Registry::new();
+        reg.counter("x", "a counter").inc();
+        let g = reg.gauge("x", "same name, wrong type");
+        g.set(9.0);
+        // the registered counter is untouched and still exposed
+        assert!(reg.expose().contains("x 1"));
+        assert_eq!(reg.len(), 1);
+    }
+}

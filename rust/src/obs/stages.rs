@@ -1,0 +1,282 @@
+//! Frame-lifecycle stage stamps and their aggregation.
+//!
+//! Every [`crate::pipeline::frame::Frame`] carries a [`StageStamps`]
+//! record — cumulative seconds since admission at which the frame
+//! crossed each pipeline stage boundary:
+//!
+//! ```text
+//! source → admission → batcher queue → engine wait → reformat → dispatch → write-out
+//! ```
+//!
+//! Stamps are written by the code that owns each boundary (the batcher
+//! stamps queue exit, the engine arbiter returns a [`DispatchStamps`]
+//! receipt, the stream worker seals and records) and folded into a
+//! shared lock-free [`StageAccum`], whose [`StageBreakdown`] percentiles
+//! surface in `PipelineReport`/`ServeReport`/fleet rollups.
+#![deny(clippy::unwrap_used)]
+
+use super::registry::{Counter, Histogram, HistogramSnapshot};
+use crate::config::json::{arr, num, obj, s, Json};
+
+/// Number of per-frame stages tracked.
+pub const STAGE_COUNT: usize = 6;
+
+/// Stage names, in pipeline order. Each entry is the *duration* ending
+/// at the corresponding stamp: `source` is pre-admission slip, `queue`
+/// is admission → batcher-queue exit, `engine_wait` is queue exit →
+/// engine lease, `reformat` is the occupant-switch cost, `dispatch` is
+/// model execution, `writeout` is completion bookkeeping.
+pub const STAGE_NAMES: [&str; STAGE_COUNT] = [
+    "source",
+    "queue",
+    "engine_wait",
+    "reformat",
+    "dispatch",
+    "writeout",
+];
+
+/// Cumulative stage-crossing times for one frame, seconds since
+/// admission. Monotone by construction: every sealing helper clamps
+/// against the previous stamp.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageStamps {
+    /// Seconds the frame spent upstream of admission (e.g. schedule slip
+    /// between its modeled arrival and the moment the source admitted it).
+    pub source_s: f64,
+    /// Admission → batcher-queue exit (batch fill + queue wait).
+    pub queue_exit_s: f64,
+    /// Admission → engine lease won (adds the FIFO engine wait).
+    pub engine_start_s: f64,
+    /// Admission → model execution start (adds the reformat/transition).
+    pub exec_start_s: f64,
+    /// Admission → model execution end.
+    pub exec_end_s: f64,
+    /// Admission → completion write-out (metrics, sinks, fidelity).
+    pub writeout_s: f64,
+}
+
+impl StageStamps {
+    /// Stamp the batcher-queue exit.
+    pub fn mark_queue_exit(&mut self, since_admission_s: f64) {
+        self.queue_exit_s = since_admission_s.max(0.0);
+    }
+
+    /// Seal the engine-side stamps from a dispatch receipt: `end_s` is
+    /// the cumulative time at which the batched dispatch returned, and
+    /// the receipt's durations are subtracted backwards from it.
+    pub fn seal_dispatch(&mut self, end_s: f64, receipt: &DispatchStamps) {
+        self.exec_end_s = end_s.max(self.queue_exit_s);
+        self.exec_start_s = (self.exec_end_s - receipt.exec_s.max(0.0)).max(self.queue_exit_s);
+        self.engine_start_s =
+            (self.exec_start_s - receipt.reformat_s.max(0.0)).max(self.queue_exit_s);
+    }
+
+    /// Stamp completion write-out (the final stage).
+    pub fn mark_writeout(&mut self, since_admission_s: f64) {
+        self.writeout_s = since_admission_s.max(self.exec_end_s);
+    }
+
+    /// True when every stamp respects pipeline order.
+    pub fn is_monotone(&self) -> bool {
+        0.0 <= self.source_s
+            && 0.0 <= self.queue_exit_s
+            && self.queue_exit_s <= self.engine_start_s
+            && self.engine_start_s <= self.exec_start_s
+            && self.exec_start_s <= self.exec_end_s
+            && self.exec_end_s <= self.writeout_s
+    }
+}
+
+/// Durations charged by one engine dispatch, the arbiter's receipt to
+/// the stream worker (which turns them back into cumulative stamps).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DispatchStamps {
+    /// Seconds spent waiting on the engine-unit FIFO before the lease.
+    pub wait_s: f64,
+    /// Reformat/transition seconds charged (occupant switch), 0 if warm.
+    pub reformat_s: f64,
+    /// Model execution seconds charged.
+    pub exec_s: f64,
+}
+
+/// Shared lock-free accumulator of per-stage durations across every
+/// worker thread: one log-bucketed [`Histogram`] per stage.
+pub struct StageAccum {
+    hists: [Histogram; STAGE_COUNT],
+    frames: Counter,
+    non_monotone: Counter,
+}
+
+impl StageAccum {
+    pub fn new() -> StageAccum {
+        StageAccum {
+            hists: std::array::from_fn(|_| Histogram::new()),
+            frames: Counter::new(),
+            non_monotone: Counter::new(),
+        }
+    }
+
+    /// Fold one completed frame's stamps in. Hot path: O(1) relaxed
+    /// atomics only, no locks, no allocation.
+    pub fn record(&self, st: &StageStamps) {
+        if !st.is_monotone() {
+            self.non_monotone.inc();
+        }
+        let durations = [
+            st.source_s,
+            st.queue_exit_s,
+            st.engine_start_s - st.queue_exit_s,
+            st.exec_start_s - st.engine_start_s,
+            st.exec_end_s - st.exec_start_s,
+            st.writeout_s - st.exec_end_s,
+        ];
+        for (h, d) in self.hists.iter().zip(durations) {
+            h.record(d.max(0.0));
+        }
+        self.frames.inc();
+    }
+
+    /// Frames recorded so far.
+    pub fn frames(&self) -> u64 {
+        self.frames.get()
+    }
+
+    /// Frames whose stamps violated pipeline order (should stay 0; the
+    /// clamps in [`StageStamps`] make violations a stamping bug, not a
+    /// scheduling artifact).
+    pub fn non_monotone(&self) -> u64 {
+        self.non_monotone.get()
+    }
+
+    /// Digest every stage histogram into the report-facing breakdown.
+    pub fn breakdown(&self) -> StageBreakdown {
+        StageBreakdown {
+            frames: self.frames.get(),
+            non_monotone: self.non_monotone.get(),
+            stages: STAGE_NAMES
+                .iter()
+                .zip(self.hists.iter())
+                .map(|(name, h)| ((*name).to_string(), h.snapshot()))
+                .collect(),
+        }
+    }
+}
+
+impl Default for StageAccum {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-stage latency digest for reports (`"stages"` in report JSON).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageBreakdown {
+    pub frames: u64,
+    pub non_monotone: u64,
+    /// `(stage name, digest)` in pipeline order.
+    pub stages: Vec<(String, HistogramSnapshot)>,
+}
+
+impl StageBreakdown {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("frames", num(self.frames as f64)),
+            ("non_monotone", num(self.non_monotone as f64)),
+            (
+                "stages",
+                arr(self
+                    .stages
+                    .iter()
+                    .map(|(name, snap)| {
+                        let mut o = snap.to_json();
+                        if let Json::Obj(map) = &mut o {
+                            map.insert("stage".to_string(), s(name));
+                        }
+                        o
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+
+    /// Compact one-line summary (`queue p50 1.2ms | dispatch p50 8.4ms …`)
+    /// for CLI output.
+    pub fn summary(&self) -> String {
+        self.stages
+            .iter()
+            .map(|(name, snap)| format!("{name} p50 {:.2}ms p99 {:.2}ms", snap.p50_ms, snap.p99_ms))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+    use super::*;
+
+    #[test]
+    fn sealing_is_monotone_even_with_inconsistent_inputs() {
+        let mut st = StageStamps::default();
+        st.mark_queue_exit(0.010);
+        // receipt claims more exec time than the whole window: clamps win
+        st.seal_dispatch(
+            0.012,
+            &DispatchStamps {
+                wait_s: 0.5,
+                reformat_s: 0.5,
+                exec_s: 0.5,
+            },
+        );
+        st.mark_writeout(0.001); // earlier than exec end: clamped up
+        assert!(st.is_monotone(), "{st:?}");
+        assert_eq!(st.writeout_s, st.exec_end_s);
+    }
+
+    #[test]
+    fn accum_counts_frames_and_breaks_down_stages() {
+        let acc = StageAccum::new();
+        for i in 0..10u32 {
+            let mut st = StageStamps::default();
+            st.mark_queue_exit(0.002);
+            st.seal_dispatch(
+                0.002 + 0.001 * f64::from(i + 1),
+                &DispatchStamps {
+                    wait_s: 0.0005,
+                    reformat_s: 0.0,
+                    exec_s: 0.001 * f64::from(i + 1),
+                },
+            );
+            st.mark_writeout(st.exec_end_s + 0.0001);
+            acc.record(&st);
+        }
+        assert_eq!(acc.frames(), 10);
+        assert_eq!(acc.non_monotone(), 0);
+        let bd = acc.breakdown();
+        assert_eq!(bd.frames, 10);
+        assert_eq!(bd.stages.len(), STAGE_COUNT);
+        let names: Vec<&str> = bd.stages.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, STAGE_NAMES.to_vec());
+        // every stage histogram saw every frame
+        assert!(bd.stages.iter().all(|(_, s)| s.count == 10));
+        let doc = bd.to_json();
+        assert_eq!(doc.get("frames").and_then(|v| v.as_u64()), Some(10));
+        assert_eq!(doc.get("non_monotone").and_then(|v| v.as_u64()), Some(0));
+    }
+
+    #[test]
+    fn non_monotone_stamps_are_counted_not_dropped() {
+        let acc = StageAccum::new();
+        let st = StageStamps {
+            source_s: 0.0,
+            queue_exit_s: 0.5,
+            engine_start_s: 0.1, // out of order on purpose
+            exec_start_s: 0.1,
+            exec_end_s: 0.1,
+            writeout_s: 0.1,
+        };
+        acc.record(&st);
+        assert_eq!(acc.frames(), 1);
+        assert_eq!(acc.non_monotone(), 1);
+    }
+}

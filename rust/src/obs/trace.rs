@@ -1,0 +1,270 @@
+//! Chrome trace-event export: serialize arbiter/vclock timelines into
+//! the Chrome/Perfetto "trace event format" JSON, loadable directly in
+//! `chrome://tracing` or <https://ui.perfetto.dev>.
+//!
+//! Mapping: **process = node**, **thread = engine unit**, complete
+//! (`"ph": "X"`) slices = dispatches and reformats, instant events =
+//! control-plane markers (replan/migration/shed/degrade/switch), async
+//! `b`/`e` pairs = frame lifecycles (flows). Timestamps are microseconds
+//! as the format requires; all builder inputs are seconds.
+#![deny(clippy::unwrap_used)]
+
+use crate::config::json::{arr, num, obj, s, Json};
+use crate::sim::timeline::Timeline;
+use std::collections::BTreeMap;
+
+/// Builder for one trace file.
+pub struct ChromeTrace {
+    events: Vec<Json>,
+    /// `(pid, thread name)` → tid, with thread-name metadata emitted on
+    /// first use.
+    tids: BTreeMap<(u64, String), u64>,
+    next_tid: u64,
+}
+
+impl ChromeTrace {
+    pub fn new() -> ChromeTrace {
+        ChromeTrace {
+            events: Vec::new(),
+            tids: BTreeMap::new(),
+            next_tid: 1,
+        }
+    }
+
+    /// Register a process (one per node) with a display name.
+    pub fn process(&mut self, pid: u64, name: &str) {
+        self.events.push(obj(vec![
+            ("ph", s("M")),
+            ("name", s("process_name")),
+            ("pid", num(pid as f64)),
+            ("tid", num(0.0)),
+            ("args", obj(vec![("name", s(name))])),
+        ]));
+    }
+
+    fn tid(&mut self, pid: u64, thread: &str) -> u64 {
+        let key = (pid, thread.to_string());
+        if let Some(&t) = self.tids.get(&key) {
+            return t;
+        }
+        let t = self.next_tid;
+        self.next_tid += 1;
+        self.tids.insert(key, t);
+        self.events.push(obj(vec![
+            ("ph", s("M")),
+            ("name", s("thread_name")),
+            ("pid", num(pid as f64)),
+            ("tid", num(t as f64)),
+            ("args", obj(vec![("name", s(thread))])),
+        ]));
+        t
+    }
+
+    /// Complete (`"X"`) slice on `(pid, thread)`, `[t0_s, t1_s]` seconds.
+    pub fn complete(
+        &mut self,
+        pid: u64,
+        thread: &str,
+        name: &str,
+        cat: &str,
+        t0_s: f64,
+        t1_s: f64,
+        args: Json,
+    ) {
+        let tid = self.tid(pid, thread);
+        self.events.push(obj(vec![
+            ("ph", s("X")),
+            ("name", s(name)),
+            ("cat", s(cat)),
+            ("pid", num(pid as f64)),
+            ("tid", num(tid as f64)),
+            ("ts", num(t0_s * 1e6)),
+            ("dur", num((t1_s - t0_s).max(0.0) * 1e6)),
+            ("args", args),
+        ]));
+    }
+
+    /// Instant (`"i"`, process-scoped) marker.
+    pub fn instant(&mut self, pid: u64, thread: &str, name: &str, cat: &str, t_s: f64, args: Json) {
+        let tid = self.tid(pid, thread);
+        self.events.push(obj(vec![
+            ("ph", s("i")),
+            ("s", s("p")),
+            ("name", s(name)),
+            ("cat", s(cat)),
+            ("pid", num(pid as f64)),
+            ("tid", num(tid as f64)),
+            ("ts", num(t_s * 1e6)),
+            ("args", args),
+        ]));
+    }
+
+    /// Async begin/end pair (`"b"`/`"e"`) — one frame lifecycle rendered
+    /// as a flow on the process's `frames` track. `id` must be unique
+    /// per concurrent flow within the process.
+    pub fn flow(&mut self, pid: u64, id: u64, name: &str, t0_s: f64, t1_s: f64, args: Json) {
+        let tid = self.tid(pid, "frames");
+        for (ph, at_s) in [("b", t0_s), ("e", t1_s.max(t0_s))] {
+            self.events.push(obj(vec![
+                ("ph", s(ph)),
+                ("cat", s("frame")),
+                ("name", s(name)),
+                ("id", num(id as f64)),
+                ("pid", num(pid as f64)),
+                ("tid", num(tid as f64)),
+                ("ts", num(at_s * 1e6)),
+                ("args", args.clone()),
+            ]));
+        }
+    }
+
+    /// Map a [`Timeline`] onto this trace: one thread per engine unit;
+    /// execution spans become `"dispatch"`-category slices named after
+    /// the instance (`labels[instance]`, falling back to `inst{n}`),
+    /// non-zero transitions become `"reformat"` slices, and zero-width
+    /// transition markers (the serve loop's drain-and-switch stamps)
+    /// become `"switch"` instants.
+    pub fn add_timeline(&mut self, pid: u64, tl: &Timeline, labels: &[String]) {
+        for sp in &tl.spans {
+            let thread = sp.engine.unit_label(sp.unit);
+            if sp.is_transition {
+                if sp.t1 > sp.t0 {
+                    self.complete(
+                        pid,
+                        &thread,
+                        "reformat",
+                        "reformat",
+                        sp.t0,
+                        sp.t1,
+                        obj(vec![("instance", num(sp.instance as f64))]),
+                    );
+                } else {
+                    self.instant(
+                        pid,
+                        &thread,
+                        "switch",
+                        "switch",
+                        sp.t0,
+                        obj(vec![("instance", num(sp.instance as f64))]),
+                    );
+                }
+            } else {
+                let name = labels
+                    .get(sp.instance)
+                    .cloned()
+                    .unwrap_or_else(|| format!("inst{}", sp.instance));
+                self.complete(
+                    pid,
+                    &thread,
+                    &name,
+                    "dispatch",
+                    sp.t0,
+                    sp.t1,
+                    obj(vec![
+                        ("instance", num(sp.instance as f64)),
+                        ("frame", num(sp.frame as f64)),
+                    ]),
+                );
+            }
+        }
+    }
+
+    /// Trace events emitted so far (including metadata records).
+    pub fn event_count(&self) -> usize {
+        self.events.len()
+    }
+
+    /// The complete trace document (`traceEvents` + display unit).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("traceEvents", arr(self.events.clone())),
+            ("displayTimeUnit", s("ms")),
+        ])
+    }
+}
+
+impl Default for ChromeTrace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+    use super::*;
+    use crate::hw::EngineKind;
+    use crate::sim::timeline::Span;
+
+    fn span(unit: usize, instance: usize, frame: usize, t0: f64, t1: f64, trans: bool) -> Span {
+        Span {
+            engine: EngineKind::Dla,
+            unit,
+            instance,
+            frame,
+            t0,
+            t1,
+            is_transition: trans,
+        }
+    }
+
+    #[test]
+    fn timeline_maps_to_threads_slices_and_markers() {
+        let tl = Timeline {
+            spans: vec![
+                span(0, 0, 0, 0.0, 0.010, false),
+                span(0, 1, 1, 0.010, 0.012, true), // reformat
+                span(0, 1, 1, 0.012, 0.020, false),
+                span(1, 2, 2, 0.0, 0.0, true), // zero-width switch marker
+            ],
+        };
+        let mut tr = ChromeTrace::new();
+        tr.process(0, "node0");
+        tr.add_timeline(0, &tl, &["gan_a".to_string(), "gan_b".to_string()]);
+        let doc = tr.to_json();
+        let events = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        let phase = |ph: &str| {
+            events
+                .iter()
+                .filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some(ph))
+                .count()
+        };
+        assert_eq!(phase("X"), 3, "2 dispatch + 1 reformat slices");
+        assert_eq!(phase("i"), 1, "zero-width transition → switch instant");
+        // process + two unit threads named
+        assert_eq!(phase("M"), 3);
+        let dispatch_names: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("cat").and_then(|v| v.as_str()) == Some("dispatch"))
+            .filter_map(|e| e.get("name").and_then(|v| v.as_str()))
+            .collect();
+        assert_eq!(dispatch_names, vec!["gan_a", "gan_b"]);
+        // µs conversion on a known slice
+        let first = events
+            .iter()
+            .find(|e| e.get("cat").and_then(|v| v.as_str()) == Some("dispatch"))
+            .unwrap();
+        assert_eq!(first.get("ts").and_then(|v| v.as_f64()), Some(0.0));
+        assert!((first.get("dur").and_then(|v| v.as_f64()).unwrap() - 10_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn flows_pair_begin_and_end() {
+        let mut tr = ChromeTrace::new();
+        tr.process(0, "p");
+        tr.flow(0, 42, "frame", 0.001, 0.004, obj(vec![("stream", num(1.0))]));
+        let doc = tr.to_json();
+        let events = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        let b: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some("b"))
+            .collect();
+        let e: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some("e"))
+            .collect();
+        assert_eq!((b.len(), e.len()), (1, 1));
+        assert_eq!(b[0].get("id").and_then(|v| v.as_f64()), Some(42.0));
+        assert_eq!(e[0].get("id").and_then(|v| v.as_f64()), Some(42.0));
+    }
+}

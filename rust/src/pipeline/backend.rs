@@ -484,6 +484,7 @@ mod tests {
             height: 0,
             gt_mri: None,
             admitted: Instant::now(),
+            stamps: Default::default(),
         }
     }
 

@@ -74,6 +74,10 @@ pub fn collect_batch_into(
     let first = rx.recv().ok()?;
     batch.push(first);
     if policy.max_batch <= 1 {
+        // Queue-exit stage stamp: one clock read, no allocation.
+        if let Some(f) = batch.last_mut() {
+            f.stamps.mark_queue_exit(f.admitted.elapsed().as_secs_f64());
+        }
         return Some(BatchEnd::Filled);
     }
     let deadline = Instant::now() + policy.timeout;
@@ -95,6 +99,14 @@ pub fn collect_batch_into(
                 break;
             }
         }
+    }
+    // Queue-exit stage stamp for the whole batch: one clock read, no
+    // allocation (`duration_since` saturates to zero, so stamps stay
+    // monotone even against clock edge cases).
+    let exit = Instant::now();
+    for f in batch.iter_mut() {
+        f.stamps
+            .mark_queue_exit(exit.duration_since(f.admitted).as_secs_f64());
     }
     Some(end)
 }
@@ -123,6 +135,7 @@ mod tests {
             height: 0,
             gt_mri: None,
             admitted: StdInstant::now(),
+            stamps: Default::default(),
         }
     }
 

@@ -80,6 +80,7 @@ use crate::config::PipelineConfig;
 use crate::error::{Error, Result};
 use crate::imaging::metrics::fidelity;
 use crate::imaging::Image;
+use crate::obs::stages::{StageAccum, StageBreakdown};
 use crate::sim::timeline::Timeline;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
@@ -118,6 +119,11 @@ pub struct PipelineReport {
     /// serve front-end's counter — `0` for fixed-frame batch runs).
     /// Distinct from `dropped`; see [`super::metrics`] module docs.
     pub shed: usize,
+    /// Frame-lifecycle stage latency breakdown, present only when the run
+    /// was observed (an [`crate::obs::ObsHub`] stage accumulator was
+    /// attached — `--trace-out`/`--metrics-out` or
+    /// [`crate::session::Session::run_observed`]).
+    pub stages: Option<StageBreakdown>,
 }
 
 impl PipelineReport {
@@ -127,7 +133,7 @@ impl PipelineReport {
 
     /// JSON form for experiment provenance records and `report` output.
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("wall_seconds", num(self.wall_seconds)),
             ("total_frames", num(self.total_frames as f64)),
             ("dropped", num(self.dropped as f64)),
@@ -173,7 +179,11 @@ impl PipelineReport {
                     })
                     .collect()),
             ),
-        ])
+        ];
+        if let Some(st) = &self.stages {
+            pairs.push(("stages", st.to_json()));
+        }
+        obj(pairs)
     }
 }
 
@@ -225,6 +235,7 @@ impl StreamCore {
         spec: &PipelineSpec,
         backend: &Arc<dyn InferenceBackend>,
         sink: Option<Arc<dyn CompletionSink>>,
+        stages: Option<Arc<StageAccum>>,
     ) -> Result<StreamCore> {
         spec.validate()?;
 
@@ -256,6 +267,7 @@ impl StreamCore {
             let backend = Arc::clone(backend);
             let arbiter = Arc::clone(&arbiter);
             let sink = sink.clone();
+            let stages = stages.clone();
             let inst = inst.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("worker-{}", inst.label))
@@ -268,7 +280,7 @@ impl StreamCore {
                     // loop allocates nothing per batch.
                     let mut batch: Vec<Frame> = Vec::with_capacity(inst.batch.max_batch.max(1));
                     while let Some(end) = collect_batch_into(&rx, inst.batch, &mut batch) {
-                        let outs = arbiter.dispatch(
+                        let (outs, receipt) = arbiter.dispatch_stamped(
                             idx,
                             batch[0].id,
                             batch.len(),
@@ -295,7 +307,11 @@ impl StreamCore {
                                 batch.len()
                             )));
                         }
-                        for (frame, out) in batch.iter().zip(outs.iter()) {
+                        // One clock read for the whole batch's dispatch-end
+                        // stamp, taken only when a stage accumulator is
+                        // attached — the untraced path pays nothing here.
+                        let sealed_at = stages.as_ref().map(|_| std::time::Instant::now());
+                        for (frame, out) in batch.iter_mut().zip(outs.iter()) {
                             let latency = frame.admitted.elapsed().as_secs_f64();
                             metrics.record_frame(idx, latency);
                             if let Some(sink) = &sink {
@@ -306,6 +322,16 @@ impl StreamCore {
                                     Some(gt) => record_fidelity(&metrics, idx, frame, gt, out),
                                     None => metrics.record_fidelity_skipped(idx),
                                 }
+                            }
+                            if let (Some(acc), Some(done)) = (&stages, sealed_at) {
+                                frame.stamps.seal_dispatch(
+                                    done.duration_since(frame.admitted).as_secs_f64(),
+                                    &receipt,
+                                );
+                                frame
+                                    .stamps
+                                    .mark_writeout(frame.admitted.elapsed().as_secs_f64());
+                                acc.record(&frame.stamps);
                             }
                         }
                         // Release the frames now (their planes park back
@@ -470,6 +496,7 @@ impl StreamCore {
             total_frames: submitted,
             dropped: dropped_total.load(Ordering::Relaxed),
             shed: metrics.shed_total(),
+            stages: None,
         })
     }
 }
@@ -481,7 +508,18 @@ pub(crate) fn execute(
     spec: &PipelineSpec,
     backend: &Arc<dyn InferenceBackend>,
 ) -> Result<PipelineReport> {
-    let mut core = StreamCore::new(spec, backend, None)?;
+    execute_observed(spec, backend, None)
+}
+
+/// [`execute`] with an optional frame-lifecycle stage accumulator: every
+/// completed frame copy's [`crate::obs::StageStamps`] fold into `stages`,
+/// and the report carries the resulting [`StageBreakdown`].
+pub(crate) fn execute_observed(
+    spec: &PipelineSpec,
+    backend: &Arc<dyn InferenceBackend>,
+    stages: Option<Arc<StageAccum>>,
+) -> Result<PipelineReport> {
+    let mut core = StreamCore::new(spec, backend, None, stages.clone())?;
 
     // Sources on the calling thread. All sources draw from (and return
     // to) one plane pool, so frame synthesis recycles the buffers the
@@ -518,7 +556,9 @@ pub(crate) fn execute(
             break;
         }
     }
-    core.finish()
+    let mut rep = core.finish()?;
+    rep.stages = stages.map(|acc| acc.breakdown());
+    Ok(rep)
 }
 
 /// Score one sampled frame's reconstruction fidelity. Unscorable samples
@@ -606,6 +646,7 @@ mod tests {
             height: 8,
             gt_mri: None,
             admitted: Instant::now(),
+            stamps: Default::default(),
         }
     }
 
@@ -679,6 +720,32 @@ mod tests {
     }
 
     #[test]
+    fn observed_run_reports_monotone_stage_breakdown() {
+        let spec = PipelineSpec {
+            instances: vec![
+                InstanceSpec::new("gan", "gen_cropping"),
+                InstanceSpec::new("det", "yolo_lite"),
+            ],
+            route: RoutePolicy::Fanout,
+            frames: 24,
+            ..PipelineSpec::default()
+        };
+        let acc = Arc::new(StageAccum::default());
+        let rep = execute_observed(&spec, &echo_backend(""), Some(Arc::clone(&acc))).unwrap();
+        // fanout x 2 instances: one stamp record per completed frame copy
+        assert_eq!(acc.frames(), 48);
+        assert_eq!(acc.non_monotone(), 0, "stage stamps must be monotone");
+        let st = rep.stages.expect("observed run must carry a breakdown");
+        assert_eq!(st.frames, 48);
+        let txt = rep.to_json().to_compact();
+        assert!(txt.contains("\"stages\""), "breakdown missing from: {txt}");
+        // unobserved runs pay nothing and report nothing
+        let plain = execute(&spec, &echo_backend("")).unwrap();
+        assert!(plain.stages.is_none());
+        assert!(!plain.to_json().to_compact().contains("\"stages\""));
+    }
+
+    #[test]
     fn empty_report_serializes_to_finite_json() {
         // all-default accumulators (no frames, no gaps) must not leak
         // ±inf/NaN into the report JSON
@@ -691,6 +758,7 @@ mod tests {
             total_frames: 0,
             dropped: 0,
             shed: 0,
+            stages: None,
         };
         let txt = rep.to_json().to_compact();
         Json::parse(&txt).unwrap();

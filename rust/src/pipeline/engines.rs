@@ -40,6 +40,7 @@
 
 use crate::error::Error;
 use crate::hw::EngineKind;
+use crate::obs::stages::DispatchStamps;
 use crate::sim::timeline::{Span, Timeline};
 use crate::util::lock::{cv_wait, relock};
 use std::sync::{Condvar, Mutex};
@@ -238,6 +239,24 @@ impl EngineArbiter {
         profile: Option<&DispatchProfile>,
         run: impl FnOnce() -> crate::error::Result<T>,
     ) -> crate::error::Result<T> {
+        self.dispatch_stamped(instance, frame, batch, profile, run)
+            .map(|(out, _)| out)
+    }
+
+    /// [`EngineArbiter::dispatch`] plus a [`DispatchStamps`] receipt —
+    /// the engine-wait / reformat / execution durations actually charged,
+    /// which the stream worker seals into each frame's
+    /// [`crate::obs::StageStamps`]. Same cost either way: the receipt is
+    /// three stack floats computed from clock reads already taken.
+    pub fn dispatch_stamped<T>(
+        &self,
+        instance: usize,
+        frame: u64,
+        batch: usize,
+        profile: Option<&DispatchProfile>,
+        run: impl FnOnce() -> crate::error::Result<T>,
+    ) -> crate::error::Result<(T, DispatchStamps)> {
+        let t_enter = self.now();
         let unit = self
             .unit_of
             .get(instance)
@@ -270,6 +289,7 @@ impl EngineArbiter {
         // never touches the heap.
         let mut trans_span: Option<Span> = None;
         let mut exec_span: Option<Span> = None;
+        let mut stamps = DispatchStamps::default();
         if result.is_ok() {
             let trans_s = match profile {
                 Some(p) => {
@@ -293,6 +313,11 @@ impl EngineArbiter {
             };
             let t1 = self.now();
             let exec_start = (t0 + trans_s).min(t1);
+            stamps = DispatchStamps {
+                wait_s: (t0 - t_enter).max(0.0),
+                reformat_s: (exec_start - t0).max(0.0),
+                exec_s: (t1 - exec_start).max(0.0),
+            };
             if trans_s > 0.0 {
                 trans_span = Some(Span {
                     engine: unit.kind,
@@ -326,7 +351,7 @@ impl EngineArbiter {
                 tl.push(sp);
             }
         }
-        result
+        result.map(|out| (out, stamps))
     }
 
     /// Copy of the serving timeline recorded so far.

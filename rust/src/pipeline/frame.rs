@@ -6,6 +6,7 @@
 //! sharing/recycling invariants.
 
 use super::plane::FramePlane;
+use crate::obs::stages::StageStamps;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -27,6 +28,11 @@ pub struct Frame {
     pub gt_mri: Option<Arc<FramePlane>>,
     /// Admission timestamp for end-to-end latency.
     pub admitted: Instant,
+    /// Cumulative stage-crossing times since admission (`Copy`, a few
+    /// words): queue exit is stamped by the batcher, the engine stamps
+    /// are sealed by the worker from the dispatch receipt. Folded into
+    /// the run's [`crate::obs::StageAccum`] when observability is on.
+    pub stamps: StageStamps,
 }
 
 impl Frame {
@@ -49,6 +55,7 @@ mod tests {
             height: 64,
             gt_mri: None,
             admitted: Instant::now(),
+            stamps: StageStamps::default(),
         };
         assert_eq!(f.numel(), 4096);
     }
@@ -63,6 +70,7 @@ mod tests {
             height: 4,
             gt_mri: Some(FramePlane::from_vec(vec![0.75; 16])),
             admitted: Instant::now(),
+            stamps: StageStamps::default(),
         };
         let g = f.clone();
         assert!(Arc::ptr_eq(&f.data, &g.data), "pixel plane must be shared");

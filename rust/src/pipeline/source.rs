@@ -14,6 +14,7 @@
 
 use super::frame::Frame;
 use super::plane::PlanePool;
+use crate::obs::stages::StageStamps;
 use crate::imaging::phantom::{paired_sample, PhantomConfig};
 use crate::util::rng::Rng;
 use std::time::Instant;
@@ -71,6 +72,7 @@ impl Iterator for PhantomSource {
             height: s.ct.height,
             gt_mri: Some(self.pool.seal(gt)),
             admitted: Instant::now(),
+            stamps: StageStamps::default(),
         };
         self.next_id += 1;
         Some(frame)

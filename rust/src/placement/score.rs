@@ -37,6 +37,7 @@ use crate::pipeline::backend::{InferenceBackend, SimBackend};
 use crate::pipeline::engines::DispatchProfile;
 use crate::pipeline::router::RoutePolicy;
 use crate::pipeline::spec::PipelineSpec;
+use crate::sim::timeline::{Span, Timeline};
 
 /// Predicted serving statistics of one engine unit under a candidate
 /// placement — the planner-side mirror of
@@ -76,6 +77,11 @@ pub struct PlacementEval {
     /// Total occupant switches (ranking tiebreak #2).
     pub transitions: usize,
     pub units: Vec<UnitEval>,
+    /// The dry run's dispatch spans, same schema as the serving
+    /// timelines ([`crate::sim::timeline::Span`]) so planner predictions
+    /// load into the same Chrome trace view as measured runs. Not
+    /// serialized by [`PlacementEval::to_json`].
+    pub timeline: Timeline,
 }
 
 impl PlacementEval {
@@ -280,6 +286,7 @@ pub fn evaluate(spec: &PipelineSpec, soc: &SocSpec, frames: usize) -> Result<Pla
     let mut worst_dispatch = 0.0f64;
     let mut worst_fill = 0.0f64;
     let mut primary_end = 0.0f64;
+    let mut timeline = Timeline::default();
     for d in &dispatches {
         let p = &profiles[d.instance];
         let u = unit_of[d.instance];
@@ -301,6 +308,27 @@ pub fn evaluate(spec: &PipelineSpec, soc: &SocSpec, frames: usize) -> Result<Pla
         };
         let exec = p.dispatch_duration(d.len).as_secs_f64() * p.slowdown(corunner_bw);
         let end = start + trans + exec;
+
+        if switched && trans > 0.0 {
+            timeline.push(Span {
+                engine: units[u].kind,
+                unit: units[u].index,
+                instance: d.instance,
+                frame: d.last_frame,
+                t0: start,
+                t1: start + trans,
+                is_transition: true,
+            });
+        }
+        timeline.push(Span {
+            engine: units[u].kind,
+            unit: units[u].index,
+            instance: d.instance,
+            frame: d.last_frame,
+            t0: start + trans,
+            t1: end,
+            is_transition: false,
+        });
 
         let unit = &mut units[u];
         if unit.first_start.is_none() {
@@ -362,6 +390,7 @@ pub fn evaluate(spec: &PipelineSpec, soc: &SocSpec, frames: usize) -> Result<Pla
         idle_gap_total_ms: unit_evals.iter().map(|u| u.idle_gap_seconds).sum::<f64>() * 1e3,
         transitions: unit_evals.iter().map(|u| u.transitions).sum(),
         units: unit_evals,
+        timeline,
     })
 }
 
@@ -422,6 +451,18 @@ mod tests {
         // the cheap GPU detector idles between frames: gaps are visible
         let gpu = eval.units.iter().find(|u| u.kind == EngineKind::Gpu).unwrap();
         assert!(gpu.utilization < 1.0);
+        // span/dispatch conservation: one exec span per virtual dispatch,
+        // same schema the serving timelines use
+        let dispatches: usize = eval.units.iter().map(|u| u.dispatches).sum();
+        let exec_spans = eval
+            .timeline
+            .spans
+            .iter()
+            .filter(|sp| !sp.is_transition)
+            .count();
+        assert_eq!(exec_spans, dispatches);
+        let trans_spans = eval.timeline.spans.len() - exec_spans;
+        assert!(trans_spans <= eval.transitions);
         let doc = eval.to_json().to_compact();
         crate::config::json::Json::parse(&doc).unwrap();
     }

@@ -54,6 +54,8 @@ use crate::config::json::{arr, num, obj, s, Json};
 use crate::dla::DlaVersion;
 use crate::error::{Error, Result};
 use crate::hw::SocSpec;
+use crate::obs::registry::{Counter, Gauge, Histogram, Registry};
+use crate::obs::{ObsEvent, ObsHub, StageBreakdown};
 use crate::pipeline::driver::{CompletionSink, PipelineReport, StreamCore};
 use crate::pipeline::plane::PlanePool;
 use crate::pipeline::source::PhantomSource;
@@ -62,6 +64,7 @@ use crate::placement::score::primary_instances;
 use crate::session::Session;
 use crate::sim::timeline::{Span, Timeline};
 use replan::spec_key;
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -89,6 +92,13 @@ pub struct ServeOptions {
     /// many, further phase spans are dropped (switch markers are always
     /// kept) and the report flags the truncation.
     pub timeline_capacity: usize,
+    /// Observability hub (`None` = untraced, zero overhead). When set,
+    /// the serve loop registers its admission counters/gauges and
+    /// completion histogram into the hub's registry, folds every frame's
+    /// stage stamps into the hub's accumulator, takes a
+    /// checkpoint-aligned registry snapshot, and logs replan/shed-burst
+    /// events — `--trace-out`/`--metrics-out` hang off this.
+    pub obs: Option<Arc<ObsHub>>,
 }
 
 impl ServeOptions {
@@ -103,6 +113,7 @@ impl ServeOptions {
             seed: 0xED6E,
             telemetry_capacity: 1 << 16,
             timeline_capacity: 100_000,
+            obs: None,
         }
     }
 }
@@ -158,11 +169,14 @@ pub struct ServeReport {
     /// Completion event tail (bounded by `telemetry_capacity`) — what the
     /// ordering/conservation property tests inspect.
     pub completions: Vec<Completion>,
+    /// Frame-lifecycle stage latency breakdown across every phase,
+    /// present only when [`ServeOptions::obs`] was set.
+    pub stages: Option<StageBreakdown>,
 }
 
 impl ServeReport {
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("offered", num(self.offered as f64)),
             ("accepted", num(self.accepted as f64)),
             ("completed", num(self.completed as f64)),
@@ -210,7 +224,72 @@ impl ServeReport {
                     .filter(|sp| sp.t0 == sp.t1 && sp.is_transition)
                     .count() as f64),
             ),
-        ])
+        ];
+        if let Some(st) = &self.stages {
+            pairs.push(("stages", st.to_json()));
+        }
+        obj(pairs)
+    }
+}
+
+/// Registry handles for the serve loop's admission-side series
+/// (registered once; the per-arrival path pays one relaxed atomic op per
+/// event).
+struct ServeMeters {
+    offered: Arc<Counter>,
+    accepted: Arc<Counter>,
+    shed: Arc<Counter>,
+    shed_rate_limit: Arc<Counter>,
+    shed_deadline: Arc<Counter>,
+    backlog: Arc<Gauge>,
+    est_wait: Arc<Gauge>,
+    dropped: Arc<Gauge>,
+}
+
+impl ServeMeters {
+    fn register(reg: &Registry) -> ServeMeters {
+        ServeMeters {
+            offered: reg.counter("serve_offered_total", "frames presented to admission"),
+            accepted: reg.counter("serve_accepted_total", "frames admitted into the pipeline"),
+            shed: reg.counter("serve_shed_total", "frames refused by admission control"),
+            shed_rate_limit: reg.counter(
+                "serve_shed_rate_limit_total",
+                "sheds from an empty class token bucket",
+            ),
+            shed_deadline: reg.counter(
+                "serve_shed_deadline_total",
+                "sheds from a blown class deadline",
+            ),
+            backlog: reg.gauge(
+                "serve_backlog_frames",
+                "admitted unique frames not yet completed (checkpoint read)",
+            ),
+            est_wait: reg.gauge(
+                "serve_est_wait_ms",
+                "estimated queueing delay fed to deadline shedding, model-time ms",
+            ),
+            dropped: reg.gauge(
+                "serve_dropped_copies",
+                "droppable fanout copies discarded on overload, cumulative",
+            ),
+        }
+    }
+}
+
+/// [`Telemetry`] completion-sink wrapper that mirrors every completion
+/// into the metrics registry: one counter bump plus one O(1) histogram
+/// record per frame copy on top of the telemetry ring push.
+struct MeteredSink {
+    inner: Arc<Telemetry>,
+    n_completed: Arc<Counter>,
+    lat_hist: Arc<Histogram>,
+}
+
+impl CompletionSink for MeteredSink {
+    fn completed(&self, instance: usize, stream: usize, frame_id: u64, latency_s: f64) {
+        self.inner.completed(instance, stream, frame_id, latency_s);
+        self.n_completed.inc();
+        self.lat_hist.record(latency_s);
     }
 }
 
@@ -244,7 +323,23 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
     let mut admission = AdmissionController::new(opts.qos.clone())?;
     let mut replanner = Replanner::new(opts.replan.clone(), opts.soc.clone(), opts.dla_version);
     let telemetry = Arc::new(Telemetry::new(opts.telemetry_capacity));
-    let sink: Arc<dyn CompletionSink> = Arc::clone(&telemetry);
+    let hub = opts.obs.clone();
+    let stages = hub.as_ref().map(|h| Arc::clone(&h.stages));
+    let meters = hub.as_ref().map(|h| ServeMeters::register(&h.registry));
+    let sink: Arc<dyn CompletionSink> = match &hub {
+        Some(h) => Arc::new(MeteredSink {
+            inner: Arc::clone(&telemetry),
+            n_completed: h.registry.counter(
+                "serve_completed_total",
+                "frame copies completed across all instances",
+            ),
+            lat_hist: h.registry.histogram(
+                "serve_latency_seconds",
+                "admission-to-completion latency per frame copy",
+            ),
+        }),
+        None => Arc::clone(&telemetry) as Arc<dyn CompletionSink>,
+    };
 
     // One plane pool across all clients and all phases: drained frames
     // park their buffers for the next arrivals regardless of spec swaps.
@@ -265,7 +360,7 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
         .collect();
 
     let check_every = replanner.policy().check_every_frames.max(1);
-    let mut core = StreamCore::new(&spec, &backend, Some(Arc::clone(&sink)))?;
+    let mut core = StreamCore::new(&spec, &backend, Some(Arc::clone(&sink)), stages.clone())?;
     // The primary-instance mask only changes on a spec swap; caching it
     // keeps the per-checkpoint backlog read allocation-free.
     let mut primary_mask = primary_instances(spec.route, spec.instances.len());
@@ -274,6 +369,11 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
     // Incremental checkpoint reads: spans already inspected are never
     // re-cloned (an open-ended serve would otherwise go quadratic).
     let mut span_cursor = 0usize;
+    // Same for completions: each checkpoint pulls only the events it has
+    // not seen yet into a locally capped tail, so windowed stats and the
+    // report record never re-clone the telemetry ring.
+    let mut comp_cursor = 0usize;
+    let mut comp_tail: VecDeque<Completion> = VecDeque::new();
 
     let mut timeline = Timeline::default();
     let mut timeline_truncated = false;
@@ -312,9 +412,11 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
     // served rate), refreshed at every checkpoint.
     let mut est_wait_ms = 0.0f64;
 
-    // Closes the current window; returns the stats (also pushed).
+    // Closes the current window; returns the stats (also pushed). Window
+    // stats come from the locally pulled completion tail, not a telemetry
+    // ring scan — callers pull `completions_since` first.
     let close_window = |windows: &mut Vec<WindowStats>,
-                        telemetry: &Telemetry,
+                        tail: &VecDeque<Completion>,
                         tl_busy: Vec<(String, f64)>,
                         t0: f64,
                         t1: f64,
@@ -323,7 +425,7 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
                         dropped_in: usize,
                         arrival_span: f64|
      -> WindowStats {
-        let (completed_w, lat) = telemetry.window(t0, t1);
+        let (completed_w, lat) = telemetry::window_from_tail(tail, t0, t1);
         let width = (t1 - t0).max(f64::MIN_POSITIVE);
         let ws = WindowStats {
             t0,
@@ -355,10 +457,22 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
         }
         offered += 1;
         win_offered += 1;
+        if let Some(m) = &meters {
+            m.offered.inc();
+        }
 
         let class = opts.clients[a.client].class;
         match admission.decide(class, a.t, est_wait_ms) {
-            Some(_reason) => core.record_shed(),
+            Some(reason) => {
+                core.record_shed();
+                if let Some(m) = &meters {
+                    m.shed.inc();
+                    match reason {
+                        ShedReason::RateLimit => m.shed_rate_limit.inc(),
+                        ShedReason::Deadline => m.shed_deadline.inc(),
+                    }
+                }
+            }
             None => {
                 // The arrival schedule is built from the same per-client
                 // budgets the sources enforce, so a missing frame is
@@ -369,6 +483,9 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
                     // lint:allow(panic-freedom) — unreachable by schedule construction
                     .expect("schedule never exceeds a client's budget");
                 accepted += 1;
+                if let Some(m) = &meters {
+                    m.accepted.inc();
+                }
                 if !core.submit(frame) {
                     primary_died = true;
                     break 'serve;
@@ -385,12 +502,16 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
                 spans: core.arbiter().spans_from(span_cursor),
             };
             span_cursor += tail.spans.len();
+            comp_cursor = telemetry.completions_since(comp_cursor, &mut comp_tail);
+            while comp_tail.len() > opts.telemetry_capacity {
+                comp_tail.pop_front();
+            }
             let busy = telemetry::engine_busy_in_window(&tail, phase_offset, win_t0, now);
             let shed_now = admission.shed_total();
             let dropped_now = dropped_prev_phases + core.dropped_so_far();
             let ws = close_window(
                 &mut windows,
-                &telemetry,
+                &comp_tail,
                 busy,
                 win_t0,
                 now,
@@ -429,6 +550,26 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
                 backlog_wait_ms * wall_to_model
             };
 
+            // Checkpoint-aligned observability: refresh the gauges, log a
+            // shed burst if this window refused anything, snapshot the
+            // registry.
+            if let Some(h) = &hub {
+                if let Some(m) = &meters {
+                    m.backlog.set(backlog as f64);
+                    m.est_wait.set(est_wait_ms);
+                    m.dropped.set(dropped_now as f64);
+                }
+                if ws.shed > 0 {
+                    h.push_event(ObsEvent::shed_burst(
+                        now,
+                        None,
+                        format!("shed {} of {} offered", ws.shed, ws.offered),
+                        ws.to_json(),
+                    ));
+                }
+                h.snapshot_at(now);
+            }
+
             if let Some(prop) = replanner.consider(&spec, &ws, backlog)? {
                 // ---- drain-and-switch ----
                 let mut report = core.finish()?; // every admitted frame lands
@@ -443,7 +584,11 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
                 // a window gap — close a drain window over [checkpoint,
                 // drain end] when anything completed in it.
                 let t_drained = telemetry.now();
-                if telemetry.window(win_t0, t_drained).0 > 0 {
+                comp_cursor = telemetry.completions_since(comp_cursor, &mut comp_tail);
+                while comp_tail.len() > opts.telemetry_capacity {
+                    comp_tail.pop_front();
+                }
+                if telemetry::window_from_tail(&comp_tail, win_t0, t_drained).0 > 0 {
                     let drain_busy = telemetry::engine_busy_in_window(
                         &report.timeline,
                         phase_offset,
@@ -452,7 +597,7 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
                     );
                     close_window(
                         &mut windows,
-                        &telemetry,
+                        &comp_tail,
                         drain_busy,
                         win_t0,
                         t_drained,
@@ -512,8 +657,15 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
                     predicted_fps_after: prop.predicted_fps_after,
                     reason: prop.reason,
                 });
+                if let (Some(h), Some(ev)) = (&hub, replans.last()) {
+                    h.push_event(ObsEvent::replan(
+                        ev.at_seconds,
+                        format!("{} -> {}", ev.from_key, ev.to_key),
+                        ev.to_json(),
+                    ));
+                }
                 spec = next;
-                core = StreamCore::new(&spec, &backend, Some(Arc::clone(&sink)))?;
+                core = StreamCore::new(&spec, &backend, Some(Arc::clone(&sink)), stages.clone())?;
                 primary_mask = primary_instances(spec.route, spec.instances.len());
                 phase_started = telemetry.now();
                 phase_offset = phase_started - core.arbiter().clock_seconds();
@@ -556,10 +708,14 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
     let end = telemetry.now();
     let shed_total = admission.shed_total();
     let dropped_total = dropped_prev_phases + phases.last().map(|p| p.report.dropped).unwrap_or(0);
+    let _ = telemetry.completions_since(comp_cursor, &mut comp_tail);
+    while comp_tail.len() > opts.telemetry_capacity {
+        comp_tail.pop_front();
+    }
     let busy = telemetry::engine_busy_in_window(&timeline, 0.0, win_t0, end);
     close_window(
         &mut windows,
-        &telemetry,
+        &comp_tail,
         busy,
         win_t0,
         end,
@@ -568,6 +724,16 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
         dropped_total.saturating_sub(win_dropped_base),
         schedule.last().map(|a| a.t - win_arrival_t0).unwrap_or(0.0),
     );
+
+    // Final registry state: the closing snapshot an open-ended consumer
+    // would otherwise miss (gauges settle to their drained values).
+    if let Some(h) = &hub {
+        if let Some(m) = &meters {
+            m.backlog.set(0.0);
+            m.dropped.set(dropped_total as f64);
+        }
+        h.snapshot_at(end);
+    }
 
     debug_assert_eq!(offered, accepted + shed_total);
     Ok(ServeReport {
@@ -593,6 +759,7 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
             .cloned()
             .zip(admission.stats().iter().cloned())
             .collect(),
-        completions: telemetry.completions(),
+        completions: comp_tail.into_iter().collect(),
+        stages: stages.map(|acc| acc.breakdown()),
     })
 }

@@ -84,9 +84,30 @@ impl Telemetry {
         relock(&self.inner).latency.percentile(q) * 1e3
     }
 
-    /// Copy of the retained completion tail (oldest first).
+    /// Copy of the retained completion tail (oldest first). One full-ring
+    /// clone — fine for a final report; checkpoints on long runs should
+    /// pull increments with [`Telemetry::completions_since`] instead.
     pub fn completions(&self) -> Vec<Completion> {
         relock(&self.inner).events.iter().copied().collect()
+    }
+
+    /// Append only the completions the caller has not seen yet to `out`
+    /// and return the new cursor. `cursor` is the monotonic completed
+    /// count a previous call returned (`0` to start). Cost is O(new
+    /// events), not O(ring): the serve loop pulls at every checkpoint, so
+    /// an open-ended run never re-clones its whole tail. Events that aged
+    /// out of the capped ring between pulls are skipped — the returned
+    /// cursor still advances past them, so nothing is double-counted.
+    pub fn completions_since(
+        &self,
+        cursor: usize,
+        out: &mut std::collections::VecDeque<Completion>,
+    ) -> usize {
+        let inner = relock(&self.inner);
+        let unseen = inner.completed.saturating_sub(cursor);
+        let start = inner.events.len().saturating_sub(unseen);
+        out.extend(inner.events.range(start..).copied());
+        inner.completed
     }
 
     /// Completion statistics over the wall-time window `(t0, t1]`.
@@ -200,6 +221,29 @@ impl WindowStats {
     }
 }
 
+/// Completion statistics over `(t0, t1]` from a caller-held, time-ordered
+/// completion tail (see [`Telemetry::completions_since`]) — the
+/// checkpoint-path equivalent of [`Telemetry::window`] with no lock
+/// acquisition and no shared-ring scan.
+pub fn window_from_tail(
+    tail: &VecDeque<Completion>,
+    t0: f64,
+    t1: f64,
+) -> (usize, Summary) {
+    let mut lat = Summary::new();
+    let mut completed = 0;
+    for ev in tail.iter().rev() {
+        if ev.t <= t0 {
+            break;
+        }
+        if ev.t <= t1 {
+            completed += 1;
+            lat.add(ev.latency_s);
+        }
+    }
+    (completed, lat)
+}
+
 /// The SoC's schedulable units (GPU + both DLA cores) — the full set a
 /// windowed utilization must cover so unused engines show up as idle.
 pub fn soc_units() -> Vec<(EngineKind, usize)> {
@@ -283,6 +327,46 @@ mod tests {
         assert_eq!(t.completions().len(), 4);
         assert_eq!(t.completions()[0].frame_id, 6);
         assert_eq!(t.total_completed(), 10);
+    }
+
+    #[test]
+    fn incremental_pulls_see_each_event_exactly_once() {
+        let t = Telemetry::new(1024);
+        let mut tail = std::collections::VecDeque::new();
+        let mut cursor = t.completions_since(0, &mut tail);
+        assert_eq!((cursor, tail.len()), (0, 0));
+        for i in 0..6u64 {
+            t.completed(0, 0, i, 0.001);
+        }
+        cursor = t.completions_since(cursor, &mut tail);
+        assert_eq!((cursor, tail.len()), (6, 6));
+        for i in 6..10u64 {
+            t.completed(0, 0, i, 0.001);
+        }
+        cursor = t.completions_since(cursor, &mut tail);
+        assert_eq!((cursor, tail.len()), (10, 10));
+        // exactly once, in order
+        for (i, ev) in tail.iter().enumerate() {
+            assert_eq!(ev.frame_id, i as u64);
+        }
+        // idempotent when nothing new happened
+        assert_eq!(t.completions_since(cursor, &mut tail), 10);
+        assert_eq!(tail.len(), 10);
+    }
+
+    #[test]
+    fn incremental_pull_skips_aged_out_events_without_recount() {
+        let t = Telemetry::new(4);
+        for i in 0..10u64 {
+            t.completed(0, 0, i, 0.001);
+        }
+        // 6 of the 10 already aged out of the capped ring before the
+        // first pull: the cursor jumps past them
+        let mut tail = std::collections::VecDeque::new();
+        let cursor = t.completions_since(0, &mut tail);
+        assert_eq!(cursor, 10);
+        assert_eq!(tail.len(), 4);
+        assert_eq!(tail[0].frame_id, 6);
     }
 
     #[test]

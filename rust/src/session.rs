@@ -77,6 +77,19 @@ impl Session {
         driver::execute(&self.spec, &self.backend)
     }
 
+    /// [`Session::run`] with an optional frame-lifecycle stage accumulator
+    /// (usually `Some(Arc::clone(&hub.stages))` for an
+    /// [`crate::obs::ObsHub`]): every completed frame copy's stage stamps
+    /// fold into the accumulator and the report carries the per-stage
+    /// latency breakdown in [`PipelineReport::stages`]. `None` is exactly
+    /// [`Session::run`].
+    pub fn run_observed(
+        &self,
+        stages: Option<Arc<crate::obs::StageAccum>>,
+    ) -> Result<PipelineReport> {
+        driver::execute_observed(&self.spec, &self.backend, stages)
+    }
+
     /// Decompose into the validated spec and the bound backend — the
     /// handoff the long-running [`crate::serve`] front-end uses: it keeps
     /// the backend for the whole serve and swaps *specs* across

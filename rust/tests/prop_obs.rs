@@ -1,0 +1,164 @@
+//! Property: the unified observability layer is a faithful witness of
+//! the serve loop — per-engine-unit execution spans never overlap (the
+//! arbiter's leases are exclusive), frame-lifecycle stage stamps stay
+//! monotone, the span ledger reconciles with the arbiter's dispatch
+//! counters, and the metrics registry's admission ledger balances —
+//! under randomized client mixes, arrival shapes, and forced
+//! drain-and-switch cadences. Feature-agnostic: CI runs it with the
+//! `parallel` feature on (default) and off (rust-scalar job).
+
+use edgepipe::dla::DlaVersion;
+use edgepipe::hw;
+use edgepipe::obs::ObsHub;
+use edgepipe::pipeline::router::RoutePolicy;
+use edgepipe::pipeline::{InstanceSpec, SimBackend};
+use edgepipe::prop_assert;
+use edgepipe::serve::{self, ArrivalProcess, ClientSpec, ReplanPolicy, ServeOptions};
+use edgepipe::session::Session;
+use edgepipe::util::prop;
+use edgepipe::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn random_arrivals(rng: &mut Rng) -> ArrivalProcess {
+    match rng.below(3) {
+        0 => ArrivalProcess::Poisson {
+            rate_fps: rng.range_f64(100.0, 2000.0),
+        },
+        1 => ArrivalProcess::Burst {
+            burst_fps: rng.range_f64(500.0, 5000.0),
+            burst_len: rng.range_i64(4, 32) as usize,
+            idle_seconds: rng.range_f64(0.0, 0.01),
+        },
+        _ => ArrivalProcess::Ramp {
+            start_fps: rng.range_f64(50.0, 300.0),
+            end_fps: rng.range_f64(300.0, 3000.0),
+        },
+    }
+}
+
+#[test]
+fn observed_serve_spans_reconcile_and_stamps_stay_monotone() {
+    prop::check_with("obs_serve_witness", 6, |rng| {
+        let n_clients = 1 + rng.below(3) as usize;
+        let mut opts = ServeOptions::new(hw::orin(), DlaVersion::V2);
+        opts.time_scale = 0.0; // no pacing: stress bookkeeping, not the clock
+        opts.seed = rng.next_u64();
+        opts.replan = ReplanPolicy {
+            check_every_frames: 16 + rng.below(16) as usize,
+            force_every_checks: Some(1 + rng.below(2) as usize),
+            ..ReplanPolicy::default()
+        };
+        let hub = Arc::new(ObsHub::new());
+        opts.obs = Some(Arc::clone(&hub));
+        let mut expected_total = 0usize;
+        for i in 0..n_clients {
+            let frames = 48 + rng.below(80) as usize;
+            expected_total += frames;
+            opts.clients.push(ClientSpec::new(
+                format!("c{i}"),
+                frames,
+                random_arrivals(rng),
+            ));
+        }
+        let session = Session::builder()
+            .instance(InstanceSpec::new("gan", "gen_cropping"))
+            .instance(InstanceSpec::new("yolo", "yolo_lite"))
+            .route(RoutePolicy::Fanout)
+            .streams(n_clients)
+            .queue_depth(2)
+            .backend(Arc::new(SimBackend::new(hw::orin()).with_time_scale(0.0)))
+            .build()
+            .map_err(|e| e.to_string())?;
+        let rep = serve::serve(session, opts).map_err(|e| e.to_string())?;
+        prop_assert!(
+            rep.offered == expected_total && rep.completed == expected_total,
+            "conservation broke before obs checks: {} offered / {} completed of {}",
+            rep.offered,
+            rep.completed,
+            expected_total
+        );
+
+        // 1. Frame-lifecycle stage stamps: every recorded copy monotone.
+        let stages = rep
+            .stages
+            .as_ref()
+            .ok_or("observed serve must report a stage breakdown")?;
+        prop_assert!(stages.frames > 0, "no stage records folded");
+        prop_assert!(
+            hub.stages.non_monotone() == 0,
+            "{} non-monotone stage-stamp records",
+            hub.stages.non_monotone()
+        );
+
+        // 2. Exclusive leases: execution spans on one physical unit
+        // never overlap, across every drain-and-switch phase.
+        let mut per_unit: HashMap<(hw::EngineKind, usize), Vec<(f64, f64)>> = HashMap::new();
+        for sp in rep.timeline.spans.iter().filter(|sp| !sp.is_transition) {
+            per_unit
+                .entry((sp.engine, sp.unit))
+                .or_default()
+                .push((sp.t0, sp.t1));
+        }
+        prop_assert!(!per_unit.is_empty(), "timeline recorded no execution spans");
+        for ((engine, unit), mut spans) in per_unit {
+            spans.sort_by(|a, b| a.0.total_cmp(&b.0));
+            for w in spans.windows(2) {
+                prop_assert!(
+                    w[0].1 <= w[1].0 + 1e-9,
+                    "{engine:?}{unit} spans overlap: [{:.9}, {:.9}] then [{:.9}, {:.9}]",
+                    w[0].0,
+                    w[0].1,
+                    w[1].0,
+                    w[1].1
+                );
+            }
+        }
+
+        // 3. Span/dispatch conservation: one execution span per arbiter
+        // dispatch (exact only when the merged timeline wasn't capped).
+        if !rep.timeline_truncated {
+            let exec_spans = rep
+                .timeline
+                .spans
+                .iter()
+                .filter(|sp| !sp.is_transition)
+                .count();
+            let dispatches: usize = rep
+                .phases
+                .iter()
+                .map(|p| p.report.engines.iter().map(|e| e.dispatches).sum::<usize>())
+                .sum();
+            prop_assert!(
+                exec_spans == dispatches,
+                "{exec_spans} execution spans != {dispatches} arbiter dispatches"
+            );
+        }
+
+        // 4. The registry's admission ledger mirrors the report's.
+        let offered = hub.registry.counter("serve_offered_total", "").get() as usize;
+        let accepted = hub.registry.counter("serve_accepted_total", "").get() as usize;
+        let shed = hub.registry.counter("serve_shed_total", "").get() as usize;
+        let completed = hub.registry.counter("serve_completed_total", "").get() as usize;
+        prop_assert!(
+            offered == rep.offered && offered == accepted + shed,
+            "registry ledger off: {offered} offered != {accepted} accepted + {shed} shed \
+             (report offered {})",
+            rep.offered
+        );
+        // `serve_completed_total` counts per-instance copies (one sink
+        // call per completed copy) — exactly what the stage accumulator
+        // records, and never fewer than the unique-frame ledger.
+        prop_assert!(
+            completed as u64 == stages.frames,
+            "registry completed {completed} != {} stage records",
+            stages.frames
+        );
+        prop_assert!(
+            completed >= rep.completed,
+            "per-copy completions {completed} < unique completed {}",
+            rep.completed
+        );
+        Ok(())
+    });
+}
