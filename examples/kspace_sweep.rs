@@ -1,0 +1,63 @@
+//! Acceleration sweep over the k-space acquisition front-end: the
+//! fidelity/throughput frontier of zero-filled vs GRAPPA reconstruction
+//! at R = 2/4/8, measured through the full serving pipeline (recon →
+//! GAN → YOLO) rather than on isolated slices.
+//!
+//! Every frame is undersampled multi-coil k-space; the source
+//! reconstructs it before the model chain and scores the recon against
+//! the fully-sampled slice it was acquired from, so the printed PSNR is
+//! exactly what the downstream models actually received. The per-frame
+//! recon cost rides on the report as `recon_ms_per_frame` — the same
+//! figure the placement planner prices into admission pacing.
+//!
+//! Runs on the sim backend with no artifacts:
+//!
+//! ```text
+//! cargo run --release --no-default-features --example kspace_sweep
+//! ```
+
+use edgepipe::config::{GanVariant, Workload};
+use edgepipe::hw::orin;
+use edgepipe::pipeline::{ReconMode, SimBackend, SourceSpec};
+use edgepipe::session::Session;
+use std::sync::Arc;
+
+fn main() -> edgepipe::Result<()> {
+    println!("== k-space front-end sweep: zero-filled vs GRAPPA ==");
+    println!(
+        "{:>3} {:>12} {:>10} {:>9} {:>14} {:>9}",
+        "R", "recon", "psnr dB", "ssim %", "recon ms/frame", "fps"
+    );
+    for accel in [2usize, 4, 8] {
+        for mode in [ReconMode::ZeroFilled, ReconMode::Grappa] {
+            let session = Session::builder()
+                .workload(Workload::GanPlusYolo, GanVariant::Cropping)
+                .source(SourceSpec::kspace(accel, mode))
+                .frames(64)
+                .backend(Arc::new(SimBackend::new(orin()).with_time_scale(0.0)))
+                .build()?;
+            let rep = session.run()?;
+            let r = rep
+                .recon
+                .as_ref()
+                .expect("kspace runs always carry a recon report");
+            println!(
+                "{:>3} {:>12} {:>10.2} {:>9.2} {:>14.2} {:>9.0}",
+                accel,
+                r.recon,
+                r.psnr_mean,
+                r.ssim_pct_mean,
+                r.recon_ms_per_frame,
+                rep.total_fps()
+            );
+        }
+    }
+    println!(
+        "\nGRAPPA recovers the aliased rows the zero-filled baseline leaves \
+         empty, so its PSNR column dominates at every R; the gap narrows as \
+         acceleration rises and fewer calibration-consistent neighbours \
+         remain. The recon cost column is what `edgepipe plan` prices into \
+         the latency budget for kspace sources."
+    );
+    Ok(())
+}

@@ -1,7 +1,7 @@
 //! Hot-path micro-benches for the performance pass (EXPERIMENTS.md §Perf):
 //! simulator event throughput, scheduler search, NMS, JSON, frame routing,
-//! block DCT, batched vs unbatched dispatch, coordinator overhead, PJRT
-//! execute. Emits `BENCH_hotpath.json` (name → ns/op + derived rates) so
+//! block DCT, k-space FFT + GRAPPA recon, batched vs unbatched dispatch,
+//! coordinator overhead, PJRT execute. Emits `BENCH_hotpath.json` (name → ns/op + derived rates) so
 //! every run seeds the machine-readable perf trajectory; CI's
 //! `bench-smoke` job runs this in short mode (`EDGEPIPE_BENCH_SMOKE=1`)
 //! and archives the JSON.
@@ -218,6 +218,90 @@ fn main() {
         },
         || {
             black_box(reference::lzw_compress(&bytes));
+        },
+    );
+
+    // k-space front-end kernels, same optimized-vs-oracle shape: the 2D
+    // FFT pair on a 256x256 complex plane (the per-coil acquisition
+    // transform at a clinical matrix size) and the GRAPPA fit+synthesis
+    // at the serving geometry (64x64, 4 coils, R=4, 16 ACS rows).
+    use edgepipe::imaging::fft::Fft2;
+    use edgepipe::imaging::grappa::GrappaKernel;
+    use edgepipe::imaging::kspace::{coil_maps, sample_mask, GRAPPA_LAMBDA_REL};
+    let fft_n = 256usize;
+    let fft = Fft2::new(fft_n).unwrap();
+    let mut rng = Rng::new(17);
+    let plane_re: Vec<f32> = (0..fft_n * fft_n).map(|_| rng.next_f32() - 0.5).collect();
+    let plane_im: Vec<f32> = (0..fft_n * fft_n).map(|_| rng.next_f32() - 0.5).collect();
+    let (mut opt_re, mut opt_im) = (plane_re.clone(), plane_im.clone());
+    let (mut ref_re, mut ref_im) = (plane_re.clone(), plane_im.clone());
+    kernel_case(
+        &b,
+        "img_fft2_256",
+        (fft_n * fft_n) as f64 / 1e6,
+        || {
+            fft.fft2(&mut opt_re, &mut opt_im).unwrap();
+            fft.ifft2(&mut opt_re, &mut opt_im).unwrap();
+        },
+        || {
+            reference::fft2(fft_n, &mut ref_re, &mut ref_im).unwrap();
+            reference::ifft2(fft_n, &mut ref_re, &mut ref_im).unwrap();
+        },
+    );
+
+    // One undersampled multi-coil acquisition at the serving geometry,
+    // built from the same public pieces `Acquisition` composes.
+    let (gn, gc, gr) = (64usize, 4usize, 4usize);
+    let gplane = gn * gn;
+    let (gmap_re, gmap_im) = coil_maps(gn, gc);
+    let gmask = sample_mask(gn, gr, 16);
+    let gfft = Fft2::new(gn).unwrap();
+    let slice: Vec<f32> = (0..gplane).map(|_| rng.next_f32()).collect();
+    let mut gks_re = vec![0.0f32; gc * gplane];
+    let mut gks_im = vec![0.0f32; gc * gplane];
+    for c in 0..gc {
+        let o = c * gplane;
+        for p in 0..gplane {
+            gks_re[o + p] = gmap_re[o + p] * slice[p];
+            gks_im[o + p] = gmap_im[o + p] * slice[p];
+        }
+        gfft.fft2(&mut gks_re[o..o + gplane], &mut gks_im[o..o + gplane])
+            .unwrap();
+        for (row, &keep) in gmask.iter().enumerate() {
+            if !keep {
+                gks_re[o + row * gn..o + (row + 1) * gn].fill(0.0);
+                gks_im[o + row * gn..o + (row + 1) * gn].fill(0.0);
+            }
+        }
+    }
+    let mut gkern = GrappaKernel::new(gc, gr).unwrap();
+    let (mut gwork_re, mut gwork_im) = (gks_re.clone(), gks_im.clone());
+    kernel_case(
+        &b,
+        "img_grappa_fit_r4",
+        gplane as f64 / 1e6,
+        || {
+            gkern
+                .fit(&gks_re, &gks_im, &gmask, GRAPPA_LAMBDA_REL)
+                .unwrap();
+            gwork_re.copy_from_slice(&gks_re);
+            gwork_im.copy_from_slice(&gks_im);
+            gkern.apply(&mut gwork_re, &mut gwork_im, &gmask).unwrap();
+            black_box(gwork_re[0]);
+        },
+        || {
+            black_box(
+                reference::grappa_recon(
+                    gn,
+                    gc,
+                    gr,
+                    &gks_re,
+                    &gks_im,
+                    &gmask,
+                    GRAPPA_LAMBDA_REL,
+                )
+                .unwrap(),
+            );
         },
     );
 

@@ -65,6 +65,10 @@ pub const HOT_FNS: &[HotFn] = &[
     HotFn { file: "fleet/vclock.rs", func: "pop_ready" },
     HotFn { file: "obs/registry.rs", func: "record" },
     HotFn { file: "obs/stages.rs", func: "record" },
+    // k-space recon front-end: runs once per acquired frame
+    HotFn { file: "imaging/fft.rs", func: "fft2" },
+    HotFn { file: "imaging/fft.rs", func: "ifft2" },
+    HotFn { file: "imaging/grappa.rs", func: "apply" },
 ];
 
 /// One lock class in the global acquisition order. `field` is the name
@@ -155,6 +159,11 @@ pub const COUNTER_CONTRACTS: &[CounterContract] = &[
         strukt: "ObsEvent",
         writers: &[("ObsEvent", "to_json")],
     },
+    CounterContract {
+        file: "pipeline/source.rs",
+        strukt: "ReconReport",
+        writers: &[("ReconReport", "to_json")],
+    },
 ];
 
 /// Field types the conservation contract considers counters.
@@ -170,11 +179,15 @@ mod tests {
         assert!(is_hot("serve/mod.rs"));
         assert!(is_hot("rust/src/fleet/vclock.rs"));
         assert!(is_hot("imaging/median.rs"));
+        assert!(is_hot("rust/src/imaging/fft.rs"));
+        assert!(is_hot("imaging/grappa.rs"));
+        assert!(is_hot("imaging/kspace.rs"));
         assert!(is_hot("rust/src/obs/registry.rs"));
         assert!(is_hot("obs/stages.rs"));
         assert!(!is_hot("imaging/reference.rs"), "scalar oracle is exempt");
         assert!(!is_hot("placement/score.rs"));
         assert!(!is_hot("analysis/rules.rs"));
+        assert!(!is_hot("pipeline/source.rs"), "sources allocate at frame synthesis");
     }
 
     #[test]

@@ -11,7 +11,7 @@ use crate::error::{Error, Result};
 use crate::hw::EngineKind;
 use crate::pipeline::batcher::BatchPolicy;
 use crate::pipeline::router::RoutePolicy;
-use crate::pipeline::spec::{check_artifact_name, InstanceSpec, PipelineSpec};
+use crate::pipeline::spec::{check_artifact_name, InstanceSpec, PipelineSpec, SourceSpec};
 use json::Json;
 use std::path::Path;
 use std::time::Duration;
@@ -234,6 +234,9 @@ pub struct PipelineConfig {
     pub batch_timeout_us: u64,
     /// RNG seed for workload generation.
     pub seed: u64,
+    /// Acquisition front-end: direct phantom slices, or undersampled
+    /// k-space reconstructed in-pipeline (zero-filled / GRAPPA).
+    pub source: SourceSpec,
     /// Directory containing AOT artifacts (HLO text + weights).
     pub artifact_dir: String,
     /// Run real PJRT inference for every frame (vs timing-only simulation).
@@ -261,6 +264,7 @@ impl Default for PipelineConfig {
             max_batch: 1,
             batch_timeout_us: 500,
             seed: 0xED6E,
+            source: SourceSpec::default(),
             artifact_dir: "artifacts".to_string(),
             execute_numerics: false,
             instances: Vec::new(),
@@ -302,6 +306,7 @@ impl PipelineConfig {
                 "max_batch" => cfg.max_batch = req_u64(val, key)? as usize,
                 "batch_timeout_us" => cfg.batch_timeout_us = req_u64(val, key)?,
                 "seed" => cfg.seed = req_u64(val, key)?,
+                "source" => cfg.source = SourceSpec::from_json(val)?,
                 "artifact_dir" => cfg.artifact_dir = req_str(val, key)?.to_string(),
                 "execute_numerics" => {
                     cfg.execute_numerics = val
@@ -341,6 +346,7 @@ impl PipelineConfig {
         if self.max_batch == 0 {
             return Err(Error::Config("max_batch must be > 0".into()));
         }
+        self.source.validate()?;
         if !self.instances.is_empty() {
             // Surface structural problems (duplicate labels, zero batch)
             // at config-parse time rather than at session build.
@@ -381,6 +387,7 @@ impl PipelineConfig {
         spec.streams = self.streams;
         spec.queue_depth = self.queue_depth;
         spec.seed = self.seed;
+        spec.source = self.source.clone();
         spec
     }
 
@@ -397,6 +404,9 @@ impl PipelineConfig {
             ("max_batch", json::num(self.max_batch as f64)),
             ("batch_timeout_us", json::num(self.batch_timeout_us as f64)),
             ("seed", json::num(self.seed as f64)),
+            // always written (like the other scalars) so provenance
+            // records pin the acquisition mode explicitly
+            ("source", self.source.to_json()),
             ("artifact_dir", json::s(&self.artifact_dir)),
             ("execute_numerics", Json::Bool(self.execute_numerics)),
         ];
@@ -510,6 +520,34 @@ mod tests {
     fn unknown_key_rejected() {
         let err = PipelineConfig::from_json_str(r#"{"framez": 10}"#).unwrap_err();
         assert!(err.to_string().contains("unknown config key"));
+    }
+
+    #[test]
+    fn source_roundtrips_and_lowers_into_spec() {
+        let cfg = PipelineConfig {
+            source: SourceSpec::kspace(4, crate::pipeline::spec::ReconMode::Grappa),
+            ..PipelineConfig::default()
+        };
+        let text = cfg.to_json().to_pretty();
+        let back = PipelineConfig::from_json_str(&text).unwrap();
+        assert_eq!(back.source, cfg.source);
+        assert_eq!(back.spec().source, cfg.source);
+        // byte-identical re-serialization (the --emit-spec reload contract)
+        assert_eq!(back.to_json().to_pretty(), text);
+        // default stays phantom and keeps older configs loading unchanged
+        let old = PipelineConfig::from_json_str(r#"{"frames": 8}"#).unwrap();
+        assert_eq!(old.source, SourceSpec::Phantom);
+    }
+
+    #[test]
+    fn invalid_source_rejected_at_parse() {
+        let err = PipelineConfig::from_json_str(r#"{"source": {"kind": "dicom"}}"#).unwrap_err();
+        assert!(err.to_string().contains("unknown source kind"), "{err}");
+        let err = PipelineConfig::from_json_str(
+            r#"{"source": {"kind": "kspace", "accel": 3, "acs_lines": 16, "coils": 4, "recon": "grappa"}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("divide"), "{err}");
     }
 
     #[test]

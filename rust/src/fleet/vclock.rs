@@ -155,6 +155,11 @@ pub struct VirtualCore {
     rr_next: usize,
     /// Degradation multiplier on every priced duration (>= 1 = throttled).
     slowdown: f64,
+    /// Priced per-frame cost of the spec's k-space recon front-end
+    /// (`0` for phantom sources): an admitted frame's copies cannot start
+    /// dispatch before its reconstruction is done, though the offer time
+    /// (latency epoch) is unchanged.
+    recon_s: f64,
     streams: HashMap<usize, StreamState>,
     ready: BinaryHeap<Queued>,
     admitted: usize,
@@ -234,6 +239,7 @@ impl VirtualCore {
             pending: (0..n).map(|_| Vec::new()).collect(),
             rr_next: 0,
             slowdown: 1.0,
+            recon_s: spec.source.recon_seconds(),
             streams: HashMap::new(),
             ready: BinaryHeap::new(),
             admitted: 0,
@@ -347,7 +353,8 @@ impl VirtualCore {
                 frame_id,
                 class,
                 offered_t: t,
-                admit_t: t,
+                // recon happens between offer and dispatch eligibility
+                admit_t: t + core.recon_s,
             });
             if core.pending[i].len() >= core.max_batch[i] {
                 core.dispatch(i, 0.0);
@@ -589,6 +596,33 @@ mod tests {
             last = Some(d.frame_id);
             last_t = d.t;
             assert!(d.latency_s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn kspace_recon_delays_dispatch_but_not_the_latency_epoch() {
+        use crate::pipeline::spec::{ReconMode, SourceSpec};
+        let mut plain = VirtualCore::new(&rr_pair(), &orin()).unwrap();
+        let ks_spec = PipelineSpec {
+            source: SourceSpec::kspace(4, ReconMode::Grappa),
+            ..rr_pair()
+        };
+        let recon_s = ks_spec.source.recon_seconds();
+        assert!(recon_s > 0.0);
+        let mut ks = VirtualCore::new(&ks_spec, &orin()).unwrap();
+        for f in 0..8u64 {
+            plain.admit(0, f, 0, f as f64 * 0.001);
+            ks.admit(0, f, 0, f as f64 * 0.001);
+        }
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        plain.drain(1.0, &mut a);
+        ks.drain(1.0, &mut b);
+        assert_eq!(a.len(), b.len());
+        for (pa, pb) in a.iter().zip(&b) {
+            // recon shifts every completion by at least its cost, and the
+            // latency ledger (epoch = offer time) charges the wait
+            assert!(pb.t >= pa.t + recon_s * 0.99, "{} vs {}", pb.t, pa.t);
+            assert!(pb.latency_s >= pa.latency_s + recon_s * 0.99);
         }
     }
 

@@ -1,0 +1,252 @@
+//! Complex-valued 2D FFT for the k-space acquisition front-end.
+//!
+//! Dependency-free radix-2 decimation-in-time over split complex planes
+//! (`re`/`im`, row-major). A [`FftPlan`] precomputes the bit-reversal
+//! permutation and the twiddle tables once (angles evaluated in f64, cast
+//! to f32); [`Fft2`] applies it row-wise with an in-place square transpose
+//! between passes. The row pass band-splits over rows through
+//! [`crate::util::parallel::par_chunks2_mut`] with exactly one chunk per
+//! row, so the per-row butterfly order — and therefore the f32 result —
+//! is identical at any thread count and bit-exact against the scalar
+//! oracle in [`crate::imaging::reference`].
+
+// Per-frame acquisition path: a panic here kills the source thread.
+#![deny(clippy::unwrap_used)]
+
+use crate::error::{Error, Result};
+use crate::util::parallel::par_chunks2_mut;
+
+/// Precomputed length-`n` radix-2 plan: bit-reversal permutation plus
+/// half-length twiddle tables (forward sign; the inverse conjugates).
+#[derive(Debug, Clone)]
+pub struct FftPlan {
+    n: usize,
+    rev: Vec<u32>,
+    tw_re: Vec<f32>,
+    tw_im: Vec<f32>,
+}
+
+impl FftPlan {
+    /// Plan a length-`n` transform; `n` must be a power of two ≥ 2.
+    pub fn new(n: usize) -> Result<FftPlan> {
+        if n < 2 || !n.is_power_of_two() {
+            return Err(Error::Imaging(format!(
+                "fft length {n} is not a power of two >= 2"
+            )));
+        }
+        let bits = n.trailing_zeros();
+        let rev = (0..n as u32)
+            .map(|i| i.reverse_bits() >> (32 - bits))
+            .collect();
+        let half = n / 2;
+        let mut tw_re = vec![0.0f32; half];
+        let mut tw_im = vec![0.0f32; half];
+        for (k, (re, im)) in tw_re.iter_mut().zip(tw_im.iter_mut()).enumerate() {
+            let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+            *re = ang.cos() as f32;
+            *im = ang.sin() as f32;
+        }
+        Ok(FftPlan {
+            n,
+            rev,
+            tw_re,
+            tw_im,
+        })
+    }
+
+    /// The planned transform length.
+    pub fn size(&self) -> usize {
+        self.n
+    }
+
+    /// One in-place 1D transform over a length-`n` line. `inverse`
+    /// conjugates the twiddles and applies the 1/n scale.
+    pub fn transform(&self, re: &mut [f32], im: &mut [f32], inverse: bool) {
+        let n = self.n;
+        assert!(re.len() == n && im.len() == n, "fft line length mismatch");
+        for (i, &r) in self.rev.iter().enumerate() {
+            let j = r as usize;
+            if i < j {
+                re.swap(i, j);
+                im.swap(i, j);
+            }
+        }
+        let mut len = 2usize;
+        while len <= n {
+            let half = len / 2;
+            let step = n / len;
+            let mut base = 0usize;
+            while base < n {
+                let mut k = 0usize;
+                for off in 0..half {
+                    let wr = self.tw_re[k];
+                    let wi = if inverse { -self.tw_im[k] } else { self.tw_im[k] };
+                    let a = base + off;
+                    let b = a + half;
+                    let xr = re[b] * wr - im[b] * wi;
+                    let xi = re[b] * wi + im[b] * wr;
+                    re[b] = re[a] - xr;
+                    im[b] = im[a] - xi;
+                    re[a] += xr;
+                    im[a] += xi;
+                    k += step;
+                }
+                base += len;
+            }
+            len *= 2;
+        }
+        if inverse {
+            let s = 1.0 / n as f32;
+            for v in re.iter_mut() {
+                *v *= s;
+            }
+            for v in im.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+}
+
+/// Square 2D FFT/iFFT pair over split complex planes (length `n*n`).
+#[derive(Debug, Clone)]
+pub struct Fft2 {
+    plan: FftPlan,
+    n: usize,
+}
+
+impl Fft2 {
+    /// Plan for `n`×`n` planes; `n` must be a power of two ≥ 2.
+    pub fn new(n: usize) -> Result<Fft2> {
+        Ok(Fft2 {
+            plan: FftPlan::new(n)?,
+            n,
+        })
+    }
+
+    /// Plane side length.
+    pub fn size(&self) -> usize {
+        self.n
+    }
+
+    fn check(&self, re: &[f32], im: &[f32]) -> Result<()> {
+        let want = self.n * self.n;
+        if re.len() != want || im.len() != want {
+            return Err(Error::Imaging(format!(
+                "fft2 plane lengths {}/{} != {want}",
+                re.len(),
+                im.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Forward 2D FFT in place: rows, transpose, rows, transpose back.
+    /// Per-frame: validation + delegation only (loops live in
+    /// [`row_pass`]/[`transpose_square`]).
+    pub fn fft2(&self, re: &mut [f32], im: &mut [f32]) -> Result<()> {
+        self.check(re, im)?;
+        row_pass(&self.plan, re, im, false);
+        transpose_square(self.n, re);
+        transpose_square(self.n, im);
+        row_pass(&self.plan, re, im, false);
+        transpose_square(self.n, re);
+        transpose_square(self.n, im);
+        Ok(())
+    }
+
+    /// Inverse 2D FFT in place; scales by 1/n per axis.
+    pub fn ifft2(&self, re: &mut [f32], im: &mut [f32]) -> Result<()> {
+        self.check(re, im)?;
+        row_pass(&self.plan, re, im, true);
+        transpose_square(self.n, re);
+        transpose_square(self.n, im);
+        row_pass(&self.plan, re, im, true);
+        transpose_square(self.n, re);
+        transpose_square(self.n, im);
+        Ok(())
+    }
+}
+
+/// Row-wise 1D transforms over both planes, one parallel chunk per row:
+/// every row's butterflies run serially inside its chunk, so the result
+/// is bit-identical at any thread count.
+fn row_pass(plan: &FftPlan, re: &mut [f32], im: &mut [f32], inverse: bool) {
+    let n = plan.size();
+    par_chunks2_mut(re, im, n, n, |_row, rr, ir| {
+        plan.transform(rr, ir, inverse);
+    });
+}
+
+/// In-place square transpose. Serial: the O(n²) swap pass is tiny next to
+/// the O(n² log n) butterfly work on either side of it.
+fn transpose_square(n: usize, a: &mut [f32]) {
+    for y in 0..n {
+        for x in (y + 1)..n {
+            a.swap(y * n + x, x * n + y);
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    #[test]
+    fn rejects_non_power_of_two_and_bad_plane_lengths() {
+        assert!(Fft2::new(0).is_err());
+        assert!(Fft2::new(1).is_err());
+        assert!(Fft2::new(48).is_err());
+        let f = Fft2::new(8).unwrap();
+        let mut re = vec![0.0f32; 63];
+        let mut im = vec![0.0f32; 63];
+        assert!(f.fft2(&mut re, &mut im).is_err());
+    }
+
+    #[test]
+    fn impulse_transforms_to_flat_spectrum() {
+        let n = 16usize;
+        let f = Fft2::new(n).unwrap();
+        let mut re = vec![0.0f32; n * n];
+        let mut im = vec![0.0f32; n * n];
+        re[0] = 1.0;
+        f.fft2(&mut re, &mut im).unwrap();
+        for (&r, &i) in re.iter().zip(im.iter()) {
+            assert!((r - 1.0).abs() < 1e-5 && i.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dc_plane_concentrates_at_zero_frequency() {
+        let n = 8usize;
+        let f = Fft2::new(n).unwrap();
+        let mut re = vec![0.5f32; n * n];
+        let mut im = vec![0.0f32; n * n];
+        f.fft2(&mut re, &mut im).unwrap();
+        assert!((re[0] - 0.5 * (n * n) as f32).abs() < 1e-3);
+        let off_dc: f32 = re.iter().skip(1).map(|v| v.abs()).sum();
+        assert!(off_dc < 1e-3, "energy leaked off DC: {off_dc}");
+    }
+
+    #[test]
+    fn fft_ifft_round_trip_is_tight() {
+        let n = 32usize;
+        let f = Fft2::new(n).unwrap();
+        let src: Vec<f32> = (0..n * n)
+            .map(|i| ((i as f32 * 0.37).sin() * 0.5 + 0.5) * 0.9)
+            .collect();
+        let mut re = src.clone();
+        let mut im = vec![0.0f32; n * n];
+        f.fft2(&mut re, &mut im).unwrap();
+        f.ifft2(&mut re, &mut im).unwrap();
+        assert!(max_abs_diff(&re, &src) < 1e-4);
+        assert!(im.iter().all(|v| v.abs() < 1e-4));
+    }
+}

@@ -1,0 +1,413 @@
+//! GRAPPA parallel-imaging reconstruction kernel.
+//!
+//! Fits one complex weight set per row offset `d ∈ 1..R` by least squares
+//! over the auto-calibration rows: every sampled target row whose two
+//! bracketing source rows (`t-d` and `t-d+R`, wrapped) are also sampled
+//! contributes `n` equations relating a 2-row × 3-column × all-coil
+//! source block to the target sample in each coil. The normal equations
+//! accumulate in f64 with a relative Tikhonov ridge and are solved by
+//! complex Gauss–Jordan elimination with partial pivoting; the fitted
+//! weights then synthesize every missing row from its nearest sampled
+//! neighbours. Accumulation band-splits over calibration rows through
+//! [`crate::util::parallel::par_fold`] (band partials fold in band order,
+//! so any fixed thread count is deterministic; `EDGEPIPE_THREADS=1`
+//! reproduces the serial oracle in
+//! [`crate::imaging::reference::grappa_recon`] exactly).
+
+// Per-frame recon path: a panic here kills the source thread.
+#![deny(clippy::unwrap_used)]
+
+use crate::error::{Error, Result};
+use crate::util::parallel::par_fold;
+
+/// Source taps per target sample: 2 rows × 3 columns (× all coils).
+pub const TAPS: usize = 6;
+
+/// Fitted GRAPPA interpolation weights for one `(coils, accel)` geometry.
+///
+/// [`Self::fit`] autocalibrates against one acquired k-space (it may
+/// allocate — the normal-equation scratch is per-band); [`Self::apply`]
+/// is the per-frame synthesis entry point.
+#[derive(Debug, Clone)]
+pub struct GrappaKernel {
+    coils: usize,
+    accel: usize,
+    /// Source-block size: [`TAPS`]` * coils`.
+    dim: usize,
+    /// Per offset `d ∈ 1..accel`: `dim × coils` complex weights,
+    /// interleaved `[re, im]`.
+    weights: Vec<f64>,
+    /// Calibration target rows (scratch reused across fits).
+    rows: Vec<usize>,
+    fitted: bool,
+}
+
+impl GrappaKernel {
+    /// A kernel for `coils` receive channels at acceleration `accel`.
+    pub fn new(coils: usize, accel: usize) -> Result<GrappaKernel> {
+        if coils == 0 || accel == 0 {
+            return Err(Error::Imaging(format!(
+                "grappa kernel needs coils >= 1 and accel >= 1 (got {coils}, {accel})"
+            )));
+        }
+        let dim = TAPS * coils;
+        Ok(GrappaKernel {
+            coils,
+            accel,
+            dim,
+            weights: vec![0.0; accel.saturating_sub(1) * dim * coils * 2],
+            rows: Vec::new(),
+            fitted: false,
+        })
+    }
+
+    /// Receive-channel count.
+    pub fn coils(&self) -> usize {
+        self.coils
+    }
+
+    /// Acceleration factor R.
+    pub fn accel(&self) -> usize {
+        self.accel
+    }
+
+    fn check_planes(&self, n: usize, re: &[f32], im: &[f32]) -> Result<()> {
+        let want = self.coils * n * n;
+        if n == 0 || re.len() != want || im.len() != want {
+            return Err(Error::Imaging(format!(
+                "grappa plane lengths {}/{} != coils {} x {n}x{n}",
+                re.len(),
+                im.len(),
+                self.coils
+            )));
+        }
+        Ok(())
+    }
+
+    fn check_fitted(&self) -> Result<()> {
+        if self.fitted {
+            Ok(())
+        } else {
+            Err(Error::Imaging("grappa apply before fit".into()))
+        }
+    }
+
+    /// Autocalibrate the per-offset weights from the sampled rows of one
+    /// acquired multi-coil k-space (`coils` planes of `n*n`, coil-major;
+    /// `mask[row]` marks sampled rows). `lambda_rel` is the Tikhonov
+    /// ridge relative to the mean Gram diagonal.
+    pub fn fit(
+        &mut self,
+        ks_re: &[f32],
+        ks_im: &[f32],
+        mask: &[bool],
+        lambda_rel: f64,
+    ) -> Result<()> {
+        let n = mask.len();
+        self.check_planes(n, ks_re, ks_im)?;
+        if self.accel < 2 {
+            // Fully sampled: nothing to synthesize, nothing to fit.
+            self.fitted = true;
+            return Ok(());
+        }
+        let (dim, coils, accel) = (self.dim, self.coils, self.accel);
+        let plane = n * n;
+        for d in 1..accel {
+            self.rows.clear();
+            for t in 0..n {
+                let lo = (t + n - d) % n;
+                let hi = (lo + accel) % n;
+                if mask[t] && mask[lo] && mask[hi] {
+                    self.rows.push(t);
+                }
+            }
+            if self.rows.is_empty() {
+                return Err(Error::Imaging(format!(
+                    "grappa fit: no calibration rows for offset {d} at R={accel} \
+                     (widen the ACS band)"
+                )));
+            }
+            // Banded normal-equation accumulation: Gram (dim×dim) and
+            // right-hand side (dim×coils), complex interleaved, in f64.
+            let rows = &self.rows;
+            let acc = par_fold(
+                rows.len(),
+                8,
+                |band| {
+                    let mut g = vec![0.0f64; dim * dim * 2];
+                    let mut r = vec![0.0f64; dim * coils * 2];
+                    let mut blk = vec![0.0f64; dim * 2];
+                    for &t in &rows[band] {
+                        let lo = (t + n - d) % n;
+                        let hi = (lo + accel) % n;
+                        for x in 0..n {
+                            gather_block(ks_re, ks_im, n, coils, [lo, hi], x, &mut blk);
+                            for j in 0..dim {
+                                let (ar, ai) = (blk[j * 2], blk[j * 2 + 1]);
+                                // G[j][k] += conj(blk[j]) · blk[k]
+                                for k in 0..dim {
+                                    let (br, bi) = (blk[k * 2], blk[k * 2 + 1]);
+                                    let gi = (j * dim + k) * 2;
+                                    g[gi] += ar * br + ai * bi;
+                                    g[gi + 1] += ar * bi - ai * br;
+                                }
+                                // r[j][c] += conj(blk[j]) · tgt[c]
+                                for c in 0..coils {
+                                    let ti = c * plane + t * n + x;
+                                    let (tr, tim) = (ks_re[ti] as f64, ks_im[ti] as f64);
+                                    let ri = (j * coils + c) * 2;
+                                    r[ri] += ar * tr + ai * tim;
+                                    r[ri + 1] += ar * tim - ai * tr;
+                                }
+                            }
+                        }
+                    }
+                    (g, r)
+                },
+                |(mut ga, mut ra), (gb, rb)| {
+                    for (a, b) in ga.iter_mut().zip(&gb) {
+                        *a += b;
+                    }
+                    for (a, b) in ra.iter_mut().zip(&rb) {
+                        *a += b;
+                    }
+                    (ga, ra)
+                },
+            );
+            let Some((mut gram, mut rhs)) = acc else {
+                return Err(Error::Imaging("grappa fit: empty calibration".into()));
+            };
+            // Relative ridge: λ = lambda_rel · tr(G).re / dim.
+            let mut trace = 0.0f64;
+            for j in 0..dim {
+                trace += gram[(j * dim + j) * 2];
+            }
+            let lam = lambda_rel * trace / dim as f64;
+            for j in 0..dim {
+                gram[(j * dim + j) * 2] += lam;
+            }
+            solve_complex(&mut gram, &mut rhs, dim, coils)?;
+            let w0 = (d - 1) * dim * coils * 2;
+            self.weights[w0..w0 + dim * coils * 2].copy_from_slice(&rhs);
+        }
+        self.fitted = true;
+        Ok(())
+    }
+
+    /// Synthesize every missing row in place from the fitted weights.
+    /// Per-frame: validation + delegation only (loops live in
+    /// [`apply_offsets`]).
+    pub fn apply(&self, ks_re: &mut [f32], ks_im: &mut [f32], mask: &[bool]) -> Result<()> {
+        let n = mask.len();
+        self.check_planes(n, ks_re, ks_im)?;
+        self.check_fitted()?;
+        if self.accel < 2 {
+            return Ok(());
+        }
+        apply_offsets(self, ks_re, ks_im, mask);
+        Ok(())
+    }
+}
+
+/// Gather the 2-row × 3-column × all-coil complex source block around
+/// column `x` into `blk` (f64 interleaved), in the fit/apply tap order:
+/// row-major over `rows`, then `dx ∈ {-1, 0, +1}` (wrapped), then coils.
+fn gather_block(
+    ks_re: &[f32],
+    ks_im: &[f32],
+    n: usize,
+    coils: usize,
+    rows: [usize; 2],
+    x: usize,
+    blk: &mut [f64],
+) {
+    let plane = n * n;
+    let mut j = 0usize;
+    for row in rows {
+        for dx in [n - 1, 0, 1] {
+            let xc = (x + dx) % n;
+            for c in 0..coils {
+                let idx = c * plane + row * n + xc;
+                blk[j] = ks_re[idx] as f64;
+                blk[j + 1] = ks_im[idx] as f64;
+                j += 2;
+            }
+        }
+    }
+}
+
+/// Fill the missing rows: for every sampled row `s` and offset `d`, the
+/// row `s+d` (wrapped) is synthesized from the blocks of `s` and `s+R`
+/// when it is unsampled and `s+R` is sampled. Sources are always sampled
+/// rows, so in-place filling never reads a synthesized value.
+fn apply_offsets(k: &GrappaKernel, ks_re: &mut [f32], ks_im: &mut [f32], mask: &[bool]) {
+    let n = mask.len();
+    let (coils, dim, accel) = (k.coils, k.dim, k.accel);
+    let plane = n * n;
+    let mut blk = vec![0.0f64; dim * 2];
+    let mut acc = vec![0.0f64; coils * 2];
+    for d in 1..accel {
+        let w0 = (d - 1) * dim * coils * 2;
+        for s in 0..n {
+            if !mask[s] {
+                continue;
+            }
+            let m = (s + d) % n;
+            if mask[m] {
+                continue;
+            }
+            let hi = (s + accel) % n;
+            if !mask[hi] {
+                continue;
+            }
+            for x in 0..n {
+                gather_block(ks_re, ks_im, n, coils, [s, hi], x, &mut blk);
+                for a in acc.iter_mut() {
+                    *a = 0.0;
+                }
+                for j in 0..dim {
+                    let (br, bi) = (blk[j * 2], blk[j * 2 + 1]);
+                    for c in 0..coils {
+                        let wi = w0 + (j * coils + c) * 2;
+                        let (wr, wim) = (k.weights[wi], k.weights[wi + 1]);
+                        acc[c * 2] += br * wr - bi * wim;
+                        acc[c * 2 + 1] += br * wim + bi * wr;
+                    }
+                }
+                for c in 0..coils {
+                    let idx = c * plane + m * n + x;
+                    ks_re[idx] = acc[c * 2] as f32;
+                    ks_im[idx] = acc[c * 2 + 1] as f32;
+                }
+            }
+        }
+    }
+}
+
+/// In-place complex Gauss–Jordan with partial pivoting: solves
+/// `gram · W = rhs` (`dim×dim` and `dim×coils` complex interleaved),
+/// leaving `W` in `rhs`. Errors on a singular calibration system.
+fn solve_complex(gram: &mut [f64], rhs: &mut [f64], dim: usize, coils: usize) -> Result<()> {
+    for col in 0..dim {
+        let mut pivot = col;
+        let mut best = 0.0f64;
+        for r in col..dim {
+            let gi = (r * dim + col) * 2;
+            let mag = gram[gi] * gram[gi] + gram[gi + 1] * gram[gi + 1];
+            if mag > best {
+                best = mag;
+                pivot = r;
+            }
+        }
+        if best <= f64::MIN_POSITIVE {
+            return Err(Error::Imaging(format!(
+                "grappa fit: singular calibration system at column {col}"
+            )));
+        }
+        if pivot != col {
+            swap_rows(gram, dim * 2, pivot, col);
+            swap_rows(rhs, coils * 2, pivot, col);
+        }
+        let pi = (col * dim + col) * 2;
+        let (pr, pim) = (gram[pi], gram[pi + 1]);
+        let inv = 1.0 / (pr * pr + pim * pim);
+        let (sr, si) = (pr * inv, -pim * inv);
+        scale_row(gram, dim, col, sr, si);
+        scale_row(rhs, coils, col, sr, si);
+        for r in 0..dim {
+            if r == col {
+                continue;
+            }
+            let fi = (r * dim + col) * 2;
+            let (fr, fim) = (gram[fi], gram[fi + 1]);
+            if fr == 0.0 && fim == 0.0 {
+                continue;
+            }
+            axpy_row(gram, dim, r, col, fr, fim);
+            axpy_row(rhs, coils, r, col, fr, fim);
+        }
+    }
+    Ok(())
+}
+
+/// Swap flat rows `r0` and `r1` of a matrix with `stride` scalars/row.
+fn swap_rows(a: &mut [f64], stride: usize, r0: usize, r1: usize) {
+    for k in 0..stride {
+        a.swap(r0 * stride + k, r1 * stride + k);
+    }
+}
+
+/// Complex row scale: row `r` ×= `(sr + i·si)` (`cols` complex entries).
+fn scale_row(a: &mut [f64], cols: usize, r: usize, sr: f64, si: f64) {
+    for k in 0..cols {
+        let i = (r * cols + k) * 2;
+        let (xr, xi) = (a[i], a[i + 1]);
+        a[i] = xr * sr - xi * si;
+        a[i + 1] = xr * si + xi * sr;
+    }
+}
+
+/// Complex row update: row `r` -= `(fr + i·fi)` × row `src`.
+fn axpy_row(a: &mut [f64], cols: usize, r: usize, src: usize, fr: f64, fi: f64) {
+    for k in 0..cols {
+        let s = (src * cols + k) * 2;
+        let (xr, xi) = (a[s], a[s + 1]);
+        let di = (r * cols + k) * 2;
+        a[di] -= xr * fr - xi * fi;
+        a[di + 1] -= xr * fi + xi * fr;
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_degenerate_geometry_and_unfitted_apply() {
+        assert!(GrappaKernel::new(0, 2).is_err());
+        assert!(GrappaKernel::new(4, 0).is_err());
+        let k = GrappaKernel::new(2, 2).unwrap();
+        let mut re = vec![0.0f32; 2 * 16];
+        let mut im = vec![0.0f32; 2 * 16];
+        let mask = vec![true; 4];
+        assert!(k.apply(&mut re, &mut im, &mask).is_err(), "apply before fit");
+    }
+
+    #[test]
+    fn all_zero_calibration_is_reported_singular() {
+        let n = 8usize;
+        let mut k = GrappaKernel::new(2, 2).unwrap();
+        let re = vec![0.0f32; 2 * n * n];
+        let im = vec![0.0f32; 2 * n * n];
+        let mask = vec![true; n];
+        assert!(k.fit(&re, &im, &mask, 1e-4).is_err());
+    }
+
+    #[test]
+    fn solve_recovers_a_known_complex_system() {
+        // gram = diag(2, 1+i); rhs column = (4, 2) → W = (2, (2)·(1+i)⁻¹)
+        let dim = 2;
+        let mut gram = vec![0.0f64; dim * dim * 2];
+        gram[0] = 2.0; // (0,0) = 2
+        gram[(dim + 1) * 2] = 1.0; // (1,1) = 1+i
+        gram[(dim + 1) * 2 + 1] = 1.0;
+        let mut rhs = vec![4.0, 0.0, 2.0, 0.0];
+        solve_complex(&mut gram, &mut rhs, dim, 1).unwrap();
+        assert!((rhs[0] - 2.0).abs() < 1e-12 && rhs[1].abs() < 1e-12);
+        assert!((rhs[2] - 1.0).abs() < 1e-12 && (rhs[3] + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r1_fit_and_apply_are_identity() {
+        let n = 8usize;
+        let mut k = GrappaKernel::new(1, 1).unwrap();
+        let src: Vec<f32> = (0..n * n).map(|i| i as f32 * 0.01).collect();
+        let mut re = src.clone();
+        let mut im = vec![0.0f32; n * n];
+        let mask = vec![true; n];
+        k.fit(&re, &im, &mask, 1e-4).unwrap();
+        k.apply(&mut re, &mut im, &mask).unwrap();
+        assert_eq!(re, src);
+    }
+}

@@ -7,14 +7,23 @@
 //! and the classical medical-imaging algorithms of Table I
 //! ([`median`], [`histeq`], [`sobel`], [`canny`], [`lzw`], [`dct`]).
 //!
+//! The k-space acquisition front-end lives here too: a dependency-free
+//! complex 2D FFT pair ([`fft`]), multi-coil k-space synthesis and
+//! undersampling ([`kspace`]), and GRAPPA parallel-imaging reconstruction
+//! ([`grappa`]) — the accelerated-MRI front door the pipeline's
+//! `source: kspace` mode runs before the model chain.
+//!
 //! The kernels are the optimized (row-parallel, border-split) versions;
 //! [`reference`] keeps the original scalar loops as equivalence oracles
 //! for the property tests and as bench baselines.
 
 pub mod canny;
 pub mod dct;
+pub mod fft;
+pub mod grappa;
 pub mod histeq;
 pub mod image;
+pub mod kspace;
 pub mod lzw;
 pub mod median;
 pub mod metrics;

@@ -268,6 +268,268 @@ pub fn dct_image(img: &Image) -> Image {
     out
 }
 
+/// Scalar 1D radix-2 FFT line — the same butterfly DAG and f64→f32
+/// twiddle tables as `imaging::fft::FftPlan::transform`, with the tables
+/// rebuilt on every call. `tests/prop_kspace.rs` asserts the planned
+/// transform matches this bit-exactly at any thread count.
+fn fft_line(re: &mut [f32], im: &mut [f32], inverse: bool) {
+    let n = re.len();
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = ((i as u32).reverse_bits() >> (32 - bits)) as usize;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let mut tw_re = vec![0.0f32; n / 2];
+    let mut tw_im = vec![0.0f32; n / 2];
+    for k in 0..n / 2 {
+        let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+        tw_re[k] = ang.cos() as f32;
+        tw_im[k] = ang.sin() as f32;
+    }
+    let mut len = 2usize;
+    while len <= n {
+        let half = len / 2;
+        let step = n / len;
+        let mut base = 0usize;
+        while base < n {
+            let mut k = 0usize;
+            for off in 0..half {
+                let wr = tw_re[k];
+                let wi = if inverse { -tw_im[k] } else { tw_im[k] };
+                let a = base + off;
+                let b = a + half;
+                let xr = re[b] * wr - im[b] * wi;
+                let xi = re[b] * wi + im[b] * wr;
+                re[b] = re[a] - xr;
+                im[b] = im[a] - xi;
+                re[a] += xr;
+                im[a] += xi;
+                k += step;
+            }
+            base += len;
+        }
+        len *= 2;
+    }
+    if inverse {
+        let s = 1.0 / n as f32;
+        for v in re.iter_mut() {
+            *v *= s;
+        }
+        for v in im.iter_mut() {
+            *v *= s;
+        }
+    }
+}
+
+fn fft2_pass(n: usize, re: &mut [f32], im: &mut [f32], inverse: bool) -> Result<()> {
+    if n < 2 || !n.is_power_of_two() || re.len() != n * n || im.len() != n * n {
+        return Err(Error::Imaging(format!(
+            "reference fft2: bad geometry n={n}, planes {}/{}",
+            re.len(),
+            im.len()
+        )));
+    }
+    let transpose = |a: &mut [f32]| {
+        for y in 0..n {
+            for x in (y + 1)..n {
+                a.swap(y * n + x, x * n + y);
+            }
+        }
+    };
+    for _ in 0..2 {
+        for (rr, ir) in re.chunks_mut(n).zip(im.chunks_mut(n)) {
+            fft_line(rr, ir, inverse);
+        }
+        transpose(re);
+        transpose(im);
+    }
+    Ok(())
+}
+
+/// Scalar 2D FFT oracle — serial rows/transpose passes, bit-identical to
+/// `imaging::fft::Fft2::fft2`.
+pub fn fft2(n: usize, re: &mut [f32], im: &mut [f32]) -> Result<()> {
+    fft2_pass(n, re, im, false)
+}
+
+/// Scalar inverse 2D FFT oracle, bit-identical to
+/// `imaging::fft::Fft2::ifft2`.
+pub fn ifft2(n: usize, re: &mut [f32], im: &mut [f32]) -> Result<()> {
+    fft2_pass(n, re, im, true)
+}
+
+type C = (f64, f64);
+
+fn cadd(a: C, b: C) -> C {
+    (a.0 + b.0, a.1 + b.1)
+}
+
+fn csub(a: C, b: C) -> C {
+    (a.0 - b.0, a.1 - b.1)
+}
+
+fn cmul(a: C, b: C) -> C {
+    (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+}
+
+fn conj(a: C) -> C {
+    (a.0, -a.1)
+}
+
+/// Scalar GRAPPA oracle: serial normal-equation fit (per offset `d`) and
+/// missing-row synthesis over one undersampled multi-coil k-space
+/// (`coils` split planes of `n*n`, coil-major). Returns the synthesized
+/// planes; geometry and tap order mirror `imaging::grappa::GrappaKernel`.
+pub fn grappa_recon(
+    n: usize,
+    coils: usize,
+    accel: usize,
+    ks_re: &[f32],
+    ks_im: &[f32],
+    mask: &[bool],
+    lambda_rel: f64,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let plane = n * n;
+    if coils == 0 || accel == 0 || mask.len() != n || ks_re.len() != coils * plane {
+        return Err(Error::Imaging("reference grappa: bad geometry".into()));
+    }
+    let mut out_re = ks_re.to_vec();
+    let mut out_im = ks_im.to_vec();
+    if accel < 2 {
+        return Ok((out_re, out_im));
+    }
+    let dim = 6 * coils;
+    let at = |c: usize, row: usize, x: usize| -> C {
+        let i = c * plane + row * n + x;
+        (ks_re[i] as f64, ks_im[i] as f64)
+    };
+    let block = |rows: [usize; 2], x: usize| -> Vec<C> {
+        let mut blk = Vec::with_capacity(dim);
+        for row in rows {
+            for dx in [n - 1, 0, 1] {
+                let xc = (x + dx) % n;
+                for c in 0..coils {
+                    blk.push(at(c, row, xc));
+                }
+            }
+        }
+        blk
+    };
+    for d in 1..accel {
+        // Normal equations over every calibratable (t, x) sample.
+        let mut gram = vec![(0.0, 0.0); dim * dim];
+        let mut rhs = vec![(0.0, 0.0); dim * coils];
+        let mut count = 0usize;
+        for t in 0..n {
+            let lo = (t + n - d) % n;
+            let hi = (lo + accel) % n;
+            if !(mask[t] && mask[lo] && mask[hi]) {
+                continue;
+            }
+            for x in 0..n {
+                let blk = block([lo, hi], x);
+                for j in 0..dim {
+                    let a = conj(blk[j]);
+                    for k in 0..dim {
+                        gram[j * dim + k] = cadd(gram[j * dim + k], cmul(a, blk[k]));
+                    }
+                    for c in 0..coils {
+                        rhs[j * coils + c] = cadd(rhs[j * coils + c], cmul(a, at(c, t, x)));
+                    }
+                }
+                count += 1;
+            }
+        }
+        if count == 0 {
+            return Err(Error::Imaging(format!(
+                "reference grappa: no calibration rows for offset {d}"
+            )));
+        }
+        let trace: f64 = (0..dim).map(|j| gram[j * dim + j].0).sum();
+        let lam = lambda_rel * trace / dim as f64;
+        for j in 0..dim {
+            gram[j * dim + j].0 += lam;
+        }
+        // Complex Gauss–Jordan with partial pivoting; solution in rhs.
+        for col in 0..dim {
+            let pivot = (col..dim)
+                .max_by(|&a, &b| {
+                    let ma = gram[a * dim + col];
+                    let mb = gram[b * dim + col];
+                    (ma.0 * ma.0 + ma.1 * ma.1).total_cmp(&(mb.0 * mb.0 + mb.1 * mb.1))
+                })
+                .unwrap_or(col);
+            let p = gram[pivot * dim + col];
+            if p.0 * p.0 + p.1 * p.1 <= f64::MIN_POSITIVE {
+                return Err(Error::Imaging(format!(
+                    "reference grappa: singular system at column {col}"
+                )));
+            }
+            if pivot != col {
+                for k in 0..dim {
+                    gram.swap(pivot * dim + k, col * dim + k);
+                }
+                for c in 0..coils {
+                    rhs.swap(pivot * coils + c, col * coils + c);
+                }
+            }
+            let inv = 1.0 / (p.0 * p.0 + p.1 * p.1);
+            let s = (p.0 * inv, -p.1 * inv);
+            for k in 0..dim {
+                gram[col * dim + k] = cmul(gram[col * dim + k], s);
+            }
+            for c in 0..coils {
+                rhs[col * coils + c] = cmul(rhs[col * coils + c], s);
+            }
+            for r in 0..dim {
+                if r == col {
+                    continue;
+                }
+                let f = gram[r * dim + col];
+                if f == (0.0, 0.0) {
+                    continue;
+                }
+                for k in 0..dim {
+                    gram[r * dim + k] = csub(gram[r * dim + k], cmul(f, gram[col * dim + k]));
+                }
+                for c in 0..coils {
+                    rhs[r * coils + c] = csub(rhs[r * coils + c], cmul(f, rhs[col * coils + c]));
+                }
+            }
+        }
+        // Synthesize the missing rows at this offset from sampled rows.
+        for s in 0..n {
+            if !mask[s] {
+                continue;
+            }
+            let m = (s + d) % n;
+            if mask[m] {
+                continue;
+            }
+            let hi = (s + accel) % n;
+            if !mask[hi] {
+                continue;
+            }
+            for x in 0..n {
+                let blk = block([s, hi], x);
+                for c in 0..coils {
+                    let mut acc = (0.0, 0.0);
+                    for j in 0..dim {
+                        acc = cadd(acc, cmul(blk[j], rhs[j * coils + c]));
+                    }
+                    let i = c * plane + m * n + x;
+                    out_re[i] = acc.0 as f32;
+                    out_im[i] = acc.1 as f32;
+                }
+            }
+        }
+    }
+    Ok((out_re, out_im))
+}
+
 /// Scalar LZW compress — dictionary keyed by owned byte strings, cloning
 /// the current sequence on every input byte (the allocation the optimized
 /// path removes; output must stay bit-identical).

@@ -71,6 +71,28 @@
 //! this contract (and the per-engine utilization figures) in a
 //! machine-readable `BENCH_hotpath.json`.
 //!
+//! ## The k-space acquisition front-end
+//!
+//! The paper's pipeline starts from an already-reconstructed image;
+//! accelerated MRI starts earlier, at undersampled k-space. The spec's
+//! [`pipeline::spec::SourceSpec`] selects the acquisition front door:
+//! `Phantom` (the default synthetic slices) or `Kspace`, which weights
+//! each slice by SoS-normalized multi-coil sensitivity maps, transforms
+//! it per coil with the dependency-free radix-2 [`imaging::fft::Fft2`],
+//! keeps every R-th phase-encode row plus a wrapped auto-calibration
+//! band ([`imaging::kspace::Acquisition`]), and reconstructs the image
+//! the model chain consumes — zero-filled, or GRAPPA missing-row
+//! synthesis via [`imaging::grappa::GrappaKernel`]. The source scores
+//! each reconstruction against the fully-sampled slice through the same
+//! [`pipeline::metrics::FidelitySink`] the serving workers use, so the
+//! report's `recon` section is directly comparable to the per-instance
+//! fidelity columns; the placement planner prices the per-frame recon
+//! cost ([`pipeline::spec::SourceSpec::recon_seconds`]) into admission
+//! pacing and the latency budget, and the fleet virtual clock delays
+//! dispatch eligibility by the same figure. `tests/prop_kspace.rs` pins
+//! the FFT against its scalar oracle bit-exactly and the GRAPPA >
+//! zero-filled fidelity ordering at R = 2 and 4.
+//!
 //! ## Batch run vs serve loop
 //!
 //! There are two ways to drive the coordinator. A **batch run**

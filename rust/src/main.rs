@@ -20,7 +20,7 @@ use edgepipe::hw::{self, EngineKind};
 use edgepipe::models::pix2pix::{generator, Pix2PixConfig};
 use edgepipe::models::yolov8::{yolov8, YoloConfig};
 use edgepipe::obs::{ChromeTrace, ObsHub};
-use edgepipe::pipeline::SimBackend;
+use edgepipe::pipeline::{ReconMode, SimBackend, SourceSpec};
 use edgepipe::placement::{self, PlacementRequest};
 use edgepipe::sched::haxconn;
 use edgepipe::serve::{self, ArrivalProcess, ClientSpec, QosClass, ReplanPolicy, ServeOptions};
@@ -83,12 +83,16 @@ USAGE:
   edgepipe timeline [--variant original|cropping|convolution] [--with-yolo]
   edgepipe run [--config FILE] [--variant V] [--workload W] [--frames N]
                [--streams N] [--artifacts DIR] [--seed N] [--backend pjrt|sim]
+               [--source phantom|kspace] [--accel N] [--acs-lines N]
+               [--coils N] [--recon zero-filled|grappa] [--json FILE]
                [--trace-out FILE] [--metrics-out FILE]
   edgepipe serve [--config FILE] [--workload W] [--variant V] [--sim]
                  [--duration-frames N] [--clients N]
                  [--profile poisson|burst|ramp] [--rate-fps X]
                  [--qos name:prio[:rate_fps[:deadline_ms]],...]
                  [--no-replan] [--replan-every N] [--min-gain X]
+                 [--source phantom|kspace] [--accel N] [--acs-lines N]
+                 [--coils N] [--recon zero-filled|grappa]
                  [--time-scale X] [--seed N] [--json FILE]
                  [--trace-out FILE] [--metrics-out FILE]
   edgepipe fleet [--nodes N] [--mix orin,xavier,...] [--clients N]
@@ -100,6 +104,8 @@ USAGE:
                  [--trace-out FILE] [--metrics-out FILE]
   edgepipe plan [--device orin|xavier] [--gans N] [--no-yolo]
                 [--gan-engines gpu,dla|dla] [--frames N] [--seed N]
+                [--source phantom|kspace] [--accel N] [--acs-lines N]
+                [--coils N] [--recon zero-filled|grappa]
                 [--latency-budget-ms X] [--top K] [--emit-spec FILE]
                 [--json FILE]
   edgepipe check-dla [--variant V]
@@ -110,6 +116,13 @@ config file with an `instances: [...]` array for arbitrary instance mixes
 (`engine`/`engine_index` pin placement — e.g. dla/0 and dla/1), and
 `--backend sim` to serve from the latency model with no artifacts.
 Workloads: gan-standalone, gan+yolo-naive, two-gans, gan+yolo, dual-gan.
+`--source kspace` prepends the accelerated-MRI acquisition front-end on
+run/serve/plan: each slice is acquired as R-fold undersampled multi-coil
+k-space (--accel, --acs-lines, --coils) and reconstructed in-pipeline
+(--recon zero-filled|grappa) before the model chain; the report gains a
+`recon` section with per-frame recon time and PSNR/SSIM against the
+fully-sampled slice, and `plan` prices the recon stage into admission
+pacing and the latency budget.
 Engine placement is enforced by the serving arbiter: same-unit instances
 serialize, split units contend; per-engine utilization is reported.
 
@@ -184,6 +197,68 @@ fn variant_of(args: &Args) -> Result<GanVariant> {
     args.opt("variant")
         .map(GanVariant::parse)
         .unwrap_or(Ok(GanVariant::Cropping))
+}
+
+/// Apply the acquisition-source flags (`--source phantom|kspace`,
+/// `--accel N`, `--acs-lines N`, `--coils N`,
+/// `--recon zero-filled|grappa`) onto a spec/config/request source.
+/// `--source kspace` starts from the standard R=4 GRAPPA shape; the
+/// geometry flags then refine it (and also refine a kspace source loaded
+/// from a config file).
+fn apply_source_flags(source: &mut SourceSpec, args: &Args) -> Result<()> {
+    if let Some(kind) = args.opt("source") {
+        *source = match kind {
+            "phantom" => SourceSpec::Phantom,
+            "kspace" => SourceSpec::kspace(4, ReconMode::Grappa),
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown --source `{other}` (known: phantom, kspace)"
+                )));
+            }
+        };
+    }
+    if let SourceSpec::Kspace {
+        accel,
+        acs_lines,
+        coils,
+        recon,
+    } = source
+    {
+        if let Some(v) = args.opt("accel") {
+            *accel = v.parse().map_err(|_| Error::Config("bad --accel".into()))?;
+        }
+        if let Some(v) = args.opt("acs-lines") {
+            *acs_lines = v
+                .parse()
+                .map_err(|_| Error::Config("bad --acs-lines".into()))?;
+        }
+        if let Some(v) = args.opt("coils") {
+            *coils = v.parse().map_err(|_| Error::Config("bad --coils".into()))?;
+        }
+        if let Some(v) = args.opt("recon") {
+            *recon = ReconMode::parse(v)?;
+        }
+    } else if ["accel", "acs-lines", "coils", "recon"]
+        .iter()
+        .any(|k| args.opt(k).is_some())
+    {
+        return Err(Error::Config(
+            "--accel/--acs-lines/--coils/--recon need a kspace source \
+             (pass --source kspace or a config with `source: {\"kind\": \"kspace\", ...}`)"
+                .into(),
+        ));
+    }
+    Ok(())
+}
+
+/// One-line recon front-end summary for `run`/`serve` stdout.
+fn print_recon(r: &edgepipe::pipeline::ReconReport) {
+    println!(
+        "  recon {:<11} R={} acs={} coils={}  {:>6.2} ms/frame  psnr {:>6.2}  ssim {:>6.2}  \
+         ({} scored, {} skipped)",
+        r.recon, r.accel, r.acs_lines, r.coils, r.recon_ms_per_frame, r.psnr_mean,
+        r.ssim_pct_mean, r.scored, r.skipped
+    );
 }
 
 /// One hub serves both observability flags: either `--trace-out` or
@@ -281,6 +356,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             if let Some(seed) = args.opt("seed") {
                 cfg.seed = seed.parse().map_err(|_| Error::Config("bad --seed".into()))?;
             }
+            apply_source_flags(&mut cfg.source, args)?;
             cfg.validate()?;
             eprintln!("config: {}", cfg.to_json().to_compact());
             let mut builder = PipelineBuilder::from_config(&cfg);
@@ -340,6 +416,9 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     e.idle_gap_ms_p99
                 );
             }
+            if let Some(r) = &rep.recon {
+                print_recon(r);
+            }
             if let Some(st) = &rep.stages {
                 println!("  stages: {}", st.summary());
             }
@@ -379,6 +458,10 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     write_metrics(path, h)?;
                 }
             }
+            if let Some(path) = args.opt("json") {
+                std::fs::write(path, rep.to_json().to_pretty())?;
+                eprintln!("wrote {path}");
+            }
             Ok(())
         }
         "serve" => {
@@ -395,6 +478,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             if let Some(seed) = args.opt("seed") {
                 cfg.seed = seed.parse().map_err(|_| Error::Config("bad --seed".into()))?;
             }
+            apply_source_flags(&mut cfg.source, args)?;
             cfg.validate()?;
             let (soc, version) = match cfg.device {
                 DeviceKind::Orin => (hw::orin(), DlaVersion::V2),
@@ -511,6 +595,9 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 rep.windows.len(),
                 rep.replans.len()
             );
+            if let Some(r) = &rep.recon {
+                print_recon(r);
+            }
             for ev in &rep.replans {
                 println!(
                     "  re-plan @frame {} ({:.2}s): {} -> {}  [{}] predicted {:.1} -> {:.1} fps",
@@ -836,6 +923,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             if let Some(seed) = args.opt("seed") {
                 req.seed = seed.parse().map_err(|_| Error::Config("bad --seed".into()))?;
             }
+            apply_source_flags(&mut req.source, args)?;
             let top: usize = args
                 .opt("top")
                 .map(|s| s.parse().map_err(|_| Error::Config("bad --top".into())))
@@ -851,6 +939,14 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 outcome.rejected.len(),
                 outcome.pruned
             );
+            if outcome.eval.recon_ms_per_frame > 0.0 {
+                println!(
+                    "recon front-end [{}]: {:.2} ms/frame priced into admission pacing \
+                     and the latency budget",
+                    req.source.kind(),
+                    outcome.eval.recon_ms_per_frame
+                );
+            }
             println!(
                 "{:<4} {:<44} {:>9} {:>10} {:>6}  units (predicted util%)",
                 "rank", "candidate", "fps", "idle ms", "trans"

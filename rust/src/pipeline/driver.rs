@@ -13,7 +13,9 @@
 //! Per-frame memory traffic is what eats the paper's 150 FPS margin, so
 //! the hot path never copies a pixel plane:
 //!
-//! * **source** — [`super::source::PhantomSource`] fills buffers drawn
+//! * **source** — a [`super::source::FrameSource`] (phantom, or the
+//!   k-space recon front-end selected by the spec's
+//!   [`super::spec::SourceSpec`]) fills buffers drawn
 //!   from a shared [`super::plane::PlanePool`] and seals them into
 //!   `Arc`-shared [`super::plane::FramePlane`]s; once the workers release
 //!   a frame, its buffers park back on the pool and are reused, so the
@@ -70,11 +72,11 @@ use super::backend::InferenceBackend;
 use super::batcher::{collect_batch_into, BatchEnd};
 use super::engines::{EngineArbiter, EngineSnapshot};
 use super::frame::Frame;
-use super::metrics::{InstanceSnapshot, Metrics};
+use super::metrics::{FidelitySink, InstanceSnapshot, Metrics};
 use super::plane::PlanePool;
 use super::router::Router;
-use super::source::PhantomSource;
-use super::spec::PipelineSpec;
+use super::source::{FrameSource, ReconReport, ReconStats};
+use super::spec::{PipelineSpec, SourceSpec};
 use crate::config::json::{arr, num, obj, s, Json};
 use crate::config::PipelineConfig;
 use crate::error::{Error, Result};
@@ -124,6 +126,10 @@ pub struct PipelineReport {
     /// attached — `--trace-out`/`--metrics-out` or
     /// [`crate::session::Session::run_observed`]).
     pub stages: Option<StageBreakdown>,
+    /// K-space recon front-end summary (recon time, PSNR/SSIM vs the
+    /// fully-sampled slice), present only when the spec's source is
+    /// `kspace`.
+    pub recon: Option<ReconReport>,
 }
 
 impl PipelineReport {
@@ -182,6 +188,9 @@ impl PipelineReport {
         ];
         if let Some(st) = &self.stages {
             pairs.push(("stages", st.to_json()));
+        }
+        if let Some(r) = &self.recon {
+            pairs.push(("recon", r.to_json()));
         }
         obj(pairs)
     }
@@ -319,7 +328,9 @@ impl StreamCore {
                             }
                             if inst.score_fidelity && should_score(frame.id) {
                                 match &frame.gt_mri {
-                                    Some(gt) => record_fidelity(&metrics, idx, frame, gt, out),
+                                    Some(gt) => {
+                                        record_fidelity(metrics.as_ref(), idx, frame, gt, out)
+                                    }
                                     None => metrics.record_fidelity_skipped(idx),
                                 }
                             }
@@ -497,13 +508,15 @@ impl StreamCore {
             dropped: dropped_total.load(Ordering::Relaxed),
             shed: metrics.shed_total(),
             stages: None,
+            recon: None,
         })
     }
 }
 
 /// Execute `spec` on `backend`: the fixed-frame batch path behind
 /// [`crate::session::Session::run`] — stand a [`StreamCore`] up, stream
-/// exactly `spec.frames` phantom frames through it, drain, and report.
+/// exactly `spec.frames` frames from the spec's source (phantom, or the
+/// k-space recon front-end) through it, drain, and report.
 pub(crate) fn execute(
     spec: &PipelineSpec,
     backend: &Arc<dyn InferenceBackend>,
@@ -525,21 +538,28 @@ pub(crate) fn execute_observed(
     // to) one plane pool, so frame synthesis recycles the buffers the
     // workers release. The requested frame count is distributed exactly:
     // the first `frames % streams` streams carry one extra frame, so an
-    // indivisible count never silently under-produces.
+    // indivisible count never silently under-produces. A kspace source
+    // additionally shares one recon accumulator across all streams, which
+    // the report folds into `recon`.
     let pool = PlanePool::default();
+    let recon_stats = match &spec.source {
+        SourceSpec::Kspace { .. } => Some(Arc::new(ReconStats::default())),
+        SourceSpec::Phantom => None,
+    };
     let base = spec.frames / spec.streams;
     let extra = spec.frames % spec.streams;
-    let mut sources: Vec<PhantomSource> = (0..spec.streams)
+    let mut sources: Vec<FrameSource> = (0..spec.streams)
         .map(|st| {
-            PhantomSource::new(
-                crate::imaging::phantom::PhantomConfig::default(),
+            FrameSource::for_spec(
+                &spec.source,
                 spec.seed,
                 st,
                 base + usize::from(st < extra),
+                pool.clone(),
+                recon_stats.clone(),
             )
-            .with_pool(pool.clone())
         })
-        .collect();
+        .collect::<Result<Vec<_>>>()?;
     'outer: loop {
         let mut all_done = true;
         for src in sources.iter_mut() {
@@ -558,21 +578,25 @@ pub(crate) fn execute_observed(
     }
     let mut rep = core.finish()?;
     rep.stages = stages.map(|acc| acc.breakdown());
+    rep.recon = recon_stats.and_then(|st| st.report(&spec.source));
     Ok(rep)
 }
 
-/// Score one sampled frame's reconstruction fidelity. Unscorable samples
-/// (gt/output shape mismatch, unbuildable images) are *counted* as
-/// `fidelity_skipped` instead of vanishing silently.
+/// Score one sampled frame's reconstruction fidelity into any
+/// [`FidelitySink`] — the worker loop scores GAN output into [`Metrics`],
+/// the k-space source scores recon output into
+/// [`super::source::ReconStats`], both through this one path. Unscorable
+/// samples (gt/output shape mismatch, unbuildable images) are *counted*
+/// via [`FidelitySink::fidelity_skipped`] instead of vanishing silently.
 pub(crate) fn record_fidelity(
-    metrics: &Metrics,
+    sink: &dyn FidelitySink,
     idx: usize,
     frame: &Frame,
     gt: &[f32],
     out: &[f32],
 ) {
     if gt.len() != frame.numel() || out.len() != frame.numel() {
-        metrics.record_fidelity_skipped(idx);
+        sink.fidelity_skipped(idx);
         return;
     }
     // [-1, 1] model range -> [0, 1] image range
@@ -581,11 +605,11 @@ pub(crate) fn record_fidelity(
     let b = Image::from_mapped(frame.width, frame.height, out, to01);
     if let (Ok(a), Ok(b)) = (a, b) {
         if let Ok(f) = fidelity(&a, &b) {
-            metrics.record_fidelity(idx, f.psnr, f.ssim_pct);
+            sink.fidelity(idx, f.psnr, f.ssim_pct);
             return;
         }
     }
-    metrics.record_fidelity_skipped(idx);
+    sink.fidelity_skipped(idx);
 }
 
 #[cfg(test)]
@@ -759,6 +783,7 @@ mod tests {
             dropped: 0,
             shed: 0,
             stages: None,
+            recon: None,
         };
         let txt = rep.to_json().to_compact();
         Json::parse(&txt).unwrap();

@@ -34,6 +34,31 @@ struct InstanceCounters {
     fidelity_skipped: usize,
 }
 
+/// One sink for online fidelity (PSNR / SSIM-percent) samples. The batch
+/// driver's worker loop, the serve loop, and the k-space recon front-end
+/// all score through [`crate::pipeline::driver::record_fidelity`] into
+/// some implementor of this trait — [`Metrics`] (per-instance GAN-output
+/// fidelity) and [`crate::pipeline::source::ReconStats`] (recon-stage
+/// fidelity) — instead of each owning a private scoring path.
+pub trait FidelitySink: Send + Sync {
+    /// Record one scored sample for `slot` (the instance index; sinks
+    /// that are not instance-addressed ignore it).
+    fn fidelity(&self, slot: usize, psnr: f64, ssim_pct: f64);
+    /// Record a sample that could not be scored (mismatched shapes,
+    /// missing ground truth, degenerate images).
+    fn fidelity_skipped(&self, slot: usize);
+}
+
+impl FidelitySink for Metrics {
+    fn fidelity(&self, slot: usize, psnr: f64, ssim_pct: f64) {
+        self.record_fidelity(slot, psnr, ssim_pct);
+    }
+
+    fn fidelity_skipped(&self, slot: usize) {
+        self.record_fidelity_skipped(slot);
+    }
+}
+
 /// Shared metrics hub.
 #[derive(Debug)]
 pub struct Metrics {

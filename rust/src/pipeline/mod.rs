@@ -40,5 +40,7 @@ pub use batcher::BatchEnd;
 pub use driver::{run_pipeline, CompletionSink, PipelineReport};
 pub use engines::{DispatchProfile, EngineArbiter, EngineSnapshot};
 pub use frame::Frame;
+pub use metrics::FidelitySink;
 pub use plane::{FramePlane, PlanePool};
-pub use spec::{InstanceSpec, PipelineSpec};
+pub use source::{FrameSource, KspaceSource, PhantomSource, ReconReport, ReconStats};
+pub use spec::{InstanceSpec, PipelineSpec, ReconMode, SourceSpec, KSPACE_SLICE};

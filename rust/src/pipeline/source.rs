@@ -2,7 +2,16 @@
 //!
 //! [`PhantomSource`] synthesizes paired CT/MRI phantoms (the stand-in for
 //! the CT scanner feed — DESIGN.md §2) so the pipeline can be driven and
-//! *scored* without external data. Sources are plain iterators; the driver
+//! *scored* without external data. [`KspaceSource`] prepends the
+//! accelerated-MRI acquisition front-end: each phantom slice is acquired
+//! as undersampled multi-coil k-space
+//! ([`crate::imaging::kspace::Acquisition`]) and reconstructed in-pipeline
+//! (zero-filled or GRAPPA) before the model chain sees it, with recon
+//! time and PSNR/SSIM-vs-fully-sampled accumulating into a shared
+//! [`ReconStats`] through the same [`FidelitySink`] scoring path the
+//! workers use. [`FrameSource`] dispatches over the two behind one
+//! iterator, built from a spec's [`SourceSpec`] by
+//! [`FrameSource::for_spec`]. Sources are plain iterators; the driver
 //! moves them onto their own thread.
 //!
 //! Plane buffers are drawn from a [`PlanePool`]: once the pipeline's
@@ -13,10 +22,17 @@
 //! shares one pool across all sources ([`PhantomSource::with_pool`]).
 
 use super::frame::Frame;
+use super::metrics::FidelitySink;
 use super::plane::PlanePool;
-use crate::obs::stages::StageStamps;
+use super::spec::{ReconMode, SourceSpec, KSPACE_SLICE};
+use crate::config::json::{num, obj, s, Json};
+use crate::error::{Error, Result};
+use crate::imaging::kspace::Acquisition;
 use crate::imaging::phantom::{paired_sample, PhantomConfig};
+use crate::obs::stages::StageStamps;
+use crate::util::lock::relock;
 use crate::util::rng::Rng;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Synthetic CT stream with ground truth attached.
@@ -79,6 +95,273 @@ impl Iterator for PhantomSource {
     }
 }
 
+/// Synthetic CT stream acquired through the accelerated-MRI k-space
+/// front-end: each phantom slice becomes undersampled multi-coil k-space
+/// and is reconstructed (zero-filled or GRAPPA) *before* it enters the
+/// model chain, so the downstream GAN sees recon output, not the clean
+/// slice. Recon wall time and fidelity-vs-fully-sampled accumulate into
+/// the shared [`ReconStats`] when one is attached.
+pub struct KspaceSource {
+    cfg: PhantomConfig,
+    rng: Rng,
+    stream: usize,
+    next_id: u64,
+    remaining: usize,
+    pool: PlanePool,
+    acq: Acquisition,
+    recon: ReconMode,
+    recon_buf: Vec<f32>,
+    stats: Option<Arc<ReconStats>>,
+}
+
+impl KspaceSource {
+    /// Build a k-space source for one stream. `source` must be a
+    /// [`SourceSpec::Kspace`]; geometry is validated up front so the
+    /// per-frame path cannot fail on sizes.
+    pub fn new(source: &SourceSpec, seed: u64, stream: usize, frames: usize) -> Result<Self> {
+        let SourceSpec::Kspace { accel, acs_lines, coils, recon } = source else {
+            return Err(Error::Config(
+                "KspaceSource needs a `kspace` source spec".into(),
+            ));
+        };
+        source.validate()?;
+        let acq = Acquisition::new(KSPACE_SLICE, *accel, *acs_lines, *coils)?;
+        Ok(KspaceSource {
+            cfg: PhantomConfig {
+                size: KSPACE_SLICE,
+                ..PhantomConfig::default()
+            },
+            rng: Rng::new(seed ^ (stream as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            stream,
+            next_id: 0,
+            remaining: frames,
+            pool: PlanePool::default(),
+            acq,
+            recon: *recon,
+            recon_buf: vec![0.0; KSPACE_SLICE * KSPACE_SLICE],
+            stats: None,
+        })
+    }
+
+    /// Draw plane buffers from (and return them to) a shared pool instead
+    /// of this source's private one.
+    pub fn with_pool(mut self, pool: PlanePool) -> Self {
+        self.pool = pool;
+        self
+    }
+
+    /// Attach the shared recon accumulator (the driver hands the same one
+    /// to every stream; the run report aggregates across all of them).
+    pub fn with_stats(mut self, stats: Option<Arc<ReconStats>>) -> Self {
+        self.stats = stats;
+        self
+    }
+}
+
+impl Iterator for KspaceSource {
+    type Item = Frame;
+
+    fn next(&mut self) -> Option<Frame> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let s = paired_sample(&self.cfg, &mut self.rng);
+        let t0 = Instant::now();
+        // Geometry was validated at construction, so these cannot fail on
+        // sizes; a GRAPPA fit can still be singular on degenerate data —
+        // end the stream rather than panic.
+        self.acq.acquire(&s.ct).ok()?;
+        match self.recon {
+            ReconMode::ZeroFilled => self.acq.recon_zero_filled(&mut self.recon_buf).ok()?,
+            ReconMode::Grappa => self.acq.recon_grappa(&mut self.recon_buf).ok()?,
+        }
+        let recon_s = t0.elapsed().as_secs_f64();
+        // scale [0,1] -> [-1,1] (model input convention), into recycled
+        // buffers — the frame carries the *reconstruction*, not the clean
+        // slice, while the MRI ground truth is untouched so downstream
+        // GAN fidelity stays comparable with the phantom source.
+        let mut data = self.pool.acquire(self.recon_buf.len());
+        data.extend(self.recon_buf.iter().map(|&v| v * 2.0 - 1.0));
+        let mut gt = self.pool.acquire(s.mri.data.len());
+        gt.extend(s.mri.data.iter().map(|&v| v * 2.0 - 1.0));
+        let n = self.acq.size();
+        let frame = Frame {
+            id: self.next_id,
+            stream: self.stream,
+            data: self.pool.seal(data),
+            width: n,
+            height: n,
+            gt_mri: Some(self.pool.seal(gt)),
+            admitted: Instant::now(),
+            stamps: StageStamps::default(),
+        };
+        if let Some(stats) = &self.stats {
+            stats.record_frame(recon_s);
+            if super::driver::should_score(frame.id) {
+                // model-range view of the fully-sampled slice, scored
+                // through the same helper the pipeline workers use
+                let gt_model: Vec<f32> = self
+                    .acq
+                    .ground_truth()
+                    .iter()
+                    .map(|&v| v * 2.0 - 1.0)
+                    .collect();
+                super::driver::record_fidelity(stats.as_ref(), 0, &frame, &gt_model, &frame.data);
+            }
+        }
+        self.next_id += 1;
+        Some(frame)
+    }
+}
+
+#[derive(Debug, Default)]
+struct ReconAccum {
+    frames: usize,
+    scored: usize,
+    skipped: usize,
+    psnr_count: usize,
+    psnr_sum: f64,
+    ssim_pct_sum: f64,
+    recon_s_total: f64,
+}
+
+/// Thread-safe accumulator for the recon front-end: per-frame recon wall
+/// time plus the [`FidelitySink`] samples scored against the
+/// fully-sampled ground truth. One instance is shared by every stream of
+/// a run; [`ReconStats::report`] folds it into the run report.
+#[derive(Debug, Default)]
+pub struct ReconStats {
+    inner: Mutex<ReconAccum>,
+}
+
+impl ReconStats {
+    /// Charge one reconstructed frame's wall time.
+    pub fn record_frame(&self, recon_s: f64) {
+        let mut a = relock(&self.inner);
+        a.frames += 1;
+        a.recon_s_total += recon_s;
+    }
+
+    /// Fold the accumulated counters into a report. Returns `None` for a
+    /// phantom source (there is no recon stage to report on).
+    pub fn report(&self, source: &SourceSpec) -> Option<ReconReport> {
+        let SourceSpec::Kspace { accel, acs_lines, coils, recon } = source else {
+            return None;
+        };
+        let a = relock(&self.inner);
+        Some(ReconReport {
+            recon: recon.name().to_string(),
+            accel: *accel,
+            acs_lines: *acs_lines,
+            coils: *coils,
+            frames: a.frames,
+            scored: a.scored,
+            skipped: a.skipped,
+            psnr_mean: a.psnr_sum / a.psnr_count.max(1) as f64,
+            ssim_pct_mean: a.ssim_pct_sum / a.scored.max(1) as f64,
+            recon_ms_per_frame: a.recon_s_total / a.frames.max(1) as f64 * 1e3,
+        })
+    }
+}
+
+impl FidelitySink for ReconStats {
+    fn fidelity(&self, _slot: usize, psnr: f64, ssim_pct: f64) {
+        let mut a = relock(&self.inner);
+        a.scored += 1;
+        a.ssim_pct_sum += ssim_pct;
+        // an exact recon (R=1 fast path) has infinite PSNR; keep it out
+        // of the mean the same way Metrics does
+        if psnr.is_finite() {
+            a.psnr_count += 1;
+            a.psnr_sum += psnr;
+        }
+    }
+
+    fn fidelity_skipped(&self, _slot: usize) {
+        relock(&self.inner).skipped += 1;
+    }
+}
+
+/// Per-run summary of the k-space recon front-end, attached to batch and
+/// serve reports when the source is `kspace`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReconReport {
+    pub recon: String,
+    pub accel: usize,
+    pub acs_lines: usize,
+    pub coils: usize,
+    pub frames: usize,
+    pub scored: usize,
+    pub skipped: usize,
+    pub psnr_mean: f64,
+    pub ssim_pct_mean: f64,
+    pub recon_ms_per_frame: f64,
+}
+
+impl ReconReport {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("recon", s(&self.recon)),
+            ("accel", num(self.accel as f64)),
+            ("acs_lines", num(self.acs_lines as f64)),
+            ("coils", num(self.coils as f64)),
+            ("frames", num(self.frames as f64)),
+            ("scored", num(self.scored as f64)),
+            ("skipped", num(self.skipped as f64)),
+            ("psnr_mean", num(self.psnr_mean)),
+            ("ssim_pct_mean", num(self.ssim_pct_mean)),
+            ("recon_ms_per_frame", num(self.recon_ms_per_frame)),
+        ])
+    }
+}
+
+/// The pluggable front door: one iterator over whichever acquisition mode
+/// the spec's [`SourceSpec`] selects. The driver and serve loop build
+/// streams exclusively through [`FrameSource::for_spec`], so adding an
+/// acquisition mode means adding a variant here — not editing every
+/// stream-construction site.
+pub enum FrameSource {
+    Phantom(PhantomSource),
+    Kspace(Box<KspaceSource>),
+}
+
+impl FrameSource {
+    /// Build the source `spec.source` asks for, for one stream. `stats`
+    /// is the shared recon accumulator (ignored by phantom sources).
+    pub fn for_spec(
+        source: &SourceSpec,
+        seed: u64,
+        stream: usize,
+        frames: usize,
+        pool: PlanePool,
+        stats: Option<Arc<ReconStats>>,
+    ) -> Result<FrameSource> {
+        match source {
+            SourceSpec::Phantom => Ok(FrameSource::Phantom(
+                PhantomSource::new(PhantomConfig::default(), seed, stream, frames)
+                    .with_pool(pool),
+            )),
+            SourceSpec::Kspace { .. } => Ok(FrameSource::Kspace(Box::new(
+                KspaceSource::new(source, seed, stream, frames)?
+                    .with_pool(pool)
+                    .with_stats(stats),
+            ))),
+        }
+    }
+}
+
+impl Iterator for FrameSource {
+    type Item = Frame;
+
+    fn next(&mut self) -> Option<Frame> {
+        match self {
+            FrameSource::Phantom(src) => src.next(),
+            FrameSource::Kspace(src) => src.next(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,5 +404,106 @@ mod tests {
         assert_eq!(pool.parked(), 2);
         let _f1 = src.next().unwrap(); // reuses both buffers
         assert_eq!(pool.parked(), 0);
+    }
+
+    #[test]
+    fn kspace_source_produces_scored_frames() {
+        let spec = SourceSpec::kspace(4, ReconMode::Grappa);
+        let stats = Arc::new(ReconStats::default());
+        let src = KspaceSource::new(&spec, 7, 0, 5)
+            .unwrap()
+            .with_stats(Some(stats.clone()));
+        let frames: Vec<Frame> = src.collect();
+        assert_eq!(frames.len(), 5);
+        assert_eq!(frames[0].width, KSPACE_SLICE);
+        assert!(frames[0].gt_mri.is_some());
+        let mn = frames[0].data.iter().copied().fold(f32::INFINITY, f32::min);
+        let mx = frames[0].data.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        assert!(mn >= -1.0 && mx <= 1.0, "recon frames must stay in model range");
+        let rep = stats.report(&spec).unwrap();
+        assert_eq!(rep.frames, 5);
+        // SCORE_EVERY = 4 gates fidelity: frames 0 and 4 score
+        assert_eq!(rep.scored + rep.skipped, 2);
+        assert!(rep.recon_ms_per_frame > 0.0);
+        assert_eq!(rep.recon, "grappa");
+        assert_eq!(rep.accel, 4);
+    }
+
+    #[test]
+    fn kspace_source_rejects_phantom_spec() {
+        assert!(KspaceSource::new(&SourceSpec::Phantom, 1, 0, 1).is_err());
+    }
+
+    #[test]
+    fn frame_source_dispatches_on_spec() {
+        let pool = PlanePool::default();
+        let ph = FrameSource::for_spec(&SourceSpec::Phantom, 1, 0, 2, pool.clone(), None)
+            .unwrap();
+        assert!(matches!(ph, FrameSource::Phantom(_)));
+        assert_eq!(ph.count(), 2);
+        let ks = FrameSource::for_spec(
+            &SourceSpec::kspace(2, ReconMode::ZeroFilled),
+            1,
+            0,
+            2,
+            pool,
+            None,
+        )
+        .unwrap();
+        assert!(matches!(ks, FrameSource::Kspace(_)));
+        assert_eq!(ks.count(), 2);
+    }
+
+    #[test]
+    fn recon_report_handles_infinite_psnr_and_empty_runs() {
+        let stats = ReconStats::default();
+        let spec = SourceSpec::kspace(1, ReconMode::ZeroFilled);
+        // empty run: no NaNs in the report
+        let rep = stats.report(&spec).unwrap();
+        assert_eq!(rep.frames, 0);
+        assert!(rep.psnr_mean.is_finite() && rep.recon_ms_per_frame == 0.0);
+        // R=1 exact recon scores infinite PSNR — kept out of the mean
+        stats.fidelity(0, f64::INFINITY, 100.0);
+        stats.fidelity(0, 30.0, 90.0);
+        stats.fidelity_skipped(0);
+        let rep = stats.report(&spec).unwrap();
+        assert_eq!(rep.scored, 2);
+        assert_eq!(rep.skipped, 1);
+        assert_eq!(rep.psnr_mean, 30.0);
+        assert_eq!(rep.ssim_pct_mean, 95.0);
+        // phantom source has no recon stage to report
+        assert!(stats.report(&SourceSpec::Phantom).is_none());
+    }
+
+    #[test]
+    fn recon_report_serializes_every_counter() {
+        let rep = ReconReport {
+            recon: "grappa".to_string(),
+            accel: 4,
+            acs_lines: 16,
+            coils: 4,
+            frames: 8,
+            scored: 2,
+            skipped: 0,
+            psnr_mean: 31.5,
+            ssim_pct_mean: 88.0,
+            recon_ms_per_frame: 9.4,
+        };
+        let j = rep.to_json();
+        for key in [
+            "recon",
+            "accel",
+            "acs_lines",
+            "coils",
+            "frames",
+            "scored",
+            "skipped",
+            "psnr_mean",
+            "ssim_pct_mean",
+            "recon_ms_per_frame",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(j.get("accel").and_then(Json::as_u64), Some(4));
     }
 }

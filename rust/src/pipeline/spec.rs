@@ -56,6 +56,230 @@ pub const ARTIFACT_CATALOG: [(&str, ArtifactGraphFn); 4] = [
 /// turn into unbounded work/allocation.
 pub const MAX_BATCH_LIMIT: usize = 1024;
 
+/// Slice side length of the k-space acquisition front-end — fixed to the
+/// phantom generator's default size, so `source: kspace` feeds the model
+/// chain frames of the exact shape `source: phantom` does.
+pub const KSPACE_SLICE: usize = 64;
+
+/// How an undersampled k-space acquisition is reconstructed into the
+/// image the GAN→YOLO chain consumes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReconMode {
+    /// Zero-filled inverse FFT baseline (missing rows left at zero,
+    /// scaled by `n / sampled_rows` to restore the DC amplitude).
+    ZeroFilled,
+    /// GRAPPA: per-offset kernel fit over the ACS band, missing rows
+    /// synthesized from their sampled neighbours before the inverse FFT.
+    Grappa,
+}
+
+impl ReconMode {
+    /// Parse a config/CLI recon-mode name.
+    pub fn parse(text: &str) -> Result<ReconMode> {
+        match text {
+            "zero-filled" => Ok(ReconMode::ZeroFilled),
+            "grappa" => Ok(ReconMode::Grappa),
+            other => Err(Error::Config(format!(
+                "unknown recon mode `{other}` (known: zero-filled, grappa)"
+            ))),
+        }
+    }
+
+    /// Canonical config/CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReconMode::ZeroFilled => "zero-filled",
+            ReconMode::Grappa => "grappa",
+        }
+    }
+}
+
+/// Where a pipeline's frames come from — sources are pluggable the way
+/// backends are. `Phantom` is the paper's starting point (already-formed
+/// images); `Kspace` prepends the accelerated-MRI acquisition front-end:
+/// multi-coil k-space synthesis, R-fold row undersampling with an ACS
+/// band, and an in-pipeline reconstruction stage whose output feeds the
+/// model chain (and whose PSNR/SSIM against the fully-sampled ground
+/// truth reports through the same fidelity path as the GAN's).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum SourceSpec {
+    /// Paired CT/MRI phantom generator (the default).
+    #[default]
+    Phantom,
+    /// Undersampled multi-coil k-space acquisition of the phantom slice.
+    Kspace {
+        /// Acceleration factor R: every R-th phase-encode row is sampled.
+        accel: usize,
+        /// Auto-calibration band width (fully-sampled rows around DC).
+        acs_lines: usize,
+        /// Synthetic receive-coil count.
+        coils: usize,
+        /// Pre-model reconstruction mode.
+        recon: ReconMode,
+    },
+}
+
+impl SourceSpec {
+    /// A GRAPPA k-space source with the standard calibration shape
+    /// (16 ACS lines, 4 coils).
+    pub fn kspace(accel: usize, recon: ReconMode) -> SourceSpec {
+        SourceSpec::Kspace {
+            accel,
+            acs_lines: 16,
+            coils: 4,
+            recon,
+        }
+    }
+
+    /// Canonical kind name (`phantom` / `kspace`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SourceSpec::Phantom => "phantom",
+            SourceSpec::Kspace { .. } => "kspace",
+        }
+    }
+
+    /// Config-schema JSON (the `source: {...}` object); inverse of
+    /// [`Self::from_json`].
+    pub fn to_json(&self) -> Json {
+        match self {
+            SourceSpec::Phantom => obj(vec![("kind", s("phantom"))]),
+            SourceSpec::Kspace {
+                accel,
+                acs_lines,
+                coils,
+                recon,
+            } => obj(vec![
+                ("kind", s("kspace")),
+                ("accel", num(*accel as f64)),
+                ("acs_lines", num(*acs_lines as f64)),
+                ("coils", num(*coils as f64)),
+                ("recon", s(recon.name())),
+            ]),
+        }
+    }
+
+    /// Parse the `source: {...}` config object. Unknown kinds and missing
+    /// or malformed fields fail with field-level messages.
+    pub fn from_json(value: &Json) -> Result<SourceSpec> {
+        let kind = value
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Config("source needs a string `kind` field".into()))?;
+        match kind {
+            "phantom" => Ok(SourceSpec::Phantom),
+            "kspace" => {
+                let field = |name: &str| -> Result<usize> {
+                    value
+                        .get(name)
+                        .and_then(Json::as_u64)
+                        .map(|v| v as usize)
+                        .ok_or_else(|| {
+                            Error::Config(format!(
+                                "kspace source needs a non-negative integer `{name}`"
+                            ))
+                        })
+                };
+                let recon = value
+                    .get("recon")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| {
+                        Error::Config("kspace source needs a string `recon` field".into())
+                    })?;
+                Ok(SourceSpec::Kspace {
+                    accel: field("accel")?,
+                    acs_lines: field("acs_lines")?,
+                    coils: field("coils")?,
+                    recon: ReconMode::parse(recon)?,
+                })
+            }
+            other => Err(Error::Config(format!(
+                "unknown source kind `{other}` (known: phantom, kspace)"
+            ))),
+        }
+    }
+
+    /// Structural validation of the acquisition geometry (the imaging
+    /// layer re-checks at construction; this catches it at spec level
+    /// with config-grade messages).
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            SourceSpec::Phantom => Ok(()),
+            SourceSpec::Kspace {
+                accel,
+                acs_lines,
+                coils,
+                ..
+            } => {
+                if *accel == 0 || KSPACE_SLICE % *accel != 0 {
+                    return Err(Error::Config(format!(
+                        "accel {accel} must be >= 1 and divide the {KSPACE_SLICE}-row slice"
+                    )));
+                }
+                if *acs_lines > KSPACE_SLICE {
+                    return Err(Error::Config(format!(
+                        "acs_lines {acs_lines} exceeds the {KSPACE_SLICE} phase-encode rows"
+                    )));
+                }
+                if *accel > 1 && *acs_lines < accel + 2 {
+                    return Err(Error::Config(format!(
+                        "acs_lines {acs_lines} too narrow to calibrate at R={accel} \
+                         (need at least {})",
+                        accel + 2
+                    )));
+                }
+                if *coils == 0 || *coils > 8 {
+                    return Err(Error::Config(format!(
+                        "coils {coils} out of range 1..=8"
+                    )));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Closed-form per-frame reconstruction cost estimate in seconds —
+    /// the dispatch-profile analogue for the acquisition front-end, so
+    /// the placement scorer and the fleet virtual clock price the recon
+    /// stage instead of treating accelerated sources as free. Counts the
+    /// per-coil inverse FFT + RSS combine, plus the GRAPPA per-offset
+    /// normal-equation fit and missing-row synthesis, at an effective
+    /// 2 GFLOP/s edge-CPU throughput.
+    pub fn recon_seconds(&self) -> f64 {
+        const EDGE_FLOPS_PER_S: f64 = 2.0e9;
+        match self {
+            SourceSpec::Phantom => 0.0,
+            SourceSpec::Kspace {
+                accel,
+                acs_lines,
+                coils,
+                recon,
+            } => {
+                if *accel <= 1 {
+                    // Fully sampled: the bit-exact copy fast path.
+                    return 0.0;
+                }
+                let n = KSPACE_SLICE as f64;
+                let c = *coils as f64;
+                let r = *accel as f64;
+                // Per-coil forward synthesis + inverse recon FFT
+                // (~5 n² log2(n²) flops each) and the RSS combine.
+                let mut flops = 2.0 * c * 5.0 * n * n * (n * n).log2() + 4.0 * c * n * n;
+                if matches!(recon, ReconMode::Grappa) {
+                    let dim = 6.0 * c;
+                    let acs = *acs_lines as f64;
+                    // Fit: Gram/RHS accumulation over ~acs·n samples plus
+                    // the dense solve, once per offset.
+                    flops += (r - 1.0) * (acs * n * dim * dim * 8.0 + dim * dim * dim * 8.0);
+                    // Apply: every missing row re-synthesized per coil.
+                    flops += n * (1.0 - 1.0 / r) * n * c * dim * 8.0;
+                }
+                flops / EDGE_FLOPS_PER_S
+            }
+        }
+    }
+}
+
 /// Comma-separated catalog names (for error messages).
 pub fn known_artifact_names() -> String {
     ARTIFACT_CATALOG
@@ -194,6 +418,9 @@ pub struct PipelineSpec {
     pub queue_depth: usize,
     /// RNG seed for workload generation.
     pub seed: u64,
+    /// Where frames come from (phantom generator or the undersampled
+    /// k-space acquisition front-end).
+    pub source: SourceSpec,
 }
 
 impl Default for PipelineSpec {
@@ -205,6 +432,7 @@ impl Default for PipelineSpec {
             streams: 1,
             queue_depth: 4,
             seed: 0xED6E,
+            source: SourceSpec::Phantom,
         }
     }
 }
@@ -222,6 +450,10 @@ impl PipelineSpec {
             ("streams", num(self.streams as f64)),
             ("queue_depth", num(self.queue_depth as f64)),
             ("seed", num(self.seed as f64)),
+            // Always written (even for the default phantom source) so an
+            // emitted spec names its source explicitly and the roundtrip
+            // is byte-deterministic.
+            ("source", self.source.to_json()),
             (
                 "instances",
                 arr(self.instances.iter().map(|i| i.to_json()).collect()),
@@ -289,6 +521,7 @@ impl PipelineSpec {
         if self.queue_depth == 0 {
             return Err(Error::Pipeline("queue_depth must be > 0".into()));
         }
+        self.source.validate()?;
         Ok(())
     }
 }
@@ -381,6 +614,12 @@ mod tests {
         spec.frames = 96;
         spec.streams = 2;
         spec.seed = 42;
+        spec.source = SourceSpec::Kspace {
+            accel: 4,
+            acs_lines: 16,
+            coils: 4,
+            recon: ReconMode::Grappa,
+        };
         let text = spec.to_json().to_pretty();
         let back = PipelineSpec::from_json_str(&text).unwrap();
         assert_eq!(back.instances.len(), 2);
@@ -388,6 +627,7 @@ mod tests {
         assert_eq!(back.frames, 96);
         assert_eq!(back.streams, 2);
         assert_eq!(back.seed, 42);
+        assert_eq!(back.source, spec.source);
         assert_eq!(back.instances[0].batch.max_batch, 8);
         assert_eq!(back.instances[1].engine, EngineKind::Dla);
         assert_eq!(back.instances[1].engine_index, 1);
@@ -401,6 +641,76 @@ mod tests {
                 .to_pretty(),
             back.to_json().to_pretty()
         );
+    }
+
+    #[test]
+    fn source_spec_json_roundtrips_and_rejects_unknowns() {
+        for src in [
+            SourceSpec::Phantom,
+            SourceSpec::kspace(2, ReconMode::ZeroFilled),
+            SourceSpec::Kspace {
+                accel: 8,
+                acs_lines: 24,
+                coils: 6,
+                recon: ReconMode::Grappa,
+            },
+        ] {
+            let back = SourceSpec::from_json(&src.to_json()).unwrap();
+            assert_eq!(back, src);
+        }
+        let err = SourceSpec::from_json(&Json::parse(r#"{"kind":"dicom"}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown source kind `dicom`"), "{err}");
+        assert!(err.contains("phantom, kspace"), "{err}");
+        let err = SourceSpec::from_json(
+            &Json::parse(r#"{"kind":"kspace","accel":4,"acs_lines":16,"coils":4,"recon":"cnn"}"#)
+                .unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unknown recon mode `cnn`"), "{err}");
+        let err = SourceSpec::from_json(&Json::parse(r#"{"kind":"kspace","accel":4}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("acs_lines"), "{err}");
+    }
+
+    #[test]
+    fn kspace_source_geometry_is_validated() {
+        let mut spec = two_instance_spec();
+        spec.source = SourceSpec::kspace(4, ReconMode::Grappa);
+        spec.validate().unwrap();
+        spec.source = SourceSpec::kspace(3, ReconMode::Grappa); // 64 % 3 != 0
+        assert!(spec.validate().is_err());
+        spec.source = SourceSpec::Kspace {
+            accel: 8,
+            acs_lines: 4, // narrower than R+2
+            coils: 4,
+            recon: ReconMode::Grappa,
+        };
+        assert!(spec.validate().is_err());
+        spec.source = SourceSpec::Kspace {
+            accel: 4,
+            acs_lines: 16,
+            coils: 9, // out of range
+            recon: ReconMode::ZeroFilled,
+        };
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn recon_pricing_orders_modes_sensibly() {
+        assert_eq!(SourceSpec::Phantom.recon_seconds(), 0.0);
+        assert_eq!(SourceSpec::kspace(1, ReconMode::Grappa).recon_seconds(), 0.0);
+        let zf = SourceSpec::kspace(4, ReconMode::ZeroFilled).recon_seconds();
+        let gr = SourceSpec::kspace(4, ReconMode::Grappa).recon_seconds();
+        assert!(zf > 0.0 && gr > zf, "zf {zf} vs grappa {gr}");
+        // More offsets to fit at higher R: GRAPPA cost grows with R.
+        let gr8 = SourceSpec::kspace(8, ReconMode::Grappa).recon_seconds();
+        assert!(gr8 > gr);
+        // Sub-second per frame at every supported geometry.
+        assert!(gr8 < 1.0);
     }
 
     #[test]

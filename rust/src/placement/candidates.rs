@@ -96,6 +96,7 @@ impl Candidate {
             route: self.route,
             frames: req.frames,
             seed: req.seed,
+            source: req.source.clone(),
             ..PipelineSpec::default()
         }
     }

@@ -47,7 +47,7 @@ use crate::config::GanVariant;
 use crate::dla::DlaVersion;
 use crate::error::Result;
 use crate::hw::{EngineKind, SocSpec};
-use crate::pipeline::spec::PipelineSpec;
+use crate::pipeline::spec::{PipelineSpec, SourceSpec};
 
 /// What to place: the workload shape, the device, and the constraints.
 #[derive(Debug, Clone)]
@@ -78,6 +78,10 @@ pub struct PlacementRequest {
     /// Seed carried into the emitted spec (same request + seed ⇒
     /// byte-identical spec JSON).
     pub seed: u64,
+    /// Acquisition source carried into every emitted spec. A `kspace`
+    /// source also prices its per-frame recon cost into admission pacing
+    /// and the latency budget (see [`crate::placement::score`]).
+    pub source: SourceSpec,
     /// Candidates fully scored on the greedy/beam path.
     pub beam_width: usize,
     /// Above this many candidates the search switches from exhaustive to
@@ -99,6 +103,7 @@ impl PlacementRequest {
             frames: 64,
             latency_budget_ms: None,
             seed: 0xED6E,
+            source: SourceSpec::default(),
             beam_width: 32,
             max_candidates: 512,
         }
@@ -146,6 +151,7 @@ impl PlacementRequest {
         req.with_yolo = with_yolo;
         req.variants = variants;
         req.seed = spec.seed;
+        req.source = spec.source.clone();
         Some(req)
     }
 }
@@ -237,6 +243,7 @@ mod tests {
         assert!(req.with_yolo);
         assert_eq!(req.variants, vec![GanVariant::Cropping]);
         assert_eq!(req.seed, spec.seed);
+        assert_eq!(req.source, spec.source);
         // a detector-only spec has nothing for the planner to place
         let yolo_only = PipelineSpec {
             instances: vec![InstanceSpec::new("y", "yolo_lite")],

@@ -76,6 +76,11 @@ pub struct PlacementEval {
     pub idle_gap_total_ms: f64,
     /// Total occupant switches (ranking tiebreak #2).
     pub transitions: usize,
+    /// Priced per-frame cost of the k-space recon front-end (`0` for
+    /// phantom sources) — already folded into `latency_ms` and the
+    /// admission cadence, surfaced so `plan`/`report` show what the
+    /// acquisition stage costs at the requested R.
+    pub recon_ms_per_frame: f64,
     pub units: Vec<UnitEval>,
     /// The dry run's dispatch spans, same schema as the serving
     /// timelines ([`crate::sim::timeline::Span`]) so planner predictions
@@ -95,6 +100,7 @@ impl PlacementEval {
             ("latency_ms", num(self.latency_ms)),
             ("idle_gap_total_ms", num(self.idle_gap_total_ms)),
             ("transitions", num(self.transitions as f64)),
+            ("recon_ms_per_frame", num(self.recon_ms_per_frame)),
             (
                 "units",
                 arr(self
@@ -280,7 +286,11 @@ pub fn evaluate(spec: &PipelineSpec, soc: &SocSpec, frames: usize) -> Result<Pla
             profiles[d.instance].dispatch_duration(d.len).as_secs_f64();
     }
     let bottleneck = busy_bound.iter().cloned().fold(0.0f64, f64::max);
-    let admit_interval = bottleneck / frames as f64;
+    // A k-space source reconstructs each frame before it can be admitted:
+    // when the recon stage is slower than the serving bottleneck it paces
+    // admission instead (phantom sources price at zero and change nothing).
+    let recon_s = spec.source.recon_seconds();
+    let admit_interval = (bottleneck / frames as f64).max(recon_s);
 
     // Pass 2 — virtual-clock replay with contention + transitions.
     let mut worst_dispatch = 0.0f64;
@@ -386,9 +396,11 @@ pub fn evaluate(spec: &PipelineSpec, soc: &SocSpec, frames: usize) -> Result<Pla
         predicted_fps: frames as f64 / makespan.max(f64::MIN_POSITIVE),
         makespan_seconds: makespan,
         frames,
-        latency_ms: (worst_fill + worst_dispatch) * 1e3,
+        // the recon stage is on the frame's critical path end to end
+        latency_ms: (worst_fill + worst_dispatch + recon_s) * 1e3,
         idle_gap_total_ms: unit_evals.iter().map(|u| u.idle_gap_seconds).sum::<f64>() * 1e3,
         transitions: unit_evals.iter().map(|u| u.transitions).sum(),
+        recon_ms_per_frame: recon_s * 1e3,
         units: unit_evals,
         timeline,
     })
@@ -424,6 +436,30 @@ mod tests {
         );
         // the same-unit pair alternates occupants: transitions pile up
         assert!(same.transitions > split.transitions);
+    }
+
+    #[test]
+    fn kspace_source_prices_recon_into_latency_and_pacing() {
+        use crate::pipeline::spec::{ReconMode, SourceSpec};
+        let base = evaluate(&gan_pair(0, 1), &orin(), 48).unwrap();
+        assert_eq!(base.recon_ms_per_frame, 0.0, "phantom sources are free");
+        let mut ks = gan_pair(0, 1);
+        ks.source = SourceSpec::kspace(4, ReconMode::Grappa);
+        let ev = evaluate(&ks, &orin(), 48).unwrap();
+        assert!(ev.recon_ms_per_frame > 0.0);
+        assert!(
+            ev.latency_ms > base.latency_ms,
+            "recon cost must reach the latency budget: {} vs {}",
+            ev.latency_ms,
+            base.latency_ms
+        );
+        // recon is on the admission path, so it can only slow the plan
+        assert!(ev.predicted_fps <= base.predicted_fps);
+        // GRAPPA costs more than zero-filled at the same R
+        let mut zf = gan_pair(0, 1);
+        zf.source = SourceSpec::kspace(4, ReconMode::ZeroFilled);
+        let ez = evaluate(&zf, &orin(), 48).unwrap();
+        assert!(ev.recon_ms_per_frame > ez.recon_ms_per_frame);
     }
 
     #[test]

@@ -58,8 +58,8 @@ use crate::obs::registry::{Counter, Gauge, Histogram, Registry};
 use crate::obs::{ObsEvent, ObsHub, StageBreakdown};
 use crate::pipeline::driver::{CompletionSink, PipelineReport, StreamCore};
 use crate::pipeline::plane::PlanePool;
-use crate::pipeline::source::PhantomSource;
-use crate::pipeline::spec::PipelineSpec;
+use crate::pipeline::source::{FrameSource, ReconReport, ReconStats};
+use crate::pipeline::spec::{PipelineSpec, SourceSpec};
 use crate::placement::score::primary_instances;
 use crate::session::Session;
 use crate::sim::timeline::{Span, Timeline};
@@ -172,6 +172,9 @@ pub struct ServeReport {
     /// Frame-lifecycle stage latency breakdown across every phase,
     /// present only when [`ServeOptions::obs`] was set.
     pub stages: Option<StageBreakdown>,
+    /// K-space recon front-end summary across the whole serve (all
+    /// phases), present only when the source is `kspace`.
+    pub recon: Option<ReconReport>,
 }
 
 impl ServeReport {
@@ -227,6 +230,9 @@ impl ServeReport {
         ];
         if let Some(st) = &self.stages {
             pairs.push(("stages", st.to_json()));
+        }
+        if let Some(r) = &self.recon {
+            pairs.push(("recon", r.to_json()));
         }
         obj(pairs)
     }
@@ -343,21 +349,28 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
 
     // One plane pool across all clients and all phases: drained frames
     // park their buffers for the next arrivals regardless of spec swaps.
+    // Likewise one recon accumulator (kspace sources only) — the source
+    // mode survives spec swaps, so its stats span the whole serve.
     let pool = PlanePool::default();
-    let mut sources: Vec<PhantomSource> = opts
+    let recon_stats = match &spec.source {
+        SourceSpec::Kspace { .. } => Some(Arc::new(ReconStats::default())),
+        SourceSpec::Phantom => None,
+    };
+    let mut sources: Vec<FrameSource> = opts
         .clients
         .iter()
         .enumerate()
         .map(|(i, c)| {
-            PhantomSource::new(
-                crate::imaging::phantom::PhantomConfig::default(),
+            FrameSource::for_spec(
+                &spec.source,
                 opts.seed,
                 i,
                 c.frames,
+                pool.clone(),
+                recon_stats.clone(),
             )
-            .with_pool(pool.clone())
         })
-        .collect();
+        .collect::<Result<Vec<_>>>()?;
 
     let check_every = replanner.policy().check_every_frames.max(1);
     let mut core = StreamCore::new(&spec, &backend, Some(Arc::clone(&sink)), stages.clone())?;
@@ -643,11 +656,14 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
                     });
                 }
                 // Graft the serve's stream shape onto the planned spec.
+                // The acquisition source rides along: a replan changes
+                // placement, never what the clients are sending.
                 let mut next = prop.spec;
                 next.frames = spec.frames;
                 next.streams = spec.streams;
                 next.queue_depth = spec.queue_depth;
                 next.seed = spec.seed;
+                next.source = spec.source.clone();
                 replans.push(ReplanEvent {
                     at_frame: offered,
                     at_seconds: t_switch,
@@ -761,5 +777,6 @@ pub fn serve(session: Session, opts: ServeOptions) -> Result<ServeReport> {
             .collect(),
         completions: comp_tail.into_iter().collect(),
         stages: stages.map(|acc| acc.breakdown()),
+        recon: recon_stats.and_then(|st| st.report(&spec.source)),
     })
 }

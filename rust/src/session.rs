@@ -47,7 +47,7 @@ use crate::pipeline::backend::PjrtBackend;
 use crate::pipeline::batcher::BatchPolicy;
 use crate::pipeline::driver::{self, PipelineReport};
 use crate::pipeline::router::RoutePolicy;
-use crate::pipeline::spec::{InstanceSpec, PipelineSpec};
+use crate::pipeline::spec::{InstanceSpec, PipelineSpec, SourceSpec};
 use std::sync::Arc;
 
 /// A validated, runnable pipeline: spec + backend.
@@ -192,6 +192,13 @@ impl PipelineBuilder {
 
     pub fn seed(mut self, seed: u64) -> Self {
         self.spec.seed = seed;
+        self
+    }
+
+    /// Select the acquisition front-end (phantom slices, or undersampled
+    /// k-space reconstructed in-pipeline before the model chain).
+    pub fn source(mut self, source: SourceSpec) -> Self {
+        self.spec.source = source;
         self
     }
 

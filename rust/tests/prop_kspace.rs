@@ -1,0 +1,187 @@
+//! Property-based tests for the k-space acquisition front-end: the
+//! radix-2 FFT pair against its analytic inverse and the scalar oracle,
+//! the R=1 fully-sampled fast path, GRAPPA-vs-zero-filled fidelity
+//! ordering at the paper's acceleration factors, and the banded GRAPPA
+//! fit against the serial reference solver.
+//!
+//! Like `prop_imaging`, the suite runs with the `parallel` feature on,
+//! pinned to one thread (`EDGEPIPE_THREADS=1`), and compiled without the
+//! feature: the FFT band-splits one chunk per row and the GRAPPA fold is
+//! band-ordered, so the FFT comparisons are bit-exact in every
+//! configuration while the fit (which legitimately reassociates f64
+//! partial sums across bands) gets a relative bound.
+
+use edgepipe::imaging::fft::Fft2;
+use edgepipe::imaging::grappa::GrappaKernel;
+use edgepipe::imaging::kspace::{coil_maps, sample_mask, Acquisition, GRAPPA_LAMBDA_REL};
+use edgepipe::imaging::phantom::{paired_sample, PhantomConfig};
+use edgepipe::imaging::{metrics, reference, Image};
+use edgepipe::prop_assert;
+use edgepipe::util::prop::{check, check_with};
+use edgepipe::util::rng::Rng;
+
+fn random_plane(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.next_f32() - 0.5).collect()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+fn psnr01(a: &[f32], b: &[f32], n: usize) -> f64 {
+    let ia = Image::from_data(n, n, a.to_vec()).unwrap();
+    let ib = Image::from_data(n, n, b.to_vec()).unwrap();
+    metrics::psnr(&ia, &ib).unwrap()
+}
+
+/// One undersampled multi-coil acquisition built from the public pieces
+/// (maps → per-coil FFT → masked rows), shared by the oracle props.
+fn synth_kspace(
+    rng: &mut Rng,
+    n: usize,
+    coils: usize,
+    accel: usize,
+    acs: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<bool>) {
+    let plane = n * n;
+    let (map_re, map_im) = coil_maps(n, coils);
+    let mask = sample_mask(n, accel, acs);
+    let fft = Fft2::new(n).unwrap();
+    let slice = random_plane(rng, plane);
+    let mut ks_re = vec![0.0f32; coils * plane];
+    let mut ks_im = vec![0.0f32; coils * plane];
+    for c in 0..coils {
+        let o = c * plane;
+        for p in 0..plane {
+            ks_re[o + p] = map_re[o + p] * slice[p];
+            ks_im[o + p] = map_im[o + p] * slice[p];
+        }
+        fft.fft2(&mut ks_re[o..o + plane], &mut ks_im[o..o + plane])
+            .unwrap();
+        for (row, &keep) in mask.iter().enumerate() {
+            if !keep {
+                ks_re[o + row * n..o + (row + 1) * n].fill(0.0);
+                ks_im[o + row * n..o + (row + 1) * n].fill(0.0);
+            }
+        }
+    }
+    (ks_re, ks_im, mask)
+}
+
+#[test]
+fn prop_fft2_ifft2_round_trip() {
+    check("fft2 -> ifft2 round trip", |rng: &mut Rng| {
+        let n = 1usize << (2 + rng.below(4)); // 4..=32
+        let src_re = random_plane(rng, n * n);
+        let src_im = random_plane(rng, n * n);
+        let fft = Fft2::new(n).unwrap();
+        let mut re = src_re.clone();
+        let mut im = src_im.clone();
+        fft.fft2(&mut re, &mut im).unwrap();
+        fft.ifft2(&mut re, &mut im).unwrap();
+        let dr = max_abs_diff(&re, &src_re);
+        let di = max_abs_diff(&im, &src_im);
+        prop_assert!(
+            dr < 1e-4 && di < 1e-4,
+            "round trip drifted {dr}/{di} on n={n}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fft2_matches_reference_bitexact() {
+    check("fft2/ifft2 == reference", |rng: &mut Rng| {
+        let n = 1usize << (2 + rng.below(4));
+        let src_re = random_plane(rng, n * n);
+        let src_im = random_plane(rng, n * n);
+        let fft = Fft2::new(n).unwrap();
+        let (mut or, mut oi) = (src_re.clone(), src_im.clone());
+        let (mut rr, mut ri) = (src_re.clone(), src_im.clone());
+        fft.fft2(&mut or, &mut oi).unwrap();
+        reference::fft2(n, &mut rr, &mut ri).unwrap();
+        let same = |a: &[f32], b: &[f32]| {
+            a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+        };
+        prop_assert!(same(&or, &rr) && same(&oi, &ri), "forward diverged on n={n}");
+        fft.ifft2(&mut or, &mut oi).unwrap();
+        reference::ifft2(n, &mut rr, &mut ri).unwrap();
+        prop_assert!(same(&or, &rr) && same(&oi, &ri), "inverse diverged on n={n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_r1_recon_is_the_fully_sampled_slice() {
+    check_with("R=1 recon is bit-exact", 16, |rng: &mut Rng| {
+        let cfg = PhantomConfig::default();
+        let s = paired_sample(&cfg, rng);
+        let n = cfg.size;
+        let mut acq = Acquisition::new(n, 1, 0, 4).unwrap();
+        acq.acquire(&s.ct).unwrap();
+        let mut zf = vec![0.0f32; n * n];
+        let mut gr = vec![0.0f32; n * n];
+        acq.recon_zero_filled(&mut zf).unwrap();
+        acq.recon_grappa(&mut gr).unwrap();
+        prop_assert!(zf == s.ct.data, "zero-filled R=1 is not the source slice");
+        prop_assert!(gr == s.ct.data, "grappa R=1 is not the source slice");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grappa_beats_zero_filled_at_r2_and_r4() {
+    check_with("grappa > zero-filled PSNR", 6, |rng: &mut Rng| {
+        let cfg = PhantomConfig::default();
+        let n = cfg.size;
+        for accel in [2usize, 4] {
+            let s = paired_sample(&cfg, rng);
+            let mut acq = Acquisition::new(n, accel, 16, 4).unwrap();
+            acq.acquire(&s.ct).unwrap();
+            let mut zf = vec![0.0f32; n * n];
+            let mut gr = vec![0.0f32; n * n];
+            acq.recon_zero_filled(&mut zf).unwrap();
+            acq.recon_grappa(&mut gr).unwrap();
+            let p_zf = psnr01(&s.ct.data, &zf, n);
+            let p_gr = psnr01(&s.ct.data, &gr, n);
+            prop_assert!(
+                p_gr > p_zf + 3.0,
+                "R={accel}: grappa {p_gr:.2} dB vs zero-filled {p_zf:.2} dB"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grappa_fit_matches_reference() {
+    check_with("grappa fit+apply ~= reference", 8, |rng: &mut Rng| {
+        let (n, coils, accel, acs) = (32usize, 3usize, 2usize, 12usize);
+        let (ks_re, ks_im, mask) = synth_kspace(rng, n, coils, accel, acs);
+        let mut kern = GrappaKernel::new(coils, accel).unwrap();
+        kern.fit(&ks_re, &ks_im, &mask, GRAPPA_LAMBDA_REL).unwrap();
+        let (mut opt_re, mut opt_im) = (ks_re.clone(), ks_im.clone());
+        kern.apply(&mut opt_re, &mut opt_im, &mask).unwrap();
+        let (ref_re, ref_im) =
+            reference::grappa_recon(n, coils, accel, &ks_re, &ks_im, &mask, GRAPPA_LAMBDA_REL)
+                .unwrap();
+        // Banded f64 fold vs serial sum: allow a tiny relative bound on
+        // the synthesized samples (sampled rows are untouched copies).
+        let scale = ks_re
+            .iter()
+            .chain(ks_im.iter())
+            .map(|v| v.abs())
+            .fold(0.0f32, f32::max)
+            .max(1.0);
+        let dr = max_abs_diff(&opt_re, &ref_re) / scale;
+        let di = max_abs_diff(&opt_im, &ref_im) / scale;
+        prop_assert!(
+            dr < 1e-4 && di < 1e-4,
+            "synthesis diverged from the serial oracle: {dr}/{di}"
+        );
+        Ok(())
+    });
+}
